@@ -1,0 +1,146 @@
+//! End-to-end pre-training driver — the headline validation run
+//! (DESIGN.md deliverable: "train a ~100M-parameter transformer for a
+//! few hundred steps on synthetic data and log the loss curve").
+//!
+//! Default: the ~117M-parameter `mlm100m_smile` config for 200 steps.
+//!
+//!     cargo run --release --example pretrain_mlm -- --config mlm100m_smile --steps 200
+//!
+//! Convergence-comparison mode (paper Fig 6 + Fig 7 analog): train the
+//! four `small_*` variants with identical seeds/data and write one CSV
+//! per variant plus the combined Fig 6/7 series:
+//!
+//!     cargo run --release --example pretrain_mlm -- --compare --steps 300
+
+use anyhow::Result;
+use smile::metrics::{CsvLogger, RunSummary};
+use smile::runtime::Runtime;
+use smile::trainer::Trainer;
+use smile::util::cli::Args;
+
+fn train_one(
+    rt: &Runtime,
+    config: &str,
+    steps: usize,
+    seed: i32,
+    eval_every: usize,
+) -> Result<(RunSummary, Vec<smile::metrics::StepLog>)> {
+    let mut tr = Trainer::new(rt, config, seed)?;
+    let (k, a, b, s) = tr.batch_dims();
+    println!(
+        "== {config}: {} params, [K={k} A={a} B={b} S={s}] x {steps} steps",
+        tr.param_count()
+    );
+    let mut batcher = tr.make_batcher(seed as u64 + 1);
+    let mut logger = CsvLogger::create(format!("reports/pretrain_{config}.csv"))?;
+    let mut all_logs = Vec::new();
+    let mut total_secs = 0.0;
+    let t0 = std::time::Instant::now();
+    while tr.step < steps {
+        let batch = batcher.batch(k, a, b, s);
+        for l in tr.train_call(&batch)? {
+            logger.log(&l)?;
+            total_secs += l.step_secs;
+            if l.step % 20 == 0 || l.step + 1 == steps {
+                println!(
+                    "  step {:>4}  loss {:.4}  ppl {:>8.2}  lb {:.5}  {:.0} ms/step",
+                    l.step,
+                    l.loss,
+                    l.perplexity(),
+                    l.lb_loss,
+                    l.step_secs * 1e3
+                );
+            }
+            all_logs.push(l);
+        }
+        if eval_every > 0 && tr.step % eval_every == 0 && tr.step < steps {
+            let mut eb = tr.make_batcher(0xEAA1);
+            println!("  [eval] ppl @{}: {:.2}", tr.step, tr.evaluate(&mut eb, 2)?);
+        }
+    }
+    logger.flush()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let last = all_logs.last().expect("steps > 0");
+    let samples = tr.step * a * b;
+    let summary = RunSummary {
+        config: config.to_string(),
+        steps: tr.step,
+        first_loss: all_logs[0].loss as f64,
+        final_loss: last.loss as f64,
+        final_ppl: last.perplexity(),
+        mean_step_secs: total_secs / tr.step as f64,
+        tokens_per_sec: (samples * s) as f64 / wall,
+        samples_per_sec: samples as f64 / wall,
+        param_count: tr.param_count(),
+    };
+    summary.write(format!("reports/pretrain_{config}.json"))?;
+    let st = tr.exec_stats();
+    println!(
+        "== {config} done: loss {:.4} -> {:.4} (ppl {:.1}), {:.2} samples/s wall, \
+         exec {:.1}s host-copy {:.1}s over {} calls",
+        summary.first_loss,
+        summary.final_loss,
+        summary.final_ppl,
+        summary.samples_per_sec,
+        st.exec_secs,
+        st.host_copy_secs,
+        st.calls,
+    );
+    Ok((summary, all_logs))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let rt = Runtime::new(smile::runtime::default_artifacts_dir())?;
+
+    if args.bool("compare", false) {
+        // Fig 6 / Fig 7 analog: identical seed + data order across variants
+        let steps = args.usize("steps", 300);
+        let variants =
+            ["small_dense", "small_dense_wide", "small_switch", "small_smile"];
+        let mut curves = Vec::new();
+        for v in variants {
+            let (_, logs) = train_one(&rt, v, steps, 0, 0)?;
+            curves.push((v, logs));
+        }
+        // combined CSV: step, <variant>_ppl..., smile/switch lb columns
+        std::fs::create_dir_all("reports")?;
+        let mut out = String::from(
+            "step,dense_ppl,dense_wide_ppl,switch_ppl,smile_ppl,switch_lb_unscaled,smile_lb_unscaled\n",
+        );
+        let n = curves.iter().map(|(_, l)| l.len()).min().unwrap_or(0);
+        for i in 0..n {
+            let sw = &curves[2].1[i];
+            let sm = &curves[3].1[i];
+            // "unscaled" LB loss (paper Fig 7): divide out alpha
+            out.push_str(&format!(
+                "{},{:.3},{:.3},{:.3},{:.3},{:.4},{:.4}\n",
+                curves[0].1[i].step,
+                curves[0].1[i].perplexity(),
+                curves[1].1[i].perplexity(),
+                sw.perplexity(),
+                sm.perplexity(),
+                sw.lb_loss / 0.005,
+                sm.lb_loss / 0.005,
+            ));
+        }
+        std::fs::write("reports/fig6_convergence.csv", &out)?;
+        println!("combined series: reports/fig6_convergence.csv (Fig 6 + Fig 7 analog)");
+
+        // headline checks, printed for EXPERIMENTS.md
+        let final_ppl: Vec<f64> =
+            curves.iter().map(|(_, l)| l.last().unwrap().perplexity()).collect();
+        println!(
+            "final ppl — dense {:.1} | dense_wide {:.1} | switch {:.1} | smile {:.1}",
+            final_ppl[0], final_ppl[1], final_ppl[2], final_ppl[3]
+        );
+        let lb_ratio = curves[3].1.last().unwrap().lb_loss / curves[2].1.last().unwrap().lb_loss;
+        println!("unscaled LB ratio smile/switch: {lb_ratio:.2} (paper Fig 7: ~2)");
+    } else {
+        let config = args.str("config", "mlm100m_smile");
+        let steps = args.usize("steps", 200);
+        let eval_every = args.usize("eval-every", 100);
+        train_one(&rt, &config, steps, args.u64("seed", 0) as i32, eval_every)?;
+    }
+    Ok(())
+}

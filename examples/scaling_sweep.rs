@@ -1,0 +1,71 @@
+//! Scaling-study driver: regenerates paper Fig 3 (Switch's poor weak
+//! scaling with the 8-node dip) and Fig 8 (weak + strong scaling,
+//! Switch vs SMILE, 1-16 nodes) on the simulated P4d/EFA testbed.
+//!
+//!     cargo run --release --example scaling_sweep [-- --nodes 1,2,4,8,16]
+
+use anyhow::Result;
+use smile::netsim::ClusterSpec;
+use smile::simtrain::{self, ModelDims, Scaling, Variant};
+use smile::util::bench::Table;
+use smile::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let nodes = args.usize_list("nodes", &[1, 2, 4, 8, 16]);
+    let dims = ModelDims::bert_3_7b();
+    let weak = Scaling::Weak { per_gpu_batch: dims.micro_batch };
+    let strong = Scaling::Strong { global_batch: 16384 };
+
+    println!("# Fig 3 — Switch Transformer weak scaling (samples/s)\n");
+    let mut fig3 = Table::new(&["nodes", "gpus", "throughput", "vs_1node"]);
+    let base = simtrain::throughput(&dims, Variant::Switch, &ClusterSpec::p4d(nodes[0]), weak);
+    for &n in &nodes {
+        let tp = simtrain::throughput(&dims, Variant::Switch, &ClusterSpec::p4d(n), weak);
+        fig3.row(&[
+            n.to_string(),
+            (n * 8).to_string(),
+            format!("{tp:.0}"),
+            format!("{:.2}x", tp / base),
+        ]);
+    }
+    fig3.print();
+    fig3.write_csv("reports/fig3_switch_scaling.csv");
+
+    println!("\n# Fig 8 — weak & strong scaling, Switch vs SMILE (samples/s)\n");
+    let mut fig8 = Table::new(&[
+        "nodes", "switch_weak", "smile_weak", "smile/sw", "switch_strong", "smile_strong", "smile/sw",
+    ]);
+    for &n in &nodes {
+        let spec = ClusterSpec::p4d(n);
+        let sww = simtrain::throughput(&dims, Variant::Switch, &spec, weak);
+        let smw = simtrain::throughput(&dims, Variant::Smile, &spec, weak);
+        let sws = simtrain::throughput(&dims, Variant::Switch, &spec, strong);
+        let sms = simtrain::throughput(&dims, Variant::Smile, &spec, strong);
+        fig8.row(&[
+            n.to_string(),
+            format!("{sww:.0}"),
+            format!("{smw:.0}"),
+            format!("{:.2}x", smw / sww),
+            format!("{sws:.0}"),
+            format!("{sms:.0}"),
+            format!("{:.2}x", sms / sws),
+        ]);
+    }
+    fig8.print();
+    fig8.write_csv("reports/fig8_scaling.csv");
+
+    // the paper's headline scaling numbers
+    let first = nodes[0];
+    let last = *nodes.last().unwrap();
+    let s1 = simtrain::throughput(&dims, Variant::Smile, &ClusterSpec::p4d(first), weak);
+    let s16 = simtrain::throughput(&dims, Variant::Smile, &ClusterSpec::p4d(last), weak);
+    let t1 = simtrain::throughput(&dims, Variant::Smile, &ClusterSpec::p4d(first), strong);
+    let t16 = simtrain::throughput(&dims, Variant::Smile, &ClusterSpec::p4d(last), strong);
+    println!(
+        "\nSMILE {last}-node vs {first}-node: weak {:.1}x (paper: 7.7x), strong {:.1}x (paper: 4x)",
+        s16 / s1,
+        t16 / t1
+    );
+    Ok(())
+}

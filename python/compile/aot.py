@@ -1,0 +1,313 @@
+"""AOT pipeline: lower every (config, entry) pair to HLO **text** and
+emit ``artifacts/manifest.json`` for the rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: the image's xla_extension 0.5.1 rejects jax>=0.5
+protos (64-bit instruction ids); the text parser reassigns ids (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+The manifest records, per artifact, the exact flattened input/output
+order (names, shapes, dtypes) so the rust side never has to know jax
+pytree flattening rules.  Invariant asserted here and tested in
+``python/tests/test_aot.py`` and rust ``integration_runtime``:
+
+    init outputs  ==  train-step state inputs  ==  train-step state outputs
+    (same names, same order, first `state_len` entries)
+
+Incremental: an artifact is skipped when its HLO file exists and the
+manifest's cache key (config hash + entry) is unchanged.
+
+Usage:  python -m compile.aot --out ../artifacts [--only REGEX] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, train
+from .configs import ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(dt).name]
+
+
+def _flat_specs(tree, prefix: str) -> list[dict]:
+    """Flatten a pytree of ShapeDtypeStructs (or arrays) with dotted-path
+    names in jax flattening order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = prefix + jax.tree_util.keystr(path)
+        out.append(
+            {
+                "name": name,
+                "shape": [int(d) for d in leaf.shape],
+                "dtype": _dtype_str(leaf.dtype),
+            }
+        )
+    return out
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _cache_key(cfg: ModelConfig, entry: str) -> str:
+    src_bits = cfg.cache_key() + ":" + entry + ":v3"
+    return hashlib.sha256(src_bits.encode()).hexdigest()[:16]
+
+
+class Builder:
+    def __init__(self, out_dir: str, force: bool = False):
+        self.out_dir = out_dir
+        self.force = force
+        self.manifest_path = os.path.join(out_dir, "manifest.json")
+        self.manifest: dict = {"version": 1, "artifacts": {}}
+        if os.path.exists(self.manifest_path):
+            try:
+                with open(self.manifest_path) as f:
+                    self.manifest = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                pass
+        self.manifest.setdefault("artifacts", {})
+
+    def _up_to_date(self, name: str, key: str) -> bool:
+        if self.force:
+            return False
+        ent = self.manifest["artifacts"].get(name)
+        return (
+            ent is not None
+            and ent.get("cache_key") == key
+            and os.path.exists(os.path.join(self.out_dir, ent["file"]))
+        )
+
+    def add(self, name, fn, abstract_args, inputs, outputs, cfg, kind, meta, key):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        print(f"  lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*abstract_args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "kind": kind,
+            "cache_key": key,
+            "config": cfg.to_json(),
+            "inputs": inputs,
+            "outputs": outputs,
+            "meta": meta,
+        }
+        print(f"  wrote {fname} ({len(text)//1024} KiB)", flush=True)
+
+    def save(self):
+        with open(self.manifest_path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"manifest: {self.manifest_path}")
+
+
+def build_model_artifacts(b: Builder, cfg: ModelConfig, only: re.Pattern | None):
+    """Lower init / train / eval for one model config."""
+    init_fn = train.make_init(cfg)
+    params_abs, opt_abs = jax.eval_shape(init_fn, jnp.int32(0))
+    p_specs = _flat_specs(params_abs, "params")
+    o_specs = _flat_specs(opt_abs, "opt")
+    state_specs = p_specs + o_specs
+    state_len = len(state_specs)
+    batch_abs = train.abstract_batch(cfg)
+    ebatch_abs = train.abstract_eval_batch(cfg)
+    k, e, n = cfg.steps_per_call, cfg.num_experts, cfg.n_nodes
+    metric_specs = [
+        {"name": "metrics", "shape": [k, len(train.METRIC_NAMES)], "dtype": "f32"},
+        {"name": "expert_frac", "shape": [k, e], "dtype": "f32"},
+        {"name": "node_frac", "shape": [k, n], "dtype": "f32"},
+    ]
+    batch_specs = [
+        {"name": "tokens", "shape": list(batch_abs[0].shape), "dtype": "i32"},
+        {"name": "labels", "shape": list(batch_abs[1].shape), "dtype": "i32"},
+        {"name": "weights", "shape": list(batch_abs[2].shape), "dtype": "f32"},
+        {"name": "step", "shape": [], "dtype": "i32"},
+    ]
+    def _n_elems(spec):
+        n = 1
+        for d in spec["shape"]:
+            n *= d
+        return n
+
+    meta = {
+        "metric_names": list(train.METRIC_NAMES),
+        "state_len": state_len,
+        "param_len": len(p_specs),
+        "param_count": sum(_n_elems(s) for s in p_specs),
+    }
+
+    def maybe(name, *args, **kw):
+        if only and not only.search(name):
+            return
+        key = _cache_key(cfg, name)
+        if b._up_to_date(name, key):
+            print(f"  up-to-date {name}")
+            return
+        b.add(name, *args, key=key, **kw)
+
+    maybe(
+        f"init_{cfg.name}",
+        init_fn,
+        (jax.ShapeDtypeStruct((), jnp.int32),),
+        [{"name": "seed", "shape": [], "dtype": "i32"}],
+        state_specs,
+        cfg,
+        "init",
+        meta,
+    )
+    maybe(
+        f"train_{cfg.name}",
+        train.make_multi_train_step(cfg),
+        (params_abs, opt_abs) + batch_abs,
+        state_specs + batch_specs,
+        state_specs + metric_specs,
+        cfg,
+        "train",
+        meta,
+    )
+    bs, s = cfg.micro_batch, cfg.seq_len
+    eval_inputs = p_specs + [
+        {"name": "tokens", "shape": [bs, s], "dtype": "i32"},
+        {"name": "labels", "shape": [bs, s], "dtype": "i32"},
+        {"name": "weights", "shape": [bs, s], "dtype": "f32"},
+    ]
+    maybe(
+        f"eval_{cfg.name}",
+        train.make_eval_step(cfg),
+        (params_abs,) + ebatch_abs,
+        eval_inputs,
+        [
+            {"name": "nll_sum", "shape": [], "dtype": "f32"},
+            {"name": "w_sum", "shape": [], "dtype": "f32"},
+        ],
+        cfg,
+        "eval",
+        meta,
+    )
+
+
+def build_moe_layer_artifact(b: Builder, cfg: ModelConfig, only):
+    """Single-MoE-layer artifact (Table 3 compute calibration)."""
+    from . import moe
+
+    name = f"moelayer_{cfg.name}"
+    if only and not only.search(name):
+        return
+    key = _cache_key(cfg, name)
+    if b._up_to_date(name, key):
+        print(f"  up-to-date {name}")
+        return
+    lp = jax.eval_shape(
+        lambda s: moe.init_layer_params(cfg, jax.random.PRNGKey(s), 1),
+        jnp.int32(0),
+    )
+    t, d = cfg.tokens_per_micro, cfg.hidden_size
+    x_abs = jax.ShapeDtypeStruct((t, d), jnp.float32)
+    fn = train.make_moe_layer_fn(cfg)
+    b.add(
+        name,
+        fn,
+        (lp, x_abs),
+        _flat_specs(lp, "layer") + [{"name": "x", "shape": [t, d], "dtype": "f32"}],
+        [
+            {"name": "y", "shape": [t, d], "dtype": "f32"},
+            {"name": "lb_loss", "shape": [], "dtype": "f32"},
+        ],
+        cfg,
+        "moe_layer",
+        {"tokens": t},
+        key=key,
+    )
+
+
+def build_router_probe(b: Builder, only):
+    """Router-only artifact: rust uses it to generate *real* routing
+    distributions for the dispatch-plan tests and the netsim workloads."""
+    name = "router_probe"
+    if only and not only.search(name):
+        return
+    cfg = configs.tiny("switch")
+    key = _cache_key(cfg, name + ":d64e16")
+    if b._up_to_date(name, key):
+        print(f"  up-to-date {name}")
+        return
+    from .kernels import router as rk
+
+    t, d, e = 512, 64, 16
+    fn = lambda x, wr: rk.router_probs(x, wr)
+    b.add(
+        name,
+        fn,
+        (
+            jax.ShapeDtypeStruct((t, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, e), jnp.float32),
+        ),
+        [
+            {"name": "x", "shape": [t, d], "dtype": "f32"},
+            {"name": "wr", "shape": [d, e], "dtype": "f32"},
+        ],
+        [{"name": "probs", "shape": [t, e], "dtype": "f32"}],
+        cfg,
+        "router_probe",
+        {},
+        key=key,
+    )
+
+
+DEFAULT_BUILDS = [
+    ("tiny", ["dense", "switch", "smile"]),
+    ("small", ["dense", "dense_wide", "switch", "smile"]),
+    ("mlm100m", ["switch", "smile"]),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = re.compile(args.only) if args.only else None
+
+    b = Builder(args.out, force=args.force)
+    for preset, variants in DEFAULT_BUILDS:
+        for variant in variants:
+            cfg = configs.PRESETS[preset](variant)
+            print(f"config {cfg.name}", flush=True)
+            build_model_artifacts(b, cfg, only)
+    for variant in ("switch", "smile"):
+        cfg = configs.moe_layer_micro(variant)
+        print(f"config {cfg.name}", flush=True)
+        build_moe_layer_artifact(b, cfg, only)
+    build_router_probe(b, only)
+    b.save()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

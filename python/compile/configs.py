@@ -1,0 +1,194 @@
+"""Model / training configurations shared by the AOT pipeline and tests.
+
+Every config is a plain dataclass so it can be hashed into the artifact
+manifest; the rust side never sees these — it reads shapes/dtypes from
+``artifacts/manifest.json``.
+
+The expert grid follows the paper's notation: ``n_nodes`` (n) nodes with
+``gpus_per_node`` (m) GPUs each, one expert per GPU per MoE layer, so
+``num_experts = n * m`` (paper §2).  ``variant`` selects the MoE layer:
+
+- ``dense``      — plain FFN (BERT-base analog, same FLOPs as the MoE models)
+- ``dense_wide`` — FFN with ``ffn_size * num_experts`` intermediate size
+                   (same parameter count as the MoE models; the BERT(3.7B)
+                   analog of the paper's Figure 6 / Table 1)
+- ``switch``     — single-level top-1 routing over all n*m experts
+                   (Switch Transformer baseline, Eq. 1-2)
+- ``smile``      — bi-level top-1 routing: inter-node router over n nodes,
+                   intra-node router over m local experts (Eq. 3)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+VARIANTS = ("dense", "dense_wide", "switch", "smile")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    variant: str
+    vocab_size: int = 256
+    hidden_size: int = 32
+    num_heads: int = 2
+    ffn_size: int = 64
+    num_layers: int = 2
+    # expert grid: n nodes x m gpus-per-node, one expert per gpu
+    n_nodes: int = 2
+    gpus_per_node: int = 2
+    seq_len: int = 16
+    micro_batch: int = 4
+    accum_steps: int = 1
+    # number of optimizer steps fused into one AOT call (lax.scan); >1
+    # amortizes the host<->device parameter round-trip per execute()
+    steps_per_call: int = 1
+    moe_every: int = 2          # every `moe_every`-th FFN becomes a MoE layer
+    capacity_factor: float = 2.0
+    alpha: float = 0.005        # inter-node LB loss coefficient (Eq. 4)
+    beta: float = 0.005         # intra-node LB loss coefficient (Eq. 4)
+    optimizer: str = "adam"     # "adam" | "lamb"
+    learning_rate: float = 1e-3
+    warmup_steps: int = 100
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # L1 kernel tiling knobs (see kernels/expert_ffn.py)
+    block_f: int = 0            # 0 = whole ffn dim in one VMEM tile
+    use_pallas: bool = True
+
+    @property
+    def num_experts(self) -> int:
+        return self.n_nodes * self.gpus_per_node
+
+    @property
+    def tokens_per_micro(self) -> int:
+        return self.micro_batch * self.seq_len
+
+    @property
+    def expert_capacity(self) -> int:
+        cap = int(self.capacity_factor * self.tokens_per_micro / self.num_experts)
+        return max(cap, 1)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden_size % self.num_heads == 0
+        return self.hidden_size // self.num_heads
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        """Every other FFN layer is a MoE layer (paper §4.1), starting at 1."""
+        if self.variant in ("dense", "dense_wide"):
+            return False
+        return layer_idx % self.moe_every == 1
+
+    def to_json(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["num_experts"] = self.num_experts
+        d["expert_capacity"] = self.expert_capacity
+        return d
+
+    def cache_key(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+
+def tiny(variant: str) -> ModelConfig:
+    """Smallest config that exercises every code path; used by tests,
+    quickstart, and the trainer integration tests."""
+    return ModelConfig(name=f"tiny_{variant}", variant=variant)
+
+
+def small(variant: str) -> ModelConfig:
+    """Convergence-comparison config (Fig. 6/7 analog): large enough that
+    routing matters, small enough for hundreds of CPU steps."""
+    return ModelConfig(
+        name=f"small_{variant}",
+        variant=variant,
+        vocab_size=1024,
+        hidden_size=128,
+        num_heads=4,
+        ffn_size=512,
+        num_layers=4,
+        n_nodes=2,
+        gpus_per_node=4,
+        seq_len=32,
+        micro_batch=8,
+        optimizer="adam",
+        learning_rate=1e-3,
+        warmup_steps=50,
+    )
+
+
+def mlm100m(variant: str) -> ModelConfig:
+    """The end-to-end headline config: ~117M parameters (same ballpark as
+    the paper's BERT-base-with-MoE 3.7B scaled to this testbed)."""
+    return ModelConfig(
+        name=f"mlm100m_{variant}",
+        variant=variant,
+        vocab_size=8192,
+        hidden_size=512,
+        num_heads=8,
+        ffn_size=2048,
+        num_layers=6,
+        n_nodes=4,
+        gpus_per_node=4,
+        seq_len=64,
+        micro_batch=4,
+        accum_steps=1,
+        # two optimizer steps fused per PJRT call: the 117M-param state
+        # round-trips host<->device once per call, so K=2 halves that
+        # overhead (EXPERIMENTS.md §Perf L3-2)
+        steps_per_call=2,
+        optimizer="lamb",
+        learning_rate=2e-3,
+        warmup_steps=30,
+    )
+
+
+def moe_layer_micro(variant: str) -> ModelConfig:
+    """Single-MoE-layer microbenchmark config (Table 3 compute-side
+    calibration; the communication side comes from netsim)."""
+    return ModelConfig(
+        name=f"moelayer_{variant}",
+        variant=variant,
+        vocab_size=2,           # unused by the layer artifact
+        hidden_size=768,
+        num_heads=12,
+        ffn_size=3072,
+        num_layers=1,
+        n_nodes=2,
+        gpus_per_node=4,
+        seq_len=256,
+        micro_batch=8,          # T = 2048 tokens
+    )
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Closed-form parameter count; asserted against the real pytree in
+    tests."""
+    d, f, v, s = cfg.hidden_size, cfg.ffn_size, cfg.vocab_size, cfg.seq_len
+    total = v * d + s * d  # token + position embeddings
+    total += 2 * d         # final layernorm
+    for layer in range(cfg.num_layers):
+        total += 4 * d * d + 4 * d  # attention qkvo + biases
+        total += 4 * d              # 2 layernorms
+        if cfg.is_moe_layer(layer):
+            e = cfg.num_experts
+            total += e * (d * f + f + f * d + d)               # experts
+            if cfg.variant == "smile":
+                total += d * cfg.n_nodes + d * cfg.gpus_per_node  # bi-level routers
+            else:
+                total += d * e                                  # flat router
+        else:
+            fw = f * cfg.num_experts if cfg.variant == "dense_wide" else f
+            total += d * fw + fw + fw * d + d
+    total += v  # mlm head: tied embedding + per-vocab bias
+    return total
+
+
+PRESETS = {
+    "tiny": tiny,
+    "small": small,
+    "mlm100m": mlm100m,
+    "moelayer": moe_layer_micro,
+}

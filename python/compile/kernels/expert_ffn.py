@@ -1,0 +1,199 @@
+"""Expert FFN Pallas kernels — the MoE compute hot spot.
+
+Forward: for every expert e, ``gelu(x_e @ w1_e + b1_e) @ w2_e + b2_e``
+where ``x_e`` is the ``[C, d]`` capacity-slice of tokens dispatched to
+that expert.  Backward is a second Pallas kernel that recomputes the
+activation (checkpointing) and emits all five gradients in one pass.
+
+TPU mapping (DESIGN.md §3 Hardware-Adaptation):
+
+- The CUDA implementation launches one stream/block per expert; here the
+  *grid's first axis is the expert axis*, so the Pallas pipeline
+  double-buffers the next expert's weights HBM→VMEM while the MXU chews
+  on the current one.
+- The ffn dimension ``f`` is tiled by ``block_f`` (grid axis 1) with the
+  output block revisited and accumulated across f-tiles — the classic
+  MXU k-loop.  VMEM per grid step is
+  ``C*d + d*bf + bf + bf*d + d + C*d`` floats; ``pick_block_f`` keeps it
+  under a 16 MiB budget.
+- All matmuls request ``preferred_element_type=f32`` so an eventual
+  bf16 port accumulates in f32 on the MXU.
+
+``interpret=True``: CPU PJRT cannot run Mosaic custom-calls; structure,
+not wallclock, is what the interpret path validates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def pick_block_f(c: int, d: int, f: int) -> int:
+    """Largest f-tile (dividing f, multiple of 128 when possible) whose
+    grid-step VMEM footprint fits the budget."""
+    bf = f
+    while bf > 128 and vmem_bytes(c, d, f, bf) > VMEM_BUDGET_BYTES:
+        bf //= 2
+    while f % bf != 0 and bf > 1:
+        bf //= 2
+    return max(bf, 1)
+
+
+def vmem_bytes(c: int, d: int, f: int, bf: int) -> int:
+    """f32 VMEM footprint of one forward grid step (x, w1-tile, b1-tile,
+    w2-tile, b2, out)."""
+    del f
+    return 4 * (c * d + d * bf + bf + bf * d + d + c * d)
+
+
+def mxu_utilization_estimate(c: int, d: int, bf: int) -> float:
+    """Fraction of MXU lanes busy for the two tile matmuls, assuming a
+    128x128 systolic array: each dimension contributes min(dim,128)/128
+    padding efficiency.  Reported in EXPERIMENTS.md §Perf."""
+
+    def eff(m: int, k: int, n: int) -> float:
+        import math
+
+        return (
+            (m / (math.ceil(m / 128) * 128))
+            * (k / (math.ceil(k / 128) * 128))
+            * (n / (math.ceil(n / 128) * 128))
+        )
+
+    # [C,d]@[d,bf] and [C,bf]@[bf,d]
+    return 0.5 * (eff(c, d, bf) + eff(c, bf, d))
+
+
+def _ffn_fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    fi = pl.program_id(1)
+    x = x_ref[0]
+    pre = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32) + b1_ref[0]
+    h = ref.gelu(pre)
+    part = jnp.dot(h, w2_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(fi == 0)
+    def _init():
+        o_ref[0] = (part + b2_ref[0]).astype(o_ref.dtype)
+
+    @pl.when(fi > 0)
+    def _acc():
+        o_ref[0] += part.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f",))
+def _ffn_fwd_call(xe, w1, b1, w2, b2, block_f: int = 0):
+    e, c, d = xe.shape
+    f = w1.shape[2]
+    bf = block_f or pick_block_f(c, d, f)
+    grid = (e, f // bf)
+    return pl.pallas_call(
+        _ffn_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda ei, fi: (ei, 0, 0)),
+            pl.BlockSpec((1, d, bf), lambda ei, fi: (ei, 0, fi)),
+            pl.BlockSpec((1, bf), lambda ei, fi: (ei, fi)),
+            pl.BlockSpec((1, bf, d), lambda ei, fi: (ei, fi, 0)),
+            pl.BlockSpec((1, d), lambda ei, fi: (ei, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, d), lambda ei, fi: (ei, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), xe.dtype),
+        interpret=True,
+    )(xe, w1, b1, w2, b2)
+
+
+def _ffn_bwd_kernel(
+    x_ref, w1_ref, b1_ref, w2_ref, dout_ref,
+    dx_ref, dw1_ref, db1_ref, dw2_ref, db2_ref,
+):
+    fi = pl.program_id(1)
+    x = x_ref[0]
+    dout = dout_ref[0]
+    pre = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32) + b1_ref[0]
+    h = ref.gelu(pre)
+    dh = jnp.dot(dout, w2_ref[0].T, preferred_element_type=jnp.float32)
+    dpre = dh * ref.gelu_grad(pre)
+    dw1_ref[0] = jnp.dot(x.T, dpre, preferred_element_type=jnp.float32).astype(dw1_ref.dtype)
+    db1_ref[0] = dpre.sum(axis=0).astype(db1_ref.dtype)
+    dw2_ref[0] = jnp.dot(h.T, dout, preferred_element_type=jnp.float32).astype(dw2_ref.dtype)
+    part_dx = jnp.dot(dpre, w1_ref[0].T, preferred_element_type=jnp.float32)
+
+    @pl.when(fi == 0)
+    def _init():
+        dx_ref[0] = part_dx.astype(dx_ref.dtype)
+        db2_ref[0] = dout.sum(axis=0).astype(db2_ref.dtype)
+
+    @pl.when(fi > 0)
+    def _acc():
+        dx_ref[0] += part_dx.astype(dx_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f",))
+def _ffn_bwd_call(xe, w1, b1, w2, dout, block_f: int = 0):
+    e, c, d = xe.shape
+    f = w1.shape[2]
+    bf = block_f or pick_block_f(c, d, f)
+    grid = (e, f // bf)
+    out_shapes = (
+        jax.ShapeDtypeStruct((e, c, d), xe.dtype),   # dx
+        jax.ShapeDtypeStruct((e, d, f), w1.dtype),   # dw1
+        jax.ShapeDtypeStruct((e, f), w1.dtype),      # db1
+        jax.ShapeDtypeStruct((e, f, d), w1.dtype),   # dw2
+        jax.ShapeDtypeStruct((e, d), w1.dtype),      # db2
+    )
+    return pl.pallas_call(
+        _ffn_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda ei, fi: (ei, 0, 0)),
+            pl.BlockSpec((1, d, bf), lambda ei, fi: (ei, 0, fi)),
+            pl.BlockSpec((1, bf), lambda ei, fi: (ei, fi)),
+            pl.BlockSpec((1, bf, d), lambda ei, fi: (ei, fi, 0)),
+            pl.BlockSpec((1, c, d), lambda ei, fi: (ei, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, c, d), lambda ei, fi: (ei, 0, 0)),
+            pl.BlockSpec((1, d, bf), lambda ei, fi: (ei, 0, fi)),
+            pl.BlockSpec((1, bf), lambda ei, fi: (ei, fi)),
+            pl.BlockSpec((1, bf, d), lambda ei, fi: (ei, fi, 0)),
+            pl.BlockSpec((1, d), lambda ei, fi: (ei, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=True,
+    )(xe, w1, b1, w2, dout)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def expert_ffn(xe, w1, b1, w2, b2, block_f: int = 0):
+    """Pallas expert FFN with a Pallas backward (activation recompute)."""
+    return _ffn_fwd_call(xe, w1, b1, w2, b2, block_f=block_f)
+
+
+def _expert_ffn_vjp_fwd(xe, w1, b1, w2, b2, block_f):
+    out = _ffn_fwd_call(xe, w1, b1, w2, b2, block_f=block_f)
+    return out, (xe, w1, b1, w2)
+
+
+def _expert_ffn_vjp_bwd(block_f, res, dout):
+    xe, w1, b1, w2 = res
+    dxe, dw1, db1, dw2, db2 = _ffn_bwd_call(xe, w1, b1, w2, dout, block_f=block_f)
+    return dxe, dw1, db1, dw2, db2
+
+
+expert_ffn.defvjp(_expert_ffn_vjp_fwd, _expert_ffn_vjp_bwd)
+
+
+def select(use_pallas: bool):
+    """Return the pallas or reference expert-FFN implementation with a
+    uniform (xe, w1, b1, w2, b2, block_f) signature."""
+    if use_pallas:
+        return expert_ffn
+    return lambda xe, w1, b1, w2, b2, block_f=0: ref.expert_ffn(xe, w1, b1, w2, b2)

@@ -1,0 +1,112 @@
+"""Pure-jnp reference implementations ("oracles") for every Pallas kernel.
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels match
+these to tight tolerances.  They are also the building blocks of the
+gradient (custom_vjp backward) paths, and the ``use_pallas=False`` model
+variant for A/B perf comparisons.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximate GELU (the BERT/paper activation)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def gelu_grad(x: jax.Array) -> jax.Array:
+    """d gelu(x) / dx for the tanh approximation (used by bwd kernels)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    u = c * (x + 0.044715 * x**3)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3 * 0.044715 * x**2)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * du
+
+
+def router_probs(x: jax.Array, wr: jax.Array) -> jax.Array:
+    """Router probabilities (paper Eq. 1): softmax(x @ wr) over experts.
+
+    x: [T, d] token hidden vectors; wr: [d, E]; returns [T, E].
+    """
+    logits = jnp.dot(x, wr)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def top1(probs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Top-1 expert index and its routing probability. [T,E] -> ([T],[T])."""
+    idx = jnp.argmax(probs, axis=-1)
+    gate = jnp.max(probs, axis=-1)
+    return idx, gate
+
+
+def expert_ffn(
+    xe: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+) -> jax.Array:
+    """Per-expert FFN: gelu(xe @ w1 + b1) @ w2 + b2.
+
+    xe: [E, C, d]; w1: [E, d, f]; b1: [E, f]; w2: [E, f, d]; b2: [E, d].
+    Returns [E, C, d].
+    """
+    h = gelu(jnp.einsum("ecd,edf->ecf", xe, w1) + b1[:, None, :])
+    return jnp.einsum("ecf,efd->ecd", h, w2) + b2[:, None, :]
+
+
+def expert_ffn_bwd(
+    xe: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    dout: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Analytic backward of ``expert_ffn`` (recomputes activations).
+
+    Returns (dxe, dw1, db1, dw2, db2).
+    """
+    pre = jnp.einsum("ecd,edf->ecf", xe, w1) + b1[:, None, :]
+    h = gelu(pre)
+    dh = jnp.einsum("ecd,efd->ecf", dout, w2)
+    dpre = dh * gelu_grad(pre)
+    dxe = jnp.einsum("ecf,edf->ecd", dpre, w1)
+    dw1 = jnp.einsum("ecd,ecf->edf", xe, dpre)
+    db1 = dpre.sum(axis=1)
+    dw2 = jnp.einsum("ecf,ecd->efd", h, dout)
+    db2 = dout.sum(axis=1)
+    return dxe, dw1, db1, dw2, db2
+
+
+def lb_loss(probs: jax.Array, idx: jax.Array, coeff: float) -> jax.Array:
+    """One load-balancing term of paper Eq. 4: coeff * E * sum_i f_i * P_i.
+
+    ``f_i`` is the fraction of tokens whose argmax router choice is i;
+    ``P_i`` the mean routing probability mass on i.  Minimum value under
+    uniform routing is ``coeff`` (attained at f_i = P_i = 1/E).
+    """
+    e = probs.shape[-1]
+    f = jnp.mean(jax.nn.one_hot(idx, e, dtype=probs.dtype), axis=0)
+    p = jnp.mean(probs, axis=0)
+    return coeff * e * jnp.sum(f * p)
+
+
+def bilevel_route(
+    x: jax.Array, wr_node: jax.Array, wr_gpu: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Bi-level routing (paper Eq. 3): token -> node i, then -> local expert j.
+
+    Returns (p [T,n], q [T,m], i [T], p_i [T], j [T], q_j [T]); the flat
+    expert id is ``i * m + j`` with combined gate ``p_i * q_j``.
+    """
+    p = router_probs(x, wr_node)
+    q = router_probs(x, wr_gpu)
+    i, pi = top1(p)
+    j, qj = top1(q)
+    return p, q, i, pi, j, qj

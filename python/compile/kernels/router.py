@@ -1,0 +1,104 @@
+"""Fused router Pallas kernel (paper Eq. 1).
+
+Computes ``softmax(x @ wr)`` in a single kernel so the ``[T, E]`` logits
+never round-trip through HBM between the matmul and the softmax.  On TPU
+the matmul feeds the MXU and the row softmax runs on the VPU over the
+tile that is already resident in VMEM.
+
+Hardware adaptation note (DESIGN.md §3): the CUDA equivalent would use a
+warp-level reduction for the row max/sum; here both are plain VPU
+reductions over the last axis of the VMEM tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels are lowered through the Pallas interpreter into
+portable HLO (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Token-tile height. 128 matches the MXU systolic array edge; smaller T
+# uses a single tile.
+DEFAULT_BLOCK_T = 128
+
+
+def _router_kernel(x_ref, wr_ref, probs_ref):
+    """One grid step: [bt, d] @ [d, E] -> row-softmax -> [bt, E]."""
+    logits = jnp.dot(x_ref[...], wr_ref[...], preferred_element_type=jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = jnp.exp(logits - m)
+    probs_ref[...] = (z / jnp.sum(z, axis=-1, keepdims=True)).astype(probs_ref.dtype)
+
+
+def _pick_block_t(t: int) -> int:
+    if t <= DEFAULT_BLOCK_T:
+        return t
+    bt = DEFAULT_BLOCK_T
+    while t % bt != 0:  # keep the grid exact; T is a power-of-two batch*seq
+        bt //= 2
+        if bt == 1:
+            return t  # fall back to a single tile
+    return bt
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def _router_fwd_call(x: jax.Array, wr: jax.Array, block_t: int = 0) -> jax.Array:
+    t, d = x.shape
+    e = wr.shape[1]
+    bt = block_t or _pick_block_t(t)
+    grid = (t // bt,)
+    return pl.pallas_call(
+        _router_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, e), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, e), x.dtype),
+        interpret=True,
+    )(x, wr)
+
+
+@jax.custom_vjp
+def router_probs(x: jax.Array, wr: jax.Array) -> jax.Array:
+    """Pallas-fused router probabilities; gradient via the analytic
+    softmax backward (ref math) so the full model stays differentiable."""
+    return _router_fwd_call(x, wr)
+
+
+def _router_vjp_fwd(x, wr):
+    probs = _router_fwd_call(x, wr)
+    return probs, (x, wr, probs)
+
+
+def _router_vjp_bwd(res, dprobs):
+    x, wr, probs = res
+    # softmax backward: dlogits = (dprobs - <dprobs, probs>) * probs
+    inner = jnp.sum(dprobs * probs, axis=-1, keepdims=True)
+    dlogits = (dprobs - inner) * probs
+    dx = jnp.dot(dlogits, wr.T)
+    dwr = jnp.dot(x.T, dlogits)
+    return dx, dwr
+
+
+router_probs.defvjp(_router_vjp_fwd, _router_vjp_bwd)
+
+
+def vmem_bytes(t: int, d: int, e: int, block_t: int = 0) -> int:
+    """Estimated VMEM footprint of one grid step (f32): x-tile + router
+    weight + probs tile.  Used by the §Perf report in EXPERIMENTS.md."""
+    bt = block_t or _pick_block_t(t)
+    return 4 * (bt * d + d * e + bt * e)
+
+
+def select(use_pallas: bool):
+    """Return the pallas or reference router implementation."""
+    return router_probs if use_pallas else ref.router_probs

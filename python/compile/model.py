@@ -1,0 +1,173 @@
+"""L2: BERT-style masked-LM encoder with MoE layers (paper §4.1).
+
+Architecture (pre-LN transformer, as in the paper's "BERT-like" stack):
+
+    tok_emb + pos_emb
+    L x [ x + MHA(LN(x));  x + FFN_or_MoE(LN(x)) ]
+    LN -> logits = h @ tok_emb^T + bias   (tied embedding MLM head)
+
+Every other FFN is replaced by a MoE layer (``cfg.moe_every``); the MoE
+layer follows the attention layer with a skip connection, exactly the
+placement in §4.1.  The training objective is masked-token cross
+entropy + the additive load-balancing loss summed over SMILE layers
+(Eq. 5).
+
+Everything here is pure-functional jax intended to be lowered ONCE by
+``aot.py``; nothing in this module runs at serving/training time.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import moe
+from .configs import ModelConfig
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> Params:
+    """Initialize the full parameter pytree from an int32 seed scalar.
+
+    Deterministic in the seed; the rust trainer calls the AOT'd version of
+    this once at startup (``init_*`` artifact).
+    """
+    key = jax.random.PRNGKey(seed)
+    d = cfg.hidden_size
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    params: Params = {
+        "tok_emb": jax.random.normal(keys[0], (cfg.vocab_size, d)) * 0.02,
+        "pos_emb": jax.random.normal(keys[1], (cfg.seq_len, d)) * 0.02,
+        "final_ln_g": jnp.ones((d,)),
+        "final_ln_b": jnp.zeros((d,)),
+        "mlm_bias": jnp.zeros((cfg.vocab_size,)),
+        "layers": [],
+    }
+    for layer in range(cfg.num_layers):
+        lk = jax.random.split(keys[2 + layer], 5)
+        layer_params = {
+            "ln1_g": jnp.ones((d,)),
+            "ln1_b": jnp.zeros((d,)),
+            "wq": jax.random.normal(lk[0], (d, d)) * (1.0 / d) ** 0.5,
+            "wk": jax.random.normal(lk[1], (d, d)) * (1.0 / d) ** 0.5,
+            "wv": jax.random.normal(lk[2], (d, d)) * (1.0 / d) ** 0.5,
+            "wo": jax.random.normal(lk[3], (d, d)) * (1.0 / d) ** 0.5,
+            "bq": jnp.zeros((d,)),
+            "bk": jnp.zeros((d,)),
+            "bv": jnp.zeros((d,)),
+            "bo": jnp.zeros((d,)),
+            "ln2_g": jnp.ones((d,)),
+            "ln2_b": jnp.zeros((d,)),
+            "ffn": moe.init_layer_params(cfg, lk[4], layer),
+        }
+        params["layers"].append(layer_params)
+    return params
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def layer_norm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-6) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def attention(cfg: ModelConfig, lp: Params, x: jax.Array) -> jax.Array:
+    """Bidirectional multi-head self-attention.  x: [B, S, d]."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ lp["wq"] + lp["bq"]).reshape(b, s, h, hd)
+    k = (x @ lp["wk"] + lp["bk"]).reshape(b, s, h, hd)
+    v = (x @ lp["wv"] + lp["bv"]).reshape(b, s, h, hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, s, d)
+    return ctx @ lp["wo"] + lp["bo"]
+
+
+def encoder(
+    cfg: ModelConfig, params: Params, tokens: jax.Array
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """tokens [B, S] int32 -> (hidden [B, S, d], summed aux stats)."""
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :, :]
+    aux_sum: dict[str, jax.Array] | None = None
+    for layer_idx, lp in enumerate(params["layers"]):
+        x = x + attention(cfg, lp, layer_norm(x, lp["ln1_g"], lp["ln1_b"]))
+        xn = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        y2d, aux = moe.moe_layer(cfg, lp["ffn"], xn.reshape(b * s, -1), layer_idx)
+        x = x + y2d.reshape(b, s, -1)
+        if aux_sum is None:
+            aux_sum = dict(aux)
+        else:
+            aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
+    assert aux_sum is not None
+    h = layer_norm(x, params["final_ln_g"], params["final_ln_b"])
+    return h, aux_sum
+
+
+def mlm_logits(params: Params, h: jax.Array) -> jax.Array:
+    """Tied-embedding MLM head: [B,S,d] -> [B,S,V]."""
+    return jnp.einsum("bsd,vd->bsv", h, params["tok_emb"]) + params["mlm_bias"]
+
+
+def mlm_loss(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    labels: jax.Array,
+    weights: jax.Array,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Masked cross-entropy over positions with weight > 0 (the rust data
+    loader replaces those input tokens with [MASK]/random per BERT).
+
+    Returns (total_loss, metrics) where total_loss = mlm + sum lb (Eq. 5).
+    """
+    h, aux = encoder(cfg, params, tokens)
+    logits = mlm_logits(params, h)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(weights.sum(), 1.0)
+    loss_mlm = (tok_nll * weights).sum() / denom
+    loss_lb = aux["lb_loss"]
+    total = loss_mlm + loss_lb
+    metrics = {
+        "loss": total,
+        "mlm_loss": loss_mlm,
+        "lb_loss": loss_lb,
+        "lb_inter": aux["lb_inter"],
+        "lb_intra": aux["lb_intra"],
+        "dropped_frac": aux["dropped_frac"] / cfg.num_layers,
+        "expert_frac": aux["expert_frac"] / cfg.num_layers,
+        "node_frac": aux["node_frac"] / cfg.num_layers,
+    }
+    return total, metrics
+
+
+def eval_nll(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    labels: jax.Array,
+    weights: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Eval entry: (sum masked NLL, sum weights) — rust accumulates these
+    across batches and reports perplexity = exp(nll_sum / w_sum)."""
+    h, _ = encoder(cfg, params, tokens)
+    logits = mlm_logits(params, h)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return (tok_nll * weights).sum(), weights.sum()

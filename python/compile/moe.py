@@ -1,0 +1,196 @@
+"""MoE layers: dense FFN, Switch (single-level top-1) and SMILE (bi-level).
+
+Dispatch follows the GShard/Switch dense-einsum formulation so the whole
+layer stays a single differentiable XLA program: a one-hot dispatch
+tensor ``[T, E, C]`` scatters tokens into per-expert capacity slots, the
+Pallas expert-FFN kernel processes the ``[E, C, d]`` block, and the
+combine tensor (dispatch * gate) gathers results back.  Tokens beyond an
+expert's capacity are dropped (output contribution zero, residual path
+carries them) exactly as in Switch Transformer.
+
+SMILE's bi-level routing (paper §3.2.1, Eq. 3) picks node ``i`` with an
+inter-node router over n nodes and local expert ``j`` with an intra-node
+router over m slots; the flat expert is ``e = i*m + j`` with gate
+``p_i * q_j``.  Both routers are "tied across workers" — they are single
+weight matrices, exactly as the paper states, so routing is identical no
+matter which worker evaluates it.  The additive load-balancing loss is
+Eq. 4; its unscaled minimum is alpha + beta (tested).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import expert_ffn as ffn_kernel
+from .kernels import ref
+from .kernels import router as router_kernel
+
+
+def _one_hot(x: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    return jax.nn.one_hot(x, n, dtype=dtype)
+
+
+def make_dispatch(
+    expert_idx: jax.Array, gate: jax.Array, num_experts: int, capacity: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Build dispatch/combine tensors for top-1 routing with capacity.
+
+    expert_idx: [T] int32 chosen expert per token; gate: [T] routing prob.
+    Returns (dispatch [T,E,C] {0,1}, combine [T,E,C], kept [T] {0,1}).
+    Position within an expert is assigned in token order (cumsum), the
+    deterministic policy Switch Transformer uses.
+    """
+    t = expert_idx.shape[0]
+    onehot = _one_hot(expert_idx, num_experts)                    # [T, E]
+    pos = jnp.cumsum(onehot, axis=0) * onehot - 1.0               # slot per token
+    kept = (pos < capacity) & (pos >= 0)                          # [T, E] bool
+    pos = jnp.clip(pos, 0, capacity - 1).astype(jnp.int32)
+    pos_onehot = _one_hot(pos, capacity) * kept[..., None]        # [T, E, C]
+    dispatch = pos_onehot
+    combine = dispatch * gate[:, None, None]
+    kept_tok = kept.sum(axis=-1)
+    return dispatch, combine, kept_tok
+
+
+def _expert_compute(cfg: ModelConfig, params: dict[str, Any], xe: jax.Array) -> jax.Array:
+    fn = ffn_kernel.select(cfg.use_pallas)
+    return fn(xe, params["w1"], params["b1"], params["w2"], params["b2"], cfg.block_f)
+
+
+def switch_layer(
+    cfg: ModelConfig, params: dict[str, Any], x: jax.Array
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Single-level top-1 MoE layer (Switch Transformer baseline).
+
+    x: [T, d] -> ([T, d], aux dict with lb_loss and routing stats).
+    """
+    e, cap = cfg.num_experts, cfg.expert_capacity
+    route = router_kernel.select(cfg.use_pallas)
+    probs = route(x, params["wr"])                                # [T, E]
+    idx, gate = ref.top1(probs)
+    dispatch, combine, kept = make_dispatch(idx, gate, e, cap)
+    xe = jnp.einsum("tec,td->ecd", dispatch, x)                   # [E, C, d]
+    ye = _expert_compute(cfg, params, xe)
+    y = jnp.einsum("tec,ecd->td", combine, ye)
+    lb = ref.lb_loss(probs, idx, cfg.alpha)
+    f_frac = jnp.mean(_one_hot(idx, e), axis=0)
+    aux = {
+        "lb_loss": lb,
+        "lb_inter": lb,
+        "lb_intra": jnp.zeros_like(lb),
+        "dropped_frac": 1.0 - jnp.mean(kept),
+        "expert_frac": f_frac,
+        "node_frac": f_frac.reshape(cfg.n_nodes, cfg.gpus_per_node).sum(-1),
+    }
+    return y, aux
+
+
+def smile_layer(
+    cfg: ModelConfig, params: dict[str, Any], x: jax.Array
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Bi-level top-1 MoE layer (SMILE, paper Eq. 3 + Eq. 4).
+
+    Inter-node router over n nodes, intra-node router over m local slots;
+    flat expert id i*m + j, gate p_i * q_j; additive LB loss.
+    """
+    n, m = cfg.n_nodes, cfg.gpus_per_node
+    cap = cfg.expert_capacity
+    route = router_kernel.select(cfg.use_pallas)
+    p = route(x, params["wr_node"])                               # [T, n]
+    q = route(x, params["wr_gpu"])                                # [T, m]
+    i, pi = ref.top1(p)
+    j, qj = ref.top1(q)
+    expert_idx = i * m + j
+    gate = pi * qj                                                # Eq. 3
+    dispatch, combine, kept = make_dispatch(expert_idx, gate, n * m, cap)
+    xe = jnp.einsum("tec,td->ecd", dispatch, x)
+    ye = _expert_compute(cfg, params, xe)
+    y = jnp.einsum("tec,ecd->td", combine, ye)
+    lb_inter = ref.lb_loss(p, i, cfg.alpha)                       # Eq. 4 term 1
+    lb_intra = ref.lb_loss(q, j, cfg.beta)                        # Eq. 4 term 2
+    aux = {
+        "lb_loss": lb_inter + lb_intra,
+        "lb_inter": lb_inter,
+        "lb_intra": lb_intra,
+        "dropped_frac": 1.0 - jnp.mean(kept),
+        "expert_frac": jnp.mean(_one_hot(expert_idx, n * m), axis=0),
+        "node_frac": jnp.mean(_one_hot(i, n), axis=0),
+    }
+    return y, aux
+
+
+def dense_layer(
+    cfg: ModelConfig, params: dict[str, Any], x: jax.Array
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Plain FFN (``dense``) or expert-parameter-matched wide FFN
+    (``dense_wide``); still runs through the Pallas kernel with E=1."""
+    t = x.shape[0]
+    xe = x[None, :, :]                                            # [1, T, d]
+    fn = ffn_kernel.select(cfg.use_pallas)
+    ye = fn(
+        xe,
+        params["w1"][None],
+        params["b1"][None],
+        params["w2"][None],
+        params["b2"][None],
+        cfg.block_f,
+    )
+    zero = jnp.zeros((), x.dtype)
+    e = cfg.num_experts
+    aux = {
+        "lb_loss": zero,
+        "lb_inter": zero,
+        "lb_intra": zero,
+        "dropped_frac": zero,
+        "expert_frac": jnp.full((e,), 1.0 / e, x.dtype),
+        "node_frac": jnp.full((cfg.n_nodes,), 1.0 / cfg.n_nodes, x.dtype),
+    }
+    return ye[0], aux
+
+
+def moe_layer(
+    cfg: ModelConfig, params: dict[str, Any], x: jax.Array, layer_idx: int
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Dispatch on (variant, layer position): the model replaces every
+    other FFN with a MoE layer (paper §4.1)."""
+    if cfg.is_moe_layer(layer_idx):
+        if cfg.variant == "switch":
+            return switch_layer(cfg, params, x)
+        if cfg.variant == "smile":
+            return smile_layer(cfg, params, x)
+        raise ValueError(f"variant {cfg.variant} has no MoE layers")
+    return dense_layer(cfg, params, x)
+
+
+def init_layer_params(
+    cfg: ModelConfig, key: jax.Array, layer_idx: int
+) -> dict[str, jax.Array]:
+    """Initialize one FFN/MoE layer's parameters (truncated-normal-ish
+    scaled gaussians, BERT-style 0.02 std on routers)."""
+    d, f = cfg.hidden_size, cfg.ffn_size
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if cfg.is_moe_layer(layer_idx):
+        e = cfg.num_experts
+        params = {
+            "w1": jax.random.normal(k1, (e, d, f)) * (2.0 / (d + f)) ** 0.5,
+            "b1": jnp.zeros((e, f)),
+            "w2": jax.random.normal(k2, (e, f, d)) * (2.0 / (d + f)) ** 0.5,
+            "b2": jnp.zeros((e, d)),
+        }
+        if cfg.variant == "smile":
+            params["wr_node"] = jax.random.normal(k3, (d, cfg.n_nodes)) * 0.02
+            params["wr_gpu"] = jax.random.normal(k4, (d, cfg.gpus_per_node)) * 0.02
+        else:
+            params["wr"] = jax.random.normal(k3, (d, e)) * 0.02
+        return params
+    fw = f * cfg.num_experts if cfg.variant == "dense_wide" else f
+    return {
+        "w1": jax.random.normal(k1, (d, fw)) * (2.0 / (d + fw)) ** 0.5,
+        "b1": jnp.zeros((fw,)),
+        "w2": jax.random.normal(k2, (fw, d)) * (2.0 / (d + fw)) ** 0.5,
+        "b2": jnp.zeros((d,)),
+    }

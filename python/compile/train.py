@@ -1,0 +1,175 @@
+"""Fused train/eval step functions to be AOT-lowered by ``aot.py``.
+
+The train step is one pure function
+
+    (params, opt_state, tokens, labels, weights, step)
+        -> (params', opt_state', metrics, expert_frac, node_frac)
+
+covering forward, backward, gradient accumulation (a ``lax.scan`` over
+the leading ``accum_steps`` axis of the batch — this keeps the parameter
+buffers on-device across micro-steps, which is exactly why the paper's
+``total_batch_size = micro_batch_size * num_micro_steps`` formulation
+matters on a bandwidth-limited testbed), clipping, and the optimizer.
+
+Metric scalars are packed into one f32 vector so the rust side reads a
+single small buffer per step; ``METRIC_NAMES`` is exported through the
+manifest.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import model, optim
+from .configs import ModelConfig
+
+METRIC_NAMES = (
+    "loss",
+    "mlm_loss",
+    "lb_loss",
+    "lb_inter",
+    "lb_intra",
+    "dropped_frac",
+    "grad_norm",
+    "lr",
+)
+
+
+def _tree_add(a: Any, b: Any) -> Any:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def _tree_scale(a: Any, s) -> Any:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def make_train_step(cfg: ModelConfig):
+    """Returns train_step(params, opt_state, tokens, labels, weights, step).
+
+    tokens/labels: int32 [A, B, S]; weights: f32 [A, B, S]; step: int32 [].
+    """
+
+    grad_fn = jax.value_and_grad(
+        lambda p, t, l, w: model.mlm_loss(cfg, p, t, l, w), has_aux=True
+    )
+
+    def train_step(params, opt_state, tokens, labels, weights, step):
+        a = cfg.accum_steps
+
+        if a == 1:
+            (_, metrics), grads = grad_fn(params, tokens[0], labels[0], weights[0])
+        else:
+
+            def micro(carry, batch):
+                t, l, w = batch
+                (_, m), g = grad_fn(params, t, l, w)
+                return _tree_add(carry, g), m
+
+            zero_g = jax.tree_util.tree_map(jnp.zeros_like, params)
+            grads, metrics_stack = jax.lax.scan(
+                micro, zero_g, (tokens, labels, weights)
+            )
+            grads = _tree_scale(grads, 1.0 / a)
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(axis=0), metrics_stack)
+
+        params2, opt2, opt_metrics = optim.apply_updates(
+            cfg, params, opt_state, grads, step
+        )
+        scalars = jnp.stack(
+            [
+                metrics["loss"],
+                metrics["mlm_loss"],
+                metrics["lb_loss"],
+                metrics["lb_inter"],
+                metrics["lb_intra"],
+                metrics["dropped_frac"],
+                opt_metrics["grad_norm"],
+                opt_metrics["lr"],
+            ]
+        ).astype(jnp.float32)
+        return (
+            params2,
+            opt2,
+            scalars,
+            metrics["expert_frac"].astype(jnp.float32),
+            metrics["node_frac"].astype(jnp.float32),
+        )
+
+    return train_step
+
+
+def make_multi_train_step(cfg: ModelConfig):
+    """K = cfg.steps_per_call optimizer steps fused into one call via
+    lax.scan; batch arrays gain a leading [K] axis and metrics come back
+    stacked [K, ...].  K=1 degenerates to make_train_step's signature
+    with K-leading axes of size 1."""
+    step_fn = make_train_step(cfg)
+
+    def multi_step(params, opt_state, tokens, labels, weights, step):
+        def body(carry, batch):
+            p, o, s = carry
+            t, l, w = batch
+            p2, o2, scalars, ef, nf = step_fn(p, o, t, l, w, s)
+            return (p2, o2, s + 1), (scalars, ef, nf)
+
+        (params2, opt2, _), (scalars, ef, nf) = jax.lax.scan(
+            body, (params, opt_state, step), (tokens, labels, weights)
+        )
+        return params2, opt2, scalars, ef, nf
+
+    return multi_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """eval_step(params, tokens, labels, weights) -> (nll_sum, w_sum);
+    batch shapes [B, S]."""
+
+    def eval_step(params, tokens, labels, weights):
+        nll, wsum = model.eval_nll(cfg, params, tokens, labels, weights)
+        return nll.astype(jnp.float32), wsum.astype(jnp.float32)
+
+    return eval_step
+
+
+def make_init(cfg: ModelConfig):
+    """init(seed:int32[]) -> (params, opt_state)."""
+
+    def init(seed):
+        params = model.init_params(cfg, seed)
+        return params, optim.init_opt_state(params)
+
+    return init
+
+
+def make_moe_layer_fn(cfg: ModelConfig):
+    """Single-MoE-layer microbench entry (Table 3 compute calibration):
+    (layer_params, x [T,d]) -> (y [T,d], lb_loss)."""
+    from . import moe
+
+    def layer_fn(layer_params, x):
+        y, aux = moe.moe_layer(cfg, layer_params, x, layer_idx=1)
+        return y, aux["lb_loss"]
+
+    return layer_fn
+
+
+def abstract_batch(cfg: ModelConfig):
+    k, a, b, s = cfg.steps_per_call, cfg.accum_steps, cfg.micro_batch, cfg.seq_len
+    return (
+        jax.ShapeDtypeStruct((k, a, b, s), jnp.int32),   # tokens
+        jax.ShapeDtypeStruct((k, a, b, s), jnp.int32),   # labels
+        jax.ShapeDtypeStruct((k, a, b, s), jnp.float32), # weights
+        jax.ShapeDtypeStruct((), jnp.int32),             # step
+    )
+
+
+def abstract_eval_batch(cfg: ModelConfig):
+    b, s = cfg.micro_batch, cfg.seq_len
+    return (
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct((b, s), jnp.float32),
+    )

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests are run from python/ (see Makefile) but make them work from
+# anywhere by putting the package root on the path.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

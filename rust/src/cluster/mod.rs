@@ -1,0 +1,6 @@
+//! Cluster management: ranks and bi-level process groups (paper
+//! §3.2.3, system S3 in DESIGN.md).
+
+pub mod groups;
+
+pub use groups::{Group, GroupId, GroupKind, ProcessGroups, Rank};

@@ -1,0 +1,228 @@
+//! Synthetic pre-training corpus — the C4 stand-in (DESIGN.md §2).
+//!
+//! Token statistics matter for routing realism (expert load follows
+//! token distribution), so the generator is a Zipf-Markov chain:
+//! unigram frequencies are Zipf(1.1) like natural text, and a hashed
+//! transition kernel gives each token a preferred successor set
+//! (so sequences are not i.i.d. and the router sees learnable
+//! structure).  Sharded exactly like the paper's setup (C4 split into
+//! 1024x24 files): shards are deterministic in (seed, shard_id) and can
+//! be materialized to disk or streamed.
+//!
+//! Token id conventions (mirrored by the L2 model's vocab):
+//!   0 = [PAD], 1 = [MASK], 2 = [CLS], 3 = [SEP], 4.. = text tokens.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::{Rng, Zipf};
+
+pub const PAD: i32 = 0;
+pub const MASK: i32 = 1;
+pub const CLS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const N_SPECIAL: i32 = 4;
+
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub vocab_size: usize,
+    pub seed: u64,
+    /// Zipf exponent for unigram frequencies (~1.0-1.2 for text).
+    pub zipf_s: f64,
+    /// Markov blend: probability of drawing the next token from the
+    /// current token's successor set rather than the unigram table.
+    pub markov_p: f64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec { vocab_size: 8192, seed: 0x5EED, zipf_s: 1.1, markov_p: 0.55 }
+    }
+}
+
+/// Deterministic shard generator.
+pub struct Corpus {
+    spec: CorpusSpec,
+    zipf: Zipf,
+}
+
+impl Corpus {
+    pub fn new(spec: CorpusSpec) -> Corpus {
+        assert!(spec.vocab_size > N_SPECIAL as usize + 8, "vocab too small");
+        let zipf = Zipf::new(spec.vocab_size - N_SPECIAL as usize, spec.zipf_s);
+        Corpus { spec, zipf }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.spec.vocab_size
+    }
+
+    fn unigram(&self, rng: &mut Rng) -> i32 {
+        N_SPECIAL + self.zipf.sample(rng) as i32
+    }
+
+    /// Deterministic successor for (token, slot): a small per-token
+    /// vocabulary neighborhood derived by hashing.
+    fn successor(&self, token: i32, rng: &mut Rng) -> i32 {
+        let slot = rng.below(4);
+        let h = (token as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(slot.wrapping_mul(0xBF58476D1CE4E5B9))
+            .wrapping_add(self.spec.seed);
+        let mixed = (h ^ (h >> 29)).wrapping_mul(0x94D049BB133111EB);
+        N_SPECIAL + (mixed % (self.spec.vocab_size as u64 - N_SPECIAL as u64)) as i32
+    }
+
+    /// Generate one sequence of exactly `len` tokens: [CLS] text... [SEP].
+    pub fn sequence(&self, rng: &mut Rng, len: usize) -> Vec<i32> {
+        assert!(len >= 2);
+        let mut seq = Vec::with_capacity(len);
+        seq.push(CLS);
+        let mut cur = self.unigram(rng);
+        for _ in 0..len - 2 {
+            seq.push(cur);
+            cur = if rng.f64() < self.spec.markov_p {
+                self.successor(cur, rng)
+            } else {
+                self.unigram(rng)
+            };
+        }
+        seq.push(SEP);
+        seq
+    }
+
+    /// RNG stream for a shard: independent of other shards, stable
+    /// across runs (the distributed-loading contract).
+    pub fn shard_rng(&self, shard_id: u64) -> Rng {
+        Rng::new(self.spec.seed ^ shard_id.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    /// Generate a whole shard of `n_seqs` sequences of `seq_len`.
+    pub fn shard(&self, shard_id: u64, n_seqs: usize, seq_len: usize) -> Vec<Vec<i32>> {
+        let mut rng = self.shard_rng(shard_id);
+        (0..n_seqs).map(|_| self.sequence(&mut rng, seq_len)).collect()
+    }
+
+    /// Materialize a shard to disk (u16 little-endian tokens, header:
+    /// magic, n_seqs, seq_len) — the FSx-style file path of the paper.
+    pub fn write_shard(
+        &self,
+        path: impl AsRef<Path>,
+        shard_id: u64,
+        n_seqs: usize,
+        seq_len: usize,
+    ) -> Result<()> {
+        let seqs = self.shard(shard_id, n_seqs, seq_len);
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&path)
+                .with_context(|| format!("creating {}", path.as_ref().display()))?,
+        );
+        f.write_all(b"SMC1")?;
+        f.write_all(&(n_seqs as u32).to_le_bytes())?;
+        f.write_all(&(seq_len as u32).to_le_bytes())?;
+        for s in &seqs {
+            for &t in s {
+                f.write_all(&(t as u16).to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_shard(path: impl AsRef<Path>) -> Result<Vec<Vec<i32>>> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path)
+                .with_context(|| format!("opening {}", path.as_ref().display()))?,
+        );
+        let mut hdr = [0u8; 12];
+        f.read_exact(&mut hdr)?;
+        anyhow::ensure!(&hdr[0..4] == b"SMC1", "bad shard magic");
+        let n_seqs = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+        let seq_len = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+        let mut buf = vec![0u8; n_seqs * seq_len * 2];
+        f.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(seq_len * 2)
+            .map(|row| {
+                row.chunks_exact(2)
+                    .map(|b| u16::from_le_bytes([b[0], b[1]]) as i32)
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::new(CorpusSpec { vocab_size: 512, ..Default::default() })
+    }
+
+    #[test]
+    fn sequence_structure() {
+        let c = corpus();
+        let mut rng = c.shard_rng(0);
+        let s = c.sequence(&mut rng, 32);
+        assert_eq!(s.len(), 32);
+        assert_eq!(s[0], CLS);
+        assert_eq!(s[31], SEP);
+        assert!(s[1..31].iter().all(|&t| t >= N_SPECIAL && (t as usize) < 512));
+    }
+
+    #[test]
+    fn shards_are_deterministic_and_independent() {
+        let c = corpus();
+        let a1 = c.shard(7, 4, 16);
+        let a2 = c.shard(7, 4, 16);
+        let b = c.shard(8, 4, 16);
+        assert_eq!(a1, a2);
+        assert_ne!(a1, b);
+    }
+
+    #[test]
+    fn zipf_head_is_heavy() {
+        let c = corpus();
+        let mut rng = c.shard_rng(1);
+        let mut counts = vec![0usize; 512];
+        for _ in 0..200 {
+            for t in c.sequence(&mut rng, 64) {
+                counts[t as usize] += 1;
+            }
+        }
+        // the most frequent text token should dominate the tail
+        let head: usize = counts[4..8].iter().sum();
+        let tail: usize = counts[256..260].iter().sum();
+        assert!(head > tail * 3, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn markov_structure_is_learnable() {
+        // successors of a token should repeat far more often than chance
+        let c = corpus();
+        let mut rng = c.shard_rng(2);
+        let mut pair_counts = std::collections::HashMap::new();
+        for _ in 0..300 {
+            let s = c.sequence(&mut rng, 64);
+            for w in s.windows(2) {
+                *pair_counts.entry((w[0], w[1])).or_insert(0usize) += 1;
+            }
+        }
+        let max_pair = pair_counts.values().max().copied().unwrap_or(0);
+        assert!(max_pair > 20, "no repeated bigrams: max {max_pair}");
+    }
+
+    #[test]
+    fn shard_file_roundtrip() {
+        let c = corpus();
+        let dir = std::env::temp_dir().join("smile_test_shards");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard_0.bin");
+        c.write_shard(&path, 0, 6, 24).unwrap();
+        let back = Corpus::read_shard(&path).unwrap();
+        assert_eq!(back, c.shard(0, 6, 24));
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,201 @@
+//! Masked-LM batch construction (BERT-style, the paper's pre-training
+//! objective §4.1): select 15% of positions; of those 80% become
+//! [MASK], 10% a random token, 10% stay — labels carry the original
+//! token, weights mark the selected positions.
+//!
+//! Produces the exact flat buffers the train artifact takes:
+//! tokens/labels i32 [K, A, B, S], weights f32 [K, A, B, S].
+
+use crate::util::rng::Rng;
+
+use super::corpus::{Corpus, CLS, MASK, N_SPECIAL, SEP};
+
+#[derive(Debug, Clone)]
+pub struct MlmSpec {
+    pub mask_prob: f64,
+    pub mask_token_frac: f64,
+    pub random_token_frac: f64,
+}
+
+impl Default for MlmSpec {
+    fn default() -> Self {
+        MlmSpec { mask_prob: 0.15, mask_token_frac: 0.8, random_token_frac: 0.1 }
+    }
+}
+
+/// One flat batch ready for the train artifact.
+#[derive(Debug, Clone)]
+pub struct MlmBatch {
+    /// [K, A, B, S] flattened
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub weights: Vec<f32>,
+    pub shape: [usize; 4],
+}
+
+impl MlmBatch {
+    pub fn num_masked(&self) -> usize {
+        self.weights.iter().filter(|&&w| w > 0.0).count()
+    }
+}
+
+pub struct MlmBatcher {
+    pub corpus: Corpus,
+    pub spec: MlmSpec,
+    rng: Rng,
+    /// rolling shard cursor (sequences are streamed shard by shard)
+    shard_id: u64,
+    buffer: Vec<Vec<i32>>,
+    seqs_per_shard: usize,
+}
+
+impl MlmBatcher {
+    pub fn new(corpus: Corpus, spec: MlmSpec, seed: u64) -> MlmBatcher {
+        MlmBatcher {
+            corpus,
+            spec,
+            rng: Rng::new(seed),
+            shard_id: 0,
+            buffer: Vec::new(),
+            seqs_per_shard: 256,
+        }
+    }
+
+    fn next_sequence(&mut self, seq_len: usize) -> Vec<i32> {
+        if self.buffer.is_empty() {
+            self.buffer = self.corpus.shard(self.shard_id, self.seqs_per_shard, seq_len);
+            self.buffer.reverse(); // pop from the back in order
+            self.shard_id += 1;
+        }
+        self.buffer.pop().unwrap()
+    }
+
+    /// Apply MLM masking to one sequence in place; returns (labels, weights).
+    pub fn mask_sequence(&mut self, tokens: &mut [i32]) -> (Vec<i32>, Vec<f32>) {
+        let vocab = self.corpus.vocab_size() as i64;
+        let labels: Vec<i32> = tokens.to_vec();
+        let mut weights = vec![0.0f32; tokens.len()];
+        for i in 0..tokens.len() {
+            // never mask special tokens
+            if tokens[i] == CLS || tokens[i] == SEP {
+                continue;
+            }
+            if self.rng.f64() < self.spec.mask_prob {
+                weights[i] = 1.0;
+                let r = self.rng.f64();
+                if r < self.spec.mask_token_frac {
+                    tokens[i] = MASK;
+                } else if r < self.spec.mask_token_frac + self.spec.random_token_frac {
+                    tokens[i] = self.rng.range(N_SPECIAL as i64, vocab) as i32;
+                } // else: keep original token
+            }
+        }
+        (labels, weights)
+    }
+
+    /// Build one [K, A, B, S] batch.
+    pub fn batch(&mut self, k: usize, a: usize, b: usize, s: usize) -> MlmBatch {
+        let n = k * a * b;
+        let mut tokens = Vec::with_capacity(n * s);
+        let mut labels = Vec::with_capacity(n * s);
+        let mut weights = Vec::with_capacity(n * s);
+        for _ in 0..n {
+            let mut seq = self.next_sequence(s);
+            let (l, w) = self.mask_sequence(&mut seq);
+            tokens.extend_from_slice(&seq);
+            labels.extend(l);
+            weights.extend(w);
+        }
+        MlmBatch { tokens, labels, weights, shape: [k, a, b, s] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusSpec;
+
+    fn batcher() -> MlmBatcher {
+        let corpus = Corpus::new(CorpusSpec { vocab_size: 512, ..Default::default() });
+        MlmBatcher::new(corpus, MlmSpec::default(), 42)
+    }
+
+    #[test]
+    fn mask_rate_near_fifteen_percent() {
+        let mut b = batcher();
+        let batch = b.batch(2, 2, 4, 64);
+        let frac = batch.num_masked() as f64 / batch.tokens.len() as f64;
+        assert!((0.10..0.20).contains(&frac), "mask rate {frac}");
+    }
+
+    #[test]
+    fn labels_preserve_originals_and_weights_flag_them() {
+        let mut b = batcher();
+        let mut seq = b.corpus.sequence(&mut b.corpus.shard_rng(9), 64);
+        let orig = seq.clone();
+        let (labels, weights) = b.mask_sequence(&mut seq);
+        assert_eq!(labels, orig);
+        for i in 0..seq.len() {
+            if weights[i] == 0.0 && seq[i] != MASK {
+                assert_eq!(seq[i], orig[i], "unmasked token changed at {i}");
+            }
+            if seq[i] == MASK {
+                assert!(weights[i] > 0.0, "MASK token must be weighted at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn specials_never_masked() {
+        let mut b = batcher();
+        let batch = b.batch(1, 1, 8, 32);
+        for (i, &t) in batch.tokens.iter().enumerate() {
+            if batch.labels[i] == CLS || batch.labels[i] == SEP {
+                assert_eq!(t, batch.labels[i]);
+                assert_eq!(batch.weights[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_positions_are_mostly_mask_token() {
+        let mut b = batcher();
+        let batch = b.batch(4, 2, 8, 64);
+        let (mut n_mask, mut n_w) = (0usize, 0usize);
+        for (i, &w) in batch.weights.iter().enumerate() {
+            if w > 0.0 {
+                n_w += 1;
+                if batch.tokens[i] == MASK {
+                    n_mask += 1;
+                }
+            }
+        }
+        let frac = n_mask as f64 / n_w as f64;
+        assert!((0.7..0.9).contains(&frac), "80% rule broken: {frac}");
+    }
+
+    #[test]
+    fn batch_shape_flat_sizes() {
+        let mut b = batcher();
+        let batch = b.batch(3, 2, 4, 16);
+        assert_eq!(batch.tokens.len(), 3 * 2 * 4 * 16);
+        assert_eq!(batch.labels.len(), batch.tokens.len());
+        assert_eq!(batch.weights.len(), batch.tokens.len());
+        assert_eq!(batch.shape, [3, 2, 4, 16]);
+    }
+
+    #[test]
+    fn batches_are_deterministic_in_seed() {
+        let mut b1 = batcher();
+        let mut b2 = batcher();
+        assert_eq!(b1.batch(1, 1, 2, 16).tokens, b2.batch(1, 1, 2, 16).tokens);
+    }
+
+    #[test]
+    fn consecutive_batches_differ() {
+        let mut b = batcher();
+        let x = b.batch(1, 1, 2, 16);
+        let y = b.batch(1, 1, 2, 16);
+        assert_ne!(x.tokens, y.tokens);
+    }
+}

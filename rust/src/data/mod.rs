@@ -1,0 +1,8 @@
+//! Data pipeline (system S8): synthetic Zipf-Markov corpus (the C4
+//! stand-in), deterministic shard files, and the masked-LM batcher.
+
+pub mod corpus;
+pub mod mlm;
+
+pub use corpus::{Corpus, CorpusSpec};
+pub use mlm::{MlmBatch, MlmBatcher, MlmSpec};

@@ -1,0 +1,29 @@
+//! # SMILE: Scaling Mixture-of-Experts with Efficient Bi-level Routing
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of the SMILE paper
+//! (He et al., 2022): bi-level (inter-node -> intra-node) MoE routing
+//! that exploits heterogeneous network bandwidth.
+//!
+//! Layer map (see DESIGN.md):
+//! - [`runtime`] loads AOT-compiled HLO artifacts (lowered once from
+//!   jax + Pallas by `python/compile/aot.py`) and executes them via the
+//!   PJRT CPU client — Python never runs on the training path.
+//! - [`trainer`] is the real training loop (the end-to-end driver).
+//! - [`cluster`], [`moe`], [`netsim`], [`simtrain`] are the
+//!   distributed-systems side: process groups (§3.2.3), dispatch plans
+//!   (§3.2.1), the simulated P4d/EFA testbed, and the step-time models
+//!   that regenerate every table and figure of the paper's evaluation.
+//! - [`data`] is the synthetic-corpus stand-in for C4; [`metrics`]
+//!   the profiler stand-in; [`util`] the from-scratch substrate
+//!   (json/cli/rng/stats/bench — the offline image vendors none of the
+//!   usual crates).
+
+pub mod cluster;
+pub mod data;
+pub mod metrics;
+pub mod moe;
+pub mod netsim;
+pub mod runtime;
+pub mod simtrain;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,276 @@
+//! `smile` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train          real MLM pre-training over PJRT (AOT artifacts)
+//!   eval           held-out perplexity of a checkpoint
+//!   simulate       step-time / throughput simulation on the P4d model
+//!   sweep          weak+strong scaling sweeps (Fig 3 / Fig 8)
+//!   layer          single-MoE-layer breakdown (Table 3 / Figs 9-11)
+//!   info           list artifacts and their configs
+//!
+//! Examples:
+//!   smile train --config tiny_smile --steps 100
+//!   smile simulate --model 3.7B --nodes 16
+//!   smile sweep --nodes 1,2,4,8,16
+//!   smile layer --variant smile --nodes 16
+
+use anyhow::{bail, Result};
+
+use smile::metrics::{CsvLogger, RunSummary, StepLog};
+use smile::netsim::ClusterSpec;
+use smile::runtime::Runtime;
+use smile::simtrain::{self, ModelDims, Scaling, Variant};
+use smile::trainer::Trainer;
+use smile::util::bench::Table;
+use smile::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "layer" => cmd_layer(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "smile — bi-level MoE routing (SMILE) reproduction\n\n\
+         usage: smile <command> [options]\n\n\
+         commands:\n\
+           train     --config <name> --steps N [--seed S] [--log out.csv] [--ckpt path] [--eval-every N]\n\
+           eval      --config <name> --ckpt path [--batches N]\n\
+           simulate  --model 3.7B|13B|48B --nodes N [--variant switch|smile|dense|dense_wide]\n\
+           sweep     [--nodes 1,2,4,8,16] [--model 3.7B]\n\
+           layer     --variant switch|smile [--nodes N] [--timeline]\n\
+           info"
+    );
+}
+
+fn variant_of(name: &str) -> Result<Variant> {
+    Ok(match name {
+        "dense" => Variant::Dense,
+        "dense_wide" => Variant::DenseWide,
+        "switch" => Variant::Switch,
+        "smile" => Variant::Smile,
+        other => bail!("unknown variant {other}"),
+    })
+}
+
+fn dims_of(name: &str) -> Result<ModelDims> {
+    Ok(match name {
+        "3.7B" => ModelDims::bert_3_7b(),
+        "13B" => ModelDims::bert_13b(),
+        "48B" => ModelDims::bert_48b(),
+        other => bail!("unknown model {other} (3.7B|13B|48B)"),
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = args.str("config", "tiny_smile");
+    let steps = args.usize("steps", 100);
+    let seed = args.u64("seed", 0) as i32;
+    let log_path = args.str("log", &format!("reports/train_{config}.csv"));
+    let eval_every = args.usize("eval-every", 0);
+
+    let rt = Runtime::new(smile::runtime::default_artifacts_dir())?;
+    let mut tr = Trainer::new(&rt, &config, seed)?;
+    let (k, a, b, s) = tr.batch_dims();
+    println!(
+        "config {config}: {} params, batch [K={k} A={a} B={b} S={s}], target {steps} steps",
+        tr.param_count()
+    );
+    let mut batcher = tr.make_batcher(seed as u64 + 1);
+    let mut logger = CsvLogger::create(&log_path)?;
+    let mut first_loss = None;
+    let mut last: Option<StepLog> = None;
+    let mut total_secs = 0.0;
+    let t0 = std::time::Instant::now();
+    while tr.step < steps {
+        let batch = batcher.batch(k, a, b, s);
+        let logs = tr.train_call(&batch)?;
+        for l in &logs {
+            logger.log(l)?;
+            total_secs += l.step_secs;
+            if first_loss.is_none() {
+                first_loss = Some(l.loss as f64);
+            }
+            if l.step % 10 == 0 || l.step + 1 == steps {
+                println!(
+                    "step {:>5}  loss {:.4}  ppl {:>9.2}  lb {:.5}  (inter {:.5} intra {:.5})  {:.0} ms/step",
+                    l.step,
+                    l.loss,
+                    l.perplexity(),
+                    l.lb_loss,
+                    l.lb_inter,
+                    l.lb_intra,
+                    l.step_secs * 1e3
+                );
+            }
+            last = Some(l.clone());
+        }
+        if eval_every > 0 && tr.step % eval_every == 0 {
+            let mut eb = tr.make_batcher(0xEAA1);
+            println!("  eval ppl @{}: {:.2}", tr.step, tr.evaluate(&mut eb, 4)?);
+        }
+    }
+    logger.flush()?;
+    if let Some(ckpt) = args.opt_str("ckpt") {
+        tr.save_checkpoint(&ckpt)?;
+        println!("checkpoint: {ckpt}");
+    }
+    let last = last.expect("at least one step");
+    let samples = tr.step * a * b;
+    let summary = RunSummary {
+        config: config.clone(),
+        steps: tr.step,
+        first_loss: first_loss.unwrap_or(0.0),
+        final_loss: last.loss as f64,
+        final_ppl: last.perplexity(),
+        mean_step_secs: total_secs / tr.step as f64,
+        tokens_per_sec: (samples * s) as f64 / t0.elapsed().as_secs_f64(),
+        samples_per_sec: samples as f64 / t0.elapsed().as_secs_f64(),
+        param_count: tr.param_count(),
+    };
+    summary.write(format!("reports/train_{config}.json"))?;
+    println!(
+        "done: loss {:.4} -> {:.4}, ppl {:.2}, {:.1} samples/s (wall)",
+        summary.first_loss, summary.final_loss, summary.final_ppl, summary.samples_per_sec
+    );
+    println!("log: {log_path}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let config = args.str("config", "tiny_smile");
+    let batches = args.usize("batches", 8);
+    let rt = Runtime::new(smile::runtime::default_artifacts_dir())?;
+    let mut tr = Trainer::new(&rt, &config, 0)?;
+    if let Some(ckpt) = args.opt_str("ckpt") {
+        tr.load_checkpoint(&ckpt)?;
+    }
+    let mut eb = tr.make_batcher(0xEAA1);
+    println!("perplexity ({batches} batches): {:.3}", tr.evaluate(&mut eb, batches)?);
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let dims = dims_of(&args.str("model", "3.7B"))?;
+    let nodes = args.usize("nodes", 16);
+    let spec = ClusterSpec::p4d(nodes);
+    let scaling = Scaling::Strong { global_batch: args.usize("batch", 16384) };
+    let mut table = Table::new(&[
+        "variant", "samples/s", "step(s)", "compute", "a2a_inter", "a2a_intra", "sync", "allreduce",
+    ]);
+    let variants: Vec<Variant> = match args.opt_str("variant") {
+        Some(v) => vec![variant_of(&v)?],
+        None => vec![Variant::Dense, Variant::DenseWide, Variant::Switch, Variant::Smile],
+    };
+    for v in variants {
+        let bd = simtrain::step_time(&dims, v, &spec, scaling);
+        let tp = scaling.global_batch(&spec, dims.micro_batch) as f64 / bd.total();
+        table.row(&[
+            v.name().into(),
+            format!("{tp:.0}"),
+            format!("{:.3}", bd.total()),
+            format!("{:.3}", bd.compute),
+            format!("{:.3}", bd.a2a_inter),
+            format!("{:.3}", bd.a2a_intra),
+            format!("{:.3}", bd.a2a_sync),
+            format!("{:.3}", bd.allreduce),
+        ]);
+    }
+    println!("model {} on {} nodes ({} GPUs):", dims.name, nodes, spec.num_gpus());
+    table.print();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let dims = dims_of(&args.str("model", "3.7B"))?;
+    let nodes = args.usize_list("nodes", &[1, 2, 4, 8, 16]);
+    let mut table = Table::new(&[
+        "nodes", "switch_weak", "smile_weak", "switch_strong", "smile_strong",
+    ]);
+    for &n in &nodes {
+        let spec = ClusterSpec::p4d(n);
+        let weak = Scaling::Weak { per_gpu_batch: dims.micro_batch };
+        let strong = Scaling::Strong { global_batch: 16384 };
+        table.row(&[
+            n.to_string(),
+            format!("{:.0}", simtrain::throughput(&dims, Variant::Switch, &spec, weak)),
+            format!("{:.0}", simtrain::throughput(&dims, Variant::Smile, &spec, weak)),
+            format!("{:.0}", simtrain::throughput(&dims, Variant::Switch, &spec, strong)),
+            format!("{:.0}", simtrain::throughput(&dims, Variant::Smile, &spec, strong)),
+        ]);
+    }
+    table.print();
+    table.write_csv("reports/scaling_sweep.csv");
+    Ok(())
+}
+
+fn cmd_layer(args: &Args) -> Result<()> {
+    let nodes = args.usize("nodes", 16);
+    let spec = ClusterSpec::p4d(nodes);
+    let dims = ModelDims::bert_3_7b();
+    let variants: Vec<Variant> = match args.opt_str("variant") {
+        Some(v) => vec![variant_of(&v)?],
+        None => vec![Variant::Switch, Variant::Smile],
+    };
+    let mut table = Table::new(&[
+        "variant", "total(ms)", "a2a_inter(ms)", "a2a_intra(ms)", "ffn+others(ms)", "a2a_ratio",
+    ]);
+    for v in variants {
+        let b = simtrain::moe_layer_forward(&dims, v, &spec);
+        table.row(&[
+            v.name().into(),
+            format!("{:.1}", b.total * 1e3),
+            format!("{:.1}", b.a2a_inter * 1e3),
+            format!("{:.1}", b.a2a_intra * 1e3),
+            format!("{:.1}", b.ffn_and_others * 1e3),
+            format!("{:.0}%", b.a2a_ratio * 100.0),
+        ]);
+        if args.bool("timeline", false) {
+            let json = smile::metrics::timeline_to_json(&b.timeline);
+            let path = format!("reports/timeline_{}_{}nodes.json", v.name(), nodes);
+            std::fs::create_dir_all("reports").ok();
+            std::fs::write(&path, json.to_string_pretty())?;
+            println!("timeline: {path}");
+        }
+    }
+    println!("single MoE layer forward, {} nodes (paper Table 3):", nodes);
+    table.print();
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let rt = Runtime::new(smile::runtime::default_artifacts_dir())?;
+    let mut table = Table::new(&["artifact", "kind", "config", "params", "inputs", "outputs"]);
+    for (name, a) in &rt.manifest.artifacts {
+        table.row(&[
+            name.clone(),
+            a.kind.clone(),
+            a.config.name.clone(),
+            a.param_count.to_string(),
+            a.inputs.len().to_string(),
+            a.outputs.len().to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,183 @@
+//! Metrics and reporting (system S13): the PyTorch-Profiler stand-in.
+//! Step logs -> CSV (loss curves, Fig 6/7), span timelines -> JSON
+//! (Figs 9-11), and run summaries for EXPERIMENTS.md.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::obj;
+use crate::util::json::Json;
+
+/// One training step's logged scalars (mirrors train.METRIC_NAMES plus
+/// wall-clock).
+#[derive(Debug, Clone, Default)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub mlm_loss: f32,
+    pub lb_loss: f32,
+    pub lb_inter: f32,
+    pub lb_intra: f32,
+    pub dropped_frac: f32,
+    pub grad_norm: f32,
+    pub lr: f32,
+    pub step_secs: f64,
+}
+
+impl StepLog {
+    pub fn perplexity(&self) -> f64 {
+        (self.mlm_loss as f64).exp()
+    }
+}
+
+/// Streaming CSV logger for loss curves (the Fig 6 / Fig 7 series).
+pub struct CsvLogger {
+    out: std::io::BufWriter<std::fs::File>,
+}
+
+impl CsvLogger {
+    pub fn create(path: impl AsRef<Path>) -> Result<CsvLogger> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut out = std::io::BufWriter::new(f);
+        writeln!(
+            out,
+            "step,loss,mlm_loss,perplexity,lb_loss,lb_inter,lb_intra,dropped_frac,grad_norm,lr,step_secs"
+        )?;
+        Ok(CsvLogger { out })
+    }
+
+    pub fn log(&mut self, s: &StepLog) -> Result<()> {
+        writeln!(
+            self.out,
+            "{},{:.6},{:.6},{:.4},{:.8},{:.8},{:.8},{:.6},{:.5},{:.8},{:.4}",
+            s.step,
+            s.loss,
+            s.mlm_loss,
+            s.perplexity(),
+            s.lb_loss,
+            s.lb_inter,
+            s.lb_intra,
+            s.dropped_frac,
+            s.grad_norm,
+            s.lr,
+            s.step_secs
+        )?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush().context("flush csv")
+    }
+}
+
+/// Run summary written alongside the CSV for EXPERIMENTS.md.
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    pub config: String,
+    pub steps: usize,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub final_ppl: f64,
+    pub mean_step_secs: f64,
+    pub tokens_per_sec: f64,
+    pub samples_per_sec: f64,
+    pub param_count: usize,
+}
+
+impl RunSummary {
+    pub fn to_json(&self) -> Json {
+        obj! {
+            "config" => self.config.clone(),
+            "steps" => self.steps,
+            "first_loss" => self.first_loss,
+            "final_loss" => self.final_loss,
+            "final_perplexity" => self.final_ppl,
+            "mean_step_secs" => self.mean_step_secs,
+            "tokens_per_sec" => self.tokens_per_sec,
+            "samples_per_sec" => self.samples_per_sec,
+            "param_count" => self.param_count,
+        }
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+}
+
+/// Export a netsim timeline as span JSON (the Fig 10/11 analog).
+pub fn timeline_to_json(tl: &crate::netsim::Timeline) -> Json {
+    Json::Arr(
+        tl.spans
+            .iter()
+            .map(|s| {
+                obj! {
+                    "name" => s.name.clone(),
+                    "resource" => s.resource,
+                    "start" => s.start,
+                    "end" => s.end,
+                }
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_logger_writes_rows() {
+        let path = std::env::temp_dir().join("smile_test_log.csv");
+        {
+            let mut l = CsvLogger::create(&path).unwrap();
+            l.log(&StepLog { step: 1, loss: 5.5, mlm_loss: 5.4, ..Default::default() })
+                .unwrap();
+            l.log(&StepLog { step: 2, loss: 5.0, mlm_loss: 4.9, ..Default::default() })
+                .unwrap();
+            l.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.lines().next().unwrap().starts_with("step,loss"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn perplexity_is_exp_of_mlm_loss() {
+        let s = StepLog { mlm_loss: 2.0, ..Default::default() };
+        assert!((s.perplexity() - (2.0f64).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_json_roundtrip() {
+        let s = RunSummary {
+            config: "tiny_smile".into(),
+            steps: 10,
+            final_loss: 3.2,
+            ..Default::default()
+        };
+        let j = s.to_json();
+        assert_eq!(j.at(&["config"]).unwrap().as_str(), Some("tiny_smile"));
+        assert_eq!(j.at(&["steps"]).unwrap().as_usize(), Some(10));
+    }
+
+    #[test]
+    fn timeline_export() {
+        let mut sim = crate::netsim::DagSim::new();
+        let r = sim.resource("gpu");
+        sim.task("a", r, 1.0, &[]);
+        let tl = sim.run();
+        let j = timeline_to_json(&tl);
+        assert_eq!(j.as_arr().unwrap().len(), 1);
+    }
+}

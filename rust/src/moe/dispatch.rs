@@ -1,0 +1,329 @@
+//! Token dispatch planning — the coordinator-side mirror of the MoE
+//! routing math (paper §2 Eq. 1-2 for Switch, §3.2.1 Eq. 3 for SMILE).
+//!
+//! The L2 jax graph performs routing *numerically* inside one fused
+//! program; this module performs the same routing *logistically* for
+//! the distributed runtime: which token travels to which expert/GPU,
+//! under which capacity, across which hop — producing the byte/flow
+//! workloads that `netsim` prices and the trainer's routing reports.
+//! Slot assignment is deterministic in token order, matching the L2
+//! `make_dispatch` cumsum policy bit-for-bit (tested in
+//! `rust/tests/integration_runtime.rs` against the router_probe
+//! artifact).
+
+use crate::netsim::topology::ClusterSpec;
+
+/// Top-1 choice per token over a probability row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Top1 {
+    pub expert: usize,
+    pub gate: f32,
+}
+
+/// argmax + max over each row of a [T, E] probability matrix.
+pub fn top1_rows(probs: &[f32], e: usize) -> Vec<Top1> {
+    assert!(e > 0 && probs.len() % e == 0, "probs not [T,{e}]");
+    probs
+        .chunks_exact(e)
+        .map(|row| {
+            let (mut best, mut gate) = (0usize, row[0]);
+            for (i, &p) in row.iter().enumerate().skip(1) {
+                if p > gate {
+                    best = i;
+                    gate = p;
+                }
+            }
+            Top1 { expert: best, gate }
+        })
+        .collect()
+}
+
+/// Where one token landed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Assignment {
+    /// (expert, capacity slot)
+    Slot(usize, usize),
+    /// over capacity: output is zero, residual path carries the token
+    Dropped,
+}
+
+/// A single-level (Switch) dispatch plan with per-expert capacity.
+#[derive(Debug, Clone)]
+pub struct DispatchPlan {
+    pub num_experts: usize,
+    pub capacity: usize,
+    pub assignment: Vec<Assignment>,
+    /// tokens_of[e][slot] = token index
+    pub tokens_of: Vec<Vec<usize>>,
+}
+
+impl DispatchPlan {
+    /// Deterministic token-order slot assignment (Switch's policy; the
+    /// L2 cumsum builds exactly this).
+    pub fn build(choices: &[Top1], num_experts: usize, capacity: usize) -> DispatchPlan {
+        let mut tokens_of: Vec<Vec<usize>> = vec![Vec::new(); num_experts];
+        let assignment = choices
+            .iter()
+            .enumerate()
+            .map(|(t, c)| {
+                debug_assert!(c.expert < num_experts);
+                if tokens_of[c.expert].len() < capacity {
+                    tokens_of[c.expert].push(t);
+                    Assignment::Slot(c.expert, tokens_of[c.expert].len() - 1)
+                } else {
+                    Assignment::Dropped
+                }
+            })
+            .collect();
+        DispatchPlan { num_experts, capacity, assignment, tokens_of }
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.assignment.len()
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.assignment.iter().filter(|a| matches!(a, Assignment::Dropped)).count()
+    }
+
+    pub fn load_of(&self, expert: usize) -> usize {
+        self.tokens_of[expert].len()
+    }
+
+    pub fn loads(&self) -> Vec<usize> {
+        self.tokens_of.iter().map(Vec::len).collect()
+    }
+
+    /// Fraction of tokens dispatched to each expert (the f_i of Eq. 4).
+    pub fn dispatch_fractions(&self) -> Vec<f64> {
+        let t = self.num_tokens().max(1) as f64;
+        // fractions count *chosen* experts (argmax), drops included —
+        // matching the L2 lb_loss definition.
+        let mut f = vec![0.0; self.num_experts];
+        for a in &self.assignment {
+            if let Assignment::Slot(e, _) = a {
+                f[*e] += 1.0 / t;
+            }
+        }
+        f
+    }
+
+    /// Invert the plan: for each expert slot, the destination token.
+    /// combine(dispatch(x)) must visit every kept token exactly once —
+    /// the conservation property the tests assert.
+    pub fn combine_order(&self) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::new();
+        for (e, toks) in self.tokens_of.iter().enumerate() {
+            for (slot, &t) in toks.iter().enumerate() {
+                out.push((e, slot, t));
+            }
+        }
+        out
+    }
+}
+
+/// A bi-level (SMILE) dispatch plan: token -> node i (inter router, n
+/// choices) -> local expert j (intra router, m choices); flat expert
+/// id = i*m + j, gate = p_i * q_j (Eq. 3).
+#[derive(Debug, Clone)]
+pub struct BiLevelPlan {
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    /// flat plan over n*m experts (capacity applied per expert)
+    pub flat: DispatchPlan,
+    /// tokens bound for each node after phase 1 (pre-capacity)
+    pub node_counts: Vec<usize>,
+    /// combined gates per token (p_i * q_j), drops keep their gate
+    pub gates: Vec<f32>,
+}
+
+impl BiLevelPlan {
+    pub fn build(
+        node_choice: &[Top1],
+        local_choice: &[Top1],
+        spec_n: usize,
+        spec_m: usize,
+        capacity: usize,
+    ) -> BiLevelPlan {
+        assert_eq!(node_choice.len(), local_choice.len());
+        let mut node_counts = vec![0usize; spec_n];
+        let mut gates = Vec::with_capacity(node_choice.len());
+        let flat_choices: Vec<Top1> = node_choice
+            .iter()
+            .zip(local_choice)
+            .map(|(ni, lj)| {
+                debug_assert!(ni.expert < spec_n && lj.expert < spec_m);
+                node_counts[ni.expert] += 1;
+                let gate = ni.gate * lj.gate;
+                gates.push(gate);
+                Top1 { expert: ni.expert * spec_m + lj.expert, gate }
+            })
+            .collect();
+        let flat = DispatchPlan::build(&flat_choices, spec_n * spec_m, capacity);
+        BiLevelPlan { n_nodes: spec_n, gpus_per_node: spec_m, flat, node_counts, gates }
+    }
+
+    /// Fraction of tokens routed to each node (f_i of the inter-node LB
+    /// term in Eq. 4).
+    pub fn node_fractions(&self) -> Vec<f64> {
+        let t = self.gates.len().max(1) as f64;
+        self.node_counts.iter().map(|&c| c as f64 / t).collect()
+    }
+}
+
+/// Byte accounting for the All2All payloads (per GPU, per hop).
+/// Dispatch buffers are capacity-padded (`cap_factor * T` token slots
+/// of `hidden * dtype_bytes` each) exactly as in Switch/GShard.
+pub fn a2a_payload_bytes(
+    tokens_per_gpu: usize,
+    hidden: usize,
+    cap_factor: f64,
+    dtype_bytes: usize,
+) -> f64 {
+    cap_factor * tokens_per_gpu as f64 * (hidden * dtype_bytes) as f64
+}
+
+/// Routing-quality statistics for reports (Fig 7-adjacent diagnostics).
+#[derive(Debug, Clone)]
+pub struct RoutingStats {
+    pub imbalance: f64,
+    pub dropped_frac: f64,
+    pub loads: Vec<usize>,
+}
+
+pub fn routing_stats(plan: &DispatchPlan) -> RoutingStats {
+    let loads = plan.loads();
+    let fl: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
+    RoutingStats {
+        imbalance: crate::util::stats::imbalance(&fl),
+        dropped_frac: plan.dropped() as f64 / plan.num_tokens().max(1) as f64,
+        loads,
+    }
+}
+
+/// Synthetic routing generator: draws per-token expert choices from a
+/// Dirichlet-ish skewed distribution so netsim workloads can explore
+/// imbalance without the real router (the real path uses the
+/// router_probe artifact through `runtime`).
+pub fn synthetic_choices(
+    rng: &mut crate::util::rng::Rng,
+    tokens: usize,
+    experts: usize,
+    skew: f64,
+) -> Vec<Top1> {
+    // weights ~ exp(skew * normal): skew=0 -> uniform experts
+    let weights: Vec<f64> = (0..experts).map(|_| (skew * rng.normal()).exp()).collect();
+    (0..tokens)
+        .map(|_| {
+            let e = rng.weighted(&weights);
+            // plausible top-1 gate: higher when distribution is skewed
+            let gate = (1.0 / experts as f64 + rng.f64() * 0.5).min(1.0) as f32;
+            Top1 { expert: e, gate }
+        })
+        .collect()
+}
+
+/// Map a flat expert id to its (node, local) coordinates for a spec —
+/// the inverse of Eq. 3's e = i*m + j.
+pub fn expert_coords(spec: &ClusterSpec, expert: usize) -> (usize, usize) {
+    (expert / spec.gpus_per_node, expert % spec.gpus_per_node)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn top1_rows_basic() {
+        let probs = [0.1f32, 0.7, 0.2, 0.5, 0.2, 0.3];
+        let t = top1_rows(&probs, 3);
+        assert_eq!(t[0], Top1 { expert: 1, gate: 0.7 });
+        assert_eq!(t[1], Top1 { expert: 0, gate: 0.5 });
+    }
+
+    #[test]
+    fn dispatch_respects_capacity_in_token_order() {
+        let choices: Vec<Top1> =
+            [0, 0, 1, 0, 1].iter().map(|&e| Top1 { expert: e, gate: 1.0 }).collect();
+        let plan = DispatchPlan::build(&choices, 2, 1);
+        assert_eq!(plan.assignment[0], Assignment::Slot(0, 0));
+        assert_eq!(plan.assignment[1], Assignment::Dropped);
+        assert_eq!(plan.assignment[2], Assignment::Slot(1, 0));
+        assert_eq!(plan.dropped(), 3);
+    }
+
+    #[test]
+    fn combine_is_exact_inverse() {
+        let mut rng = Rng::new(3);
+        let choices = synthetic_choices(&mut rng, 200, 8, 0.5);
+        let plan = DispatchPlan::build(&choices, 8, 40);
+        let mut seen = vec![false; 200];
+        for (e, slot, t) in plan.combine_order() {
+            assert_eq!(plan.tokens_of[e][slot], t);
+            assert!(!seen[t], "token {t} combined twice");
+            seen[t] = true;
+        }
+        let kept = seen.iter().filter(|&&s| s).count();
+        assert_eq!(kept, 200 - plan.dropped());
+    }
+
+    #[test]
+    fn bilevel_flat_id_is_i_m_plus_j() {
+        let node = vec![Top1 { expert: 1, gate: 0.6 }];
+        let local = vec![Top1 { expert: 2, gate: 0.5 }];
+        let plan = BiLevelPlan::build(&node, &local, 2, 4, 8);
+        assert_eq!(plan.flat.assignment[0], Assignment::Slot(1 * 4 + 2, 0));
+        assert!((plan.gates[0] - 0.3).abs() < 1e-6); // Eq. 3: p_i * q_j
+    }
+
+    #[test]
+    fn bilevel_node_fractions_sum_to_one() {
+        let mut rng = Rng::new(7);
+        let node = synthetic_choices(&mut rng, 500, 4, 0.3);
+        let local = synthetic_choices(&mut rng, 500, 8, 0.3);
+        let plan = BiLevelPlan::build(&node, &local, 4, 8, 32);
+        let f = plan.node_fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert_eq!(plan.node_counts.iter().sum::<usize>(), 500);
+    }
+
+    #[test]
+    fn payload_accounting() {
+        // cap 2.0 * 1024 tokens * 512 dim * 4 B = 4 MiB
+        let b = a2a_payload_bytes(1024, 512, 2.0, 4);
+        assert_eq!(b, 2.0 * 1024.0 * 512.0 * 4.0);
+    }
+
+    #[test]
+    fn stats_detect_imbalance() {
+        let balanced: Vec<Top1> =
+            (0..64).map(|t| Top1 { expert: t % 4, gate: 1.0 }).collect();
+        let collapsed: Vec<Top1> =
+            (0..64).map(|_| Top1 { expert: 0, gate: 1.0 }).collect();
+        let sb = routing_stats(&DispatchPlan::build(&balanced, 4, 64));
+        let sc = routing_stats(&DispatchPlan::build(&collapsed, 4, 64));
+        assert!((sb.imbalance - 1.0).abs() < 1e-9);
+        assert!((sc.imbalance - 4.0).abs() < 1e-9);
+        assert_eq!(sc.dropped_frac, 0.0);
+    }
+
+    #[test]
+    fn synthetic_skew_increases_imbalance() {
+        let mut rng = Rng::new(11);
+        let uniform = synthetic_choices(&mut rng, 2000, 8, 0.0);
+        let skewed = synthetic_choices(&mut rng, 2000, 8, 2.0);
+        let iu = routing_stats(&DispatchPlan::build(&uniform, 8, 2000)).imbalance;
+        let is = routing_stats(&DispatchPlan::build(&skewed, 8, 2000)).imbalance;
+        assert!(is > iu, "skewed {is} <= uniform {iu}");
+    }
+
+    #[test]
+    fn expert_coords_roundtrip() {
+        let spec = ClusterSpec::test(4, 8);
+        for e in 0..32 {
+            let (i, j) = expert_coords(&spec, e);
+            assert_eq!(i * 8 + j, e);
+        }
+    }
+}

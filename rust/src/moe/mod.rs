@@ -1,0 +1,9 @@
+//! MoE coordination (system S4): dispatch planning, capacity
+//! accounting, and the byte/flow workloads the simulators price.
+
+pub mod dispatch;
+
+pub use dispatch::{
+    a2a_payload_bytes, routing_stats, top1_rows, Assignment, BiLevelPlan, DispatchPlan,
+    RoutingStats, Top1,
+};

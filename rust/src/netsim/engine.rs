@@ -1,0 +1,292 @@
+//! Discrete-event simulation of task DAGs over exclusive resources.
+//!
+//! Used for the step-level pipeline models: compute/communication
+//! overlap (paper Fig 12), the single-layer timeline behind Table 3 /
+//! Figs 9-11, and straggler/failure injection in tests.  Collective
+//! durations come from `collectives::*`; compute durations from the
+//! roofline model in `simtrain`.
+//!
+//! Semantics: a task runs on exactly one resource, starts when all its
+//! dependencies have finished AND its resource is free (FIFO among
+//! ready tasks, ties broken by insertion order), and occupies the
+//! resource for its whole duration.
+
+use std::collections::BinaryHeap;
+
+pub type TaskId = usize;
+pub type ResourceId = usize;
+
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub task: TaskId,
+    pub name: String,
+    pub resource: ResourceId,
+    pub start: f64,
+    pub end: f64,
+}
+
+#[derive(Debug, Clone)]
+struct Task {
+    name: String,
+    resource: ResourceId,
+    duration: f64,
+    n_unmet: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub makespan: f64,
+    pub spans: Vec<Span>,
+    /// Busy time per resource.
+    pub busy: Vec<f64>,
+}
+
+impl Timeline {
+    /// Sum of span durations whose name starts with `prefix` — the
+    /// Table-3 "time in phase X" accessor.
+    pub fn phase_time(&self, prefix: &str) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.name.starts_with(prefix))
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    pub fn span_of(&self, task: TaskId) -> &Span {
+        self.spans.iter().find(|s| s.task == task).expect("task simulated")
+    }
+}
+
+/// Min-heap event: (time, seq, kind).
+#[derive(Debug, PartialEq)]
+struct Ev {
+    time: f64,
+    seq: usize,
+    task: TaskId,
+}
+
+impl Eq for Ev {}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed for min-heap; deterministic tiebreak on seq
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Default)]
+pub struct DagSim {
+    tasks: Vec<Task>,
+    resources: Vec<String>,
+    dependents: Vec<Vec<TaskId>>,
+}
+
+impl DagSim {
+    pub fn new() -> DagSim {
+        DagSim::default()
+    }
+
+    pub fn resource(&mut self, name: &str) -> ResourceId {
+        self.resources.push(name.to_string());
+        self.resources.len() - 1
+    }
+
+    pub fn task(
+        &mut self,
+        name: &str,
+        resource: ResourceId,
+        duration: f64,
+        deps: &[TaskId],
+    ) -> TaskId {
+        assert!(resource < self.resources.len(), "unknown resource");
+        assert!(duration >= 0.0, "negative duration");
+        for &d in deps {
+            assert!(d < self.tasks.len(), "dep on future task");
+        }
+        let id = self.tasks.len();
+        self.tasks.push(Task {
+            name: name.to_string(),
+            resource,
+            duration,
+            n_unmet: deps.len(),
+        });
+        self.dependents.push(Vec::new());
+        for &d in deps {
+            self.dependents[d].push(id);
+        }
+        id
+    }
+
+    /// Run to completion, returning the full timeline.
+    pub fn run(&self) -> Timeline {
+        let n = self.tasks.len();
+        let mut unmet: Vec<usize> = self.tasks.iter().map(|t| t.n_unmet).collect();
+        let mut res_free = vec![0.0f64; self.resources.len()];
+        let mut res_queue: Vec<Vec<TaskId>> = vec![Vec::new(); self.resources.len()];
+        let mut spans: Vec<Option<Span>> = vec![None; n];
+        let mut heap = BinaryHeap::new();
+        let mut seq = 0usize;
+        let mut finished = 0usize;
+        let mut now = 0.0f64;
+
+        let start_task = |t: TaskId,
+                              now: f64,
+                              res_free: &mut Vec<f64>,
+                              spans: &mut Vec<Option<Span>>,
+                              heap: &mut BinaryHeap<Ev>,
+                              seq: &mut usize| {
+            let task = &self.tasks[t];
+            let start = now.max(res_free[task.resource]);
+            let end = start + task.duration;
+            res_free[task.resource] = end;
+            spans[t] = Some(Span {
+                task: t,
+                name: task.name.clone(),
+                resource: task.resource,
+                start,
+                end,
+            });
+            heap.push(Ev { time: end, seq: *seq, task: t });
+            *seq += 1;
+        };
+
+        // seed: all tasks with no deps, in insertion order (FIFO per resource)
+        for t in 0..n {
+            if unmet[t] == 0 {
+                res_queue[self.tasks[t].resource].push(t);
+            }
+        }
+        for q in &mut res_queue {
+            let ready = std::mem::take(q);
+            for t in ready {
+                start_task(t, now, &mut res_free, &mut spans, &mut heap, &mut seq);
+            }
+        }
+
+        while let Some(ev) = heap.pop() {
+            debug_assert!(ev.time >= now - 1e-12, "causality violated");
+            now = ev.time;
+            finished += 1;
+            for &dep in &self.dependents[ev.task] {
+                unmet[dep] -= 1;
+                if unmet[dep] == 0 {
+                    start_task(dep, now, &mut res_free, &mut spans, &mut heap, &mut seq);
+                }
+            }
+        }
+        assert_eq!(finished, n, "cycle in task DAG");
+
+        let spans: Vec<Span> = spans.into_iter().map(|s| s.unwrap()).collect();
+        let makespan = spans.iter().map(|s| s.end).fold(0.0, f64::max);
+        let mut busy = vec![0.0; self.resources.len()];
+        for s in &spans {
+            busy[s.resource] += s.end - s.start;
+        }
+        Timeline { makespan, spans, busy }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_chain() {
+        let mut sim = DagSim::new();
+        let r = sim.resource("gpu");
+        let a = sim.task("a", r, 1.0, &[]);
+        let b = sim.task("b", r, 2.0, &[a]);
+        let _c = sim.task("c", r, 3.0, &[b]);
+        let t = sim.run();
+        assert!((t.makespan - 6.0).abs() < 1e-12);
+        assert!((t.busy[r] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_resources_overlap() {
+        let mut sim = DagSim::new();
+        let gpu = sim.resource("gpu");
+        let nic = sim.resource("nic");
+        let a = sim.task("comm", nic, 5.0, &[]);
+        let _b = sim.task("compute", gpu, 3.0, &[]);
+        let _c = sim.task("combine", gpu, 1.0, &[a]);
+        let t = sim.run();
+        assert!((t.makespan - 6.0).abs() < 1e-12); // comm 5 then combine 1; compute overlapped
+    }
+
+    #[test]
+    fn resource_serializes_independent_tasks() {
+        let mut sim = DagSim::new();
+        let r = sim.resource("nic");
+        sim.task("x", r, 2.0, &[]);
+        sim.task("y", r, 2.0, &[]);
+        let t = sim.run();
+        assert!((t.makespan - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dependency_before_resource() {
+        // b depends on a (on another resource); b must wait for a even
+        // though b's resource is free.
+        let mut sim = DagSim::new();
+        let r1 = sim.resource("a");
+        let r2 = sim.resource("b");
+        let a = sim.task("a", r1, 4.0, &[]);
+        let b = sim.task("b", r2, 1.0, &[a]);
+        let t = sim.run();
+        assert!((t.span_of(b).start - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_time_accumulates() {
+        let mut sim = DagSim::new();
+        let r = sim.resource("gpu");
+        sim.task("a2a.inter", r, 1.0, &[]);
+        sim.task("a2a.intra", r, 0.5, &[]);
+        sim.task("ffn", r, 2.0, &[]);
+        let t = sim.run();
+        assert!((t.phase_time("a2a") - 1.5).abs() < 1e-12);
+        assert!((t.phase_time("ffn") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diamond_dag() {
+        let mut sim = DagSim::new();
+        let r1 = sim.resource("r1");
+        let r2 = sim.resource("r2");
+        let a = sim.task("a", r1, 1.0, &[]);
+        let b = sim.task("b", r1, 2.0, &[a]);
+        let c = sim.task("c", r2, 3.0, &[a]);
+        let d = sim.task("d", r1, 1.0, &[b, c]);
+        let t = sim.run();
+        assert!((t.span_of(d).start - 4.0).abs() < 1e-12);
+        assert!((t.makespan - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_duration_tasks() {
+        let mut sim = DagSim::new();
+        let r = sim.resource("r");
+        let a = sim.task("a", r, 0.0, &[]);
+        let b = sim.task("b", r, 0.0, &[a]);
+        let t = sim.run();
+        assert_eq!(t.makespan, 0.0);
+        assert!(t.span_of(b).start >= t.span_of(a).end);
+    }
+
+    #[test]
+    #[should_panic(expected = "dep on future task")]
+    fn forward_dep_rejected() {
+        let mut sim = DagSim::new();
+        let r = sim.resource("r");
+        sim.task("a", r, 1.0, &[5]);
+    }
+}

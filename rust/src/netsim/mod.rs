@@ -1,0 +1,18 @@
+//! Network + cluster simulator: the substrate standing in for the
+//! paper's 16-node P4d/EFA testbed (DESIGN.md §2, systems S1-S2).
+//!
+//! - `topology`: cluster shape and calibrated bandwidth/congestion
+//!   constants.
+//! - `collectives`: analytic cost models (flat vs bi-level All2All,
+//!   AllReduce, broadcast) including the paper's launch-count and
+//!   congestion arguments.
+//! - `engine`: discrete-event DAG simulation for step pipelines,
+//!   overlap (Fig 12), and timelines (Figs 9-11).
+
+pub mod collectives;
+pub mod engine;
+pub mod topology;
+
+pub use collectives::CollectiveCost;
+pub use engine::{DagSim, Timeline};
+pub use topology::{ClusterSpec, GpuId};

@@ -1,0 +1,155 @@
+//! Cluster topology: the simulated stand-in for the paper's testbed
+//! (16× AWS P4d: 8× A100 per node, EFA 400 Gbps inter-node, NVSwitch
+//! 600 GB/s intra-node).  See DESIGN.md §2 for the substitution
+//! rationale.
+
+/// Global GPU id = node * gpus_per_node + local_rank (paper §2: one
+/// expert per GPU, N = n * m).
+pub type GpuId = usize;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    /// Per-node NIC bandwidth, bytes/s, each direction (EFA 400 Gbps = 50 GB/s).
+    pub inter_bw: f64,
+    /// Per-node NVSwitch aggregate bandwidth, bytes/s (600 GB/s).
+    pub intra_bw: f64,
+    /// Base one-way latency of an inter-node message (s).
+    pub inter_latency: f64,
+    /// Base one-way latency of an intra-node copy (s).
+    pub intra_latency: f64,
+    /// Serial launch overhead per p2p operation issued by one GPU (s).
+    /// The paper's O(mn) vs O(m+n) launch argument prices each
+    /// ncclSend/ncclRecv pair at this cost.
+    pub launch_overhead: f64,
+    /// Per-NIC congestion coefficient: effective NIC time is scaled by
+    /// (1 + gamma_inter * sqrt(flows_through_nic)).  Captures
+    /// per-message protocol overheads when one NIC multiplexes many
+    /// concurrent flows.
+    pub gamma_inter: f64,
+    /// Fabric-level congestion: an additional *saturating* penalty
+    /// delta_max * F^2 / (F_half^2 + F^2) where F is the total number
+    /// of concurrent inter-node flows.  Models bisection-width /
+    /// incast collapse (paper §3.1): the penalty rises steeply once the
+    /// flat All2All's O(n^2 m^2) flow count crosses the fabric's
+    /// capacity (around F_half) and then saturates — this knee is what
+    /// produces Fig 3's "8 nodes slower than 4 nodes" dip.
+    pub delta_max: f64,
+    pub fabric_half_flows: f64,
+    /// NVSwitch congestion coefficient (same sqrt form as gamma_inter).
+    pub gamma_intra: f64,
+    /// A100-class peak bf16 throughput per GPU (FLOP/s) and achievable
+    /// model-FLOPs utilization, for the compute side of step models.
+    pub gpu_flops: f64,
+    pub gpu_mfu: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's testbed.  Congestion constants are calibrated
+    /// jointly on three measured anchors (EXPERIMENTS.md §Calibration):
+    ///   (A) Table 3, Switch flat a2a on 16 nodes:  2 hops = 382 ms
+    ///       -> factor 25.3 at flows/NIC = 960, fabric F = 15360
+    ///   (B) Table 3, SMILE inter a2a on 16 nodes:  2 hops =  77 ms
+    ///       -> factor 5.1 at flows/NIC = 120, fabric F = 1920
+    ///   (C) Fig 3's non-monotonic weak scaling (8 nodes < 4 nodes),
+    ///       which forces the fabric term to *saturate* (sigmoid knee
+    ///       between F(8 nodes) = 3584 and F(16 nodes) = 15360).
+    /// Solving (A)+(B) with F_half = 5000 gives gamma_inter ~= 0.100
+    /// and delta_max ~= 23.4; gamma_intra ~= 0.89 fits the 9 ms
+    /// intra-node row.
+    pub fn p4d(n_nodes: usize) -> ClusterSpec {
+        ClusterSpec {
+            n_nodes,
+            gpus_per_node: 8,
+            inter_bw: 50e9,
+            intra_bw: 600e9,
+            inter_latency: 20e-6,
+            intra_latency: 3e-6,
+            launch_overhead: 10e-6,
+            gamma_inter: 0.100,
+            delta_max: 23.4,
+            fabric_half_flows: 5000.0,
+            gamma_intra: 0.89,
+            gpu_flops: 312e12,
+            gpu_mfu: 0.4,
+        }
+    }
+
+    /// Small deterministic topology for unit tests.
+    pub fn test(n_nodes: usize, gpus_per_node: usize) -> ClusterSpec {
+        ClusterSpec {
+            n_nodes,
+            gpus_per_node,
+            inter_bw: 10e9,
+            intra_bw: 100e9,
+            inter_latency: 10e-6,
+            intra_latency: 1e-6,
+            launch_overhead: 5e-6,
+            gamma_inter: 0.1,
+            delta_max: 10.0,
+            fabric_half_flows: 500.0,
+            gamma_intra: 1.0,
+            gpu_flops: 100e12,
+            gpu_mfu: 0.5,
+        }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, gpu: GpuId) -> usize {
+        gpu / self.gpus_per_node
+    }
+
+    pub fn local_rank(&self, gpu: GpuId) -> usize {
+        gpu % self.gpus_per_node
+    }
+
+    pub fn gpu_id(&self, node: usize, local: usize) -> GpuId {
+        debug_assert!(node < self.n_nodes && local < self.gpus_per_node);
+        node * self.gpus_per_node + local
+    }
+
+    pub fn same_node(&self, a: GpuId, b: GpuId) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Effective per-GPU compute throughput (FLOP/s) after MFU.
+    pub fn effective_flops(&self) -> f64 {
+        self.gpu_flops * self.gpu_mfu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_arithmetic() {
+        let c = ClusterSpec::test(4, 8);
+        assert_eq!(c.num_gpus(), 32);
+        assert_eq!(c.node_of(17), 2);
+        assert_eq!(c.local_rank(17), 1);
+        assert_eq!(c.gpu_id(2, 1), 17);
+        assert!(c.same_node(16, 23));
+        assert!(!c.same_node(15, 16));
+    }
+
+    #[test]
+    fn p4d_matches_paper_constants() {
+        let c = ClusterSpec::p4d(16);
+        assert_eq!(c.num_gpus(), 128);
+        assert_eq!(c.inter_bw, 50e9); // 400 Gbps
+        assert_eq!(c.intra_bw, 600e9); // NVSwitch aggregate
+    }
+
+    #[test]
+    fn roundtrip_all_ids() {
+        let c = ClusterSpec::test(3, 4);
+        for g in 0..c.num_gpus() {
+            assert_eq!(c.gpu_id(c.node_of(g), c.local_rank(g)), g);
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts, compile once, execute
+//! many times.  This is the only place the `xla` crate is touched; the
+//! rest of L3 sees `Vec<Literal>` in / `Vec<Literal>` out.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* (the 0.5.1
+//! xla_extension rejects jax>=0.5 serialized protos) -> XlaComputation
+//! -> PjRtLoadedExecutable; outputs come back as ONE tuple buffer that
+//! we copy to host and decompose (the fused multi-step train artifact
+//! exists precisely to amortize this round-trip; see
+//! `configs.steps_per_call` and EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// compiled-executable cache keyed by artifact name
+    cache: Mutex<HashMap<String, std::sync::Arc<Loaded>>>,
+}
+
+pub struct Loaded {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// cumulative execute statistics (perf reporting)
+    pub stats: Mutex<ExecStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: usize,
+    pub exec_secs: f64,
+    pub host_copy_secs: f64,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client and load the artifact manifest.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        log::info!(
+            "PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Loaded>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        log::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let loaded = std::sync::Arc::new(Loaded {
+            spec,
+            exe,
+            stats: Mutex::new(ExecStats::default()),
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+}
+
+impl Loaded {
+    /// Execute with host literals; returns the decomposed output tuple.
+    ///
+    /// Validates argument count against the manifest (shape errors
+    /// would otherwise surface as opaque XLA aborts).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} args, artifact takes {}",
+                self.spec.name,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let result = self.exe.execute::<L>(args)?;
+        let exec = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("copying result tuple to host")?;
+        let outputs = tuple.to_tuple().context("decomposing result tuple")?;
+        if outputs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: artifact returned {} outputs, manifest says {}",
+                self.spec.name,
+                outputs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut st = self.stats.lock().unwrap();
+        st.calls += 1;
+        st.exec_secs += exec;
+        st.host_copy_secs += t1.elapsed().as_secs_f64();
+        Ok(outputs)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.lock().unwrap().clone()
+    }
+}

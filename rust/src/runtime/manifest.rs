@@ -1,0 +1,319 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! (which lowers jax+Pallas programs to HLO text) and this runtime.
+//!
+//! The manifest records, per artifact, the exact flattened input and
+//! output order (names/shapes/dtypes) so rust never re-implements jax
+//! pytree flattening.  Key invariant (asserted at load):
+//!
+//!   init outputs == train state inputs == train state outputs
+//!   (first `state_len` entries, by name and shape)
+//!
+//! which is what lets the trainer feed step outputs straight back as
+//! the next step's inputs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.num_elements() * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing name"))?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(
+                j.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+            )?,
+        })
+    }
+}
+
+/// The model configuration an artifact was lowered with (subset of
+/// `python/compile/configs.py::ModelConfig` the runtime needs).
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactConfig {
+    pub name: String,
+    pub variant: String,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub micro_batch: usize,
+    pub accum_steps: usize,
+    pub steps_per_call: usize,
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    pub num_experts: usize,
+    pub hidden_size: usize,
+    pub ffn_size: usize,
+    pub num_layers: usize,
+    pub capacity_factor: f64,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl ArtifactConfig {
+    fn from_json(j: &Json) -> ArtifactConfig {
+        let s = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+        let u = |k: &str| j.get(k).and_then(Json::as_usize).unwrap_or(0);
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        ArtifactConfig {
+            name: s("name"),
+            variant: s("variant"),
+            vocab_size: u("vocab_size"),
+            seq_len: u("seq_len"),
+            micro_batch: u("micro_batch"),
+            accum_steps: u("accum_steps").max(1),
+            steps_per_call: u("steps_per_call").max(1),
+            n_nodes: u("n_nodes"),
+            gpus_per_node: u("gpus_per_node"),
+            num_experts: u("num_experts"),
+            hidden_size: u("hidden_size"),
+            ffn_size: u("ffn_size"),
+            num_layers: u("num_layers"),
+            capacity_factor: f("capacity_factor"),
+            alpha: f("alpha"),
+            beta: f("beta"),
+        }
+    }
+
+    pub fn tokens_per_micro(&self) -> usize {
+        self.micro_batch * self.seq_len
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub config: ArtifactConfig,
+    /// number of leading inputs/outputs that are optimizer state
+    pub state_len: usize,
+    /// number of leading state entries that are parameters (rest: moments)
+    pub param_len: usize,
+    pub param_count: usize,
+    pub metric_names: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arts = json
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in arts {
+            let meta = a.get("meta");
+            let get_meta_usize = |k: &str| {
+                meta.and_then(|m| m.get(k)).and_then(Json::as_usize).unwrap_or(0)
+            };
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(
+                    a.get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?,
+                ),
+                kind: a.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+                inputs: a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()
+                    .with_context(|| format!("{name}: inputs"))?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()
+                    .with_context(|| format!("{name}: outputs"))?,
+                config: a
+                    .get("config")
+                    .map(ArtifactConfig::from_json)
+                    .unwrap_or_default(),
+                state_len: get_meta_usize("state_len"),
+                param_len: get_meta_usize("param_len"),
+                param_count: get_meta_usize("param_count"),
+                metric_names: meta
+                    .and_then(|m| m.get("metric_names"))
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|v| v.as_str().map(str::to_string))
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+        let m = Manifest { artifacts, dir };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-artifact invariants the trainer depends on.
+    fn validate(&self) -> Result<()> {
+        for (name, a) in &self.artifacts {
+            if a.kind == "train" {
+                let init_name = name.replace("train_", "init_");
+                let init = self
+                    .artifacts
+                    .get(&init_name)
+                    .ok_or_else(|| anyhow!("{name}: missing {init_name}"))?;
+                if init.outputs.len() != a.state_len {
+                    bail!("{name}: init outputs {} != state_len {}", init.outputs.len(), a.state_len);
+                }
+                for (i, (io, ti)) in
+                    init.outputs.iter().zip(a.inputs.iter().take(a.state_len)).enumerate()
+                {
+                    if io != ti {
+                        bail!("{name}: state input {i} mismatch: {:?} vs {:?}", io, ti);
+                    }
+                }
+                for (i, (io, to)) in
+                    init.outputs.iter().zip(a.outputs.iter().take(a.state_len)).enumerate()
+                {
+                    if io != to {
+                        bail!("{name}: state output {i} mismatch: {:?} vs {:?}", io, to);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// All model-config names that have a full train/init/eval triple.
+    pub fn trainable_configs(&self) -> Vec<String> {
+        self.artifacts
+            .values()
+            .filter(|a| a.kind == "train")
+            .map(|a| a.config.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let t = TensorSpec { name: "x".into(), shape: vec![2, 3, 4], dtype: DType::F32 };
+        assert_eq!(t.num_elements(), 24);
+        assert_eq!(t.byte_len(), 96);
+        let s = TensorSpec { name: "s".into(), shape: vec![], dtype: DType::I32 };
+        assert_eq!(s.num_elements(), 1);
+    }
+
+    #[test]
+    fn manifest_load_fails_cleanly_without_artifacts() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // integration-level check against the checked-out artifacts dir
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return; // `make artifacts` not run yet
+        }
+        let m = Manifest::load(dir).expect("manifest validates");
+        assert!(!m.artifacts.is_empty());
+        let t = m.get("train_tiny_smile").unwrap();
+        assert_eq!(t.kind, "train");
+        assert!(t.state_len > 0 && t.param_len > 0);
+        assert_eq!(t.config.variant, "smile");
+        assert!(t.metric_names.iter().any(|n| n == "loss"));
+        assert!(m.trainable_configs().contains(&"tiny_smile".to_string()));
+    }
+}

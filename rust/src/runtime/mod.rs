@@ -1,0 +1,24 @@
+//! L3 <-> L2 boundary (system S7): the PJRT runtime that loads the
+//! HLO-text artifacts `python/compile/aot.py` produced and executes
+//! them on the request path with zero Python.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{ExecStats, Loaded, Runtime};
+pub use manifest::{ArtifactConfig, ArtifactSpec, DType, Manifest, TensorSpec};
+pub use tensor::Tensor;
+
+/// Default artifacts directory relative to the repo root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // honor $SMILE_ARTIFACTS, else look relative to cwd and the crate root
+    if let Ok(dir) = std::env::var("SMILE_ARTIFACTS") {
+        return dir.into();
+    }
+    let cwd = std::path::PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}

@@ -1,0 +1,153 @@
+//! Host-side tensor helpers: typed views over `xla::Literal` buffers,
+//! matched against the manifest's `TensorSpec`s.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// Host tensor (always one of the manifest dtypes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32(vec![v], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape mismatch");
+        Tensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape mismatch");
+        Tensor::I32(data, shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(d, _) => d.len(),
+            Tensor::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(..) => DType::F32,
+            Tensor::I32(..) => DType::I32,
+        }
+    }
+
+    /// Build the device literal for this tensor.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (bytes, shape, ty) = match self {
+            Tensor::F32(d, s) => (as_bytes(d), s, xla::ElementType::F32),
+            Tensor::I32(d, s) => (as_bytes(d), s, xla::ElementType::S32),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+            .context("literal from tensor")
+    }
+
+    /// Read a literal back into a host tensor, validated against `spec`.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        if lit.element_count() != spec.num_elements() {
+            bail!(
+                "{}: literal has {} elements, spec wants {:?}",
+                spec.name,
+                lit.element_count(),
+                spec.shape
+            );
+        }
+        Ok(match spec.dtype {
+            DType::F32 => Tensor::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
+            DType::I32 => Tensor::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+            DType::U32 => {
+                let v = lit.to_vec::<u32>()?;
+                Tensor::I32(v.into_iter().map(|x| x as i32).collect(), spec.shape.clone())
+            }
+        })
+    }
+}
+
+fn as_bytes<T>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_views() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_validation() {
+        Tensor::f32(vec![1.0], &[2, 2]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![1.5, -2.5, 0.0, 7.0, 1e-7, 3e8], &[2, 3]);
+        let lit = t.to_literal().unwrap();
+        let spec = TensorSpec { name: "x".into(), shape: vec![2, 3], dtype: DType::F32 };
+        let back = Tensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let t = Tensor::scalar_i32(-42);
+        let lit = t.to_literal().unwrap();
+        let spec = TensorSpec { name: "s".into(), shape: vec![], dtype: DType::I32 };
+        let back = Tensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[-42]);
+    }
+
+    #[test]
+    fn from_literal_checks_element_count() {
+        let t = Tensor::f32(vec![0.0; 4], &[4]);
+        let lit = t.to_literal().unwrap();
+        let spec = TensorSpec { name: "x".into(), shape: vec![5], dtype: DType::F32 };
+        assert!(Tensor::from_literal(&lit, &spec).is_err());
+    }
+}

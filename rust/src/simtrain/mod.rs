@@ -1,0 +1,12 @@
+//! Hybrid step-time simulation (system S5): compute roofline +
+//! simulated collectives -> throughput, scaling curves, and layer
+//! breakdowns for every table/figure in the paper's evaluation.
+
+pub mod compute;
+pub mod layer_model;
+pub mod models;
+pub mod step_model;
+
+pub use layer_model::{moe_layer_forward, moe_layer_forward_chunked, LayerBreakdown};
+pub use models::{ModelDims, Variant};
+pub use step_model::{scaling_sweep, step_time, throughput, Scaling, StepBreakdown};

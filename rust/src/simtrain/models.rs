@@ -1,0 +1,196 @@
+//! Paper-scale model configurations (Table 2) and their dense
+//! baselines (Table 1), plus parameter/FLOPs accounting.
+//!
+//! These are *simulation-side* configs: they describe the 3.7B/13B/48B
+//! models the paper trains on 128 A100s.  The CPU-runnable configs the
+//! real trainer executes live in `python/compile/configs.py` and reach
+//! rust through the artifact manifest.
+
+/// Which routing scheme a model uses (mirrors `configs.VARIANTS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// plain FFN everywhere, sized like the MoE models' *active* path
+    /// (the paper's BERT(110M)-class baseline: same FLOPs)
+    Dense,
+    /// plain FFN with ffn * num_experts width (the paper's BERT(3.7B)
+    /// baseline: same parameter count, E x the FLOPs)
+    DenseWide,
+    /// single-level top-1 over all n*m experts (Switch Transformer)
+    Switch,
+    /// bi-level top-1: n-way inter-node, m-way intra-node (SMILE)
+    Smile,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Dense => "bert_flops_matched",
+            Variant::DenseWide => "bert_param_matched",
+            Variant::Switch => "switch",
+            Variant::Smile => "smile",
+        }
+    }
+
+    pub fn is_moe(self) -> bool {
+        matches!(self, Variant::Switch | Variant::Smile)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: &'static str,
+    pub num_layers: usize,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub micro_batch: usize,
+    /// every `moe_every`-th FFN position is a MoE layer in the MoE
+    /// variants (the paper replaces every other FFN, §4.1)
+    pub moe_every: usize,
+    pub capacity_factor: f64,
+    /// fp16 training (paper §4.1)
+    pub dtype_bytes: usize,
+}
+
+impl ModelDims {
+    /// Paper Table 2 rows (128 experts on 128 GPUs).
+    pub fn bert_3_7b() -> ModelDims {
+        ModelDims {
+            name: "3.7B",
+            num_layers: 12,
+            hidden: 768,
+            ffn: 3072,
+            vocab: 32128,
+            seq_len: 128,
+            micro_batch: 128,
+            moe_every: 2,
+            capacity_factor: 2.0,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn bert_13b() -> ModelDims {
+        ModelDims {
+            name: "13B",
+            num_layers: 24,
+            hidden: 1024,
+            ffn: 4096,
+            micro_batch: 64,
+            ..ModelDims::bert_3_7b()
+        }
+    }
+
+    pub fn bert_48b() -> ModelDims {
+        ModelDims {
+            name: "48B",
+            num_layers: 36,
+            hidden: 1600,
+            ffn: 6400,
+            micro_batch: 64,
+            ..ModelDims::bert_48b_base()
+        }
+    }
+
+    fn bert_48b_base() -> ModelDims {
+        ModelDims { name: "48B", ..ModelDims::bert_3_7b() }
+    }
+
+    pub fn moe_layer_count(&self) -> usize {
+        // layer indices 1, 3, 5, ... are MoE (paper §4.1: every other FFN)
+        (0..self.num_layers).filter(|l| l % self.moe_every == 1).count()
+    }
+
+    pub fn tokens_per_micro(&self) -> usize {
+        self.micro_batch * self.seq_len
+    }
+
+    /// Total parameters for a variant on a cluster with E = n*m experts.
+    pub fn param_count(&self, variant: Variant, num_experts: usize, n: usize, m: usize) -> f64 {
+        let d = self.hidden as f64;
+        let f = self.ffn as f64;
+        let e = num_experts as f64;
+        let mut total = self.vocab as f64 * d + self.seq_len as f64 * d;
+        for layer in 0..self.num_layers {
+            total += 4.0 * d * d + 4.0 * d; // attention
+            total += 4.0 * d; // layernorms
+            let is_moe = variant.is_moe() && layer % self.moe_every == 1;
+            if is_moe {
+                total += e * (2.0 * d * f + f + d);
+                total += match variant {
+                    Variant::Smile => d * (n + m) as f64,
+                    _ => d * e,
+                };
+            } else {
+                let fw = if variant == Variant::DenseWide && layer % self.moe_every == 1 {
+                    f * e
+                } else {
+                    f
+                };
+                total += 2.0 * d * fw + fw + d;
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_configs_match_paper() {
+        let m = ModelDims::bert_3_7b();
+        assert_eq!((m.num_layers, m.hidden, m.ffn, m.micro_batch), (12, 768, 3072, 128));
+        let m = ModelDims::bert_13b();
+        assert_eq!((m.num_layers, m.hidden, m.ffn, m.micro_batch), (24, 1024, 4096, 64));
+        let m = ModelDims::bert_48b();
+        assert_eq!((m.num_layers, m.hidden, m.ffn, m.micro_batch), (36, 1600, 6400, 64));
+    }
+
+    #[test]
+    fn param_counts_hit_paper_scale() {
+        // with 128 experts the 3.7B config must land at ~3.7e9 params
+        let p = ModelDims::bert_3_7b().param_count(Variant::Switch, 128, 16, 8);
+        assert!(
+            (3.0e9..4.5e9).contains(&p),
+            "3.7B config counts {p:.3e} params"
+        );
+        let p13 = ModelDims::bert_13b().param_count(Variant::Switch, 128, 16, 8);
+        assert!((10e9..16e9).contains(&p13), "13B config counts {p13:.3e}");
+        let p48 = ModelDims::bert_48b().param_count(Variant::Switch, 128, 16, 8);
+        assert!((40e9..56e9).contains(&p48), "48B config counts {p48:.3e}");
+    }
+
+    #[test]
+    fn dense_wide_matches_moe_params() {
+        let dims = ModelDims::bert_3_7b();
+        let moe = dims.param_count(Variant::Switch, 128, 16, 8);
+        let wide = dims.param_count(Variant::DenseWide, 128, 16, 8);
+        let rel = (moe - wide).abs() / moe;
+        assert!(rel < 0.01, "wide {wide:.3e} vs moe {moe:.3e}");
+    }
+
+    #[test]
+    fn dense_matches_bert_base_scale() {
+        // the FLOPs-matched baseline is the paper's BERT(110M)
+        let p = ModelDims::bert_3_7b().param_count(Variant::Dense, 128, 16, 8);
+        assert!((0.08e9..0.15e9).contains(&p), "dense counts {p:.3e}");
+    }
+
+    #[test]
+    fn moe_layer_count_every_other() {
+        assert_eq!(ModelDims::bert_3_7b().moe_layer_count(), 6);
+        assert_eq!(ModelDims::bert_13b().moe_layer_count(), 12);
+    }
+
+    #[test]
+    fn smile_router_params_smaller() {
+        let dims = ModelDims::bert_3_7b();
+        let sw = dims.param_count(Variant::Switch, 128, 16, 8);
+        let sm = dims.param_count(Variant::Smile, 128, 16, 8);
+        // O(mn) -> O(m+n) router rows (paper §3.2.1)
+        let per_layer = 768.0 * (128 - 24) as f64;
+        assert!((sw - sm - 6.0 * per_layer).abs() < 1.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Binary checkpoints of the full training state (params + optimizer
+//! moments), written from the host copies of the state literals.
+//!
+//! Format: "SMCK" magic, u32 version, u32 tensor count, then per
+//! tensor: u32 name_len, name bytes, u8 dtype, u32 ndims, u32 dims...,
+//! raw little-endian data.  Tensors are stored in manifest state
+//! order, and load validates names/shapes against the manifest so a
+//! checkpoint can never be resumed into a mismatched model.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{DType, Tensor, TensorSpec};
+
+pub fn save(path: impl AsRef<Path>, specs: &[TensorSpec], tensors: &[Tensor]) -> Result<()> {
+    assert_eq!(specs.len(), tensors.len());
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut out = std::io::BufWriter::new(f);
+    out.write_all(b"SMCK")?;
+    out.write_all(&1u32.to_le_bytes())?;
+    out.write_all(&(specs.len() as u32).to_le_bytes())?;
+    for (spec, t) in specs.iter().zip(tensors) {
+        let name = spec.name.as_bytes();
+        out.write_all(&(name.len() as u32).to_le_bytes())?;
+        out.write_all(name)?;
+        out.write_all(&[match t.dtype() {
+            DType::F32 => 0u8,
+            DType::I32 => 1u8,
+            DType::U32 => 2u8,
+        }])?;
+        out.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            out.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match t {
+            Tensor::F32(d, _) => {
+                for v in d {
+                    out.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Tensor::I32(d, _) => {
+                for v in d {
+                    out.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    out.flush()?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>, specs: &[TensorSpec]) -> Result<Vec<Tensor>> {
+    let f = std::fs::File::open(&path)
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut hdr = [0u8; 12];
+    r.read_exact(&mut hdr)?;
+    if &hdr[0..4] != b"SMCK" {
+        bail!("bad checkpoint magic");
+    }
+    let count = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+    if count != specs.len() {
+        bail!("checkpoint has {count} tensors, manifest expects {}", specs.len());
+    }
+    let mut out = Vec::with_capacity(count);
+    for spec in specs {
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let name_len = u32::from_le_bytes(b4) as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        if name != spec.name {
+            bail!("checkpoint tensor '{name}' where manifest expects '{}'", spec.name);
+        }
+        let mut b1 = [0u8; 1];
+        r.read_exact(&mut b1)?;
+        r.read_exact(&mut b4)?;
+        let ndims = u32::from_le_bytes(b4) as usize;
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            r.read_exact(&mut b4)?;
+            dims.push(u32::from_le_bytes(b4) as usize);
+        }
+        if dims != spec.shape {
+            bail!("checkpoint '{name}' shape {dims:?} != manifest {:?}", spec.shape);
+        }
+        let n: usize = dims.iter().product();
+        let mut data = vec![0u8; n * 4];
+        r.read_exact(&mut data)?;
+        let tensor = match b1[0] {
+            0 => Tensor::F32(
+                data.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                dims,
+            ),
+            1 | 2 => Tensor::I32(
+                data.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                dims,
+            ),
+            other => bail!("bad dtype tag {other}"),
+        };
+        out.push(tensor);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec { name: "params.w".into(), shape: vec![2, 3], dtype: DType::F32 },
+            TensorSpec { name: "opt.m".into(), shape: vec![4], dtype: DType::F32 },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = std::env::temp_dir().join("smile_test_ckpt.bin");
+        let tensors = vec![
+            Tensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]),
+            Tensor::f32(vec![0.1, 0.2, 0.3, 0.4], &[4]),
+        ];
+        save(&path, &specs(), &tensors).unwrap();
+        let back = load(&path, &specs()).unwrap();
+        assert_eq!(back, tensors);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mismatched_spec_rejected() {
+        let path = std::env::temp_dir().join("smile_test_ckpt2.bin");
+        let tensors = vec![
+            Tensor::f32(vec![0.0; 6], &[2, 3]),
+            Tensor::f32(vec![0.0; 4], &[4]),
+        ];
+        save(&path, &specs(), &tensors).unwrap();
+        let mut wrong = specs();
+        wrong[1].shape = vec![5];
+        assert!(load(&path, &wrong).is_err());
+        wrong[1].shape = vec![4];
+        wrong[0].name = "params.other".into();
+        assert!(load(&path, &wrong).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,220 @@
+//! The real training loop (system S6, deliverable (b)'s end-to-end
+//! driver): executes the fused AOT train-step artifact through PJRT,
+//! streams MLM batches from the synthetic corpus, logs loss curves,
+//! evaluates perplexity, and checkpoints.
+//!
+//! Python never runs here: the artifact was lowered once at build time.
+
+pub mod checkpoint;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::{Corpus, CorpusSpec, MlmBatch, MlmBatcher, MlmSpec};
+use crate::metrics::StepLog;
+use crate::runtime::{ArtifactConfig, Loaded, Runtime, Tensor};
+
+pub struct Trainer {
+    pub cfg: ArtifactConfig,
+    train_art: Arc<Loaded>,
+    eval_art: Option<Arc<Loaded>>,
+    /// full training state (params + moments) as host literals
+    state: Vec<xla::Literal>,
+    pub step: usize,
+    /// last observed per-expert / per-node dispatch fractions
+    pub last_expert_frac: Vec<f32>,
+    pub last_node_frac: Vec<f32>,
+    metric_names: Vec<String>,
+}
+
+impl Trainer {
+    /// Load the init/train/eval artifacts for `config_name` and run the
+    /// AOT init to materialize the state.
+    pub fn new(rt: &Runtime, config_name: &str, seed: i32) -> Result<Trainer> {
+        let train_art = rt.load(&format!("train_{config_name}"))?;
+        let init_art = rt.load(&format!("init_{config_name}"))?;
+        let eval_art = rt.load(&format!("eval_{config_name}")).ok();
+        let cfg = train_art.spec.config.clone();
+
+        let t0 = Instant::now();
+        let state = init_art.run(&[Tensor::scalar_i32(seed).to_literal()?])?;
+        log::info!(
+            "initialized {} ({} params) in {:.2}s",
+            config_name,
+            train_art.spec.param_count,
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(Trainer {
+            cfg,
+            metric_names: train_art.spec.metric_names.clone(),
+            train_art,
+            eval_art,
+            state,
+            step: 0,
+            last_expert_frac: Vec::new(),
+            last_node_frac: Vec::new(),
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.train_art.spec.param_count
+    }
+
+    /// Batch geometry the train artifact expects: (K, A, B, S).
+    pub fn batch_dims(&self) -> (usize, usize, usize, usize) {
+        (
+            self.cfg.steps_per_call,
+            self.cfg.accum_steps,
+            self.cfg.micro_batch,
+            self.cfg.seq_len,
+        )
+    }
+
+    /// Samples consumed per train_call.
+    pub fn samples_per_call(&self) -> usize {
+        let (k, a, b, _) = self.batch_dims();
+        k * a * b
+    }
+
+    fn metric_idx(&self, name: &str) -> Result<usize> {
+        self.metric_names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow!("metric {name} not in artifact"))
+    }
+
+    /// Execute one fused call = `steps_per_call` optimizer steps.
+    pub fn train_call(&mut self, batch: &MlmBatch) -> Result<Vec<StepLog>> {
+        let (k, a, b, s) = self.batch_dims();
+        anyhow::ensure!(
+            batch.shape == [k, a, b, s],
+            "batch shape {:?} != artifact {:?}",
+            batch.shape,
+            [k, a, b, s]
+        );
+        let shape = [k, a, b, s];
+        let t_lits = [
+            Tensor::i32(batch.tokens.clone(), &shape).to_literal()?,
+            Tensor::i32(batch.labels.clone(), &shape).to_literal()?,
+            Tensor::f32(batch.weights.clone(), &shape).to_literal()?,
+            Tensor::scalar_i32(self.step as i32).to_literal()?,
+        ];
+        let t0 = Instant::now();
+        let args: Vec<&xla::Literal> = self.state.iter().chain(t_lits.iter()).collect();
+        let mut outputs = self.train_art.run(&args)?;
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let state_len = self.train_art.spec.state_len;
+        let rest = outputs.split_off(state_len);
+        self.state = outputs;
+
+        // rest = [metrics [K, M], expert_frac [K, E], node_frac [K, n]]
+        let out_specs = &self.train_art.spec.outputs[state_len..];
+        let metrics = Tensor::from_literal(&rest[0], &out_specs[0])?;
+        let ef = Tensor::from_literal(&rest[1], &out_specs[1])?;
+        let nf = Tensor::from_literal(&rest[2], &out_specs[2])?;
+        let m = out_specs[0].shape[1];
+        let mvals = metrics.as_f32()?;
+        let (i_loss, i_mlm) = (self.metric_idx("loss")?, self.metric_idx("mlm_loss")?);
+        let i_lb = self.metric_idx("lb_loss")?;
+        let i_li = self.metric_idx("lb_inter")?;
+        let i_la = self.metric_idx("lb_intra")?;
+        let i_df = self.metric_idx("dropped_frac")?;
+        let i_gn = self.metric_idx("grad_norm")?;
+        let i_lr = self.metric_idx("lr")?;
+
+        let mut logs = Vec::with_capacity(k);
+        for ki in 0..k {
+            let row = &mvals[ki * m..(ki + 1) * m];
+            logs.push(StepLog {
+                step: self.step + ki,
+                loss: row[i_loss],
+                mlm_loss: row[i_mlm],
+                lb_loss: row[i_lb],
+                lb_inter: row[i_li],
+                lb_intra: row[i_la],
+                dropped_frac: row[i_df],
+                grad_norm: row[i_gn],
+                lr: row[i_lr],
+                step_secs: elapsed / k as f64,
+            });
+        }
+        self.step += k;
+
+        // keep last-step routing fractions for reports
+        let e = out_specs[1].shape[1];
+        let n = out_specs[2].shape[1];
+        self.last_expert_frac = ef.as_f32()?[(k - 1) * e..].to_vec();
+        self.last_node_frac = nf.as_f32()?[(k - 1) * n..].to_vec();
+        Ok(logs)
+    }
+
+    /// Evaluate masked perplexity over `n_batches` held-out batches.
+    pub fn evaluate(&self, batcher: &mut MlmBatcher, n_batches: usize) -> Result<f64> {
+        let eval = self
+            .eval_art
+            .as_ref()
+            .ok_or_else(|| anyhow!("no eval artifact for {}", self.cfg.name))?;
+        let (_, _, b, s) = self.batch_dims();
+        let param_len = self.train_art.spec.param_len;
+        let mut nll_sum = 0.0f64;
+        let mut w_sum = 0.0f64;
+        for _ in 0..n_batches {
+            let batch = batcher.batch(1, 1, b, s);
+            let shape = [b, s];
+            let lits = [
+                Tensor::i32(batch.tokens, &shape).to_literal()?,
+                Tensor::i32(batch.labels, &shape).to_literal()?,
+                Tensor::f32(batch.weights, &shape).to_literal()?,
+            ];
+            let args: Vec<&xla::Literal> =
+                self.state[..param_len].iter().chain(lits.iter()).collect();
+            let out = eval.run(&args)?;
+            nll_sum += out[0].to_vec::<f32>()?[0] as f64;
+            w_sum += out[1].to_vec::<f32>()?[0] as f64;
+        }
+        Ok((nll_sum / w_sum.max(1.0)).exp())
+    }
+
+    /// Host copies of the current state (for checkpointing).
+    pub fn state_tensors(&self) -> Result<Vec<Tensor>> {
+        let specs = &self.train_art.spec.inputs[..self.train_art.spec.state_len];
+        self.state
+            .iter()
+            .zip(specs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, spec))
+            .collect()
+    }
+
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let specs = &self.train_art.spec.inputs[..self.train_art.spec.state_len];
+        let tensors = self.state_tensors()?;
+        checkpoint::save(path, specs, &tensors).context("saving checkpoint")
+    }
+
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let specs = &self.train_art.spec.inputs[..self.train_art.spec.state_len];
+        let tensors = checkpoint::load(path, specs)?;
+        self.state = tensors
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()
+            .context("restoring state literals")?;
+        Ok(())
+    }
+
+    /// Convenience: a batcher whose vocabulary matches this model.
+    pub fn make_batcher(&self, seed: u64) -> MlmBatcher {
+        let corpus = Corpus::new(CorpusSpec {
+            vocab_size: self.cfg.vocab_size,
+            ..Default::default()
+        });
+        MlmBatcher::new(corpus, MlmSpec::default(), seed)
+    }
+
+    pub fn exec_stats(&self) -> crate::runtime::ExecStats {
+        self.train_art.stats()
+    }
+}

@@ -1,0 +1,225 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly:
+//! warmup, adaptive iteration count targeting a wall-clock budget,
+//! summary statistics, and an optional JSON report file under
+//! `reports/` so EXPERIMENTS.md numbers are regenerable.
+
+use std::time::{Duration, Instant};
+
+use crate::obj;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub ns_per_iter: Summary,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        obj! {
+            "name" => self.name.clone(),
+            "iters" => self.iters,
+            "ns_mean" => self.ns_per_iter.mean,
+            "ns_p50" => self.ns_per_iter.p50,
+            "ns_p99" => self.ns_per_iter.p99,
+            "ns_std" => self.ns_per_iter.std,
+        }
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(300),
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly; returns mean ns/iter.  `f` should return a
+    /// value the optimizer cannot elide (use `std::hint::black_box`).
+    pub fn bench<F: FnMut() -> R, R>(&mut self, name: &str, mut f: F) -> f64 {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // estimate cost to size batches
+        let e0 = Instant::now();
+        std::hint::black_box(f());
+        let est = e0.elapsed().as_nanos().max(1) as u64;
+        let samples_wanted = 30usize;
+        let batch = ((self.budget.as_nanos() as u64 / est / samples_wanted as u64).max(1)) as usize;
+
+        let mut samples = Vec::with_capacity(samples_wanted);
+        let mut total_iters = 0usize;
+        let t0 = Instant::now();
+        while (samples.len() < samples_wanted && t0.elapsed() < self.budget)
+            || total_iters < self.min_iters
+        {
+            let b0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(b0.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        let summary = Summary::of(&samples);
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            ns_per_iter: summary.clone(),
+        };
+        println!(
+            "{:<48} {:>12.0} ns/iter  (p50 {:>10.0}, p99 {:>10.0}, n={})",
+            name, summary.mean, summary.p50, summary.p99, total_iters
+        );
+        self.results.push(r);
+        summary.mean
+    }
+
+    /// Record an externally-measured sample set (e.g. simulator outputs
+    /// where one "iteration" is a simulated step, not wall clock).
+    pub fn record(&mut self, name: &str, samples_ns: &[f64]) {
+        let summary = Summary::of(samples_ns);
+        println!(
+            "{:<48} {:>12.0} ns/iter  (p50 {:>10.0}, n={})",
+            name,
+            summary.mean,
+            summary.p50,
+            samples_ns.len()
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            ns_per_iter: summary,
+        });
+    }
+
+    /// Write all results as JSON under reports/.
+    pub fn write_report(&self, path: &str) {
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Err(e) = std::fs::write(path, arr.to_string_pretty()) {
+            eprintln!("warning: could not write {path}: {e}");
+        } else {
+            println!("report: {path}");
+        }
+    }
+}
+
+/// Simple fixed-width text table printer used by bench mains to emit
+/// paper-style tables.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.header));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", line(&sep));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Also serialize to CSV for reports/.
+    pub fn write_csv(&self, path: &str) {
+        let mut s = self.header.join(",") + "\n";
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Err(e) = std::fs::write(path, s) {
+            eprintln!("warning: could not write {path}: {e}");
+        } else {
+            println!("csv: {path}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::quick();
+        let mut acc = 0u64;
+        let ns = b.bench("noop-ish", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert!(ns > 0.0 && ns < 1e7);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut b = Bencher::quick();
+        b.record("sim", &[100.0, 200.0, 300.0]);
+        assert_eq!(b.results[0].iters, 3);
+        assert!((b.results[0].ns_per_iter.mean - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["model", "throughput"]);
+        t.row(&["switch".into(), "8112".into()]);
+        t.row(&["smile".into(), "20011".into()]);
+        assert_eq!(t.rows.len(), 2);
+        t.print(); // should not panic
+    }
+}

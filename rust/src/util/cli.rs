@@ -1,0 +1,165 @@
+//! Minimal CLI argument parser (no clap offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments; typed getters with defaults and a usage/help
+//! generator.  Used by the `smile` binary and every example.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    /// (name, help, default) for --help output
+    specs: Vec<(String, String, String)>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(true, |n| n.starts_with("--")) {
+                    flags.insert(rest.to_string(), "true".to_string());
+                } else {
+                    flags.insert(rest.to_string(), it.next().unwrap());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { flags, positional, specs: Vec::new() }
+    }
+
+    /// Register a flag for --help output; returns self for chaining.
+    pub fn describe(mut self, name: &str, help: &str, default: &str) -> Self {
+        self.specs.push((name.to_string(), help.to_string(), default.to_string()));
+        self
+    }
+
+    pub fn usage(&self, program: &str) -> String {
+        let mut s = format!("usage: {program} [options]\n");
+        for (name, help, default) in &self.specs {
+            s.push_str(&format!("  --{:<24} {} (default: {})\n", name, help, default));
+        }
+        s
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.flags.get(key).map(|v| v == "true" || v == "1" || v.is_empty()).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list of integers, e.g. `--nodes 1,2,4,8,16`.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad int '{p}'")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // positionals precede flags: a bare word after `--flag` is
+        // consumed as that flag's value (documented ambiguity).
+        let a = parse("pos1 --steps 100 --config=tiny_smile --verbose");
+        assert_eq!(a.usize("steps", 0), 100);
+        assert_eq!(a.str("config", ""), "tiny_smile");
+        assert!(a.bool("verbose", false));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize("steps", 7), 7);
+        assert_eq!(a.f64("lr", 0.5), 0.5);
+        assert!(!a.bool("x", false));
+        assert!(a.opt_str("missing").is_none());
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("--first 1 --flag");
+        assert!(a.bool("flag", false));
+        assert_eq!(a.usize("first", 0), 1);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b 2");
+        assert!(a.bool("a", false));
+        assert_eq!(a.usize("b", 0), 2);
+    }
+
+    #[test]
+    fn int_lists() {
+        let a = parse("--nodes 1,2,4");
+        assert_eq!(a.usize_list("nodes", &[9]), vec![1, 2, 4]);
+        assert_eq!(a.usize_list("other", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn usage_contains_descriptions() {
+        let a = parse("").describe("steps", "number of steps", "100");
+        let u = a.usage("smile");
+        assert!(u.contains("--steps"));
+        assert!(u.contains("number of steps"));
+    }
+}

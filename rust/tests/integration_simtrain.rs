@@ -1,0 +1,160 @@
+//! Integration over the simulation stack: the end-to-end shapes the
+//! paper's evaluation section reports, cross-checked between modules
+//! (collectives <-> layer model <-> step model), plus failure/straggler
+//! injection through the DAG engine.
+
+use smile::netsim::collectives::{all2all_flat, all2all_inter, all2all_intra, chunked};
+use smile::netsim::{ClusterSpec, DagSim};
+use smile::simtrain::{
+    self, moe_layer_forward, moe_layer_forward_chunked, ModelDims, Scaling, Variant,
+};
+
+#[test]
+fn layer_model_consistent_with_collectives() {
+    // the layer model's a2a phases must equal the collective costs it
+    // was built from (2 hops each)
+    let dims = ModelDims::bert_3_7b();
+    let spec = ClusterSpec::p4d(16);
+    let payload = simtrain::layer_model::hop_payload(&dims);
+    let b = moe_layer_forward(&dims, Variant::Smile, &spec);
+    let inter2 = 2.0 * all2all_inter(&spec, payload).total();
+    let intra2 = 2.0 * all2all_intra(&spec, payload).total();
+    assert!((b.a2a_inter - inter2).abs() < 1e-9, "{} vs {inter2}", b.a2a_inter);
+    assert!((b.a2a_intra - intra2).abs() < 1e-9, "{} vs {intra2}", b.a2a_intra);
+
+    let bs = moe_layer_forward(&dims, Variant::Switch, &spec);
+    let flat2 = 2.0 * all2all_flat(&spec, payload).total();
+    assert!((bs.a2a_inter - flat2).abs() < 1e-9);
+}
+
+#[test]
+fn full_paper_sweep_has_all_claimed_shapes() {
+    // one integration pass over every node count x variant x scaling —
+    // the combined Fig 3 + Fig 8 payload.
+    let dims = ModelDims::bert_3_7b();
+    let nodes = [1usize, 2, 4, 8, 16];
+    let weak = |_: usize| Scaling::Weak { per_gpu_batch: 128 };
+    let strong = |_: usize| Scaling::Strong { global_batch: 16384 };
+
+    let sw_weak = simtrain::scaling_sweep(&dims, Variant::Switch, &nodes, weak);
+    let sm_weak = simtrain::scaling_sweep(&dims, Variant::Smile, &nodes, weak);
+    let sw_strong = simtrain::scaling_sweep(&dims, Variant::Switch, &nodes, strong);
+    let sm_strong = simtrain::scaling_sweep(&dims, Variant::Smile, &nodes, strong);
+
+    // SMILE weak-scales monotonically 1 -> 16 (paper Fig 8 left)
+    for w in sm_weak.windows(2) {
+        assert!(w[1].1 > w[0].1, "smile weak not monotone: {sm_weak:?}");
+    }
+    // Switch weak scaling dips at 8 nodes (paper Fig 3)
+    assert!(sw_weak[3].1 < sw_weak[2].1, "{sw_weak:?}");
+    // From 4 nodes up SMILE beats Switch under both policies (the
+    // crossover sits between 2 and 4 nodes in our calibration; the
+    // paper's Fig 8 shows the same ordering at its plotted points)
+    for i in 2..nodes.len() {
+        assert!(sm_weak[i].1 > sw_weak[i].1, "weak {i}");
+        assert!(sm_strong[i].1 > sw_strong[i].1, "strong {i}");
+    }
+    // and the 16-node strong-scaling speedup is in the paper's band
+    let speedup = sm_strong[4].1 / sw_strong[4].1;
+    assert!((1.8..3.5).contains(&speedup), "16-node speedup {speedup}");
+    // On one node Switch wins (paper §4.3.1 obs. 2)
+    assert!(sw_weak[0].1 >= sm_weak[0].1);
+}
+
+#[test]
+fn table2_all_sizes_speedup_band() {
+    let spec = ClusterSpec::p4d(16);
+    let strong = Scaling::Strong { global_batch: 16384 };
+    let mut speedups = Vec::new();
+    for dims in [ModelDims::bert_3_7b(), ModelDims::bert_13b(), ModelDims::bert_48b()] {
+        let sw = simtrain::throughput(&dims, Variant::Switch, &spec, strong);
+        let sm = simtrain::throughput(&dims, Variant::Smile, &spec, strong);
+        speedups.push((dims.name, sm / sw));
+    }
+    // paper: 2.47x / 1.71x / 2.50x — accept the 1.4-3.5 band for all
+    for (name, s) in &speedups {
+        assert!((1.4..3.5).contains(s), "{name}: {s}");
+    }
+}
+
+#[test]
+fn fig12_overlap_sweep_never_beats_unchunked() {
+    let dims = ModelDims::bert_3_7b();
+    let spec = ClusterSpec::p4d(16);
+    let t1 = moe_layer_forward_chunked(&dims, &spec, 1);
+    for chunks in [2usize, 3, 4, 6, 8, 16] {
+        let tk = moe_layer_forward_chunked(&dims, &spec, chunks);
+        assert!(
+            tk > t1 * 0.95,
+            "chunks={chunks} improved: {tk} vs {t1} (paper A.2 says it must not)"
+        );
+    }
+}
+
+#[test]
+fn chunked_collective_cost_model() {
+    let spec = ClusterSpec::p4d(8);
+    let c = all2all_flat(&spec, 10e6);
+    let c8 = chunked(&c, 8);
+    // launches scale with chunk count — the paper's explanation for
+    // why pipelining fails ("the number of All2All operations inside
+    // the MoE layer increases linearly with the number of chunks")
+    assert!((c8.launch / c.launch - 8.0).abs() < 1e-9);
+    assert_eq!(c8.wire, c.wire);
+}
+
+#[test]
+fn straggler_injection_extends_makespan() {
+    // failure injection through the DAG engine: a straggling expert GPU
+    // delays the combine phase of the whole layer.
+    let mut sim = DagSim::new();
+    let nic = sim.resource("nic");
+    let gpus: Vec<_> = (0..4).map(|i| sim.resource(&format!("gpu{i}"))).collect();
+    let a2a = sim.task("a2a.dispatch", nic, 10.0, &[]);
+    let mut ffn = Vec::new();
+    for (i, &g) in gpus.iter().enumerate() {
+        let dur = if i == 2 { 50.0 } else { 5.0 }; // straggler
+        ffn.push(sim.task(&format!("ffn{i}"), g, dur, &[a2a]));
+    }
+    let combine = sim.task("a2a.combine", nic, 10.0, &ffn);
+    let tl = sim.run();
+    assert!((tl.span_of(combine).start - 60.0).abs() < 1e-9, "combine gated by straggler");
+    assert!((tl.makespan - 70.0).abs() < 1e-9);
+
+    // without the straggler the layer is 25s: quantifies the blast
+    // radius of ONE slow GPU under synchronous MoE — why load balance
+    // (Eq. 4) matters operationally.
+    let mut sim2 = DagSim::new();
+    let nic2 = sim2.resource("nic");
+    let gpus2: Vec<_> = (0..4).map(|i| sim2.resource(&format!("gpu{i}"))).collect();
+    let a = sim2.task("a2a.dispatch", nic2, 10.0, &[]);
+    let ffn2: Vec<_> =
+        gpus2.iter().enumerate().map(|(i, &g)| sim2.task(&format!("f{i}"), g, 5.0, &[a])).collect();
+    sim2.task("a2a.combine", nic2, 10.0, &ffn2);
+    assert!((sim2.run().makespan - 25.0).abs() < 1e-9);
+}
+
+#[test]
+fn degraded_link_shifts_bottleneck() {
+    // link degradation: slashing inter_bw 10x must grow the bi-level
+    // inter phase ~10x while leaving intra untouched
+    let dims = ModelDims::bert_3_7b();
+    let mut spec = ClusterSpec::p4d(16);
+    let base = moe_layer_forward(&dims, Variant::Smile, &spec);
+    spec.inter_bw /= 10.0;
+    let degraded = moe_layer_forward(&dims, Variant::Smile, &spec);
+    assert!(degraded.a2a_inter > 8.0 * base.a2a_inter);
+    assert!((degraded.a2a_intra - base.a2a_intra).abs() < 1e-9);
+    assert!(degraded.a2a_ratio > base.a2a_ratio);
+}
+
+#[test]
+fn throughput_unit_sanity() {
+    // samples/s x step time == global batch
+    let dims = ModelDims::bert_3_7b();
+    let spec = ClusterSpec::p4d(4);
+    let scaling = Scaling::Strong { global_batch: 16384 };
+    let tp = simtrain::throughput(&dims, Variant::Smile, &spec, scaling);
+    let bd = simtrain::step_time(&dims, Variant::Smile, &spec, scaling);
+    assert!((tp * bd.total() - 16384.0).abs() < 1e-6);
+}

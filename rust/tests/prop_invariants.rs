@@ -1,0 +1,301 @@
+//! Property-based invariants across the coordination stack, run with
+//! the hand-rolled `util::proptest` runner (DESIGN.md §7).
+
+use smile::cluster::ProcessGroups;
+use smile::moe::{self, BiLevelPlan, DispatchPlan};
+use smile::netsim::collectives::{all2all_flat, all2all_inter, all2all_intra, allreduce};
+use smile::netsim::{ClusterSpec, DagSim};
+use smile::prop_assert;
+use smile::util::proptest::{check, Config};
+use smile::util::rng::Rng;
+
+fn cfg() -> Config {
+    Config::default()
+}
+
+fn random_spec(rng: &mut Rng) -> ClusterSpec {
+    ClusterSpec::test(1 + rng.below(8) as usize, 1 + rng.below(8) as usize)
+}
+
+// ---------------------------------------------------------------------------
+// dispatch conservation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dispatch_conservation() {
+    check(
+        "dispatch: kept + dropped == tokens, capacity respected",
+        &cfg(),
+        |rng| {
+            let t = 1 + rng.below(500) as usize;
+            let e = 1 + rng.below(32) as usize;
+            let cap = 1 + rng.below(64) as usize;
+            let skew = rng.f64() * 2.0;
+            let choices = moe::dispatch::synthetic_choices(rng, t, e, skew);
+            (choices, e, cap)
+        },
+        |(choices, e, cap)| {
+            let plan = DispatchPlan::build(choices, *e, *cap);
+            let kept: usize = plan.loads().iter().sum();
+            prop_assert!(
+                kept + plan.dropped() == choices.len(),
+                "kept {kept} + dropped {} != {}",
+                plan.dropped(),
+                choices.len()
+            );
+            prop_assert!(
+                plan.loads().iter().all(|&l| l <= *cap),
+                "capacity exceeded: {:?} > {cap}",
+                plan.loads()
+            );
+            // combine visits each kept token exactly once
+            let mut seen = vec![0u8; choices.len()];
+            for (_, _, tok) in plan.combine_order() {
+                seen[tok] += 1;
+            }
+            prop_assert!(seen.iter().all(|&c| c <= 1), "token combined twice");
+            prop_assert!(
+                seen.iter().filter(|&&c| c == 1).count() == kept,
+                "combine count != kept"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bilevel_flat_equivalence() {
+    // a bi-level plan's flat ids must equal i*m + j and its per-node
+    // counts must equal the sum over that node's experts
+    check(
+        "bilevel: flat id == i*m + j; node counts consistent",
+        &cfg(),
+        |rng| {
+            let n = 1 + rng.below(6) as usize;
+            let m = 1 + rng.below(6) as usize;
+            let t = 1 + rng.below(300) as usize;
+            let node = moe::dispatch::synthetic_choices(rng, t, n, 0.5);
+            let local = moe::dispatch::synthetic_choices(rng, t, m, 0.5);
+            (node, local, n, m)
+        },
+        |(node, local, n, m)| {
+            let plan = BiLevelPlan::build(node, local, *n, *m, usize::MAX >> 1);
+            for (t, (ni, lj)) in node.iter().zip(local.iter()).enumerate() {
+                match plan.flat.assignment[t] {
+                    moe::Assignment::Slot(e, _) => {
+                        prop_assert!(
+                            e == ni.expert * m + lj.expert,
+                            "token {t}: flat {e} != {}*{m}+{}",
+                            ni.expert,
+                            lj.expert
+                        );
+                    }
+                    moe::Assignment::Dropped => {}
+                }
+            }
+            // node_counts[i] == sum of flat loads over that node's experts
+            // (capacity unbounded here, so no drops)
+            for i in 0..*n {
+                let from_flat: usize =
+                    (0..*m).map(|j| plan.flat.load_of(i * m + j)).sum();
+                prop_assert!(
+                    from_flat == plan.node_counts[i],
+                    "node {i}: {from_flat} != {}",
+                    plan.node_counts[i]
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// process groups partition laws
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_process_groups_partition() {
+    check(
+        "groups: inter and intra groups partition the world; overlap = self",
+        &cfg(),
+        random_spec,
+        |spec| {
+            let pg = ProcessGroups::new(spec);
+            let world = spec.num_gpus();
+            let mut inter_seen = vec![0usize; world];
+            for g in pg.inter_groups() {
+                for &r in &g.ranks {
+                    inter_seen[r] += 1;
+                }
+            }
+            prop_assert!(inter_seen.iter().all(|&c| c == 1), "inter not a partition");
+            let mut intra_seen = vec![0usize; world];
+            for g in pg.intra_groups() {
+                for &r in &g.ranks {
+                    intra_seen[r] += 1;
+                }
+            }
+            prop_assert!(intra_seen.iter().all(|&c| c == 1), "intra not a partition");
+            for rank in 0..world {
+                let inter = pg.inter_group_of(rank);
+                let intra = pg.intra_group_of(rank);
+                let common: Vec<_> =
+                    inter.ranks.iter().filter(|r| intra.contains(**r)).collect();
+                prop_assert!(common == vec![&rank], "rank {rank}: overlap {common:?}");
+                prop_assert!(inter.size() == spec.n_nodes, "inter size");
+                prop_assert!(intra.size() == spec.gpus_per_node, "intra size");
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// collective cost laws
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_collective_costs_monotone_in_payload() {
+    check(
+        "collectives: cost weakly monotone in payload, non-negative",
+        &cfg(),
+        |rng| (random_spec(rng), 1e3 + rng.f64() * 1e8),
+        |(spec, payload)| {
+            for f in [all2all_flat, all2all_inter, all2all_intra] {
+                let small = f(spec, *payload).total();
+                let big = f(spec, payload * 2.0).total();
+                prop_assert!(small >= 0.0 && big >= 0.0, "negative cost");
+                prop_assert!(big >= small, "cost not monotone: {big} < {small}");
+            }
+            let ar1 = allreduce(spec, *payload).total();
+            let ar2 = allreduce(spec, payload * 2.0).total();
+            prop_assert!(ar2 >= ar1, "allreduce not monotone");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bilevel_beats_flat_on_multinode() {
+    check(
+        "bi-level a2a <= flat a2a whenever >= 4 nodes (paper headline)",
+        &cfg(),
+        |rng| {
+            let n = 4 + rng.below(13) as usize;
+            let spec = ClusterSpec::p4d(n);
+            (spec, 1e6 + rng.f64() * 1e8)
+        },
+        |(spec, payload)| {
+            let flat = all2all_flat(spec, *payload).total();
+            let bi = all2all_inter(spec, *payload).total()
+                + all2all_intra(spec, *payload).total();
+            prop_assert!(bi <= flat, "bi-level {bi} > flat {flat} on {} nodes", spec.n_nodes);
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// DAG engine causality
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dag_sim_causality() {
+    check(
+        "dag: no span starts before its deps end or overlaps its resource",
+        &cfg(),
+        |rng| {
+            // random DAG: each task depends on a random subset of earlier ones
+            let n_res = 1 + rng.below(4) as usize;
+            let n_tasks = 1 + rng.below(40) as usize;
+            let mut edges = Vec::new();
+            let mut durations = Vec::new();
+            let mut resources = Vec::new();
+            for t in 0..n_tasks {
+                let n_deps = rng.below(3.min(t as u64 + 1)) as usize;
+                let deps: Vec<usize> =
+                    (0..n_deps).map(|_| rng.below(t as u64) as usize).collect();
+                edges.push(deps);
+                durations.push(rng.f64() * 10.0);
+                resources.push(rng.below(n_res as u64) as usize);
+            }
+            (n_res, edges, durations, resources)
+        },
+        |(n_res, edges, durations, resources)| {
+            let mut sim = DagSim::new();
+            let res: Vec<_> = (0..*n_res).map(|i| sim.resource(&format!("r{i}"))).collect();
+            let mut ids = Vec::new();
+            for (t, deps) in edges.iter().enumerate() {
+                let dep_ids: Vec<_> = deps.iter().map(|&d| ids[d]).collect();
+                ids.push(sim.task(&format!("t{t}"), res[resources[t]], durations[t], &dep_ids));
+            }
+            let tl = sim.run();
+            // dependency causality
+            for (t, deps) in edges.iter().enumerate() {
+                let span = tl.span_of(ids[t]);
+                for &d in deps {
+                    let dspan = tl.span_of(ids[d]);
+                    prop_assert!(
+                        span.start >= dspan.end - 1e-9,
+                        "task {t} starts {} before dep {d} ends {}",
+                        span.start,
+                        dspan.end
+                    );
+                }
+            }
+            // resource exclusivity: spans on one resource do not overlap
+            for r in 0..*n_res {
+                let mut spans: Vec<_> =
+                    tl.spans.iter().filter(|s| s.resource == r).collect();
+                spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+                for w in spans.windows(2) {
+                    prop_assert!(
+                        w[1].start >= w[0].end - 1e-9,
+                        "overlap on resource {r}: {:?} {:?}",
+                        w[0],
+                        w[1]
+                    );
+                }
+            }
+            // makespan >= critical path lower bound (max single duration)
+            let max_dur = durations.iter().cloned().fold(0.0, f64::max);
+            prop_assert!(tl.makespan >= max_dur - 1e-9, "makespan < longest task");
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// routing statistics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_imbalance_bounds() {
+    check(
+        "imbalance in [1, E]; dropped_frac in [0, 1]",
+        &cfg(),
+        |rng| {
+            let t = 1 + rng.below(400) as usize;
+            let e = 1 + rng.below(16) as usize;
+            let cap = 1 + rng.below(40) as usize;
+            let skew = rng.f64() * 3.0;
+            let choices = moe::dispatch::synthetic_choices(rng, t, e, skew);
+            (choices, e, cap)
+        },
+        |(choices, e, cap)| {
+            let plan = DispatchPlan::build(choices, *e, *cap);
+            let stats = moe::routing_stats(&plan);
+            prop_assert!(
+                stats.imbalance >= 1.0 - 1e-9 && stats.imbalance <= *e as f64 + 1e-9,
+                "imbalance {} out of [1,{e}]",
+                stats.imbalance
+            );
+            prop_assert!(
+                (0.0..=1.0).contains(&stats.dropped_frac),
+                "dropped {}",
+                stats.dropped_frac
+            );
+            Ok(())
+        },
+    );
+}
