@@ -13,6 +13,10 @@
 //!   distributed-systems side: process groups (§3.2.3), dispatch plans
 //!   (§3.2.1), the simulated P4d/EFA testbed, and the step-time models
 //!   that regenerate every table and figure of the paper's evaluation.
+//! - [`placement`] decides where experts live: EWMA load tracking,
+//!   congestion-priced expert->GPU placement, hot-expert replication
+//!   across nodes, and the threshold/hysteresis rebalancing policy the
+//!   step loop consults (the paper's fixed assignment is its baseline).
 //! - [`data`] is the synthetic-corpus stand-in for C4; [`metrics`]
 //!   the profiler stand-in; [`util`] the from-scratch substrate
 //!   (json/cli/rng/stats/bench — the offline image vendors none of the
@@ -23,6 +27,7 @@ pub mod data;
 pub mod metrics;
 pub mod moe;
 pub mod netsim;
+pub mod placement;
 pub mod runtime;
 pub mod simtrain;
 pub mod trainer;

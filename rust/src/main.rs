@@ -6,6 +6,7 @@
 //!   simulate       step-time / throughput simulation on the P4d model
 //!   sweep          weak+strong scaling sweeps (Fig 3 / Fig 8)
 //!   layer          single-MoE-layer breakdown (Table 3 / Figs 9-11)
+//!   placement      congestion-aware expert placement report under skew
 //!   info           list artifacts and their configs
 //!
 //! Examples:
@@ -13,16 +14,19 @@
 //!   smile simulate --model 3.7B --nodes 16
 //!   smile sweep --nodes 1,2,4,8,16
 //!   smile layer --variant smile --nodes 16
+//!   smile placement --nodes 16 --skew 1.2
 
 use anyhow::{bail, Result};
 
 use smile::metrics::{CsvLogger, RunSummary, StepLog};
 use smile::netsim::ClusterSpec;
+use smile::placement::{self, PlacementMap, RebalancePolicy};
 use smile::runtime::Runtime;
 use smile::simtrain::{self, ModelDims, Scaling, Variant};
 use smile::trainer::Trainer;
 use smile::util::bench::Table;
 use smile::util::cli::Args;
+use smile::util::json::Json;
 
 fn main() {
     if let Err(e) = run() {
@@ -41,6 +45,7 @@ fn run() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
         "layer" => cmd_layer(&args),
+        "placement" => cmd_placement(&args),
         "info" => cmd_info(&args),
         _ => {
             print_help();
@@ -54,11 +59,12 @@ fn print_help() {
         "smile — bi-level MoE routing (SMILE) reproduction\n\n\
          usage: smile <command> [options]\n\n\
          commands:\n\
-           train     --config <name> --steps N [--seed S] [--log out.csv] [--ckpt path] [--eval-every N]\n\
+           train     --config <name> --steps N [--seed S] [--log out.csv] [--ckpt path] [--eval-every N] [--rebalance]\n\
            eval      --config <name> --ckpt path [--batches N]\n\
            simulate  --model 3.7B|13B|48B --nodes N [--variant switch|smile|dense|dense_wide]\n\
            sweep     [--nodes 1,2,4,8,16] [--model 3.7B]\n\
            layer     --variant switch|smile [--nodes N] [--timeline]\n\
+           placement [--nodes N] [--skew S] [--model 3.7B] [--replicate K] [--max-replicas R] [--out path.json]\n\
            info"
     );
 }
@@ -91,6 +97,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let rt = Runtime::new(smile::runtime::default_artifacts_dir())?;
     let mut tr = Trainer::new(&rt, &config, seed)?;
+    if args.bool("rebalance", false) {
+        tr.enable_rebalancing(RebalancePolicy::default());
+    }
     let (k, a, b, s) = tr.batch_dims();
     println!(
         "config {config}: {} params, batch [K={k} A={a} B={b} S={s}], target {steps} steps",
@@ -154,6 +163,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         summary.first_loss, summary.final_loss, summary.final_ppl, summary.samples_per_sec
     );
     println!("log: {log_path}");
+    if let Some(rb) = &tr.rebalancer {
+        println!(
+            "placement rebalances: {} (node imbalance now {:.2})",
+            rb.rebalances,
+            smile::util::stats::imbalance(&rb.current.node_loads(&rb.tracker.fractions()))
+        );
+    }
     Ok(())
 }
 
@@ -255,6 +271,92 @@ fn cmd_layer(args: &Args) -> Result<()> {
     }
     println!("single MoE layer forward, {} nodes (paper Table 3):", nodes);
     table.print();
+    Ok(())
+}
+
+fn cmd_placement(args: &Args) -> Result<()> {
+    let nodes = args.usize("nodes", 16);
+    let spec = ClusterSpec::p4d(nodes);
+    let dims = dims_of(&args.str("model", "3.7B"))?;
+    let skew = args.f64("skew", 1.2);
+    let num_experts = spec.num_gpus();
+    let mut policy = RebalancePolicy::default();
+    policy.top_k_replicate = args.usize("replicate", policy.top_k_replicate);
+    policy.max_replicas = args.usize("max-replicas", policy.max_replicas);
+
+    let frac = placement::zipf_fractions(num_experts, skew);
+    let payload = simtrain::layer_model::hop_payload(&dims);
+    let block = PlacementMap::block(&spec, num_experts);
+    let planned = placement::plan_placement(&frac, &spec, payload, &policy);
+    let cost_block = placement::price_placement(&block, &frac, &spec, payload);
+    let cost_planned = placement::price_placement(&planned, &frac, &spec, payload);
+
+    println!(
+        "placement report: {} experts on {} nodes x {} GPUs, Zipf({skew}) routing\n",
+        num_experts, spec.n_nodes, spec.gpus_per_node
+    );
+    let mut table = Table::new(&["node", "static_load", "placed_load", "replica_copies"]);
+    let per_gpu = planned.replicas_per_gpu();
+    for node in 0..spec.n_nodes {
+        let copies: usize = (0..spec.gpus_per_node)
+            .map(|l| per_gpu[spec.gpu_id(node, l)])
+            .sum();
+        table.row(&[
+            node.to_string(),
+            format!("{:.4}", cost_block.node_loads[node]),
+            format!("{:.4}", cost_planned.node_loads[node]),
+            copies.to_string(),
+        ]);
+    }
+    table.print();
+
+    println!("\nreplica sets (experts with > 1 copy):");
+    let mut replicated = 0;
+    for e in 0..planned.num_experts() {
+        if planned.gpus_of(e).len() > 1 {
+            replicated += 1;
+            let ws: Vec<String> =
+                planned.weights_of(e).iter().map(|w| format!("{w:.2}")).collect();
+            println!(
+                "  expert {e:>3} (frac {:.3}): gpus {:?} weights [{}]",
+                frac[e],
+                planned.gpus_of(e),
+                ws.join(", ")
+            );
+        }
+    }
+    if replicated == 0 {
+        println!("  (none — load below replication threshold)");
+    }
+
+    let scaling = Scaling::Strong { global_batch: args.usize("batch", 16384) };
+    let bd_block = simtrain::placed_step_time(&dims, &spec, &block, &frac, scaling);
+    let bd_planned = simtrain::placed_step_time(&dims, &spec, &planned, &frac, scaling);
+    println!(
+        "\npredicted step time ({}): static {:.3} s -> placed {:.3} s ({:.2}x throughput)",
+        dims.name,
+        bd_block.total(),
+        bd_planned.total(),
+        bd_block.total() / bd_planned.total()
+    );
+    println!(
+        "hop comm: static {:.1} ms -> placed {:.1} ms; straggler scale {:.1} -> {:.1}",
+        cost_block.comm_total() * 1e3,
+        cost_planned.comm_total() * 1e3,
+        cost_block.compute_scale,
+        cost_planned.compute_scale
+    );
+
+    // persist + round-trip the placement through util::json
+    let out = args.str("out", "reports/placement.json");
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(&out, planned.to_json().to_string_pretty())?;
+    let parsed = Json::parse(&std::fs::read_to_string(&out)?)?;
+    let back = PlacementMap::from_json(&parsed).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(back == planned, "placement JSON round-trip mismatch");
+    println!("\nplacement map: {out} (JSON round-trip ok)");
     Ok(())
 }
 

@@ -21,19 +21,29 @@ pub struct Top1 {
 }
 
 /// argmax + max over each row of a [T, E] probability matrix.
+///
+/// Ties break to the FIRST maximal index (strict `>` never displaces
+/// an earlier winner), matching the L2 argmax.  NaN gates are skipped
+/// entirely; a row that is all-NaN falls back to expert 0 with gate
+/// 0.0 so downstream plans stay well-formed instead of silently
+/// routing on a NaN comparison.
 pub fn top1_rows(probs: &[f32], e: usize) -> Vec<Top1> {
     assert!(e > 0 && probs.len() % e == 0, "probs not [T,{e}]");
     probs
         .chunks_exact(e)
         .map(|row| {
-            let (mut best, mut gate) = (0usize, row[0]);
-            for (i, &p) in row.iter().enumerate().skip(1) {
-                if p > gate {
-                    best = i;
-                    gate = p;
+            let mut best: Option<(usize, f32)> = None;
+            for (i, &p) in row.iter().enumerate() {
+                if p.is_nan() {
+                    continue;
+                }
+                match best {
+                    Some((_, gate)) if p <= gate => {}
+                    _ => best = Some((i, p)),
                 }
             }
-            Top1 { expert: best, gate }
+            let (expert, gate) = best.unwrap_or((0, 0.0));
+            Top1 { expert, gate }
         })
         .collect()
 }
@@ -171,6 +181,73 @@ impl BiLevelPlan {
     }
 }
 
+/// A placement-aware plan: the flat expert plan plus the *replica GPU*
+/// each kept token actually travels to, resolved through a
+/// `PlacementMap` (expert -> {replica GPUs}) instead of the fixed
+/// expert == GPU identity of Eq. 3.  Replicated experts split their
+/// traffic gate-proportionally: token t goes to the replica with the
+/// lowest dispatched/weight ratio, a deterministic round-robin that
+/// realizes the map's split weights exactly in the long run.
+#[derive(Debug, Clone)]
+pub struct PlacedPlan {
+    pub flat: DispatchPlan,
+    /// Destination GPU per token (None = dropped).
+    pub gpu_of_token: Vec<Option<usize>>,
+    pub gpu_counts: Vec<usize>,
+    pub node_counts: Vec<usize>,
+}
+
+impl PlacedPlan {
+    pub fn build(
+        choices: &[Top1],
+        map: &crate::placement::PlacementMap,
+        spec: &ClusterSpec,
+        capacity: usize,
+    ) -> PlacedPlan {
+        assert_eq!(map.num_gpus(), spec.num_gpus(), "placement/spec shape mismatch");
+        let flat = DispatchPlan::build(choices, map.num_experts(), capacity);
+        let mut sent: Vec<Vec<usize>> =
+            (0..map.num_experts()).map(|e| vec![0usize; map.gpus_of(e).len()]).collect();
+        let mut gpu_counts = vec![0usize; spec.num_gpus()];
+        let mut node_counts = vec![0usize; spec.n_nodes];
+        let gpu_of_token = flat
+            .assignment
+            .iter()
+            .map(|a| match a {
+                Assignment::Slot(e, _) => {
+                    let ws = map.weights_of(*e);
+                    let mut best = 0usize;
+                    let mut best_score = f64::INFINITY;
+                    for (r, &w) in ws.iter().enumerate() {
+                        if w <= 0.0 {
+                            continue;
+                        }
+                        let score = (sent[*e][r] + 1) as f64 / w;
+                        if score < best_score {
+                            best_score = score;
+                            best = r;
+                        }
+                    }
+                    sent[*e][best] += 1;
+                    let g = map.gpus_of(*e)[best];
+                    gpu_counts[g] += 1;
+                    node_counts[spec.node_of(g)] += 1;
+                    Some(g)
+                }
+                Assignment::Dropped => None,
+            })
+            .collect();
+        PlacedPlan { flat, gpu_of_token, gpu_counts, node_counts }
+    }
+
+    /// Fraction of all tokens landing on each node (cf.
+    /// `BiLevelPlan::node_fractions`, but through the indirection).
+    pub fn node_fractions(&self) -> Vec<f64> {
+        let t = self.flat.num_tokens().max(1) as f64;
+        self.node_counts.iter().map(|&c| c as f64 / t).collect()
+    }
+}
+
 /// Byte accounting for the All2All payloads (per GPU, per hop).
 /// Dispatch buffers are capacity-padded (`cap_factor * T` token slots
 /// of `hidden * dtype_bytes` each) exactly as in Switch/GShard.
@@ -240,6 +317,33 @@ mod tests {
         let t = top1_rows(&probs, 3);
         assert_eq!(t[0], Top1 { expert: 1, gate: 0.7 });
         assert_eq!(t[1], Top1 { expert: 0, gate: 0.5 });
+    }
+
+    #[test]
+    fn top1_rows_ties_break_to_first_index() {
+        let probs = [0.4f32, 0.4, 0.2, 0.3, 0.3, 0.3];
+        let t = top1_rows(&probs, 3);
+        assert_eq!(t[0], Top1 { expert: 0, gate: 0.4 });
+        assert_eq!(t[1], Top1 { expert: 0, gate: 0.3 });
+    }
+
+    #[test]
+    fn top1_rows_skips_nan_gates() {
+        let nan = f32::NAN;
+        // NaN in the lead position must not shadow a real maximum
+        let t = top1_rows(&[nan, 0.2, 0.7, 0.1, nan, 0.6], 3);
+        assert_eq!(t[0], Top1 { expert: 2, gate: 0.7 });
+        assert_eq!(t[1], Top1 { expert: 2, gate: 0.6 });
+    }
+
+    #[test]
+    fn top1_rows_all_nan_falls_back_to_expert_zero() {
+        let nan = f32::NAN;
+        let t = top1_rows(&[nan, nan, nan, 0.1, 0.9, 0.0], 3);
+        assert_eq!(t[0], Top1 { expert: 0, gate: 0.0 });
+        assert_eq!(t[1], Top1 { expert: 1, gate: 0.9 });
+        // the fallback gate is finite, so downstream gate math stays sane
+        assert!(t.iter().all(|c| c.gate.is_finite()));
     }
 
     #[test]
@@ -316,6 +420,38 @@ mod tests {
         let iu = routing_stats(&DispatchPlan::build(&uniform, 8, 2000)).imbalance;
         let is = routing_stats(&DispatchPlan::build(&skewed, 8, 2000)).imbalance;
         assert!(is > iu, "skewed {is} <= uniform {iu}");
+    }
+
+    #[test]
+    fn placed_plan_with_block_map_is_identity() {
+        let spec = ClusterSpec::test(2, 4);
+        let map = crate::placement::PlacementMap::block(&spec, 8);
+        let mut rng = Rng::new(13);
+        let choices = synthetic_choices(&mut rng, 100, 8, 0.5);
+        let plan = PlacedPlan::build(&choices, &map, &spec, 100);
+        for (t, g) in plan.gpu_of_token.iter().enumerate() {
+            match plan.flat.assignment[t] {
+                Assignment::Slot(e, _) => assert_eq!(*g, Some(e)),
+                Assignment::Dropped => assert_eq!(*g, None),
+            }
+        }
+        assert_eq!(plan.gpu_counts.iter().sum::<usize>(), 100 - plan.flat.dropped());
+        let f = plan.node_fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn placed_plan_splits_replica_traffic_by_weight() {
+        let spec = ClusterSpec::test(2, 1);
+        let mut map = crate::placement::PlacementMap::block(&spec, 2);
+        map.replicas[0] = vec![0, 1]; // replicate expert 0 on both nodes
+        map.weights[0] = vec![0.75, 0.25];
+        map.validate(&spec).unwrap();
+        let choices: Vec<Top1> =
+            (0..100).map(|_| Top1 { expert: 0, gate: 1.0 }).collect();
+        let plan = PlacedPlan::build(&choices, &map, &spec, 100);
+        assert_eq!(plan.gpu_counts, vec![75, 25]);
+        assert_eq!(plan.node_counts, vec![75, 25]);
     }
 
     #[test]

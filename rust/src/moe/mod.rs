@@ -5,5 +5,5 @@ pub mod dispatch;
 
 pub use dispatch::{
     a2a_payload_bytes, routing_stats, top1_rows, Assignment, BiLevelPlan, DispatchPlan,
-    RoutingStats, Top1,
+    PlacedPlan, RoutingStats, Top1,
 };

@@ -51,14 +51,18 @@ impl CollectiveCost {
     }
 }
 
-fn inter_congestion(spec: &ClusterSpec, flows_per_nic: usize, fabric_flows: usize) -> f64 {
+/// NIC congestion multiplier (sqrt multiplexing + saturating fabric
+/// term).  Public so `placement` can price skew-aware candidate
+/// placements with the same model the collectives use.
+pub fn inter_congestion(spec: &ClusterSpec, flows_per_nic: usize, fabric_flows: usize) -> f64 {
     let f = fabric_flows as f64;
     let fh2 = spec.fabric_half_flows * spec.fabric_half_flows;
     1.0 + spec.gamma_inter * (flows_per_nic as f64).sqrt()
         + spec.delta_max * f * f / (fh2 + f * f)
 }
 
-fn intra_congestion(spec: &ClusterSpec, flows_per_switch: usize) -> f64 {
+/// NVSwitch congestion multiplier (same sqrt form, no fabric term).
+pub fn intra_congestion(spec: &ClusterSpec, flows_per_switch: usize) -> f64 {
     1.0 + spec.gamma_intra * (flows_per_switch as f64).sqrt()
 }
 

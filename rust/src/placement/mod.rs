@@ -1,0 +1,29 @@
+//! Congestion-aware expert placement (system S7): decides *where
+//! experts live* so the bi-level routing of §3.2 keeps its win under
+//! skewed (hot-expert) traffic.
+//!
+//! - [`stats`]: EWMA `LoadTracker` over per-expert dispatch histograms
+//!   + the Zipf skew generator for sweeps.
+//! - [`solver`]: the `PlacementMap` (expert -> {replica GPUs} with
+//!   traffic-split weights), a topology-aware LPT packer, and a swap
+//!   refinement pass — candidates are priced through the
+//!   `netsim::collectives` congestion model.
+//! - [`replicate`]: hot-expert replication across nodes with
+//!   water-filled, gate-proportional traffic splitting.
+//! - [`rebalance`]: the `RebalancePolicy` (threshold + hysteresis +
+//!   migration-cost amortization) the trainer / simtrain step loop
+//!   consults every N steps, and the stateful `Rebalancer`.
+//!
+//! `moe::dispatch::PlacedPlan` consumes the map when building plans;
+//! `simtrain::step_model::placed_step_time` prices whole training
+//! steps under a placement; `smile placement` is the CLI surface.
+
+pub mod rebalance;
+pub mod replicate;
+pub mod solver;
+pub mod stats;
+
+pub use rebalance::{plan_placement, RebalanceDecision, RebalancePolicy, Rebalancer};
+pub use replicate::{refit_weights, replicate_hottest, water_fill};
+pub use solver::{price_placement, refine, solve_lpt, PlacementCost, PlacementMap};
+pub use stats::{zipf_fractions, LoadTracker};

@@ -1,0 +1,330 @@
+//! Dynamic rebalancing: the policy (threshold + hysteresis +
+//! migration-cost model) that the trainer / simtrain step loop
+//! consults every N steps, and the stateful `Rebalancer` that owns the
+//! EWMA tracker and the live `PlacementMap`.
+//!
+//! A rebalance commits only when all three gates pass:
+//!   1. trigger — node-level imbalance of the *current* placement under
+//!      the tracked loads exceeds `trigger_imbalance`;
+//!   2. hysteresis — the candidate's priced hop cost improves on the
+//!      current one by at least the `hysteresis` ratio (prevents
+//!      flapping between near-equal placements);
+//!   3. amortization — the per-step gain, accumulated until the next
+//!      check, exceeds the one-off cost of migrating the moved expert
+//!      weights over the inter-node fabric.
+
+use super::replicate::{refit_weights, replicate_hottest};
+use super::solver::{price_placement, refine, solve_lpt, PlacementMap};
+use super::stats::LoadTracker;
+use crate::netsim::topology::ClusterSpec;
+
+/// Knobs of the rebalancing policy (see ROADMAP.md `## placement`).
+#[derive(Debug, Clone)]
+pub struct RebalancePolicy {
+    /// Consult cadence: `maybe_rebalance` acts only when
+    /// `step % check_every == 0` (and step > 0).
+    pub check_every: usize,
+    /// Node-level imbalance (max/mean) that arms a rebalance.
+    pub trigger_imbalance: f64,
+    /// Required ratio of current to candidate priced cost (> 1).
+    pub hysteresis: f64,
+    /// How many of the hottest experts to consider for replication.
+    pub top_k_replicate: usize,
+    /// Replica ceiling per expert (also bounded by the node count).
+    pub max_replicas: usize,
+    /// Replicate while per-replica share > threshold * uniform mean.
+    pub hot_threshold: f64,
+    /// Swap budget of the refinement pass.
+    pub max_refine_swaps: usize,
+    /// Bytes to migrate one expert's parameters to a new GPU.
+    pub expert_bytes: f64,
+    /// Dispatch hops per optimizer step (4 per MoE layer per
+    /// micro-batch) — converts the priced per-hop gain into a per-step
+    /// gain for migration amortization.  The trainer sets this from
+    /// its artifact config.
+    pub hops_per_step: f64,
+    /// EWMA coefficient of the load tracker.
+    pub ewma_alpha: f64,
+}
+
+impl Default for RebalancePolicy {
+    fn default() -> Self {
+        RebalancePolicy {
+            check_every: 50,
+            trigger_imbalance: 1.25,
+            hysteresis: 1.05,
+            top_k_replicate: 8,
+            max_replicas: 4,
+            hot_threshold: 1.5,
+            max_refine_swaps: 128,
+            // fp16 expert FFN of the 3.7B config: (2*768*3072 + 3072 + 768) * 2 B
+            expert_bytes: 9.4e6,
+            // 3.7B paper config: 4 hops x 6 MoE layers x 1 micro-step
+            hops_per_step: 24.0,
+            ewma_alpha: 0.2,
+        }
+    }
+}
+
+/// One committed rebalance, for logs and reports.
+#[derive(Debug, Clone)]
+pub struct RebalanceDecision {
+    pub step: usize,
+    pub placement: PlacementMap,
+    /// Replica copies that must be materialized on a new GPU.
+    pub migrated_replicas: usize,
+    /// Priced hop cost (s) before / after, under the tracked loads.
+    pub comm_before: f64,
+    pub comm_after: f64,
+    /// One-off migration time (s) over the inter-node fabric.
+    pub migration_secs: f64,
+}
+
+/// Build a full candidate placement from load fractions: topology-aware
+/// LPT, hot-expert replication, swap refinement, then a final
+/// water-fill weight refit.  This is the pipeline the `Rebalancer`,
+/// the placement CLI, and the simtrain sweeps all share.
+///
+/// Guarantee: the result never prices worse than the paper's static
+/// block placement — greedy + local search carries no global optimum
+/// proof, so if the pipeline ever loses to the baseline it falls back
+/// to the baseline.
+pub fn plan_placement(
+    expert_frac: &[f64],
+    spec: &ClusterSpec,
+    payload_per_gpu: f64,
+    policy: &RebalancePolicy,
+) -> PlacementMap {
+    let mut map = solve_lpt(expert_frac, spec);
+    replicate_hottest(
+        &mut map,
+        expert_frac,
+        spec,
+        policy.top_k_replicate,
+        policy.max_replicas,
+        policy.hot_threshold,
+    );
+    refine(&mut map, expert_frac, spec, payload_per_gpu, policy.max_refine_swaps);
+    refit_weights(&mut map, expert_frac);
+    let block = PlacementMap::block(spec, expert_frac.len());
+    let planned_cost = price_placement(&map, expert_frac, spec, payload_per_gpu);
+    let block_cost = price_placement(&block, expert_frac, spec, payload_per_gpu);
+    if planned_cost.comm_total() > block_cost.comm_total()
+        || planned_cost.compute_scale > block_cost.compute_scale
+    {
+        block
+    } else {
+        map
+    }
+}
+
+/// Stateful rebalancer: owns the tracker and the live placement.
+#[derive(Debug, Clone)]
+pub struct Rebalancer {
+    pub policy: RebalancePolicy,
+    pub spec: ClusterSpec,
+    /// Bytes each GPU contributes per dispatch hop (for pricing).
+    pub payload_per_gpu: f64,
+    pub tracker: LoadTracker,
+    pub current: PlacementMap,
+    /// Step of the last policy consult (whether or not it committed) —
+    /// cadence fires when a `check_every` boundary has been crossed
+    /// since, so trainers that advance `step` by more than 1 per call
+    /// still check at the configured rate.
+    pub last_consult_step: usize,
+    pub last_rebalance_step: Option<usize>,
+    pub last_decision: Option<RebalanceDecision>,
+    pub rebalances: usize,
+}
+
+impl Rebalancer {
+    /// Start from the paper's static block placement.
+    pub fn new(
+        policy: RebalancePolicy,
+        spec: ClusterSpec,
+        num_experts: usize,
+        payload_per_gpu: f64,
+    ) -> Rebalancer {
+        let tracker = LoadTracker::new(num_experts, policy.ewma_alpha);
+        let current = PlacementMap::block(&spec, num_experts);
+        Rebalancer {
+            policy,
+            spec,
+            payload_per_gpu,
+            tracker,
+            current,
+            last_consult_step: 0,
+            last_rebalance_step: None,
+            last_decision: None,
+            rebalances: 0,
+        }
+    }
+
+    /// Fold one step's per-expert load histogram into the tracker.
+    pub fn observe(&mut self, loads: &[f64]) {
+        self.tracker.observe(loads);
+    }
+
+    /// Observe the trainer's f32 routing-fraction metric.
+    pub fn observe_f32(&mut self, loads: &[f32]) {
+        self.tracker.observe_f32(loads);
+    }
+
+    /// Candidate placement from the tracked loads (does not commit).
+    pub fn build_candidate(&self) -> PlacementMap {
+        plan_placement(&self.tracker.fractions(), &self.spec, self.payload_per_gpu, &self.policy)
+    }
+
+    /// Consult the policy at `step`; commit and return the decision if
+    /// all three gates (trigger, hysteresis, amortization) pass.
+    pub fn maybe_rebalance(&mut self, step: usize) -> Option<RebalanceDecision> {
+        let p = &self.policy;
+        if p.check_every == 0 || step / p.check_every == self.last_consult_step / p.check_every
+        {
+            return None;
+        }
+        self.last_consult_step = step;
+        let frac = self.tracker.fractions();
+        let node_imbalance =
+            crate::util::stats::imbalance(&self.current.node_loads(&frac));
+        if node_imbalance < p.trigger_imbalance {
+            return None;
+        }
+        let before =
+            price_placement(&self.current, &frac, &self.spec, self.payload_per_gpu);
+        let candidate = self.build_candidate();
+        let after =
+            price_placement(&candidate, &frac, &self.spec, self.payload_per_gpu);
+        if before.comm_total() < after.comm_total() * p.hysteresis {
+            return None;
+        }
+        let migrated = candidate
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(e, gs)| {
+                gs.iter().filter(|&g| !self.current.replicas[e].contains(g)).count()
+            })
+            .sum::<usize>();
+        let migration_secs = migrated as f64 * p.expert_bytes / self.spec.inter_bw;
+        // comm_total prices ONE dispatch hop; a step executes
+        // hops_per_step of them, and the gain accrues until the next
+        // policy consult
+        let gain_per_step = (before.comm_total() - after.comm_total()) * p.hops_per_step;
+        if gain_per_step * p.check_every as f64 <= migration_secs {
+            return None;
+        }
+        let decision = RebalanceDecision {
+            step,
+            placement: candidate.clone(),
+            migrated_replicas: migrated,
+            comm_before: before.comm_total(),
+            comm_after: after.comm_total(),
+            migration_secs,
+        };
+        self.current = candidate;
+        self.last_rebalance_step = Some(step);
+        self.last_decision = Some(decision.clone());
+        self.rebalances += 1;
+        Some(decision)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::stats::zipf_fractions;
+
+    fn skewed_rebalancer() -> Rebalancer {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut rb = Rebalancer::new(RebalancePolicy::default(), spec, e, 1e6);
+        let frac = zipf_fractions(e, 1.2);
+        for _ in 0..32 {
+            rb.observe(&frac);
+        }
+        rb
+    }
+
+    #[test]
+    fn no_rebalance_off_cadence_or_at_step_zero() {
+        let mut rb = skewed_rebalancer();
+        assert!(rb.maybe_rebalance(0).is_none());
+        assert!(rb.maybe_rebalance(7).is_none());
+        assert_eq!(rb.rebalances, 0);
+    }
+
+    #[test]
+    fn cadence_fires_on_boundary_crossings_with_coarse_steps() {
+        // trainers advance step by steps_per_call > 1; the check must
+        // fire when a check_every boundary is crossed, not only when
+        // step lands exactly on a multiple
+        let mut rb = skewed_rebalancer();
+        for step in (3..=48).step_by(3) {
+            assert!(rb.maybe_rebalance(step).is_none(), "fired early at {step}");
+        }
+        // 48 -> 51 crosses the 50 boundary
+        assert!(rb.maybe_rebalance(51).is_some(), "missed the 50-boundary crossing");
+        // and does not fire again until the next boundary
+        assert!(rb.maybe_rebalance(54).is_none());
+    }
+
+    #[test]
+    fn uniform_load_never_triggers() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut rb = Rebalancer::new(RebalancePolicy::default(), spec, e, 1e6);
+        let frac = zipf_fractions(e, 0.0);
+        for _ in 0..32 {
+            rb.observe(&frac);
+        }
+        assert!(rb.maybe_rebalance(50).is_none());
+        assert_eq!(rb.current, PlacementMap::block(&rb.spec, e));
+    }
+
+    #[test]
+    fn skew_triggers_and_commits_an_improvement() {
+        let mut rb = skewed_rebalancer();
+        let d = rb.maybe_rebalance(50).expect("skew must trigger a rebalance");
+        assert!(d.comm_after < d.comm_before, "{d:?}");
+        assert!(d.migrated_replicas > 0);
+        assert!(d.migration_secs > 0.0);
+        assert_eq!(rb.rebalances, 1);
+        assert_eq!(rb.last_rebalance_step, Some(50));
+        assert!(rb.current.validate(&rb.spec).is_ok());
+        assert!(rb.current != PlacementMap::block(&rb.spec, rb.tracker.num_experts()));
+    }
+
+    #[test]
+    fn hysteresis_prevents_flapping() {
+        let mut rb = skewed_rebalancer();
+        assert!(rb.maybe_rebalance(50).is_some());
+        // same load picture at the next check: the candidate equals the
+        // current placement, so no second rebalance commits
+        assert!(rb.maybe_rebalance(100).is_none());
+        assert_eq!(rb.rebalances, 1);
+    }
+
+    #[test]
+    fn migration_cost_blocks_marginal_wins() {
+        let mut rb = skewed_rebalancer();
+        // absurdly expensive experts: migration can never amortize
+        rb.policy.expert_bytes = 1e18;
+        assert!(rb.maybe_rebalance(50).is_none());
+        assert_eq!(rb.rebalances, 0);
+    }
+
+    #[test]
+    fn plan_placement_beats_block_under_skew() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let frac = zipf_fractions(e, 1.2);
+        let policy = RebalancePolicy::default();
+        let planned = plan_placement(&frac, &spec, 1e6, &policy);
+        let block = PlacementMap::block(&spec, e);
+        let cb = price_placement(&block, &frac, &spec, 1e6).comm_total();
+        let cp = price_placement(&planned, &frac, &spec, 1e6).comm_total();
+        assert!(cp < cb, "planned {cp} >= block {cb}");
+        assert!(planned.validate(&spec).is_ok());
+    }
+}

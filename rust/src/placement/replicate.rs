@@ -1,0 +1,214 @@
+//! Hot-expert replication: clone the hottest experts onto spare slots
+//! of *other nodes* and split their traffic gate-proportionally across
+//! the replicas.  The split weights come from a water-filling fit that
+//! levels the destination GPUs' total load — the dispatcher then sends
+//! each replica the matching fraction of the expert's gate-weighted
+//! tokens (`moe::dispatch::PlacedPlan` realizes the split
+//! deterministically, token by token).
+
+use super::solver::PlacementMap;
+use crate::netsim::topology::ClusterSpec;
+
+/// Water-filling weight fit: given each replica GPU's base load
+/// (everything *except* this expert) and the expert's own load, return
+/// non-negative weights summing to 1 that level the resulting totals.
+/// Replicas whose base load already exceeds the water level get weight
+/// 0; with equal bases the split is even.
+pub fn water_fill(base_loads: &[f64], expert_load: f64) -> Vec<f64> {
+    let r = base_loads.len();
+    assert!(r > 0, "water_fill needs at least one replica");
+    if !(expert_load > 1e-12) {
+        return vec![1.0 / r as f64; r];
+    }
+    let mut order: Vec<usize> = (0..r).collect();
+    order.sort_by(|&a, &b| base_loads[a].total_cmp(&base_loads[b]));
+    let mut prefix = 0.0;
+    let mut level = 0.0;
+    for (k, &idx) in order.iter().enumerate() {
+        prefix += base_loads[idx];
+        level = (expert_load + prefix) / (k + 1) as f64;
+        if k + 1 == r || level <= base_loads[order[k + 1]] {
+            break;
+        }
+    }
+    let mut w: Vec<f64> = base_loads
+        .iter()
+        .map(|&b| (level - b).max(0.0) / expert_load)
+        .collect();
+    let total: f64 = w.iter().sum();
+    for x in &mut w {
+        *x /= total;
+    }
+    w
+}
+
+/// Water-fill one expert's split from the current load picture.
+/// Tolerates a replica just pushed without a weight yet (its current
+/// contribution is 0 — `gpu_loads` zips replicas with weights and so
+/// already ignores the weightless tail).
+fn refit_expert(map: &mut PlacementMap, expert_frac: &[f64], e: usize) {
+    let gpu = map.gpu_loads(expert_frac);
+    let bases: Vec<f64> = map.replicas[e]
+        .iter()
+        .enumerate()
+        .map(|(r, &g)| {
+            let own = map.weights[e].get(r).map_or(0.0, |&w| expert_frac[e] * w);
+            gpu[g] - own
+        })
+        .collect();
+    map.weights[e] = water_fill(&bases, expert_frac[e]);
+}
+
+/// Recompute the traffic-split weights of every replicated expert from
+/// the current load picture (call after any structural change).
+pub fn refit_weights(map: &mut PlacementMap, expert_frac: &[f64]) {
+    for e in 0..map.num_experts() {
+        if map.replicas[e].len() > 1 {
+            refit_expert(map, expert_frac, e);
+        }
+    }
+}
+
+/// Replicate the `top_k` hottest experts across nodes: while an
+/// expert's per-replica share still exceeds `hot_threshold` times the
+/// uniform per-GPU mean, add a replica on the least-loaded GPU of a
+/// node that does not yet host one (up to `max_replicas`, bounded by
+/// the node count and one spare replica slot per GPU beyond the
+/// primary budget).  Under uniform routing nothing crosses the
+/// threshold and the map is left untouched.
+pub fn replicate_hottest(
+    map: &mut PlacementMap,
+    expert_frac: &[f64],
+    spec: &ClusterSpec,
+    top_k: usize,
+    max_replicas: usize,
+    hot_threshold: f64,
+) {
+    assert_eq!(expert_frac.len(), map.num_experts(), "fraction arity mismatch");
+    let g_total = spec.num_gpus();
+    let slot_cap = map.slots_per_gpu() + 1;
+    let mut order: Vec<usize> = (0..map.num_experts()).collect();
+    order.sort_by(|&a, &b| expert_frac[b].total_cmp(&expert_frac[a]));
+    let frac_total: f64 = expert_frac.iter().sum();
+    let mean_gpu = if frac_total > 0.0 { frac_total / g_total as f64 } else { 0.0 };
+
+    for &e in order.iter().take(top_k) {
+        while map.replicas[e].len() < max_replicas.min(spec.n_nodes) {
+            let share = expert_frac[e] / map.replicas[e].len() as f64;
+            if share <= hot_threshold * mean_gpu {
+                break;
+            }
+            let gpu = map.gpu_loads(expert_frac);
+            let counts = map.replicas_per_gpu();
+            let used_nodes: Vec<usize> =
+                map.replicas[e].iter().map(|&g| map.node_of(g)).collect();
+            let mut best: Option<(f64, usize)> = None;
+            for g in 0..g_total {
+                if counts[g] >= slot_cap || used_nodes.contains(&spec.node_of(g)) {
+                    continue;
+                }
+                let cand = (gpu[g], g);
+                if best.map_or(true, |b| cand < b) {
+                    best = Some(cand);
+                }
+            }
+            let g = match best {
+                Some((_, g)) => g,
+                None => break,
+            };
+            map.replicas[e].push(g);
+            refit_expert(map, expert_frac, e);
+        }
+    }
+    // later experts' replicas change earlier experts' base loads —
+    // one final cross-expert refit settles the splits
+    refit_weights(map, expert_frac);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::solver::solve_lpt;
+    use crate::placement::stats::zipf_fractions;
+
+    #[test]
+    fn water_fill_even_on_equal_bases() {
+        let w = water_fill(&[0.1, 0.1, 0.1], 0.3);
+        for x in &w {
+            assert!((x - 1.0 / 3.0).abs() < 1e-12, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn water_fill_avoids_loaded_replica() {
+        // one replica is already busy: it should get the smaller share
+        let w = water_fill(&[0.3, 0.0], 0.2);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w[1] > w[0], "{w:?}");
+        // levels: 0.3 > (0.2 + 0.0) -> all load to the idle replica
+        assert_eq!(w[0], 0.0);
+        assert_eq!(w[1], 1.0);
+    }
+
+    #[test]
+    fn water_fill_partial_level() {
+        // bases 0.1 / 0.0 with load 0.3: level = 0.2, shares 0.1 / 0.2
+        let w = water_fill(&[0.1, 0.0], 0.3);
+        assert!((w[0] - 1.0 / 3.0).abs() < 1e-9, "{w:?}");
+        assert!((w[1] - 2.0 / 3.0).abs() < 1e-9, "{w:?}");
+    }
+
+    #[test]
+    fn water_fill_zero_load_is_even() {
+        let w = water_fill(&[0.5, 0.1], 0.0);
+        assert_eq!(w, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn replicates_hot_expert_across_distinct_nodes() {
+        let spec = ClusterSpec::test(4, 2);
+        let e = spec.num_gpus();
+        let frac = zipf_fractions(e, 1.5);
+        let mut map = solve_lpt(&frac, &spec);
+        replicate_hottest(&mut map, &frac, &spec, 4, 4, 1.5);
+        assert!(map.validate(&spec).is_ok());
+        assert!(map.gpus_of(0).len() > 1, "hottest expert not replicated");
+        // replication must reduce the straggler GPU load
+        let single = solve_lpt(&frac, &spec);
+        let max_before = single.gpu_loads(&frac).into_iter().fold(0.0, f64::max);
+        let max_after = map.gpu_loads(&frac).into_iter().fold(0.0, f64::max);
+        assert!(max_after < max_before, "{max_after} >= {max_before}");
+    }
+
+    #[test]
+    fn uniform_routing_gets_no_replicas() {
+        let spec = ClusterSpec::test(4, 2);
+        let e = spec.num_gpus();
+        let frac = zipf_fractions(e, 0.0);
+        let mut map = solve_lpt(&frac, &spec);
+        let before = map.clone();
+        replicate_hottest(&mut map, &frac, &spec, 8, 4, 1.5);
+        assert_eq!(map, before, "uniform load must not trigger replication");
+    }
+
+    #[test]
+    fn single_node_cannot_replicate() {
+        let spec = ClusterSpec::test(1, 4);
+        let frac = zipf_fractions(4, 2.0);
+        let mut map = solve_lpt(&frac, &spec);
+        replicate_hottest(&mut map, &frac, &spec, 4, 4, 0.5);
+        assert!(map.replicas.iter().all(|r| r.len() == 1));
+        assert!(map.validate(&spec).is_ok());
+    }
+
+    #[test]
+    fn respects_max_replicas() {
+        let spec = ClusterSpec::test(8, 1);
+        let mut frac = vec![0.01; 8];
+        frac[0] = 0.93;
+        let mut map = solve_lpt(&frac, &spec);
+        replicate_hottest(&mut map, &frac, &spec, 1, 3, 1.0);
+        assert_eq!(map.gpus_of(0).len(), 3);
+        assert!(map.validate(&spec).is_ok());
+    }
+}

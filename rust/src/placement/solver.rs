@@ -1,0 +1,544 @@
+//! Expert -> GPU placement: the `PlacementMap` indirection (expert ->
+//! {replica GPUs} with traffic-split weights), a topology-aware greedy
+//! LPT packer, and a swap-refinement pass — all priced through the
+//! `netsim::collectives` congestion model so a candidate placement is
+//! judged by the *simulated wire time* of its bottleneck NIC/NVSwitch,
+//! not just by token counts.
+
+use crate::netsim::collectives::{inter_congestion, intra_congestion};
+use crate::netsim::topology::{ClusterSpec, GpuId};
+use crate::obj;
+use crate::util::json::Json;
+
+/// Where experts live: `replicas[e]` is the set of GPUs hosting a copy
+/// of expert `e` (at least one, on distinct nodes), and `weights[e][r]`
+/// is the fraction of expert `e`'s gate-weighted traffic dispatched to
+/// `replicas[e][r]` (weights are non-negative and sum to 1).
+///
+/// The paper's fixed assignment is the special case
+/// [`PlacementMap::block`]: expert e on GPU e, one replica, weight 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementMap {
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    pub replicas: Vec<Vec<GpuId>>,
+    pub weights: Vec<Vec<f64>>,
+}
+
+impl PlacementMap {
+    /// The paper's static placement: expert e lives on GPU e (mod G).
+    pub fn block(spec: &ClusterSpec, num_experts: usize) -> PlacementMap {
+        let g = spec.num_gpus();
+        PlacementMap {
+            n_nodes: spec.n_nodes,
+            gpus_per_node: spec.gpus_per_node,
+            replicas: (0..num_experts).map(|e| vec![e % g]).collect(),
+            weights: vec![vec![1.0]; num_experts],
+        }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, gpu: GpuId) -> usize {
+        gpu / self.gpus_per_node
+    }
+
+    pub fn gpus_of(&self, expert: usize) -> &[GpuId] {
+        &self.replicas[expert]
+    }
+
+    pub fn weights_of(&self, expert: usize) -> &[f64] {
+        &self.weights[expert]
+    }
+
+    /// The highest-weight replica (the expert's "home" GPU).
+    pub fn primary(&self, expert: usize) -> GpuId {
+        let ws = &self.weights[expert];
+        let mut best = 0;
+        for r in 1..ws.len() {
+            if ws[r] > ws[best] {
+                best = r;
+            }
+        }
+        self.replicas[expert][best]
+    }
+
+    /// Memory budget unit: primary replicas a GPU must be able to host.
+    pub fn slots_per_gpu(&self) -> usize {
+        let g = self.num_gpus();
+        (self.num_experts() + g - 1) / g
+    }
+
+    /// How many expert copies each GPU currently hosts.
+    pub fn replicas_per_gpu(&self) -> Vec<usize> {
+        let mut count = vec![0usize; self.num_gpus()];
+        for gs in &self.replicas {
+            for &g in gs {
+                count[g] += 1;
+            }
+        }
+        count
+    }
+
+    /// Per-GPU share of routed traffic under `expert_frac`, normalized
+    /// to sum 1 (replica weights split each expert's share).
+    pub fn gpu_loads(&self, expert_frac: &[f64]) -> Vec<f64> {
+        assert_eq!(expert_frac.len(), self.num_experts(), "fraction arity mismatch");
+        let mut load = vec![0.0f64; self.num_gpus()];
+        for (e, (gs, ws)) in self.replicas.iter().zip(&self.weights).enumerate() {
+            for (&g, &w) in gs.iter().zip(ws) {
+                load[g] += expert_frac[e] * w;
+            }
+        }
+        let total: f64 = load.iter().sum();
+        if total > 0.0 {
+            for l in &mut load {
+                *l /= total;
+            }
+        }
+        load
+    }
+
+    /// Per-node share of routed traffic, normalized to sum 1.
+    pub fn node_loads(&self, expert_frac: &[f64]) -> Vec<f64> {
+        let gpu = self.gpu_loads(expert_frac);
+        let mut node = vec![0.0f64; self.n_nodes];
+        for (g, l) in gpu.iter().enumerate() {
+            node[self.node_of(g)] += l;
+        }
+        node
+    }
+
+    /// Check the structural invariants: every expert has >= 1 replica,
+    /// replica GPUs are in range and on pairwise-distinct nodes, and
+    /// weights are finite, non-negative, and sum to 1 per expert.
+    pub fn validate(&self, spec: &ClusterSpec) -> Result<(), String> {
+        if self.n_nodes != spec.n_nodes || self.gpus_per_node != spec.gpus_per_node {
+            return Err(format!(
+                "shape {}x{} != spec {}x{}",
+                self.n_nodes, self.gpus_per_node, spec.n_nodes, spec.gpus_per_node
+            ));
+        }
+        if self.replicas.len() != self.weights.len() {
+            return Err("replicas/weights arity mismatch".into());
+        }
+        for (e, (gs, ws)) in self.replicas.iter().zip(&self.weights).enumerate() {
+            if gs.is_empty() {
+                return Err(format!("expert {e} has no replica"));
+            }
+            if gs.len() != ws.len() {
+                return Err(format!("expert {e}: {} gpus vs {} weights", gs.len(), ws.len()));
+            }
+            let mut nodes: Vec<usize> = gs.iter().map(|&g| self.node_of(g)).collect();
+            nodes.sort_unstable();
+            nodes.dedup();
+            if nodes.len() != gs.len() {
+                return Err(format!("expert {e}: replicas share a node ({gs:?})"));
+            }
+            if let Some(&g) = gs.iter().find(|&&g| g >= self.num_gpus()) {
+                return Err(format!("expert {e}: gpu {g} out of range"));
+            }
+            if ws.iter().any(|w| !w.is_finite() || *w < 0.0) {
+                return Err(format!("expert {e}: bad weights {ws:?}"));
+            }
+            let sum: f64 = ws.iter().sum();
+            if (sum - 1.0).abs() > 1e-6 {
+                return Err(format!("expert {e}: weights sum to {sum}"));
+            }
+        }
+        Ok(())
+    }
+
+    // -- JSON (reports + checkpoint sidecar) -----------------------------
+
+    pub fn to_json(&self) -> Json {
+        let experts: Vec<Json> = self
+            .replicas
+            .iter()
+            .zip(&self.weights)
+            .map(|(gs, ws)| obj! { "gpus" => gs.clone(), "weights" => ws.clone() })
+            .collect();
+        obj! {
+            "n_nodes" => self.n_nodes,
+            "gpus_per_node" => self.gpus_per_node,
+            "experts" => experts,
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlacementMap, String> {
+        let n_nodes =
+            v.get("n_nodes").and_then(Json::as_usize).ok_or("missing n_nodes")?;
+        let gpus_per_node = v
+            .get("gpus_per_node")
+            .and_then(Json::as_usize)
+            .ok_or("missing gpus_per_node")?;
+        let experts = v.get("experts").and_then(Json::as_arr).ok_or("missing experts")?;
+        let mut replicas = Vec::with_capacity(experts.len());
+        let mut weights = Vec::with_capacity(experts.len());
+        for (e, entry) in experts.iter().enumerate() {
+            let gs: Vec<GpuId> = entry
+                .get("gpus")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("expert {e}: missing gpus"))?
+                .iter()
+                .map(|g| g.as_usize().ok_or_else(|| format!("expert {e}: bad gpu id")))
+                .collect::<Result<_, _>>()?;
+            let ws: Vec<f64> = entry
+                .get("weights")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("expert {e}: missing weights"))?
+                .iter()
+                .map(|w| w.as_f64().ok_or_else(|| format!("expert {e}: bad weight")))
+                .collect::<Result<_, _>>()?;
+            replicas.push(gs);
+            weights.push(ws);
+        }
+        Ok(PlacementMap { n_nodes, gpus_per_node, replicas, weights })
+    }
+}
+
+/// A candidate placement priced under skewed routing.  The inter/intra
+/// times use the same congestion model as `netsim::collectives` but
+/// scale the wire term with the *bottleneck* node implied by the
+/// placement — under uniform routing they reduce exactly to
+/// `all2all_inter` / `all2all_intra`.
+#[derive(Debug, Clone)]
+pub struct PlacementCost {
+    /// One inter-node dispatch hop on the busiest NIC (s).
+    pub inter_time: f64,
+    /// One intra-node dispatch hop on the busiest NVSwitch (s).
+    pub intra_time: f64,
+    /// Hottest-GPU load relative to the uniform mean (1.0 = balanced);
+    /// the expert-compute straggler multiplier.
+    pub compute_scale: f64,
+    /// Normalized per-node traffic shares (diagnostics / reports).
+    pub node_loads: Vec<f64>,
+    pub max_gpu_load: f64,
+}
+
+impl PlacementCost {
+    /// One hop's communication time (inter + intra) — the quantity the
+    /// solver and rebalancer minimize.
+    pub fn comm_total(&self) -> f64 {
+        self.inter_time + self.intra_time
+    }
+}
+
+/// Price one dispatch hop under `map` and routed `expert_frac`.
+/// `payload_per_gpu` is the bytes each GPU contributes to the hop, as
+/// in `netsim::collectives` (tokens are assumed uniformly *sourced*
+/// across GPUs; skew is in the destinations).
+pub fn price_placement(
+    map: &PlacementMap,
+    expert_frac: &[f64],
+    spec: &ClusterSpec,
+    payload_per_gpu: f64,
+) -> PlacementCost {
+    let (n, m) = (spec.n_nodes, spec.gpus_per_node);
+    let g_total = spec.num_gpus();
+    assert!(
+        map.n_nodes == n && map.gpus_per_node == m,
+        "placement shape {}x{} != spec {}x{}",
+        map.n_nodes,
+        map.gpus_per_node,
+        n,
+        m
+    );
+    let gpu = map.gpu_loads(expert_frac);
+    let node = {
+        let mut node = vec![0.0f64; n];
+        for (g, l) in gpu.iter().enumerate() {
+            node[spec.node_of(g)] += l;
+        }
+        node
+    };
+    let max_node = node.iter().cloned().fold(0.0, f64::max);
+    let max_gpu = gpu.iter().cloned().fold(0.0, f64::max);
+
+    let inter_time = if n > 1 {
+        // busiest NIC: ingress into the hottest node vs egress out of
+        // the node that keeps the least traffic local
+        let ingress = max_node * ((n - 1) * m) as f64 * payload_per_gpu;
+        let egress = node
+            .iter()
+            .map(|&f| m as f64 * payload_per_gpu * (1.0 - f))
+            .fold(0.0, f64::max);
+        let bytes = ingress.max(egress);
+        let flows_per_nic = m * (n - 1);
+        let fabric_flows = n * flows_per_nic;
+        bytes / spec.inter_bw * inter_congestion(spec, flows_per_nic, fabric_flows)
+            + (n - 1) as f64 * spec.launch_overhead
+            + spec.inter_latency
+    } else {
+        0.0
+    };
+
+    let intra_time = if m > 1 {
+        // busiest NVSwitch: the hottest node redistributes its share of
+        // the global traffic among its m GPUs
+        let bytes =
+            max_node * (n * m) as f64 * payload_per_gpu * (m - 1) as f64 / m as f64;
+        bytes / spec.intra_bw * intra_congestion(spec, m * (m - 1))
+            + (m - 1) as f64 * spec.launch_overhead
+            + spec.intra_latency
+    } else {
+        0.0
+    };
+
+    PlacementCost {
+        inter_time,
+        intra_time,
+        compute_scale: if max_gpu > 0.0 { max_gpu * g_total as f64 } else { 1.0 },
+        node_loads: node,
+        max_gpu_load: max_gpu,
+    }
+}
+
+/// Greedy LPT packer, topology-aware: experts in decreasing load order
+/// each go to the least-loaded *node*, then the least-loaded GPU on it,
+/// subject to the `slots_per_gpu` memory budget.  With one expert per
+/// GPU (the paper's shape) this spreads the k hottest experts across k
+/// distinct nodes — plain GPU-level LPT would pack them onto node 0.
+pub fn solve_lpt(expert_frac: &[f64], spec: &ClusterSpec) -> PlacementMap {
+    let g_total = spec.num_gpus();
+    let e_total = expert_frac.len();
+    let slots = (e_total + g_total - 1) / g_total;
+    let mut order: Vec<usize> = (0..e_total).collect();
+    order.sort_by(|&a, &b| expert_frac[b].total_cmp(&expert_frac[a]));
+
+    let mut gpu_load = vec![0.0f64; g_total];
+    let mut node_load = vec![0.0f64; spec.n_nodes];
+    let mut count = vec![0usize; g_total];
+    let mut replicas: Vec<Vec<GpuId>> = vec![Vec::new(); e_total];
+    for &e in &order {
+        let mut best: Option<(f64, f64, usize)> = None;
+        for g in 0..g_total {
+            if count[g] >= slots {
+                continue;
+            }
+            let cand = (node_load[spec.node_of(g)], gpu_load[g], g);
+            if best.map_or(true, |b| cand < b) {
+                best = Some(cand);
+            }
+        }
+        let g = best.expect("slots * gpus >= experts").2;
+        replicas[e] = vec![g];
+        gpu_load[g] += expert_frac[e];
+        node_load[spec.node_of(g)] += expert_frac[e];
+        count[g] += 1;
+    }
+    PlacementMap {
+        n_nodes: spec.n_nodes,
+        gpus_per_node: spec.gpus_per_node,
+        replicas,
+        weights: vec![vec![1.0]; e_total],
+    }
+}
+
+/// Swap-refinement: repeatedly pick the hottest and coldest nodes and
+/// apply the single-replica expert swap between them that most reduces
+/// the priced hop cost; stop when no swap strictly improves it (or
+/// after `max_swaps`).  Returns the number of swaps applied.  This is
+/// the pass that rescues placements whose per-GPU loads are balanced
+/// but whose per-*node* ingress is not.
+pub fn refine(
+    map: &mut PlacementMap,
+    expert_frac: &[f64],
+    spec: &ClusterSpec,
+    payload_per_gpu: f64,
+    max_swaps: usize,
+) -> usize {
+    let mut cur = price_placement(map, expert_frac, spec, payload_per_gpu).comm_total();
+    let mut applied = 0;
+    for _ in 0..max_swaps {
+        let node = map.node_loads(expert_frac);
+        let (mut hot, mut cold) = (0usize, 0usize);
+        for (i, &l) in node.iter().enumerate() {
+            if l > node[hot] {
+                hot = i;
+            }
+            if l < node[cold] {
+                cold = i;
+            }
+        }
+        if hot == cold {
+            break;
+        }
+        let on_node = |map: &PlacementMap, i: usize| -> Vec<usize> {
+            (0..map.num_experts())
+                .filter(|&e| {
+                    map.replicas[e].len() == 1 && map.node_of(map.replicas[e][0]) == i
+                })
+                .collect()
+        };
+        let hot_experts = on_node(map, hot);
+        let cold_experts = on_node(map, cold);
+        let mut best: Option<(f64, usize, usize)> = None;
+        for &a in &hot_experts {
+            for &b in &cold_experts {
+                let (ga, gb) = (map.replicas[a][0], map.replicas[b][0]);
+                map.replicas[a][0] = gb;
+                map.replicas[b][0] = ga;
+                let cost =
+                    price_placement(map, expert_frac, spec, payload_per_gpu).comm_total();
+                map.replicas[a][0] = ga;
+                map.replicas[b][0] = gb;
+                if cost < cur * (1.0 - 1e-9) && best.map_or(true, |(c, _, _)| cost < c) {
+                    best = Some((cost, a, b));
+                }
+            }
+        }
+        match best {
+            None => break,
+            Some((cost, a, b)) => {
+                let (ga, gb) = (map.replicas[a][0], map.replicas[b][0]);
+                map.replicas[a][0] = gb;
+                map.replicas[b][0] = ga;
+                cur = cost;
+                applied += 1;
+            }
+        }
+    }
+    applied
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::collectives::{all2all_inter, all2all_intra};
+    use crate::placement::stats::zipf_fractions;
+
+    #[test]
+    fn block_is_identity_when_experts_equal_gpus() {
+        let spec = ClusterSpec::test(4, 4);
+        let map = PlacementMap::block(&spec, 16);
+        for e in 0..16 {
+            assert_eq!(map.gpus_of(e), &[e][..]);
+            assert_eq!(map.weights_of(e), &[1.0][..]);
+        }
+        assert!(map.validate(&spec).is_ok());
+        assert_eq!(map.slots_per_gpu(), 1);
+    }
+
+    #[test]
+    fn uniform_price_matches_collectives() {
+        // under uniform routing the placement-aware price must reduce
+        // exactly to the static bi-level a2a model
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let map = PlacementMap::block(&spec, e);
+        let frac = vec![1.0 / e as f64; e];
+        let payload = 1e6;
+        let c = price_placement(&map, &frac, &spec, payload);
+        let inter = all2all_inter(&spec, payload).total();
+        let intra = all2all_intra(&spec, payload).total();
+        assert!((c.inter_time - inter).abs() / inter < 1e-9, "{} vs {inter}", c.inter_time);
+        assert!((c.intra_time - intra).abs() / intra < 1e-9, "{} vs {intra}", c.intra_time);
+        assert!((c.compute_scale - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skew_raises_price() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let map = PlacementMap::block(&spec, e);
+        let uniform = price_placement(&map, &zipf_fractions(e, 0.0), &spec, 1e6);
+        let skewed = price_placement(&map, &zipf_fractions(e, 1.2), &spec, 1e6);
+        assert!(skewed.comm_total() > uniform.comm_total());
+        assert!(skewed.compute_scale > 2.0, "scale {}", skewed.compute_scale);
+    }
+
+    #[test]
+    fn lpt_spreads_hot_experts_across_nodes() {
+        let spec = ClusterSpec::test(4, 2);
+        let e = spec.num_gpus();
+        let frac = zipf_fractions(e, 1.2);
+        let map = solve_lpt(&frac, &spec);
+        assert!(map.validate(&spec).is_ok());
+        // the 4 hottest experts (0..3: zipf is rank-ordered) land on 4
+        // distinct nodes
+        let nodes: Vec<usize> = (0..4).map(|e| map.node_of(map.gpus_of(e)[0])).collect();
+        let mut uniq = nodes.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 4, "hot experts share nodes: {nodes:?}");
+        // and node-level max load beats the block placement's
+        let block_max = PlacementMap::block(&spec, e)
+            .node_loads(&frac)
+            .into_iter()
+            .fold(0.0, f64::max);
+        let lpt_max = map.node_loads(&frac).into_iter().fold(0.0, f64::max);
+        assert!(lpt_max < block_max, "lpt {lpt_max} >= block {block_max}");
+    }
+
+    #[test]
+    fn lpt_respects_slot_budget() {
+        let spec = ClusterSpec::test(2, 2);
+        let frac = zipf_fractions(10, 0.7); // 10 experts on 4 gpus -> 3 slots
+        let map = solve_lpt(&frac, &spec);
+        assert!(map.replicas_per_gpu().iter().all(|&c| c <= 3), "{:?}", map.replicas_per_gpu());
+        assert!(map.validate(&spec).is_ok());
+    }
+
+    #[test]
+    fn refine_never_hurts_and_is_noop_on_uniform() {
+        let spec = ClusterSpec::test(4, 2);
+        let e = spec.num_gpus();
+        let uniform = zipf_fractions(e, 0.0);
+        let mut map = solve_lpt(&uniform, &spec);
+        assert_eq!(refine(&mut map, &uniform, &spec, 1e6, 32), 0);
+
+        // adversarial start: block placement under rank-ordered zipf
+        let frac = zipf_fractions(e, 1.2);
+        let mut bad = PlacementMap::block(&spec, e);
+        let before = price_placement(&bad, &frac, &spec, 1e6).comm_total();
+        let swaps = refine(&mut bad, &frac, &spec, 1e6, 64);
+        let after = price_placement(&bad, &frac, &spec, 1e6).comm_total();
+        assert!(swaps > 0, "refine found nothing to fix");
+        assert!(after < before, "{after} >= {before}");
+        assert!(bad.validate(&spec).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_maps() {
+        let spec = ClusterSpec::test(2, 2);
+        let mut map = PlacementMap::block(&spec, 4);
+        map.replicas[0] = vec![];
+        map.weights[0] = vec![];
+        assert!(map.validate(&spec).is_err());
+
+        let mut map = PlacementMap::block(&spec, 4);
+        map.replicas[1] = vec![0, 1]; // gpus 0 and 1 share node 0
+        map.weights[1] = vec![0.5, 0.5];
+        assert!(map.validate(&spec).unwrap_err().contains("share a node"));
+
+        let mut map = PlacementMap::block(&spec, 4);
+        map.weights[2] = vec![0.4]; // does not sum to 1
+        assert!(map.validate(&spec).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let spec = ClusterSpec::test(3, 2);
+        let frac = zipf_fractions(6, 1.0);
+        let mut map = solve_lpt(&frac, &spec);
+        map.replicas[0] = vec![map.replicas[0][0], 5];
+        map.weights[0] = vec![0.625, 0.375];
+        let text = map.to_json().to_string_pretty();
+        let back = PlacementMap::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, map);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(PlacementMap::from_json(&Json::parse("{}").unwrap()).is_err());
+        let v = Json::parse(r#"{"n_nodes":2,"gpus_per_node":2,"experts":[{"gpus":["x"],"weights":[1]}]}"#);
+        assert!(PlacementMap::from_json(&v.unwrap()).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Per-expert load statistics: the EWMA `LoadTracker` that accumulates
+//! routing histograms from dispatch plans (or the trainer's routing
+//! metrics), plus the Zipf skew generator the placement benches and
+//! sweeps use to model hot-expert traffic.
+
+use crate::moe::dispatch::{DispatchPlan, Top1};
+
+/// Exponentially-weighted moving average of per-expert dispatch
+/// fractions.  Starts from a uniform prior (1/E per expert) so the
+/// rebalancer sees imbalance 1.0 — and stays put — until real routing
+/// data arrives.
+#[derive(Debug, Clone)]
+pub struct LoadTracker {
+    num_experts: usize,
+    /// EWMA coefficient on the newest observation (0 < alpha <= 1).
+    alpha: f64,
+    ewma: Vec<f64>,
+    steps: usize,
+}
+
+impl LoadTracker {
+    pub fn new(num_experts: usize, alpha: f64) -> LoadTracker {
+        assert!(num_experts > 0, "need at least one expert");
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha {alpha} not in (0, 1]");
+        LoadTracker {
+            num_experts,
+            alpha,
+            ewma: vec![1.0 / num_experts as f64; num_experts],
+            steps: 0,
+        }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    /// Observations folded in so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Fold one step's per-expert load histogram into the EWMA.  The
+    /// input is normalized first, so raw token counts and fractions are
+    /// both accepted; an all-zero or non-finite histogram is skipped.
+    pub fn observe(&mut self, loads: &[f64]) {
+        assert_eq!(loads.len(), self.num_experts, "histogram arity mismatch");
+        let total: f64 = loads.iter().sum();
+        if !(total > 0.0) || !total.is_finite() {
+            return;
+        }
+        for (e, &l) in self.ewma.iter_mut().zip(loads) {
+            *e = (1.0 - self.alpha) * *e + self.alpha * (l / total);
+        }
+        self.steps += 1;
+    }
+
+    /// Observe the trainer's `last_expert_frac` metric directly.
+    pub fn observe_f32(&mut self, loads: &[f32]) {
+        let as64: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
+        self.observe(&as64);
+    }
+
+    /// Observe pre-capacity routing *demand*: every token's chosen
+    /// expert counts, including tokens a capacity-bounded plan would
+    /// drop.  This is the right signal for placement — a dropped token
+    /// still crossed the wire to its expert's GPU.
+    pub fn observe_choices(&mut self, choices: &[Top1]) {
+        let mut counts = vec![0.0f64; self.num_experts];
+        for c in choices {
+            debug_assert!(c.expert < self.num_experts);
+            counts[c.expert] += 1.0;
+        }
+        self.observe(&counts);
+    }
+
+    /// Observe post-capacity loads (kept tokens only) from a plan.
+    pub fn observe_plan(&mut self, plan: &DispatchPlan) {
+        assert_eq!(plan.num_experts, self.num_experts, "plan arity mismatch");
+        let counts: Vec<f64> = plan.loads().iter().map(|&l| l as f64).collect();
+        self.observe(&counts);
+    }
+
+    /// Current normalized per-expert load fractions (sums to 1).
+    pub fn fractions(&self) -> Vec<f64> {
+        let total: f64 = self.ewma.iter().sum();
+        self.ewma.iter().map(|&e| e / total).collect()
+    }
+
+    /// The k hottest experts, hottest first, as (expert, fraction).
+    pub fn hottest(&self, k: usize) -> Vec<(usize, f64)> {
+        let frac = self.fractions();
+        let mut order: Vec<usize> = (0..self.num_experts).collect();
+        order.sort_by(|&a, &b| frac[b].total_cmp(&frac[a]));
+        order.into_iter().take(k).map(|e| (e, frac[e])).collect()
+    }
+
+    /// Expert-level imbalance of the tracked loads (max/mean, 1 = flat).
+    pub fn imbalance(&self) -> f64 {
+        crate::util::stats::imbalance(&self.fractions())
+    }
+}
+
+/// Zipf-law expert load fractions: f[e] proportional to (e+1)^-s,
+/// normalized to sum 1.  s = 0 is uniform; s = 1.2 gives the paper-ish
+/// "one hot expert owns a quarter of the traffic" regime.  Callers that
+/// want the hot experts scattered (rather than rank-ordered) shuffle
+/// the result with a seeded `Rng`.
+pub fn zipf_fractions(num_experts: usize, s: f64) -> Vec<f64> {
+    assert!(num_experts > 0);
+    let w: Vec<f64> = (0..num_experts).map(|e| ((e + 1) as f64).powf(-s)).collect();
+    let total: f64 = w.iter().sum();
+    w.into_iter().map(|x| x / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::dispatch::synthetic_choices;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tracker_starts_uniform() {
+        let t = LoadTracker::new(8, 0.3);
+        assert_eq!(t.steps(), 0);
+        assert!((t.imbalance() - 1.0).abs() < 1e-12);
+        assert!(t.fractions().iter().all(|&f| (f - 0.125).abs() < 1e-12));
+    }
+
+    #[test]
+    fn tracker_converges_to_observed() {
+        let mut t = LoadTracker::new(4, 0.5);
+        let target = [0.7, 0.1, 0.1, 0.1];
+        for _ in 0..64 {
+            t.observe(&target);
+        }
+        let f = t.fractions();
+        for (got, want) in f.iter().zip(target) {
+            assert!((got - want).abs() < 1e-6, "{f:?}");
+        }
+        assert_eq!(t.hottest(1)[0].0, 0);
+    }
+
+    #[test]
+    fn tracker_normalizes_raw_counts() {
+        let mut t = LoadTracker::new(2, 1.0);
+        t.observe(&[30.0, 10.0]);
+        let f = t.fractions();
+        assert!((f[0] - 0.75).abs() < 1e-12 && (f[1] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracker_skips_degenerate_histograms() {
+        let mut t = LoadTracker::new(2, 0.5);
+        t.observe(&[0.0, 0.0]);
+        t.observe(&[f64::NAN, 1.0]);
+        assert_eq!(t.steps(), 0);
+        assert!((t.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn choices_capture_dropped_demand() {
+        let mut rng = Rng::new(5);
+        let choices = synthetic_choices(&mut rng, 400, 8, 2.0);
+        let mut demand = LoadTracker::new(8, 1.0);
+        demand.observe_choices(&choices);
+        // tight capacity: kept loads flatten, demand does not
+        let plan = DispatchPlan::build(&choices, 8, 20);
+        let mut kept = LoadTracker::new(8, 1.0);
+        kept.observe_plan(&plan);
+        assert!(demand.imbalance() >= kept.imbalance() - 1e-9);
+    }
+
+    #[test]
+    fn zipf_shapes() {
+        let u = zipf_fractions(16, 0.0);
+        assert!(u.iter().all(|&f| (f - 1.0 / 16.0).abs() < 1e-12));
+        let z = zipf_fractions(16, 1.2);
+        assert!((z.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(z.windows(2).all(|w| w[0] > w[1]), "not decreasing: {z:?}");
+        assert!(z[0] > 0.2, "zipf(1.2) head {z:?}");
+    }
+}

@@ -18,6 +18,7 @@ use super::compute::{self, BWD_FWD_RATIO};
 use super::models::{ModelDims, Variant};
 use crate::netsim::collectives::{all2all_flat, all2all_inter, all2all_intra, allreduce};
 use crate::netsim::topology::ClusterSpec;
+use crate::placement::{plan_placement, price_placement, PlacementMap, RebalancePolicy};
 
 /// Fraction of raw a2a wire time exposed on the critical path.
 pub const EXPOSED_COMM_FRAC: f64 = 0.36;
@@ -146,6 +147,92 @@ pub fn throughput(
 ) -> f64 {
     let bd = step_time(dims, variant, spec, scaling);
     scaling.global_batch(spec, dims.micro_batch) as f64 / bd.total()
+}
+
+/// Placement-aware SMILE step time: the a2a wire terms and the expert
+/// compute scale with the *bottleneck* node/GPU implied by `map` under
+/// the routed `expert_frac` (variable-length dispatch, as production
+/// MoE engines use), instead of assuming uniform per-GPU load.  With a
+/// block placement and uniform fractions this reduces exactly to
+/// `step_time(.., Variant::Smile, ..)`.
+pub fn placed_step_time(
+    dims: &ModelDims,
+    spec: &ClusterSpec,
+    map: &PlacementMap,
+    expert_frac: &[f64],
+    scaling: Scaling,
+) -> StepBreakdown {
+    let num_micro = scaling.num_micro(spec, dims.micro_batch);
+    let fwd = compute::forward_compute_time(dims, Variant::Smile, spec);
+    let mut bd = StepBreakdown {
+        compute: num_micro as f64 * fwd * (1.0 + BWD_FWD_RATIO),
+        num_micro,
+        ..Default::default()
+    };
+
+    let payload = super::layer_model::hop_payload(dims);
+    let cost = price_placement(map, expert_frac, spec, payload);
+    let moe_layers = dims.moe_layer_count() as f64;
+    let hops = 4.0 * moe_layers * num_micro as f64;
+    bd.a2a_inter = hops * cost.inter_time * EXPOSED_COMM_FRAC;
+    bd.a2a_intra = hops * cost.intra_time * EXPOSED_COMM_FRAC;
+    bd.a2a_sync = hops
+        * (if spec.n_nodes > 1 { SYNC_PER_A2A_INTER } else { 0.0 } + SYNC_PER_A2A_INTRA);
+
+    // expert straggler: the hottest GPU computes compute_scale x the
+    // mean expert tokens; only the excess over the mean is extra time
+    let expert_fwd = dims.capacity_factor
+        * dims.tokens_per_micro() as f64
+        * compute::ffn_flops_per_token(dims, dims.ffn as f64)
+        / spec.effective_flops();
+    let straggler = (cost.compute_scale - 1.0).max(0.0);
+    bd.compute += num_micro as f64 * moe_layers * expert_fwd * (1.0 + BWD_FWD_RATIO) * straggler;
+
+    let grad_bytes = dp_gradient_bytes(dims, Variant::Smile, spec);
+    bd.allreduce = allreduce(spec, grad_bytes).total() * EXPOSED_ALLREDUCE_FRAC;
+    bd
+}
+
+/// Samples/second under a placement (cf. [`throughput`]).
+pub fn placed_throughput(
+    dims: &ModelDims,
+    spec: &ClusterSpec,
+    map: &PlacementMap,
+    expert_frac: &[f64],
+    scaling: Scaling,
+) -> f64 {
+    let bd = placed_step_time(dims, spec, map, expert_frac, scaling);
+    scaling.global_batch(spec, dims.micro_batch) as f64 / bd.total()
+}
+
+/// Placement-aware scaling sweep under Zipf(`skew`) routing: for each
+/// node count, throughput with the paper's static block placement vs
+/// the rebalanced + replicated placement from `plan_placement`.
+/// Returns (nodes, static samples/s, rebalanced samples/s).
+pub fn placed_scaling_sweep(
+    dims: &ModelDims,
+    node_counts: &[usize],
+    skew: f64,
+    policy: &RebalancePolicy,
+    scaling_of: impl Fn(usize) -> Scaling,
+) -> Vec<(usize, f64, f64)> {
+    node_counts
+        .iter()
+        .map(|&n| {
+            let spec = ClusterSpec::p4d(n);
+            let e = spec.num_gpus();
+            let frac = crate::placement::zipf_fractions(e, skew);
+            let payload = super::layer_model::hop_payload(dims);
+            let block = PlacementMap::block(&spec, e);
+            let planned = plan_placement(&frac, &spec, payload, policy);
+            let scaling = scaling_of(n);
+            (
+                n,
+                placed_throughput(dims, &spec, &block, &frac, scaling),
+                placed_throughput(dims, &spec, &planned, &frac, scaling),
+            )
+        })
+        .collect()
 }
 
 /// Scaling sweep over node counts; returns (nodes, samples/s) pairs.
@@ -291,6 +378,61 @@ mod tests {
         // below the 3.7B total
         assert!(moe < 2.0 * dense + 1e6);
         assert!(moe < 0.5e9 * d.dtype_bytes as f64);
+    }
+
+    #[test]
+    fn placed_uniform_matches_static_smile_model() {
+        // block placement + uniform routing must reproduce the static
+        // bi-level step model exactly
+        let spec = ClusterSpec::p4d(4);
+        let d = dims();
+        let e = spec.num_gpus();
+        let map = PlacementMap::block(&spec, e);
+        let frac = vec![1.0 / e as f64; e];
+        let placed = placed_step_time(&d, &spec, &map, &frac, paper_scaling());
+        let fixed = step_time(&d, Variant::Smile, &spec, paper_scaling());
+        assert!(
+            (placed.total() - fixed.total()).abs() / fixed.total() < 1e-9,
+            "placed {} vs fixed {}",
+            placed.total(),
+            fixed.total()
+        );
+    }
+
+    #[test]
+    fn placed_sweep_rebalancing_wins_under_skew_only() {
+        let d = dims();
+        let policy = crate::placement::RebalancePolicy::default();
+        // uniform routing: rebalanced placement must not regress
+        let uni = placed_scaling_sweep(&d, &[4], 0.0, &policy, |_| paper_scaling());
+        let (_, block_tp, reb_tp) = uni[0];
+        assert!(
+            (reb_tp / block_tp - 1.0).abs() <= 0.02,
+            "uniform regression: {reb_tp} vs {block_tp}"
+        );
+        // Zipf(1.2) skew on the paper testbed: >= 1.3x (acceptance bar)
+        let skew = placed_scaling_sweep(&d, &[16], 1.2, &policy, |_| paper_scaling());
+        let (_, block_tp, reb_tp) = skew[0];
+        let speedup = reb_tp / block_tp;
+        assert!(speedup >= 1.3, "rebalanced speedup {speedup:.2} < 1.3x");
+    }
+
+    #[test]
+    fn placed_skew_is_slower_than_uniform() {
+        let spec = ClusterSpec::p4d(4);
+        let d = dims();
+        let e = spec.num_gpus();
+        let map = PlacementMap::block(&spec, e);
+        let flat = crate::placement::zipf_fractions(e, 0.0);
+        let hot = crate::placement::zipf_fractions(e, 1.2);
+        let uni = placed_step_time(&d, &spec, &map, &flat, paper_scaling());
+        let skew = placed_step_time(&d, &spec, &map, &hot, paper_scaling());
+        assert!(
+            skew.total() > uni.total(),
+            "skew {} <= uniform {}",
+            skew.total(),
+            uni.total()
+        );
     }
 
     #[test]

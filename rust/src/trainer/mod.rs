@@ -14,6 +14,8 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::data::{Corpus, CorpusSpec, MlmBatch, MlmBatcher, MlmSpec};
 use crate::metrics::StepLog;
+use crate::netsim::ClusterSpec;
+use crate::placement::{RebalancePolicy, Rebalancer};
 use crate::runtime::{ArtifactConfig, Loaded, Runtime, Tensor};
 
 pub struct Trainer {
@@ -26,6 +28,9 @@ pub struct Trainer {
     /// last observed per-expert / per-node dispatch fractions
     pub last_expert_frac: Vec<f32>,
     pub last_node_frac: Vec<f32>,
+    /// optional placement rebalancer consulted after every train_call
+    /// (see `enable_rebalancing`)
+    pub rebalancer: Option<Rebalancer>,
     metric_names: Vec<String>,
 }
 
@@ -55,7 +60,39 @@ impl Trainer {
             step: 0,
             last_expert_frac: Vec::new(),
             last_node_frac: Vec::new(),
+            rebalancer: None,
         })
+    }
+
+    /// Track per-expert routing fractions and consult `policy` every N
+    /// steps for a congestion-aware expert placement.  The cluster
+    /// shape and hop payload come from the artifact config; bandwidth
+    /// and congestion constants are the calibrated P4d model, so the
+    /// trainer's commit/reject decisions agree with what `smile
+    /// placement` and the simtrain sweeps report for the same shape.
+    pub fn enable_rebalancing(&mut self, mut policy: RebalancePolicy) {
+        let n_nodes = self.cfg.n_nodes.max(1);
+        let spec = ClusterSpec {
+            n_nodes,
+            gpus_per_node: self.cfg.gpus_per_node.max(1),
+            ..ClusterSpec::p4d(n_nodes)
+        };
+        let num_experts = self.cfg.num_experts.max(1);
+        // 4 hops per MoE layer (every other FFN position) per micro-step
+        policy.hops_per_step = 4.0
+            * (self.cfg.num_layers as f64 / 2.0).max(1.0)
+            * self.cfg.accum_steps.max(1) as f64;
+        // migration prices THIS model's expert FFN, not the 3.7B default
+        // (f32 on the CPU path, like the activations below)
+        let (d, f) = (self.cfg.hidden_size as f64, self.cfg.ffn_size as f64);
+        policy.expert_bytes = (2.0 * d * f + f + d) * 4.0;
+        let payload = crate::moe::a2a_payload_bytes(
+            self.cfg.micro_batch * self.cfg.seq_len,
+            self.cfg.hidden_size,
+            self.cfg.capacity_factor.max(1.0),
+            4,
+        );
+        self.rebalancer = Some(Rebalancer::new(policy, spec, num_experts, payload));
     }
 
     pub fn param_count(&self) -> usize {
@@ -148,6 +185,35 @@ impl Trainer {
         let n = out_specs[2].shape[1];
         self.last_expert_frac = ef.as_f32()?[(k - 1) * e..].to_vec();
         self.last_node_frac = nf.as_f32()?[(k - 1) * n..].to_vec();
+
+        let mut disable_rebalancer = false;
+        if let Some(rb) = self.rebalancer.as_mut() {
+            if self.last_expert_frac.len() == rb.tracker.num_experts() {
+                rb.observe_f32(&self.last_expert_frac);
+                if let Some(d) = rb.maybe_rebalance(self.step) {
+                    log::info!(
+                        "rebalanced expert placement at step {}: hop comm {:.3} ms -> {:.3} ms \
+                         ({} replica moves, migration {:.3} ms)",
+                        d.step,
+                        d.comm_before * 1e3,
+                        d.comm_after * 1e3,
+                        d.migrated_replicas,
+                        d.migration_secs * 1e3
+                    );
+                }
+            } else {
+                log::warn!(
+                    "disabling placement rebalancer: artifact reports {} expert fractions \
+                     but the config declares {} experts",
+                    self.last_expert_frac.len(),
+                    rb.tracker.num_experts()
+                );
+                disable_rebalancer = true;
+            }
+        }
+        if disable_rebalancer {
+            self.rebalancer = None;
+        }
         Ok(logs)
     }
 

@@ -215,6 +215,33 @@ mod tests {
     }
 
     #[test]
+    fn write_csv_creates_parent_dir() {
+        // a fresh checkout has no reports/ directory; write_csv (and
+        // write_report) must create the parent chain instead of failing
+        let root = std::env::temp_dir().join("smile_csv_fresh_checkout");
+        let _ = std::fs::remove_dir_all(&root);
+        let path = root.join("nested").join("t.csv");
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.write_csv(path.to_str().unwrap());
+        let text = std::fs::read_to_string(&path).expect("csv written into fresh dirs");
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn write_report_creates_parent_dir() {
+        let root = std::env::temp_dir().join("smile_json_fresh_checkout");
+        let _ = std::fs::remove_dir_all(&root);
+        let path = root.join("reports").join("r.json");
+        let mut b = Bencher::quick();
+        b.record("x", &[1.0, 2.0]);
+        b.write_report(path.to_str().unwrap());
+        assert!(path.exists(), "report not written into fresh dirs");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
     fn table_roundtrip() {
         let mut t = Table::new(&["model", "throughput"]);
         t.row(&["switch".into(), "8112".into()]);

@@ -2,10 +2,12 @@
 //! the hand-rolled `util::proptest` runner (DESIGN.md §7).
 
 use smile::cluster::ProcessGroups;
-use smile::moe::{self, BiLevelPlan, DispatchPlan};
+use smile::moe::{self, BiLevelPlan, DispatchPlan, PlacedPlan};
 use smile::netsim::collectives::{all2all_flat, all2all_inter, all2all_intra, allreduce};
 use smile::netsim::{ClusterSpec, DagSim};
+use smile::placement::{self, PlacementMap, RebalancePolicy};
 use smile::prop_assert;
+use smile::util::json::Json;
 use smile::util::proptest::{check, Config};
 use smile::util::rng::Rng;
 
@@ -260,6 +262,137 @@ fn prop_dag_sim_causality() {
             // makespan >= critical path lower bound (max single duration)
             let max_dur = durations.iter().cloned().fold(0.0, f64::max);
             prop_assert!(tl.makespan >= max_dur - 1e-9, "makespan < longest task");
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// placement invariants
+// ---------------------------------------------------------------------------
+
+fn random_placement_input(rng: &mut Rng) -> (ClusterSpec, Vec<f64>, usize) {
+    let spec = random_spec(rng);
+    let e = spec.num_gpus();
+    let mut frac = placement::zipf_fractions(e, rng.f64() * 2.0);
+    rng.shuffle(&mut frac);
+    let top_k = rng.below(6) as usize;
+    (spec, frac, top_k)
+}
+
+fn build_pipeline(spec: &ClusterSpec, frac: &[f64], top_k: usize) -> PlacementMap {
+    let mut policy = RebalancePolicy::default();
+    policy.top_k_replicate = top_k;
+    policy.max_refine_swaps = 32;
+    placement::plan_placement(frac, spec, 1e6, &policy)
+}
+
+#[test]
+fn prop_placement_invariants() {
+    check(
+        "placement: >= 1 replica per expert, replicas on distinct nodes, weights sum 1",
+        &cfg(),
+        random_placement_input,
+        |(spec, frac, top_k)| {
+            let map = build_pipeline(spec, frac, *top_k);
+            if let Err(msg) = map.validate(spec) {
+                prop_assert!(false, "validate failed: {msg}");
+            }
+            for e in 0..map.num_experts() {
+                let gpus = map.gpus_of(e);
+                prop_assert!(!gpus.is_empty(), "expert {e} has no replica");
+                let mut nodes: Vec<usize> =
+                    gpus.iter().map(|&g| spec.node_of(g)).collect();
+                nodes.sort_unstable();
+                nodes.dedup();
+                prop_assert!(
+                    nodes.len() == gpus.len(),
+                    "expert {e}: replicas share a node ({gpus:?})"
+                );
+                let sum: f64 = map.weights_of(e).iter().sum();
+                prop_assert!((sum - 1.0).abs() < 1e-6, "expert {e}: weights sum {sum}");
+            }
+            // the solver never prices worse than the static block layout
+            let block = PlacementMap::block(spec, frac.len());
+            let cb = placement::price_placement(&block, frac, spec, 1e6).comm_total();
+            let cm = placement::price_placement(&map, frac, spec, 1e6).comm_total();
+            prop_assert!(cm <= cb * (1.0 + 1e-9), "planned {cm} > block {cb}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_placement_json_roundtrip() {
+    check(
+        "placement: PlacementMap round-trips through util::json exactly",
+        &cfg(),
+        random_placement_input,
+        |(spec, frac, top_k)| {
+            let map = build_pipeline(spec, frac, *top_k);
+            let text = map.to_json().to_string_pretty();
+            let parsed = match Json::parse(&text) {
+                Ok(v) => v,
+                Err(e) => {
+                    prop_assert!(false, "emitted invalid json: {e}");
+                    unreachable!()
+                }
+            };
+            match PlacementMap::from_json(&parsed) {
+                Ok(back) => prop_assert!(back == map, "round-trip changed the map"),
+                Err(msg) => prop_assert!(false, "from_json failed: {msg}"),
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_placed_plan_conserves_tokens() {
+    check(
+        "placed plan: gpu/node counts account for every kept token",
+        &cfg(),
+        |rng| {
+            let (spec, frac, top_k) = random_placement_input(rng);
+            let t = 1 + rng.below(400) as usize;
+            let cap = 1 + rng.below(64) as usize;
+            let skew = rng.f64();
+            let choices = moe::dispatch::synthetic_choices(rng, t, spec.num_gpus(), skew);
+            (spec, frac, top_k, choices, cap)
+        },
+        |(spec, frac, top_k, choices, cap)| {
+            let map = build_pipeline(spec, frac, *top_k);
+            let plan = PlacedPlan::build(choices, &map, spec, *cap);
+            let kept = choices.len() - plan.flat.dropped();
+            prop_assert!(
+                plan.gpu_counts.iter().sum::<usize>() == kept,
+                "gpu counts {} != kept {kept}",
+                plan.gpu_counts.iter().sum::<usize>()
+            );
+            // node counts are the gpu counts grouped by node
+            for node in 0..spec.n_nodes {
+                let from_gpus: usize = (0..spec.gpus_per_node)
+                    .map(|l| plan.gpu_counts[spec.gpu_id(node, l)])
+                    .sum();
+                prop_assert!(
+                    from_gpus == plan.node_counts[node],
+                    "node {node}: {from_gpus} != {}",
+                    plan.node_counts[node]
+                );
+            }
+            // every kept token's destination hosts a replica of its expert
+            for (t, g) in plan.gpu_of_token.iter().enumerate() {
+                match (plan.flat.assignment[t], g) {
+                    (moe::Assignment::Slot(e, _), Some(g)) => {
+                        prop_assert!(
+                            map.gpus_of(e).contains(g),
+                            "token {t}: gpu {g} hosts no replica of expert {e}"
+                        );
+                    }
+                    (moe::Assignment::Dropped, None) => {}
+                    (a, g) => prop_assert!(false, "token {t}: {a:?} vs {g:?}"),
+                }
+            }
             Ok(())
         },
     );
