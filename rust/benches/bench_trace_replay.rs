@@ -1,0 +1,77 @@
+//! Bench: trace capture & replay — how fast the trace substrate
+//! records synthetic scenarios, serializes/parses JSONL, and replays a
+//! recorded trace through the LoadTracker -> Rebalancer ->
+//! price_placement pipeline.  Replay must stay far cheaper than the
+//! simulated steps it prices, or offline policy search (the
+//! learned-placement follow-up) is dead on arrival.  Writes
+//! reports/bench_trace_replay.json.
+
+use smile::placement::RebalancePolicy;
+use smile::trace::{record_scenario, RoutingTrace, Scenario, ScenarioConfig, TraceReplayer};
+use smile::util::bench::Bencher;
+
+fn main() {
+    let cfg = ScenarioConfig {
+        scenario: Scenario::Zipf { s: 1.2 },
+        n_nodes: 4,
+        gpus_per_node: 8,
+        steps: 200,
+        tokens_per_step: 1024,
+        capacity_factor: 2.0,
+        payload_per_gpu: 1e6,
+        seed: 7,
+    };
+
+    println!("=== trace record / serialize / replay: 32 experts, 200 steps, Zipf(1.2) ===");
+    let trace = record_scenario(&cfg, None);
+    let text = trace.to_jsonl();
+    println!(
+        "trace: {} steps, {} experts, {:.1} KiB serialized\n",
+        trace.steps.len(),
+        trace.meta.num_experts,
+        text.len() as f64 / 1024.0
+    );
+
+    // determinism shape-check before timing anything
+    let a = TraceReplayer::replay(&trace, RebalancePolicy::default());
+    let b = TraceReplayer::replay(
+        &RoutingTrace::from_jsonl(&text).expect("roundtrip"),
+        RebalancePolicy::default(),
+    );
+    assert_eq!(
+        a.summary.to_json().to_string(),
+        b.summary.to_json().to_string(),
+        "replay summaries must be byte-identical across a serialization cycle"
+    );
+    assert!(a.summary.rebalances >= 1, "Zipf(1.2) trace must rebalance");
+    assert!(
+        a.summary.total_comm_secs < a.summary.static_comm_secs,
+        "rebalanced replay must beat the static baseline"
+    );
+    println!(
+        "shape check: {} rebalances, comm {:.3} s vs static {:.3} s ✓\n",
+        a.summary.rebalances, a.summary.total_comm_secs, a.summary.static_comm_secs
+    );
+
+    let mut bench = Bencher::default();
+    bench.bench("trace::record_scenario(200 steps x 1024 tok)", || {
+        record_scenario(&cfg, None)
+    });
+    bench.bench("trace::to_jsonl(200 steps)", || trace.to_jsonl());
+    bench.bench("trace::from_jsonl(200 steps)", || {
+        RoutingTrace::from_jsonl(&text).expect("parse")
+    });
+    bench.bench("trace::replay(200 steps, default policy)", || {
+        TraceReplayer::replay(&trace, RebalancePolicy::default())
+    });
+    // replay throughput in steps/s (simulated-step pricing rate)
+    let mut quick = smile::util::bench::Bencher::quick();
+    let ns = quick.bench("trace::replay (for steps/s)", || {
+        TraceReplayer::replay(&trace, RebalancePolicy::default())
+    });
+    println!(
+        "\nreplay throughput: {:.0} recorded steps/s",
+        trace.steps.len() as f64 / (ns * 1e-9)
+    );
+    bench.write_report("reports/bench_trace_replay.json");
+}

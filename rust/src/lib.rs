@@ -17,6 +17,11 @@
 //!   congestion-priced expert->GPU placement, hot-expert replication
 //!   across nodes, and the threshold/hysteresis rebalancing policy the
 //!   step loop consults (the paper's fixed assignment is its baseline).
+//! - [`trace`] captures routing traffic (trainer or synthetic
+//!   scenarios) as replayable JSONL traces and replays them
+//!   deterministically through the placement pipeline — the offline
+//!   policy-evaluation substrate and the golden-trace regression
+//!   harness.
 //! - [`data`] is the synthetic-corpus stand-in for C4; [`metrics`]
 //!   the profiler stand-in; [`util`] the from-scratch substrate
 //!   (json/cli/rng/stats/bench — the offline image vendors none of the
@@ -30,5 +35,6 @@ pub mod netsim;
 pub mod placement;
 pub mod runtime;
 pub mod simtrain;
+pub mod trace;
 pub mod trainer;
 pub mod util;

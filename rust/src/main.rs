@@ -7,6 +7,7 @@
 //!   sweep          weak+strong scaling sweeps (Fig 3 / Fig 8)
 //!   layer          single-MoE-layer breakdown (Table 3 / Figs 9-11)
 //!   placement      congestion-aware expert placement report under skew
+//!   trace          record / replay / summarize routing traces
 //!   info           list artifacts and their configs
 //!
 //! Examples:
@@ -15,6 +16,8 @@
 //!   smile sweep --nodes 1,2,4,8,16
 //!   smile layer --variant smile --nodes 16
 //!   smile placement --nodes 16 --skew 1.2
+//!   smile trace record --scenario zipf --skew 1.2 --out reports/zipf.jsonl
+//!   smile trace replay --in reports/zipf.jsonl
 
 use anyhow::{bail, Result};
 
@@ -23,6 +26,7 @@ use smile::netsim::ClusterSpec;
 use smile::placement::{self, PlacementMap, RebalancePolicy};
 use smile::runtime::Runtime;
 use smile::simtrain::{self, ModelDims, Scaling, Variant};
+use smile::trace::{RoutingTrace, Scenario, ScenarioConfig, TraceReplayer};
 use smile::trainer::Trainer;
 use smile::util::bench::Table;
 use smile::util::cli::Args;
@@ -46,6 +50,7 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "layer" => cmd_layer(&args),
         "placement" => cmd_placement(&args),
+        "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         _ => {
             print_help();
@@ -60,11 +65,17 @@ fn print_help() {
          usage: smile <command> [options]\n\n\
          commands:\n\
            train     --config <name> --steps N [--seed S] [--log out.csv] [--ckpt path] [--eval-every N] [--rebalance]\n\
+                     [--trace out.jsonl]\n\
            eval      --config <name> --ckpt path [--batches N]\n\
            simulate  --model 3.7B|13B|48B --nodes N [--variant switch|smile|dense|dense_wide]\n\
            sweep     [--nodes 1,2,4,8,16] [--model 3.7B]\n\
            layer     --variant switch|smile [--nodes N] [--timeline]\n\
            placement [--nodes N] [--skew S] [--model 3.7B] [--replicate K] [--max-replicas R] [--out path.json]\n\
+           trace     record --scenario uniform|zipf|burst --out p.jsonl [--nodes N] [--gpus M] [--steps S]\n\
+                            [--tokens T] [--seed X] [--skew S] [--hot E] [--boost B] [--burst-start A] [--burst-end Z]\n\
+                            [--cap-factor F] [--rebalance]\n\
+           trace     replay --in p.jsonl [--check-every N] [--timeline p.csv] [--summary p.json]\n\
+           trace     summarize --in p.jsonl [--out p.summary.json] [--bless]\n\
            info"
     );
 }
@@ -99,6 +110,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut tr = Trainer::new(&rt, &config, seed)?;
     if args.bool("rebalance", false) {
         tr.enable_rebalancing(RebalancePolicy::default());
+    }
+    let trace_out = args.opt_str("trace");
+    if trace_out.is_some() {
+        tr.enable_trace_recording();
     }
     let (k, a, b, s) = tr.batch_dims();
     println!(
@@ -169,6 +184,13 @@ fn cmd_train(args: &Args) -> Result<()> {
             rb.rebalances,
             smile::util::stats::imbalance(&rb.current.node_loads(&rb.tracker.fractions()))
         );
+    }
+    if let (Some(path), Some(rec)) = (trace_out, &tr.trace_recorder) {
+        rec.write_jsonl(&path)?;
+        println!("routing trace: {path} ({} steps)", rec.len());
+        if rec.skipped() > 0 {
+            println!("  warning: {} steps skipped (non-finite routing metrics)", rec.skipped());
+        }
     }
     Ok(())
 }
@@ -357,6 +379,162 @@ fn cmd_placement(args: &Args) -> Result<()> {
     let back = PlacementMap::from_json(&parsed).map_err(anyhow::Error::msg)?;
     anyhow::ensure!(back == planned, "placement JSON round-trip mismatch");
     println!("\nplacement map: {out} (JSON round-trip ok)");
+    Ok(())
+}
+
+fn trace_scenario_of(args: &Args) -> Result<Scenario> {
+    Ok(match args.str("scenario", "uniform").as_str() {
+        "uniform" => Scenario::Uniform,
+        "zipf" => Scenario::Zipf { s: args.f64("skew", 1.2) },
+        "burst" => Scenario::Burst {
+            s: args.f64("skew", 0.0),
+            hot_expert: args.usize("hot", 3),
+            boost: args.f64("boost", 8.0),
+            start: args.usize("burst-start", 80),
+            end: args.usize("burst-end", 140),
+        },
+        other => bail!("unknown scenario {other} (uniform|zipf|burst)"),
+    })
+}
+
+/// Apply `--check-every / --hops / --expert-bytes / --alpha` overrides
+/// so replays can explore policy variants against the same trace.
+fn trace_policy_of(args: &Args) -> RebalancePolicy {
+    let mut p = RebalancePolicy::default();
+    p.check_every = args.usize("check-every", p.check_every);
+    p.hops_per_step = args.f64("hops", p.hops_per_step);
+    p.expert_bytes = args.f64("expert-bytes", p.expert_bytes);
+    p.ewma_alpha = args.f64("alpha", p.ewma_alpha);
+    p.trigger_imbalance = args.f64("trigger", p.trigger_imbalance);
+    p
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let sub = args
+        .positional()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help")
+        .to_string();
+    match sub.as_str() {
+        "record" => {
+            let cfg = ScenarioConfig {
+                scenario: trace_scenario_of(args)?,
+                n_nodes: args.usize("nodes", 4),
+                gpus_per_node: args.usize("gpus", 8),
+                steps: args.usize("steps", 200),
+                tokens_per_step: args.usize("tokens", 1024),
+                capacity_factor: args.f64("cap-factor", 2.0),
+                payload_per_gpu: args.f64("payload", 1e6),
+                seed: args.u64("seed", 7),
+            };
+            let policy = args.bool("rebalance", false).then(|| trace_policy_of(args));
+            let trace = smile::trace::record_scenario(&cfg, policy.as_ref());
+            let out = args.str("out", "reports/trace.jsonl");
+            trace.write_jsonl(&out)?;
+            println!(
+                "recorded {} ({} steps, {} experts on {}x{}, {} live decisions): {out}",
+                trace.meta.scenario,
+                trace.steps.len(),
+                trace.meta.num_experts,
+                trace.meta.n_nodes,
+                trace.meta.gpus_per_node,
+                trace.decisions.len()
+            );
+            Ok(())
+        }
+        "replay" => {
+            let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
+            let trace = RoutingTrace::read_jsonl(&path).map_err(anyhow::Error::msg)?;
+            let result = TraceReplayer::replay(&trace, trace_policy_of(args));
+            let mut table = Table::new(&[
+                "step", "expert_imb", "node_imb", "comm(ms)", "straggler", "rebalanced",
+            ]);
+            // print the timeline at a readable cadence: every consult
+            // boundary plus every rebalance step
+            let cadence = trace_policy_of(args).check_every.max(1);
+            for o in &result.timeline {
+                if o.rebalanced || o.step % cadence == 0 {
+                    table.row(&[
+                        o.step.to_string(),
+                        format!("{:.3}", o.expert_imbalance),
+                        format!("{:.3}", o.node_imbalance),
+                        format!("{:.3}", o.comm_time * 1e3),
+                        format!("{:.2}", o.compute_scale),
+                        if o.rebalanced {
+                            format!("yes ({} moves)", o.migrated_replicas)
+                        } else {
+                            "-".into()
+                        },
+                    ]);
+                }
+            }
+            println!("replay of {} ({} steps):", trace.meta.scenario, result.summary.steps);
+            table.print();
+            if let Some(csv) = args.opt_str("timeline") {
+                let mut full = Table::new(&[
+                    "step", "expert_imb", "node_imb", "comm_s", "straggler", "rebalanced", "moves",
+                ]);
+                for o in &result.timeline {
+                    full.row(&[
+                        o.step.to_string(),
+                        format!("{}", o.expert_imbalance),
+                        format!("{}", o.node_imbalance),
+                        format!("{}", o.comm_time),
+                        format!("{}", o.compute_scale),
+                        (o.rebalanced as usize).to_string(),
+                        o.migrated_replicas.to_string(),
+                    ]);
+                }
+                full.write_csv(&csv);
+            }
+            let s = &result.summary;
+            println!(
+                "\nsummary: {} rebalances at {:?}; comm {:.3} s (static {:.3} s, {:.2}x); \
+                 {} replica moves ({} migration), final node imbalance {:.3}",
+                s.rebalances,
+                s.rebalance_steps,
+                s.total_comm_secs,
+                s.static_comm_secs,
+                if s.total_comm_secs > 0.0 { s.static_comm_secs / s.total_comm_secs } else { 1.0 },
+                s.migrated_replicas,
+                smile::util::fmt_bytes(s.migration_bytes),
+                s.final_node_imbalance,
+            );
+            if let Some(out) = args.opt_str("summary") {
+                write_summary(&out, s)?;
+            }
+            Ok(())
+        }
+        "summarize" => {
+            let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
+            let trace = RoutingTrace::read_jsonl(&path).map_err(anyhow::Error::msg)?;
+            let result = TraceReplayer::replay(&trace, trace_policy_of(args));
+            let out = if args.bool("bless", false) {
+                // the golden-fixture update procedure: write the
+                // summary next to the trace (rust/tests/data/*.jsonl
+                // -> *.summary.json) after a deliberate policy change
+                let stem = path.strip_suffix(".jsonl").unwrap_or(&path);
+                format!("{stem}.summary.json")
+            } else {
+                args.str("out", &format!("{path}.summary.json"))
+            };
+            write_summary(&out, &result.summary)?;
+            println!("{}", result.summary.to_json().to_string_pretty());
+            println!("summary: {out}");
+            Ok(())
+        }
+        other => {
+            bail!("unknown trace subcommand {other} (record|replay|summarize)")
+        }
+    }
+}
+
+fn write_summary(path: &str, s: &smile::trace::ReplaySummary) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(path, s.to_json().to_string_pretty())?;
     Ok(())
 }
 

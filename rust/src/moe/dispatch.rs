@@ -248,6 +248,26 @@ impl PlacedPlan {
     }
 }
 
+/// Pre-capacity routing *demand* histogram: every token's chosen
+/// expert counts, drops included — the signal `placement::LoadTracker`
+/// wants and the unit the trace recorder serializes.
+pub fn demand_histogram(choices: &[Top1], num_experts: usize) -> Vec<f64> {
+    let mut counts = vec![0.0f64; num_experts];
+    for c in choices {
+        debug_assert!(c.expert < num_experts);
+        counts[c.expert] += 1.0;
+    }
+    counts
+}
+
+impl DispatchPlan {
+    /// Post-capacity (kept tokens only) histogram as f64 counts — the
+    /// drop-adjusted companion of [`demand_histogram`].
+    pub fn kept_histogram(&self) -> Vec<f64> {
+        self.tokens_of.iter().map(|t| t.len() as f64).collect()
+    }
+}
+
 /// Byte accounting for the All2All payloads (per GPU, per hop).
 /// Dispatch buffers are capacity-padded (`cap_factor * T` token slots
 /// of `hidden * dtype_bytes` each) exactly as in Switch/GShard.
@@ -269,12 +289,10 @@ pub struct RoutingStats {
 }
 
 pub fn routing_stats(plan: &DispatchPlan) -> RoutingStats {
-    let loads = plan.loads();
-    let fl: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
     RoutingStats {
-        imbalance: crate::util::stats::imbalance(&fl),
+        imbalance: crate::util::stats::imbalance(&plan.kept_histogram()),
         dropped_frac: plan.dropped() as f64 / plan.num_tokens().max(1) as f64,
-        loads,
+        loads: plan.loads(),
     }
 }
 
@@ -390,6 +408,18 @@ mod tests {
         let f = plan.node_fractions();
         assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-9);
         assert_eq!(plan.node_counts.iter().sum::<usize>(), 500);
+    }
+
+    #[test]
+    fn histograms_split_demand_and_kept() {
+        let choices: Vec<Top1> =
+            [0, 0, 0, 1].iter().map(|&e| Top1 { expert: e, gate: 1.0 }).collect();
+        let demand = demand_histogram(&choices, 2);
+        assert_eq!(demand, vec![3.0, 1.0]);
+        let plan = DispatchPlan::build(&choices, 2, 2);
+        assert_eq!(plan.kept_histogram(), vec![2.0, 1.0]);
+        // demand - kept == drops per expert
+        assert_eq!(plan.dropped(), 1);
     }
 
     #[test]

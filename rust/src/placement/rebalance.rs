@@ -21,8 +21,10 @@ use crate::netsim::topology::ClusterSpec;
 /// Knobs of the rebalancing policy (see ROADMAP.md `## placement`).
 #[derive(Debug, Clone)]
 pub struct RebalancePolicy {
-    /// Consult cadence: `maybe_rebalance` acts only when
-    /// `step % check_every == 0` (and step > 0).
+    /// Consult cadence in steps: `maybe_rebalance` acts when `step`
+    /// lands in a different `step / check_every` window than the last
+    /// consult, in either direction (see its doc for the full
+    /// contract); 0 disables consulting.
     pub check_every: usize,
     /// Node-level imbalance (max/mean) that arms a rebalance.
     pub trigger_imbalance: f64,
@@ -177,6 +179,15 @@ impl Rebalancer {
 
     /// Consult the policy at `step`; commit and return the decision if
     /// all three gates (trigger, hysteresis, amortization) pass.
+    ///
+    /// Cadence contract: a consult fires iff `step` lands in a
+    /// different `check_every` window (`step / check_every`) than the
+    /// last consult, *in either direction*.  Trainers that advance the
+    /// step by more than 1 per call still check at the configured
+    /// rate, and trace replays that seek backwards re-arm the cadence
+    /// instead of going silent until the old high-water mark — two
+    /// consults within one window never both fire.  `check_every == 0`
+    /// disables consulting entirely.
     pub fn maybe_rebalance(&mut self, step: usize) -> Option<RebalanceDecision> {
         let p = &self.policy;
         if p.check_every == 0 || step / p.check_every == self.last_consult_step / p.check_every
@@ -267,6 +278,31 @@ mod tests {
         assert!(rb.maybe_rebalance(51).is_some(), "missed the 50-boundary crossing");
         // and does not fire again until the next boundary
         assert!(rb.maybe_rebalance(54).is_none());
+    }
+
+    #[test]
+    fn cadence_with_non_monotone_steps_rearms_per_window() {
+        // trace replay can seek: after consulting at step 120, a seek
+        // back to step 10 must re-arm (different window), while a
+        // second consult inside the same window must stay silent
+        let mut rb = skewed_rebalancer();
+        assert!(rb.maybe_rebalance(120).is_some(), "skew must fire at 120");
+        assert_eq!(rb.last_consult_step, 120);
+        // same window (100..149): silent, and the mark does not move
+        assert!(rb.maybe_rebalance(130).is_none());
+        assert_eq!(rb.last_consult_step, 120);
+        // seek backwards into an earlier window: consults again (the
+        // placement is already optimal for this load, so no commit —
+        // but the consult mark moves)
+        assert!(rb.maybe_rebalance(10).is_none());
+        assert_eq!(rb.last_consult_step, 10, "backward seek did not consult");
+        // forward again within window 0: silent
+        assert!(rb.maybe_rebalance(49).is_none());
+        assert_eq!(rb.last_consult_step, 10);
+        // check_every == 0 disables consulting entirely
+        rb.policy.check_every = 0;
+        assert!(rb.maybe_rebalance(500).is_none());
+        assert_eq!(rb.last_consult_step, 10);
     }
 
     #[test]

@@ -65,12 +65,7 @@ impl LoadTracker {
     /// drop.  This is the right signal for placement — a dropped token
     /// still crossed the wire to its expert's GPU.
     pub fn observe_choices(&mut self, choices: &[Top1]) {
-        let mut counts = vec![0.0f64; self.num_experts];
-        for c in choices {
-            debug_assert!(c.expert < self.num_experts);
-            counts[c.expert] += 1.0;
-        }
-        self.observe(&counts);
+        self.observe(&crate::moe::dispatch::demand_histogram(choices, self.num_experts));
     }
 
     /// Observe post-capacity loads (kept tokens only) from a plan.
@@ -155,6 +150,54 @@ mod tests {
         t.observe(&[f64::NAN, 1.0]);
         assert_eq!(t.steps(), 0);
         assert!((t.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracker_skips_nonfinite_without_bumping_steps() {
+        // every degenerate shape: all-zero, negative-sum, +inf, -inf,
+        // NaN anywhere — none may advance steps() or move the EWMA
+        let mut t = LoadTracker::new(3, 0.5);
+        let before = t.fractions();
+        for bad in [
+            vec![0.0, 0.0, 0.0],
+            vec![-1.0, 0.5, 0.5], // sums to 0
+            vec![f64::INFINITY, 1.0, 1.0],
+            vec![f64::NEG_INFINITY, 1.0, 1.0],
+            vec![1.0, f64::NAN, 1.0],
+            vec![f64::NAN, f64::NAN, f64::NAN],
+        ] {
+            t.observe(&bad);
+            assert_eq!(t.steps(), 0, "{bad:?} bumped steps");
+            assert_eq!(t.fractions(), before, "{bad:?} moved the EWMA");
+        }
+        // and a good histogram afterwards still lands
+        t.observe(&[1.0, 2.0, 1.0]);
+        assert_eq!(t.steps(), 1);
+        assert!(t.fractions()[1] > t.fractions()[0]);
+    }
+
+    #[test]
+    fn observe_f32_matches_observe_exactly() {
+        // the f32 path widens then delegates: the EWMA state must be
+        // bit-identical to observing the widened values directly
+        let data: [&[f32]; 3] =
+            [&[0.3, 0.1, 0.35, 0.25], &[1.0, 0.0, 0.0, 0.0], &[5.0, 3.0, 2.0, 6.0]];
+        let mut a = LoadTracker::new(4, 0.2);
+        let mut b = LoadTracker::new(4, 0.2);
+        for row in data {
+            a.observe_f32(row);
+            let wide: Vec<f64> = row.iter().map(|&x| x as f64).collect();
+            b.observe(&wide);
+        }
+        assert_eq!(a.steps(), b.steps());
+        for (x, y) in a.fractions().iter().zip(b.fractions()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
+        }
+        // degenerate f32 rows are skipped through the same gate
+        let mut c = LoadTracker::new(2, 0.5);
+        c.observe_f32(&[f32::NAN, 1.0]);
+        c.observe_f32(&[0.0, 0.0]);
+        assert_eq!(c.steps(), 0);
     }
 
     #[test]

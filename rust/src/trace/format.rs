@@ -1,0 +1,446 @@
+//! The `RoutingTrace` on-disk format: JSONL (one JSON object per
+//! line) through `util::json`, so traces survive without serde.
+//!
+//! Line 1 is the `meta` header (topology, expert count, scenario
+//! provenance); every following line is either a `step` record (the
+//! per-step per-expert dispatch histogram, per-node histogram, drop
+//! rate, and routed-token count) or a `rebalance` record (a placement
+//! decision a live `Rebalancer` committed while the trace was being
+//! captured).  Histograms are stored as raw f64 values — integer token
+//! counts from the simtrain scenario generators, f32-widened routing
+//! fractions from the trainer — and the writer/parser pair round-trips
+//! every value bit-for-bit (shortest-round-trip decimal in, exact f64
+//! out), which `rust/tests/prop_invariants.rs` asserts.
+
+use crate::netsim::topology::ClusterSpec;
+use crate::obj;
+use crate::placement::PlacementMap;
+use crate::util::json::Json;
+
+/// Trace format version; bump on schema changes.
+pub const TRACE_VERSION: usize = 1;
+
+/// Header line: where the trace came from and what shape it has.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMeta {
+    pub version: usize,
+    /// Scenario / run label ("uniform", "zipf(1.2)", "train tiny_smile").
+    pub scenario: String,
+    pub seed: u64,
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    pub num_experts: usize,
+    /// Routed tokens per step (0 when unknown, e.g. fraction traces).
+    pub tokens_per_step: usize,
+    /// Per-expert capacity applied at record time (0 = uncapped).
+    pub capacity: usize,
+    /// Bytes each GPU contributes per dispatch hop — what the replayer
+    /// feeds `price_placement`.
+    pub payload_per_gpu: f64,
+}
+
+impl TraceMeta {
+    /// The cluster the replayer prices on: the recorded shape with the
+    /// calibrated P4d bandwidth/congestion constants (the same
+    /// substitution `Trainer::enable_rebalancing` makes).
+    pub fn cluster_spec(&self) -> ClusterSpec {
+        let n = self.n_nodes.max(1);
+        ClusterSpec {
+            n_nodes: n,
+            gpus_per_node: self.gpus_per_node.max(1),
+            ..ClusterSpec::p4d(n)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj! {
+            "kind" => "meta",
+            "version" => self.version,
+            "scenario" => self.scenario.clone(),
+            "seed" => self.seed as usize,
+            "n_nodes" => self.n_nodes,
+            "gpus_per_node" => self.gpus_per_node,
+            "num_experts" => self.num_experts,
+            "tokens_per_step" => self.tokens_per_step,
+            "capacity" => self.capacity,
+            "payload_per_gpu" => self.payload_per_gpu,
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceMeta, String> {
+        let field = |k: &str| {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| format!("meta: missing {k}"))
+        };
+        Ok(TraceMeta {
+            version: field("version")?,
+            scenario: v
+                .get("scenario")
+                .and_then(Json::as_str)
+                .ok_or("meta: missing scenario")?
+                .to_string(),
+            seed: field("seed")? as u64,
+            n_nodes: field("n_nodes")?,
+            gpus_per_node: field("gpus_per_node")?,
+            num_experts: field("num_experts")?,
+            tokens_per_step: field("tokens_per_step")?,
+            capacity: field("capacity")?,
+            payload_per_gpu: v
+                .get("payload_per_gpu")
+                .and_then(Json::as_f64)
+                .ok_or("meta: missing payload_per_gpu")?,
+        })
+    }
+}
+
+/// One recorded routing step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStep {
+    pub step: usize,
+    /// Per-expert dispatch histogram (token counts or fractions — the
+    /// replayer's `LoadTracker` normalizes either).
+    pub experts: Vec<f64>,
+    /// Per-node histogram (phase-1 inter-node routing demand).
+    pub nodes: Vec<f64>,
+    /// Fraction of tokens dropped over expert capacity this step.
+    pub dropped_frac: f64,
+    /// Tokens routed this step (0 when unknown).
+    pub tokens: f64,
+}
+
+impl TraceStep {
+    pub fn to_json(&self) -> Json {
+        obj! {
+            "kind" => "step",
+            "step" => self.step,
+            "experts" => self.experts.clone(),
+            "nodes" => self.nodes.clone(),
+            "dropped_frac" => self.dropped_frac,
+            "tokens" => self.tokens,
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceStep, String> {
+        let arr = |k: &str| -> Result<Vec<f64>, String> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("step: missing {k}"))?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| format!("step: non-number in {k}")))
+                .collect()
+        };
+        Ok(TraceStep {
+            step: v.get("step").and_then(Json::as_usize).ok_or("step: missing step")?,
+            experts: arr("experts")?,
+            nodes: arr("nodes")?,
+            dropped_frac: v
+                .get("dropped_frac")
+                .and_then(Json::as_f64)
+                .ok_or("step: missing dropped_frac")?,
+            tokens: v.get("tokens").and_then(Json::as_f64).ok_or("step: missing tokens")?,
+        })
+    }
+}
+
+/// A rebalance the recording run committed (absent in pure traffic
+/// traces; the replayer recomputes its own decisions either way and
+/// can diff against these).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceDecision {
+    pub step: usize,
+    pub migrated_replicas: usize,
+    pub comm_before: f64,
+    pub comm_after: f64,
+    pub migration_secs: f64,
+    pub placement: PlacementMap,
+}
+
+impl TraceDecision {
+    pub fn to_json(&self) -> Json {
+        obj! {
+            "kind" => "rebalance",
+            "step" => self.step,
+            "migrated_replicas" => self.migrated_replicas,
+            "comm_before" => self.comm_before,
+            "comm_after" => self.comm_after,
+            "migration_secs" => self.migration_secs,
+            "placement" => self.placement.to_json(),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceDecision, String> {
+        let f = |k: &str| {
+            v.get(k).and_then(Json::as_f64).ok_or_else(|| format!("rebalance: missing {k}"))
+        };
+        Ok(TraceDecision {
+            step: v.get("step").and_then(Json::as_usize).ok_or("rebalance: missing step")?,
+            migrated_replicas: v
+                .get("migrated_replicas")
+                .and_then(Json::as_usize)
+                .ok_or("rebalance: missing migrated_replicas")?,
+            comm_before: f("comm_before")?,
+            comm_after: f("comm_after")?,
+            migration_secs: f("migration_secs")?,
+            placement: PlacementMap::from_json(
+                v.get("placement").ok_or("rebalance: missing placement")?,
+            )?,
+        })
+    }
+}
+
+/// A full recorded routing trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingTrace {
+    pub meta: TraceMeta,
+    pub steps: Vec<TraceStep>,
+    pub decisions: Vec<TraceDecision>,
+}
+
+impl RoutingTrace {
+    pub fn new(meta: TraceMeta) -> RoutingTrace {
+        RoutingTrace { meta, steps: Vec::new(), decisions: Vec::new() }
+    }
+
+    /// Serialize as JSONL: meta header, then steps and decisions merged
+    /// in step order (decisions after the step they fired on).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.meta.to_json().to_string());
+        out.push('\n');
+        let mut di = 0;
+        for s in &self.steps {
+            while di < self.decisions.len() && self.decisions[di].step < s.step {
+                out.push_str(&self.decisions[di].to_json().to_string());
+                out.push('\n');
+                di += 1;
+            }
+            out.push_str(&s.to_json().to_string());
+            out.push('\n');
+            while di < self.decisions.len() && self.decisions[di].step == s.step {
+                out.push_str(&self.decisions[di].to_json().to_string());
+                out.push('\n');
+                di += 1;
+            }
+        }
+        for d in &self.decisions[di..] {
+            out.push_str(&d.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a JSONL trace; validates header presence and per-line
+    /// histogram arity against the header.  Lines with an unknown
+    /// `kind` are skipped (forward compatibility).
+    pub fn from_jsonl(text: &str) -> Result<RoutingTrace, String> {
+        let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+        let (_, first) = lines.next().ok_or("empty trace")?;
+        let head = Json::parse(first).map_err(|e| format!("line 1: {e}"))?;
+        if head.get("kind").and_then(Json::as_str) != Some("meta") {
+            return Err("line 1: expected a meta header".into());
+        }
+        let meta = TraceMeta::from_json(&head)?;
+        if meta.version != TRACE_VERSION {
+            return Err(format!(
+                "trace version {} != supported {TRACE_VERSION}",
+                meta.version
+            ));
+        }
+        let mut trace = RoutingTrace::new(meta);
+        for (i, line) in lines {
+            let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+            match v.get("kind").and_then(Json::as_str) {
+                Some("step") => {
+                    let s =
+                        TraceStep::from_json(&v).map_err(|m| format!("line {}: {m}", i + 1))?;
+                    if s.experts.len() != trace.meta.num_experts {
+                        return Err(format!(
+                            "line {}: {} expert bins != meta {}",
+                            i + 1,
+                            s.experts.len(),
+                            trace.meta.num_experts
+                        ));
+                    }
+                    if s.nodes.len() != trace.meta.n_nodes {
+                        return Err(format!(
+                            "line {}: {} node bins != meta {}",
+                            i + 1,
+                            s.nodes.len(),
+                            trace.meta.n_nodes
+                        ));
+                    }
+                    trace.steps.push(s);
+                }
+                Some("rebalance") => {
+                    let d =
+                        TraceDecision::from_json(&v).map_err(|m| format!("line {}: {m}", i + 1))?;
+                    trace.decisions.push(d);
+                }
+                Some("meta") => return Err(format!("line {}: duplicate meta header", i + 1)),
+                _ => {} // unknown kind: skip
+            }
+        }
+        Ok(trace)
+    }
+
+    pub fn write_jsonl(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_jsonl())
+    }
+
+    pub fn read_jsonl(path: impl AsRef<std::path::Path>) -> Result<RoutingTrace, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        RoutingTrace::from_jsonl(&text)
+    }
+
+    /// Decisions recorded at `step` (for replay diffing).
+    pub fn decisions_at(&self, step: usize) -> impl Iterator<Item = &TraceDecision> {
+        self.decisions.iter().filter(move |d| d.step == step)
+    }
+
+    /// Mean recorded drop rate across steps.
+    pub fn mean_dropped_frac(&self) -> f64 {
+        let sum: f64 = self.steps.iter().map(|s| s.dropped_frac).sum();
+        sum / self.steps.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            version: TRACE_VERSION,
+            scenario: "unit".into(),
+            seed: 7,
+            n_nodes: 2,
+            gpus_per_node: 2,
+            num_experts: 4,
+            tokens_per_step: 16,
+            capacity: 8,
+            payload_per_gpu: 1e6,
+        }
+    }
+
+    fn step(i: usize) -> TraceStep {
+        TraceStep {
+            step: i,
+            experts: vec![4.0, 3.0, 5.0, 4.0],
+            nodes: vec![7.0, 9.0],
+            dropped_frac: 0.0625,
+            tokens: 16.0,
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip_exact() {
+        let mut t = RoutingTrace::new(meta());
+        t.steps.push(step(0));
+        t.steps.push(step(1));
+        let spec = ClusterSpec::test(2, 2);
+        t.decisions.push(TraceDecision {
+            step: 1,
+            migrated_replicas: 2,
+            comm_before: 0.25,
+            comm_after: 0.125,
+            migration_secs: 1.5e-3,
+            placement: PlacementMap::block(&spec, 4),
+        });
+        let text = t.to_jsonl();
+        let back = RoutingTrace::from_jsonl(&text).unwrap();
+        assert_eq!(back, t);
+        // and the serialization is stable (bit-exact idempotence)
+        assert_eq!(back.to_jsonl(), text);
+    }
+
+    #[test]
+    fn fractional_histograms_roundtrip_bitwise() {
+        let mut t = RoutingTrace::new(meta());
+        // awkward values: f32-widened thirds, subnormal-ish smalls
+        t.steps.push(TraceStep {
+            step: 0,
+            experts: vec![1.0f32 as f64 / 3.0, 0.1f32 as f64, 2.5e-9, 0.6],
+            nodes: vec![0.4333, 0.5667],
+            dropped_frac: 1.0 / 1024.0,
+            tokens: 0.0,
+        });
+        let back = RoutingTrace::from_jsonl(&t.to_jsonl()).unwrap();
+        for (a, b) in back.steps[0].experts.iter().zip(&t.steps[0].experts) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+        }
+    }
+
+    #[test]
+    fn reader_rejects_malformed() {
+        assert!(RoutingTrace::from_jsonl("").is_err());
+        assert!(RoutingTrace::from_jsonl("{\"kind\":\"step\"}").is_err());
+        let mut t = RoutingTrace::new(meta());
+        t.steps.push(step(0));
+        let text = t.to_jsonl();
+        // arity violation: chop an expert bin out
+        let bad = text.replace("[4,3,5,4]", "[4,3,5]");
+        assert!(RoutingTrace::from_jsonl(&bad).unwrap_err().contains("expert bins"));
+        // duplicate header
+        let lines: Vec<&str> = text.lines().collect();
+        let dup = format!("{}\n{}\n{}", lines[0], lines[0], lines[1]);
+        assert!(RoutingTrace::from_jsonl(&dup).unwrap_err().contains("duplicate meta"));
+    }
+
+    #[test]
+    fn unknown_kinds_are_skipped() {
+        let mut t = RoutingTrace::new(meta());
+        t.steps.push(step(0));
+        let text = format!(
+            "{}{}\n",
+            t.to_jsonl(),
+            r#"{"kind":"future-extension","x":1}"#
+        );
+        let back = RoutingTrace::from_jsonl(&text).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn decisions_interleave_in_step_order() {
+        let mut t = RoutingTrace::new(meta());
+        for i in 0..3 {
+            t.steps.push(step(i));
+        }
+        let spec = ClusterSpec::test(2, 2);
+        t.decisions.push(TraceDecision {
+            step: 1,
+            migrated_replicas: 1,
+            comm_before: 0.5,
+            comm_after: 0.25,
+            migration_secs: 0.001,
+            placement: PlacementMap::block(&spec, 4),
+        });
+        let text = t.to_jsonl();
+        let kinds: Vec<&str> = text
+            .lines()
+            .map(|l| {
+                if l.contains("\"rebalance\"") {
+                    "d"
+                } else if l.contains("\"step\"") {
+                    "s"
+                } else {
+                    "m"
+                }
+            })
+            .collect();
+        assert_eq!(kinds, vec!["m", "s", "s", "d", "s"]);
+        assert_eq!(RoutingTrace::from_jsonl(&text).unwrap(), t);
+    }
+
+    #[test]
+    fn cluster_spec_inherits_p4d_constants() {
+        let spec = meta().cluster_spec();
+        let p4d = ClusterSpec::p4d(2);
+        assert_eq!(spec.gpus_per_node, 2);
+        assert_eq!(spec.inter_bw, p4d.inter_bw);
+        assert_eq!(spec.gamma_inter, p4d.gamma_inter);
+    }
+}

@@ -1,0 +1,30 @@
+//! Routing-trace capture & deterministic replay (system S8).
+//!
+//! Production MoE systems evaluate routing/placement policies against
+//! *recorded* traffic rather than live runs; this module is that
+//! substrate, and doubles as the repo's strongest regression tool:
+//!
+//! - [`format`]: the `RoutingTrace` JSONL schema — per-step per-expert
+//!   dispatch histograms, drop rates, node histograms, and committed
+//!   rebalance decisions; bit-exact round-trip through `util::json`.
+//! - [`record`]: the `TraceRecorder` the trainer (`smile train
+//!   --trace`) and the simtrain scenario generators write through.
+//! - [`scenario`]: deterministic synthetic traffic (uniform / Zipf /
+//!   hot-expert burst) sampled with the seeded xoshiro RNG.
+//! - [`replay`]: the `TraceReplayer` that drives `LoadTracker` ->
+//!   `Rebalancer` -> `price_placement` over a recorded trace and emits
+//!   a per-step timeline plus an end-of-trace `ReplaySummary`.
+//!
+//! Golden traces live under `rust/tests/data/`; their replay summaries
+//! are exact fixtures (see `rust/tests/trace_golden.rs` and the
+//! ROADMAP `## trace` section for the blessing procedure).
+
+pub mod format;
+pub mod record;
+pub mod replay;
+pub mod scenario;
+
+pub use format::{RoutingTrace, TraceDecision, TraceMeta, TraceStep, TRACE_VERSION};
+pub use record::TraceRecorder;
+pub use replay::{ReplayResult, ReplayStepOutcome, ReplaySummary, TraceReplayer};
+pub use scenario::{record_scenario, Scenario, ScenarioConfig};

@@ -1,0 +1,164 @@
+//! `TraceRecorder` — the capture side of the trace subsystem.  The
+//! trainer feeds it the per-call routing metrics it already extracts
+//! (`last_expert_frac` / `last_node_frac` / `dropped_frac`); the
+//! simtrain scenario generators feed it synthetic dispatch histograms;
+//! a live `Rebalancer`'s committed decisions are appended inline so a
+//! trace documents both the traffic *and* what the policy did about it.
+
+use super::format::{RoutingTrace, TraceDecision, TraceMeta, TraceStep};
+use crate::placement::RebalanceDecision;
+
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    trace: RoutingTrace,
+    skipped: usize,
+}
+
+impl TraceRecorder {
+    pub fn new(meta: TraceMeta) -> TraceRecorder {
+        TraceRecorder { trace: RoutingTrace::new(meta), skipped: 0 }
+    }
+
+    pub fn meta(&self) -> &TraceMeta {
+        &self.trace.meta
+    }
+
+    /// Steps dropped because they contained non-finite values.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    pub fn len(&self) -> usize {
+        self.trace.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trace.steps.is_empty()
+    }
+
+    /// Record one step's routing picture.  Histograms may be token
+    /// counts or fractions.  A step containing a non-finite value is
+    /// skipped (it would not survive the JSONL round trip) — the same
+    /// policy `LoadTracker::observe` applies, so a divergent training
+    /// step degrades the trace instead of panicking the run; the skip
+    /// count is reported in [`TraceRecorder::skipped`].
+    pub fn record_step(
+        &mut self,
+        step: usize,
+        experts: &[f64],
+        nodes: &[f64],
+        dropped_frac: f64,
+        tokens: f64,
+    ) {
+        assert_eq!(experts.len(), self.trace.meta.num_experts, "expert arity mismatch");
+        assert_eq!(nodes.len(), self.trace.meta.n_nodes, "node arity mismatch");
+        if !(experts.iter().chain(nodes).all(|v| v.is_finite())
+            && dropped_frac.is_finite()
+            && tokens.is_finite())
+        {
+            self.skipped += 1;
+            return;
+        }
+        self.trace.steps.push(TraceStep {
+            step,
+            experts: experts.to_vec(),
+            nodes: nodes.to_vec(),
+            dropped_frac,
+            tokens,
+        });
+    }
+
+    /// Record the trainer's f32 routing metrics (widened losslessly).
+    pub fn record_f32(
+        &mut self,
+        step: usize,
+        experts: &[f32],
+        nodes: &[f32],
+        dropped_frac: f32,
+        tokens: f64,
+    ) {
+        let e: Vec<f64> = experts.iter().map(|&x| x as f64).collect();
+        let n: Vec<f64> = nodes.iter().map(|&x| x as f64).collect();
+        self.record_step(step, &e, &n, dropped_frac as f64, tokens);
+    }
+
+    /// Record a committed rebalance from the live policy.
+    pub fn record_decision(&mut self, d: &RebalanceDecision) {
+        self.trace.decisions.push(TraceDecision {
+            step: d.step,
+            migrated_replicas: d.migrated_replicas,
+            comm_before: d.comm_before,
+            comm_after: d.comm_after,
+            migration_secs: d.migration_secs,
+            placement: d.placement.clone(),
+        });
+    }
+
+    pub fn trace(&self) -> &RoutingTrace {
+        &self.trace
+    }
+
+    pub fn finish(self) -> RoutingTrace {
+        self.trace
+    }
+
+    pub fn write_jsonl(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        self.trace.write_jsonl(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::format::TRACE_VERSION;
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            version: TRACE_VERSION,
+            scenario: "unit".into(),
+            seed: 1,
+            n_nodes: 2,
+            gpus_per_node: 1,
+            num_experts: 2,
+            tokens_per_step: 4,
+            capacity: 4,
+            payload_per_gpu: 1e6,
+        }
+    }
+
+    #[test]
+    fn records_steps_and_roundtrips() {
+        let mut r = TraceRecorder::new(meta());
+        assert!(r.is_empty());
+        r.record_step(0, &[3.0, 1.0], &[3.0, 1.0], 0.0, 4.0);
+        r.record_f32(1, &[0.5, 0.5], &[0.25, 0.75], 0.125, 4.0);
+        assert_eq!(r.len(), 2);
+        let t = r.finish();
+        let back = RoutingTrace::from_jsonl(&t.to_jsonl()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.steps[1].experts, vec![0.5, 0.5]);
+        assert_eq!(back.steps[1].dropped_frac, 0.125);
+    }
+
+    #[test]
+    fn skips_nonfinite_steps_without_panicking() {
+        let mut r = TraceRecorder::new(meta());
+        r.record_step(0, &[f64::NAN, 1.0], &[1.0, 1.0], 0.0, 2.0);
+        r.record_step(1, &[1.0, 1.0], &[f64::INFINITY, 1.0], 0.0, 2.0);
+        r.record_f32(2, &[0.5, f32::NAN], &[0.5, 0.5], 0.0, 2.0);
+        assert!(r.is_empty(), "non-finite steps must not land in the trace");
+        assert_eq!(r.skipped(), 3);
+        // a good step afterwards still records, so the trace degrades
+        // instead of dying with the divergent step
+        r.record_step(3, &[1.0, 3.0], &[1.0, 3.0], 0.0, 4.0);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.trace().steps[0].step, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_wrong_arity() {
+        let mut r = TraceRecorder::new(meta());
+        r.record_step(0, &[1.0], &[1.0, 1.0], 0.0, 1.0);
+    }
+}

@@ -1,0 +1,299 @@
+//! Deterministic trace replay: feed a recorded `RoutingTrace` through
+//! the same `LoadTracker` -> `Rebalancer` -> `price_placement` pipeline
+//! the live trainer consults, producing a per-step cost/imbalance/
+//! decision timeline and an end-of-trace summary.
+//!
+//! Replay is a pure function of (trace, policy): every step performs
+//! the trainer's exact sequence — observe the step histogram, consult
+//! the policy at the recorded step number, then price one dispatch hop
+//! of the (possibly just-updated) placement under that step's traffic.
+//! Two replays of the same trace therefore produce byte-identical
+//! summaries, and the summaries double as regression fixtures: any
+//! change to rebalance gates, congestion pricing, or EWMA semantics
+//! shifts a summary and fails the golden tests in
+//! `rust/tests/trace_golden.rs` instead of silently moving bench
+//! numbers.
+
+use super::format::RoutingTrace;
+use crate::netsim::topology::ClusterSpec;
+use crate::obj;
+use crate::placement::{price_placement, PlacementMap, RebalancePolicy, Rebalancer};
+use crate::util::json::Json;
+
+/// One replayed step of the timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayStepOutcome {
+    pub step: usize,
+    /// Tracker (EWMA) expert-level imbalance after this observation.
+    pub expert_imbalance: f64,
+    /// Node-level imbalance of the current placement under the
+    /// tracked loads.
+    pub node_imbalance: f64,
+    /// One dispatch hop's priced comm time (s) of the current
+    /// placement under THIS step's recorded histogram.
+    pub comm_time: f64,
+    /// Hottest-GPU straggler multiplier under this step's histogram.
+    pub compute_scale: f64,
+    /// Whether the policy committed a rebalance at this step.
+    pub rebalanced: bool,
+    pub migrated_replicas: usize,
+}
+
+/// End-of-trace roll-up — the golden-fixture payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplaySummary {
+    pub steps: usize,
+    /// Histograms the tracker actually folded in (degenerate ones are
+    /// skipped and do not advance the EWMA).
+    pub observed_steps: usize,
+    pub rebalances: usize,
+    pub rebalance_steps: Vec<usize>,
+    pub migrated_replicas: usize,
+    /// Total one-off migration time (s) across committed rebalances.
+    pub migration_secs: f64,
+    /// Expert-weight bytes moved: migrated replicas * expert_bytes.
+    pub migration_bytes: f64,
+    /// Total priced dispatch comm (s) over the trace under the
+    /// replayed (rebalancing) placement: sum of per-hop comm *
+    /// hops_per_step.
+    pub total_comm_secs: f64,
+    /// Same total under the frozen paper block placement — the
+    /// baseline the rebalancer is judged against.
+    pub static_comm_secs: f64,
+    /// Last step's per-hop comm time under the final placement.
+    pub final_comm_time: f64,
+    pub final_expert_imbalance: f64,
+    pub final_node_imbalance: f64,
+    pub mean_dropped_frac: f64,
+    /// Experts with > 1 replica in the final placement.
+    pub replicated_experts: usize,
+}
+
+impl ReplaySummary {
+    pub fn to_json(&self) -> Json {
+        obj! {
+            "steps" => self.steps,
+            "observed_steps" => self.observed_steps,
+            "rebalances" => self.rebalances,
+            "rebalance_steps" => self.rebalance_steps.clone(),
+            "migrated_replicas" => self.migrated_replicas,
+            "migration_secs" => self.migration_secs,
+            "migration_bytes" => self.migration_bytes,
+            "total_comm_secs" => self.total_comm_secs,
+            "static_comm_secs" => self.static_comm_secs,
+            "final_comm_time" => self.final_comm_time,
+            "final_expert_imbalance" => self.final_expert_imbalance,
+            "final_node_imbalance" => self.final_node_imbalance,
+            "mean_dropped_frac" => self.mean_dropped_frac,
+            "replicated_experts" => self.replicated_experts,
+        }
+    }
+}
+
+/// Result of replaying a whole trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayResult {
+    pub timeline: Vec<ReplayStepOutcome>,
+    pub summary: ReplaySummary,
+    pub final_placement: PlacementMap,
+}
+
+/// Stateful replayer; use [`TraceReplayer::replay`] for the one-shot
+/// whole-trace form.
+#[derive(Debug, Clone)]
+pub struct TraceReplayer {
+    pub spec: ClusterSpec,
+    pub payload: f64,
+    pub rebalancer: Rebalancer,
+    block: PlacementMap,
+    timeline: Vec<ReplayStepOutcome>,
+    rebalance_steps: Vec<usize>,
+    migrated_replicas: usize,
+    migration_secs: f64,
+    total_comm_secs: f64,
+    static_comm_secs: f64,
+    dropped_sum: f64,
+}
+
+impl TraceReplayer {
+    pub fn new(trace: &RoutingTrace, policy: RebalancePolicy) -> TraceReplayer {
+        let spec = trace.meta.cluster_spec();
+        let num_experts = trace.meta.num_experts.max(1);
+        let payload = trace.meta.payload_per_gpu;
+        let rebalancer = Rebalancer::new(policy, spec.clone(), num_experts, payload);
+        let block = PlacementMap::block(&spec, num_experts);
+        TraceReplayer {
+            spec,
+            payload,
+            rebalancer,
+            block,
+            timeline: Vec::new(),
+            rebalance_steps: Vec::new(),
+            migrated_replicas: 0,
+            migration_secs: 0.0,
+            total_comm_secs: 0.0,
+            static_comm_secs: 0.0,
+            dropped_sum: 0.0,
+        }
+    }
+
+    /// Replay one recorded step (the trainer's exact sequence:
+    /// observe, consult, price).
+    pub fn step(&mut self, rec: &super::format::TraceStep) -> ReplayStepOutcome {
+        let rb = &mut self.rebalancer;
+        rb.observe(&rec.experts);
+        let decision = rb.maybe_rebalance(rec.step);
+        let (rebalanced, migrated) = match &decision {
+            Some(d) => {
+                self.rebalance_steps.push(d.step);
+                self.migrated_replicas += d.migrated_replicas;
+                self.migration_secs += d.migration_secs;
+                (true, d.migrated_replicas)
+            }
+            None => (false, 0),
+        };
+        let frac = rb.tracker.fractions();
+        let node_imbalance =
+            crate::util::stats::imbalance(&rb.current.node_loads(&frac));
+        let cost = price_placement(&rb.current, &rec.experts, &self.spec, self.payload);
+        let static_cost = price_placement(&self.block, &rec.experts, &self.spec, self.payload);
+        let hops = rb.policy.hops_per_step;
+        self.total_comm_secs += cost.comm_total() * hops;
+        self.static_comm_secs += static_cost.comm_total() * hops;
+        self.dropped_sum += rec.dropped_frac;
+        let out = ReplayStepOutcome {
+            step: rec.step,
+            expert_imbalance: rb.tracker.imbalance(),
+            node_imbalance,
+            comm_time: cost.comm_total(),
+            compute_scale: cost.compute_scale,
+            rebalanced,
+            migrated_replicas: migrated,
+        };
+        self.timeline.push(out.clone());
+        out
+    }
+
+    /// Roll the replayed state into the summary + timeline.
+    pub fn finish(self) -> ReplayResult {
+        let rb = self.rebalancer;
+        let frac = rb.tracker.fractions();
+        let final_node_imbalance =
+            crate::util::stats::imbalance(&rb.current.node_loads(&frac));
+        let replicated_experts =
+            (0..rb.current.num_experts()).filter(|&e| rb.current.gpus_of(e).len() > 1).count();
+        let steps = self.timeline.len();
+        let summary = ReplaySummary {
+            steps,
+            observed_steps: rb.tracker.steps(),
+            rebalances: self.rebalance_steps.len(),
+            rebalance_steps: self.rebalance_steps,
+            migrated_replicas: self.migrated_replicas,
+            migration_secs: self.migration_secs,
+            migration_bytes: self.migrated_replicas as f64 * rb.policy.expert_bytes,
+            total_comm_secs: self.total_comm_secs,
+            static_comm_secs: self.static_comm_secs,
+            final_comm_time: self.timeline.last().map_or(0.0, |o| o.comm_time),
+            final_expert_imbalance: rb.tracker.imbalance(),
+            final_node_imbalance,
+            mean_dropped_frac: self.dropped_sum / steps.max(1) as f64,
+            replicated_experts,
+        };
+        ReplayResult { timeline: self.timeline, summary, final_placement: rb.current }
+    }
+
+    /// One-shot whole-trace replay.
+    pub fn replay(trace: &RoutingTrace, policy: RebalancePolicy) -> ReplayResult {
+        let mut r = TraceReplayer::new(trace, policy);
+        for s in &trace.steps {
+            r.step(s);
+        }
+        r.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::scenario::{record_scenario, Scenario, ScenarioConfig};
+
+    fn cfg(scenario: Scenario, steps: usize) -> ScenarioConfig {
+        ScenarioConfig {
+            scenario,
+            n_nodes: 2,
+            gpus_per_node: 4,
+            steps,
+            tokens_per_step: 512,
+            capacity_factor: 2.0,
+            payload_per_gpu: 1e6,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic_and_stable_across_serialization() {
+        let trace = record_scenario(&cfg(Scenario::Zipf { s: 1.4 }, 120), None);
+        let a = TraceReplayer::replay(&trace, RebalancePolicy::default());
+        let b = TraceReplayer::replay(&trace, RebalancePolicy::default());
+        assert_eq!(a, b);
+        // byte-identical summaries, as the acceptance criterion states
+        assert_eq!(
+            a.summary.to_json().to_string_pretty(),
+            b.summary.to_json().to_string_pretty()
+        );
+        // and through a serialize/deserialize cycle
+        let back = RoutingTrace::from_jsonl(&trace.to_jsonl()).unwrap();
+        let c = TraceReplayer::replay(&back, RebalancePolicy::default());
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn uniform_trace_never_rebalances() {
+        let trace = record_scenario(&cfg(Scenario::Uniform, 120), None);
+        let r = TraceReplayer::replay(&trace, RebalancePolicy::default());
+        assert_eq!(r.summary.rebalances, 0);
+        assert!(r.summary.rebalance_steps.is_empty());
+        assert_eq!(r.summary.migrated_replicas, 0);
+        assert_eq!(r.summary.migration_secs, 0.0);
+        // without skew the rebalanced total equals the static total
+        assert_eq!(r.summary.total_comm_secs, r.summary.static_comm_secs);
+        assert_eq!(r.final_placement, PlacementMap::block(&r.spec, 8));
+    }
+
+    #[test]
+    fn skewed_trace_rebalances_and_beats_static() {
+        let trace = record_scenario(&cfg(Scenario::Zipf { s: 1.4 }, 120), None);
+        let r = TraceReplayer::replay(&trace, RebalancePolicy::default());
+        assert!(r.summary.rebalances >= 1, "{:?}", r.summary);
+        assert!(r.summary.total_comm_secs < r.summary.static_comm_secs, "{:?}", r.summary);
+        assert!(r.summary.migration_bytes > 0.0);
+        assert_eq!(r.summary.observed_steps, 120);
+        // the timeline marks exactly the rebalance steps
+        let marked: Vec<usize> = r
+            .timeline
+            .iter()
+            .filter(|o| o.rebalanced)
+            .map(|o| o.step)
+            .collect();
+        assert_eq!(marked, r.summary.rebalance_steps);
+    }
+
+    #[test]
+    fn empty_trace_yields_neutral_summary() {
+        let trace = record_scenario(&cfg(Scenario::Uniform, 0), None);
+        let r = TraceReplayer::replay(&trace, RebalancePolicy::default());
+        assert_eq!(r.summary.steps, 0);
+        assert_eq!(r.summary.final_comm_time, 0.0);
+        assert_eq!(r.summary.mean_dropped_frac, 0.0);
+        assert!((r.summary.final_expert_imbalance - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_json_roundtrips_through_parser() {
+        let trace = record_scenario(&cfg(Scenario::Zipf { s: 1.2 }, 60), None);
+        let r = TraceReplayer::replay(&trace, RebalancePolicy::default());
+        let text = r.summary.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed, r.summary.to_json());
+    }
+}

@@ -1,0 +1,215 @@
+//! Synthetic routing scenarios — the simtrain-side trace source.  Each
+//! scenario defines per-step expert weights; tokens are drawn from
+//! them with the seeded xoshiro RNG, pushed through a capacity-bounded
+//! `DispatchPlan` for drop accounting, and recorded as a
+//! `RoutingTrace`.  Everything on this path is integer sampling plus
+//! rational arithmetic, so a (scenario, seed) pair reproduces its
+//! trace bit-for-bit on every platform — the property the golden
+//! fixtures under `rust/tests/data/` rely on.
+
+use super::format::{RoutingTrace, TraceMeta, TRACE_VERSION};
+use super::record::TraceRecorder;
+use crate::moe::dispatch::{demand_histogram, DispatchPlan, Top1};
+use crate::placement::{zipf_fractions, RebalancePolicy, Rebalancer};
+use crate::util::rng::Rng;
+
+/// A synthetic traffic shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scenario {
+    /// Flat expert weights — the healthy-router baseline.
+    Uniform,
+    /// Zipf(s) expert weights, rank-ordered (expert 0 hottest).
+    Zipf { s: f64 },
+    /// Zipf(s) base with one expert's weight multiplied by `boost`
+    /// during steps [start, end) — the mid-trace hot-expert burst.
+    Burst { s: f64, hot_expert: usize, boost: f64, start: usize, end: usize },
+}
+
+impl Scenario {
+    pub fn name(&self) -> String {
+        match self {
+            Scenario::Uniform => "uniform".into(),
+            Scenario::Zipf { s } => format!("zipf({s})"),
+            Scenario::Burst { s, hot_expert, boost, start, end } => {
+                format!("burst(s={s},hot={hot_expert},boost={boost},steps={start}..{end})")
+            }
+        }
+    }
+
+    /// Unnormalized expert weights at `step`.
+    pub fn step_weights(&self, num_experts: usize, step: usize) -> Vec<f64> {
+        match self {
+            Scenario::Uniform => vec![1.0; num_experts],
+            Scenario::Zipf { s } => zipf_fractions(num_experts, *s),
+            Scenario::Burst { s, hot_expert, boost, start, end } => {
+                let mut w = zipf_fractions(num_experts, *s);
+                if (*start..*end).contains(&step) {
+                    w[*hot_expert % num_experts] *= boost;
+                }
+                w
+            }
+        }
+    }
+}
+
+/// Geometry + knobs of a scenario recording (one expert per GPU, the
+/// paper's shape: num_experts = n_nodes * gpus_per_node).
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub scenario: Scenario,
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    pub steps: usize,
+    pub tokens_per_step: usize,
+    /// Per-expert capacity factor (capacity = factor * tokens /
+    /// experts, floored at 1 so a real capacity always exists — 0 is
+    /// the trace header's "uncapped" marker and is never produced
+    /// here).
+    pub capacity_factor: f64,
+    pub payload_per_gpu: f64,
+    pub seed: u64,
+}
+
+impl ScenarioConfig {
+    pub fn num_experts(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    pub fn capacity(&self) -> usize {
+        let cap = self.capacity_factor * self.tokens_per_step as f64
+            / self.num_experts() as f64;
+        (cap as usize).max(1)
+    }
+
+    pub fn meta(&self) -> TraceMeta {
+        TraceMeta {
+            version: TRACE_VERSION,
+            scenario: self.scenario.name(),
+            seed: self.seed,
+            n_nodes: self.n_nodes,
+            gpus_per_node: self.gpus_per_node,
+            num_experts: self.num_experts(),
+            tokens_per_step: self.tokens_per_step,
+            capacity: self.capacity(),
+            payload_per_gpu: self.payload_per_gpu,
+        }
+    }
+}
+
+/// Record a synthetic scenario: per step, draw `tokens_per_step`
+/// expert choices from the scenario weights, extract the demand
+/// histogram, apply capacity for the drop rate, and aggregate node
+/// demand under the paper's expert->node identity (e / m).  When
+/// `policy` is given, a live `Rebalancer` runs alongside (exactly as
+/// the trainer would drive it) and its committed decisions land in the
+/// trace.
+pub fn record_scenario(cfg: &ScenarioConfig, policy: Option<&RebalancePolicy>) -> RoutingTrace {
+    let e_total = cfg.num_experts();
+    let capacity = cfg.capacity();
+    let mut rec = TraceRecorder::new(cfg.meta());
+    let mut rb = policy.map(|p| {
+        Rebalancer::new(p.clone(), cfg.meta().cluster_spec(), e_total, cfg.payload_per_gpu)
+    });
+    let mut rng = Rng::new(cfg.seed);
+    for step in 0..cfg.steps {
+        let w = cfg.scenario.step_weights(e_total, step);
+        let choices: Vec<Top1> = (0..cfg.tokens_per_step)
+            .map(|_| Top1 { expert: rng.weighted(&w), gate: 1.0 })
+            .collect();
+        let experts = demand_histogram(&choices, e_total);
+        let plan = DispatchPlan::build(&choices, e_total, capacity);
+        let dropped_frac = plan.dropped() as f64 / cfg.tokens_per_step.max(1) as f64;
+        let mut nodes = vec![0.0f64; cfg.n_nodes];
+        for (e, &c) in experts.iter().enumerate() {
+            nodes[e / cfg.gpus_per_node] += c;
+        }
+        rec.record_step(step, &experts, &nodes, dropped_frac, cfg.tokens_per_step as f64);
+        if let Some(rb) = rb.as_mut() {
+            rb.observe(&experts);
+            if let Some(d) = rb.maybe_rebalance(step) {
+                rec.record_decision(&d);
+            }
+        }
+    }
+    rec.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(scenario: Scenario) -> ScenarioConfig {
+        ScenarioConfig {
+            scenario,
+            n_nodes: 2,
+            gpus_per_node: 4,
+            steps: 10,
+            tokens_per_step: 256,
+            capacity_factor: 2.0,
+            payload_per_gpu: 1e6,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn record_is_deterministic() {
+        let c = cfg(Scenario::Zipf { s: 1.2 });
+        let a = record_scenario(&c, None);
+        let b = record_scenario(&c, None);
+        assert_eq!(a, b);
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+        // a different seed moves at least one histogram
+        let mut c2 = c.clone();
+        c2.seed = 10;
+        assert_ne!(record_scenario(&c2, None), a);
+    }
+
+    #[test]
+    fn histograms_account_for_every_token() {
+        let t = record_scenario(&cfg(Scenario::Uniform), None);
+        assert_eq!(t.steps.len(), 10);
+        for s in &t.steps {
+            assert_eq!(s.experts.iter().sum::<f64>(), 256.0);
+            assert_eq!(s.nodes.iter().sum::<f64>(), 256.0);
+            assert!((0.0..=1.0).contains(&s.dropped_frac));
+        }
+    }
+
+    #[test]
+    fn burst_shifts_load_only_inside_its_window() {
+        let c = cfg(Scenario::Burst { s: 0.0, hot_expert: 1, boost: 16.0, start: 4, end: 7 });
+        let t = record_scenario(&c, None);
+        let hot_share = |s: &crate::trace::TraceStep| s.experts[1] / 256.0;
+        // inside the burst expert 1 dominates; outside it does not
+        for (i, s) in t.steps.iter().enumerate() {
+            if (4..7).contains(&i) {
+                assert!(hot_share(s) > 0.4, "step {i}: {}", hot_share(s));
+            } else {
+                assert!(hot_share(s) < 0.4, "step {i}: {}", hot_share(s));
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_scenario_skews_and_drops() {
+        let t = record_scenario(&cfg(Scenario::Zipf { s: 1.5 }), None);
+        // expert 0 is rank-hottest; capacity 64 of 256 tokens forces drops
+        let s0 = &t.steps[0];
+        assert!(s0.experts[0] > s0.experts[7], "{:?}", s0.experts);
+        assert!(t.mean_dropped_frac() > 0.0);
+    }
+
+    #[test]
+    fn live_policy_decisions_land_in_the_trace() {
+        let mut c = cfg(Scenario::Zipf { s: 1.5 });
+        c.steps = 120;
+        let mut policy = RebalancePolicy::default();
+        policy.check_every = 25;
+        let t = record_scenario(&c, Some(&policy));
+        assert!(!t.decisions.is_empty(), "skewed scenario never rebalanced");
+        let d = &t.decisions[0];
+        assert!(d.comm_after < d.comm_before);
+        // and the augmented trace still round-trips exactly
+        assert_eq!(RoutingTrace::from_jsonl(&t.to_jsonl()).unwrap(), t);
+    }
+}

@@ -17,6 +17,7 @@ use crate::metrics::StepLog;
 use crate::netsim::ClusterSpec;
 use crate::placement::{RebalancePolicy, Rebalancer};
 use crate::runtime::{ArtifactConfig, Loaded, Runtime, Tensor};
+use crate::trace::{TraceMeta, TraceRecorder, TRACE_VERSION};
 
 pub struct Trainer {
     pub cfg: ArtifactConfig,
@@ -31,6 +32,10 @@ pub struct Trainer {
     /// optional placement rebalancer consulted after every train_call
     /// (see `enable_rebalancing`)
     pub rebalancer: Option<Rebalancer>,
+    /// optional routing-trace capture (see `enable_trace_recording`):
+    /// every optimizer step's expert/node routing fractions and drop
+    /// rate land in the trace, plus any rebalance the policy commits
+    pub trace_recorder: Option<TraceRecorder>,
     metric_names: Vec<String>,
 }
 
@@ -61,6 +66,7 @@ impl Trainer {
             last_expert_frac: Vec::new(),
             last_node_frac: Vec::new(),
             rebalancer: None,
+            trace_recorder: None,
         })
     }
 
@@ -93,6 +99,31 @@ impl Trainer {
             4,
         );
         self.rebalancer = Some(Rebalancer::new(policy, spec, num_experts, payload));
+    }
+
+    /// Capture every optimizer step's routing picture as a
+    /// `RoutingTrace` (`smile train --trace out.jsonl`).  Uses the
+    /// artifact's cluster shape like `enable_rebalancing`, and the
+    /// same hop payload, so a recorded trace replays against the
+    /// pricing model the trainer itself consults.
+    pub fn enable_trace_recording(&mut self) {
+        let payload = crate::moe::a2a_payload_bytes(
+            self.cfg.micro_batch * self.cfg.seq_len,
+            self.cfg.hidden_size,
+            self.cfg.capacity_factor.max(1.0),
+            4,
+        );
+        self.trace_recorder = Some(TraceRecorder::new(TraceMeta {
+            version: TRACE_VERSION,
+            scenario: format!("train {}", self.cfg.name),
+            seed: 0,
+            n_nodes: self.cfg.n_nodes.max(1),
+            gpus_per_node: self.cfg.gpus_per_node.max(1),
+            num_experts: self.cfg.num_experts.max(1),
+            tokens_per_step: self.cfg.accum_steps * self.cfg.micro_batch * self.cfg.seq_len,
+            capacity: 0,
+            payload_per_gpu: payload,
+        }));
     }
 
     pub fn param_count(&self) -> usize {
@@ -186,11 +217,44 @@ impl Trainer {
         self.last_expert_frac = ef.as_f32()?[(k - 1) * e..].to_vec();
         self.last_node_frac = nf.as_f32()?[(k - 1) * n..].to_vec();
 
+        let mut disable_recorder = false;
+        if let Some(rec) = self.trace_recorder.as_mut() {
+            if e == rec.meta().num_experts && n == rec.meta().n_nodes {
+                let ef_all = ef.as_f32()?;
+                let nf_all = nf.as_f32()?;
+                let tokens = (a * b * s) as f64;
+                let base = self.step - k;
+                for ki in 0..k {
+                    rec.record_f32(
+                        base + ki,
+                        &ef_all[ki * e..(ki + 1) * e],
+                        &nf_all[ki * n..(ki + 1) * n],
+                        logs[ki].dropped_frac,
+                        tokens,
+                    );
+                }
+            } else {
+                log::warn!(
+                    "disabling trace recorder: artifact reports {e} expert / {n} node \
+                     fractions but the trace header declares {} / {}",
+                    rec.meta().num_experts,
+                    rec.meta().n_nodes
+                );
+                disable_recorder = true;
+            }
+        }
+        if disable_recorder {
+            self.trace_recorder = None;
+        }
+
         let mut disable_rebalancer = false;
         if let Some(rb) = self.rebalancer.as_mut() {
             if self.last_expert_frac.len() == rb.tracker.num_experts() {
                 rb.observe_f32(&self.last_expert_frac);
                 if let Some(d) = rb.maybe_rebalance(self.step) {
+                    if let Some(rec) = self.trace_recorder.as_mut() {
+                        rec.record_decision(&d);
+                    }
                     log::info!(
                         "rebalanced expert placement at step {}: hop comm {:.3} ms -> {:.3} ms \
                          ({} replica moves, migration {:.3} ms)",

@@ -7,6 +7,7 @@ use smile::netsim::collectives::{all2all_flat, all2all_inter, all2all_intra, all
 use smile::netsim::{ClusterSpec, DagSim};
 use smile::placement::{self, PlacementMap, RebalancePolicy};
 use smile::prop_assert;
+use smile::trace::{record_scenario, RoutingTrace, Scenario, ScenarioConfig, TraceReplayer};
 use smile::util::json::Json;
 use smile::util::proptest::{check, Config};
 use smile::util::rng::Rng;
@@ -393,6 +394,123 @@ fn prop_placed_plan_conserves_tokens() {
                     (a, g) => prop_assert!(false, "token {t}: {a:?} vs {g:?}"),
                 }
             }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// trace capture / replay determinism
+// ---------------------------------------------------------------------------
+
+fn random_scenario(rng: &mut Rng) -> ScenarioConfig {
+    let steps = 1 + rng.below(60) as usize;
+    let scenario = match rng.below(3) {
+        0 => Scenario::Uniform,
+        1 => Scenario::Zipf { s: rng.f64() * 1.8 },
+        _ => {
+            let start = rng.below(steps as u64) as usize;
+            Scenario::Burst {
+                s: rng.f64(),
+                hot_expert: rng.below(64) as usize,
+                boost: 1.0 + rng.f64() * 15.0,
+                start,
+                end: start + rng.below(steps as u64 + 1) as usize,
+            }
+        }
+    };
+    ScenarioConfig {
+        scenario,
+        n_nodes: 1 + rng.below(4) as usize,
+        gpus_per_node: 1 + rng.below(8) as usize,
+        steps,
+        tokens_per_step: 16 + rng.below(400) as usize,
+        capacity_factor: 0.5 + rng.f64() * 2.0,
+        payload_per_gpu: 1e5 + rng.f64() * 1e7,
+        seed: rng.next_u64() >> 12,
+    }
+}
+
+#[test]
+fn prop_trace_jsonl_roundtrip_bitwise() {
+    check(
+        "trace: record -> serialize -> parse preserves every value bit-for-bit",
+        &cfg(),
+        random_scenario,
+        |sc| {
+            let policy = RebalancePolicy { check_every: 10, ..RebalancePolicy::default() };
+            let trace = record_scenario(sc, Some(&policy));
+            let text = trace.to_jsonl();
+            let back = match RoutingTrace::from_jsonl(&text) {
+                Ok(t) => t,
+                Err(e) => {
+                    prop_assert!(false, "reader rejected its own writer: {e}");
+                    unreachable!()
+                }
+            };
+            prop_assert!(back.meta == trace.meta, "meta changed");
+            prop_assert!(back.decisions == trace.decisions, "decisions changed");
+            prop_assert!(back.steps.len() == trace.steps.len(), "step count changed");
+            for (a, b) in back.steps.iter().zip(&trace.steps) {
+                for (x, y) in a.experts.iter().zip(&b.experts) {
+                    prop_assert!(x.to_bits() == y.to_bits(), "expert bin {x} != {y}");
+                }
+                for (x, y) in a.nodes.iter().zip(&b.nodes) {
+                    prop_assert!(x.to_bits() == y.to_bits(), "node bin {x} != {y}");
+                }
+                prop_assert!(
+                    a.dropped_frac.to_bits() == b.dropped_frac.to_bits(),
+                    "drop rate changed"
+                );
+            }
+            // serialization is a fixed point (idempotent)
+            prop_assert!(back.to_jsonl() == text, "re-serialization drifted");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_replay_deterministic_across_serialization() {
+    check(
+        "trace: replay(parse(serialize(t))) twice == identical decision timelines",
+        &cfg(),
+        random_scenario,
+        |sc| {
+            let trace = record_scenario(sc, None);
+            let back = match RoutingTrace::from_jsonl(&trace.to_jsonl()) {
+                Ok(t) => t,
+                Err(e) => {
+                    prop_assert!(false, "round-trip failed: {e}");
+                    unreachable!()
+                }
+            };
+            let a = TraceReplayer::replay(&trace, RebalancePolicy::default());
+            let b = TraceReplayer::replay(&back, RebalancePolicy::default());
+            let c = TraceReplayer::replay(&back, RebalancePolicy::default());
+            prop_assert!(a == b, "replay differs across a serialization cycle");
+            prop_assert!(b == c, "replay is not deterministic");
+            prop_assert!(
+                a.summary.to_json().to_string() == c.summary.to_json().to_string(),
+                "summaries not byte-identical"
+            );
+            prop_assert!(
+                a.timeline.len() == trace.steps.len(),
+                "timeline arity {} != {}",
+                a.timeline.len(),
+                trace.steps.len()
+            );
+            // summary internal consistency
+            let marked = a.timeline.iter().filter(|o| o.rebalanced).count();
+            prop_assert!(
+                marked == a.summary.rebalances,
+                "timeline marks {marked} != summary {}",
+                a.summary.rebalances
+            );
+            prop_assert!(
+                a.summary.observed_steps <= a.summary.steps,
+                "observed > steps"
+            );
             Ok(())
         },
     );

@@ -1,0 +1,103 @@
+//! Golden-trace regression tests: three recorded routing traces
+//! (uniform, Zipf(1.2), mid-trace hot-expert burst) live under
+//! `tests/data/`, and their replay summaries under the default
+//! `RebalancePolicy` are exact fixtures.  Any change to the rebalance
+//! gates, the congestion pricing, the EWMA semantics, or the placement
+//! pipeline shifts a summary value and fails here — instead of
+//! silently moving bench numbers.
+//!
+//! Comparison happens on *parsed* JSON (exact f64 equality), so a
+//! fixture never fails on number formatting — only on value drift.
+//!
+//! Updating fixtures after a deliberate policy/pricing change (run
+//! from `rust/`, where the manifest lives):
+//!   cargo run --release -- trace summarize --in tests/data/trace_uniform.jsonl --bless
+//! (repeat for trace_zipf12 / trace_burst), then review the diff.
+
+use smile::placement::RebalancePolicy;
+use smile::trace::{ReplayResult, RoutingTrace, TraceReplayer};
+use smile::util::json::Json;
+
+fn data_path(name: &str) -> String {
+    format!("{}/tests/data/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn replay_golden(name: &str) -> (ReplayResult, Json) {
+    let trace = RoutingTrace::read_jsonl(data_path(&format!("{name}.jsonl")))
+        .expect("golden trace parses");
+    let result = TraceReplayer::replay(&trace, RebalancePolicy::default());
+    let golden_text = std::fs::read_to_string(data_path(&format!("{name}.summary.json")))
+        .expect("golden summary exists");
+    let golden = Json::parse(&golden_text).expect("golden summary parses");
+    (result, golden)
+}
+
+fn assert_matches_golden(name: &str) -> ReplayResult {
+    let (result, golden) = replay_golden(name);
+    assert_eq!(
+        result.summary.to_json(),
+        golden,
+        "replay summary of {name} drifted from its golden fixture.\n\
+         If this change is deliberate, re-bless with (from rust/):\n  \
+         cargo run --release -- trace summarize --in tests/data/{name}.jsonl --bless\n\
+         got:\n{}",
+        result.summary.to_json().to_string_pretty()
+    );
+    // determinism: a second replay is byte-identical
+    let trace = RoutingTrace::read_jsonl(data_path(&format!("{name}.jsonl"))).unwrap();
+    let again = TraceReplayer::replay(&trace, RebalancePolicy::default());
+    assert_eq!(
+        again.summary.to_json().to_string_pretty(),
+        result.summary.to_json().to_string_pretty(),
+        "{name}: two replays of the same trace are not byte-identical"
+    );
+    result
+}
+
+#[test]
+fn golden_uniform_never_rebalances() {
+    let r = assert_matches_golden("trace_uniform");
+    assert_eq!(r.summary.rebalances, 0, "uniform traffic must not rebalance");
+    assert_eq!(r.summary.migrated_replicas, 0);
+    // without a commit the rebalanced and static totals coincide
+    assert_eq!(r.summary.total_comm_secs, r.summary.static_comm_secs);
+}
+
+#[test]
+fn golden_zipf_rebalances_and_beats_static() {
+    let r = assert_matches_golden("trace_zipf12");
+    assert!(r.summary.rebalances >= 1, "Zipf(1.2) skew must trigger a rebalance");
+    assert!(
+        r.summary.total_comm_secs < r.summary.static_comm_secs,
+        "rebalanced comm {} >= static {}",
+        r.summary.total_comm_secs,
+        r.summary.static_comm_secs
+    );
+    assert!(r.summary.migration_bytes > 0.0);
+}
+
+#[test]
+fn golden_burst_reacts_inside_the_burst_window() {
+    let r = assert_matches_golden("trace_burst");
+    assert!(r.summary.rebalances >= 1, "hot-expert burst must trigger a rebalance");
+    // the first reaction happens while the burst (steps 80..140) is
+    // live or at the first consult after it armed
+    let first = r.summary.rebalance_steps[0];
+    assert!(
+        (80..=150).contains(&first),
+        "first rebalance at {first}, expected within/just after the 80..140 burst"
+    );
+}
+
+#[test]
+fn golden_traces_parse_and_validate() {
+    for name in ["trace_uniform", "trace_zipf12", "trace_burst"] {
+        let trace = RoutingTrace::read_jsonl(data_path(&format!("{name}.jsonl"))).unwrap();
+        assert_eq!(trace.steps.len(), 200, "{name}: unexpected length");
+        assert_eq!(trace.meta.num_experts, 32);
+        assert_eq!(trace.meta.n_nodes, 4);
+        // serialization is a fixed point of the checked-in bytes
+        let text = std::fs::read_to_string(data_path(&format!("{name}.jsonl"))).unwrap();
+        assert_eq!(trace.to_jsonl(), text, "{name}: canonical form drifted");
+    }
+}

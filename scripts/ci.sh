@@ -2,7 +2,10 @@
 # CI entrypoints for the repo.
 #
 #   scripts/ci.sh              tier-1 gate: release build + tests + fmt check
-#   scripts/ci.sh gate         (same)
+#   scripts/ci.sh gate         (same; includes the trace-golden suite)
+#   scripts/ci.sh trace-golden golden-trace regression gate only: replay the
+#                              checked-in traces under rust/tests/data/ and
+#                              fail on any summary drift
 #   scripts/ci.sh bench-json   run the placement bench and write
 #                              BENCH_placement.json at the repo root for
 #                              the perf trajectory
@@ -26,7 +29,15 @@ case "$cmd" in
     cd "$repo_root/rust"
     cargo build --release
     cargo test -q
+    # explicit golden-trace pass: cargo test above already runs it, but
+    # drift in the fixtures must fail loudly with its own banner
+    cargo test -q --test trace_golden
     cargo fmt --check
+    ;;
+  trace-golden)
+    require_manifest
+    cd "$repo_root/rust"
+    cargo test -q --test trace_golden
     ;;
   bench-json)
     require_manifest
@@ -36,7 +47,7 @@ case "$cmd" in
     echo "wrote $repo_root/BENCH_placement.json"
     ;;
   *)
-    echo "usage: scripts/ci.sh [gate|bench-json]" >&2
+    echo "usage: scripts/ci.sh [gate|trace-golden|bench-json]" >&2
     exit 2
     ;;
 esac

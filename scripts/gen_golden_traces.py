@@ -1,0 +1,766 @@
+#!/usr/bin/env python3
+"""Offline generator for the golden trace fixtures under rust/tests/data/.
+
+This is a line-by-line Python mirror of the Rust trace record/replay
+path (rust/src/trace/{scenario,replay}.rs and the placement pipeline
+it drives).  Every operation on that path is pure IEEE-754 f64
+arithmetic plus sqrt — no libm transcendentals — so CPython doubles
+reproduce the Rust computation bit-for-bit, and the JSON emitted here
+matches `Json::to_string()` byte-for-byte (sorted keys, compact
+separators, integers printed without a fraction, shortest-round-trip
+decimals without exponents).
+
+This script exists to bootstrap the fixtures in environments without a
+Rust toolchain.  The canonical update procedure once `smile` builds is
+(from rust/, where the manifest lives)
+
+    cargo run --release -- trace summarize --in tests/data/<name>.jsonl --bless
+
+which must reproduce the same summaries (the golden test compares
+parsed JSON, so only value drift — never formatting — can fail it).
+"""
+
+import math
+import os
+
+MASK = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# util::rng — xoshiro256** seeded via SplitMix64
+# ---------------------------------------------------------------------------
+
+
+class Rng:
+    def __init__(self, seed):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (self._rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    @staticmethod
+    def _rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def weighted(self, weights):
+        total = 0.0
+        for w in weights:
+            total += w
+        x = self.f64() * total
+        for i, w in enumerate(weights):
+            x -= w
+            if x <= 0.0:
+                return i
+        return len(weights) - 1
+
+
+# ---------------------------------------------------------------------------
+# util::json — writer mirror (compact, sorted keys, Rust number display)
+# ---------------------------------------------------------------------------
+
+
+def fmt_num(x):
+    # Json::Num writer: integers below 1e15 print as i64, everything
+    # else via f64 Display (shortest round-trip, no exponent).
+    if math.fmod(x, 1.0) == 0.0 and abs(x) < 1e15:
+        return str(int(x))
+    s = repr(float(x))
+    if "e" not in s and "E" not in s:
+        return s
+    m, e = s.lower().split("e")
+    neg = m.startswith("-")
+    if neg:
+        m = m[1:]
+    exp = int(e)
+    int_part, _, frac_part = m.partition(".")
+    digits = int_part + frac_part
+    point = len(int_part) + exp
+    if point <= 0:
+        out = "0." + "0" * (-point) + digits
+    elif point >= len(digits):
+        out = digits + "0" * (point - len(digits))
+    else:
+        out = digits[:point] + "." + digits[point:]
+    return ("-" if neg else "") + out
+
+
+def emit(v):
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return fmt_num(float(v))
+    if isinstance(v, str):
+        out = ['"']
+        for c in v:
+            if c == '"':
+                out.append('\\"')
+            elif c == "\\":
+                out.append("\\\\")
+            elif c == "\n":
+                out.append("\\n")
+            elif c == "\r":
+                out.append("\\r")
+            elif c == "\t":
+                out.append("\\t")
+            elif ord(c) < 0x20:
+                out.append("\\u%04x" % ord(c))
+            else:
+                out.append(c)
+        out.append('"')
+        return "".join(out)
+    if isinstance(v, list):
+        return "[" + ",".join(emit(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(f"{emit(k)}:{emit(v[k])}" for k in sorted(v)) + "}"
+    raise TypeError(type(v))
+
+
+# ---------------------------------------------------------------------------
+# placement mirror: topology, pricing, solver, replication, rebalancer
+# ---------------------------------------------------------------------------
+
+
+class Spec:
+    """ClusterSpec::p4d(n) with an overridable gpus_per_node."""
+
+    def __init__(self, n_nodes, gpus_per_node):
+        self.n = n_nodes
+        self.m = gpus_per_node
+        self.inter_bw = 50e9
+        self.intra_bw = 600e9
+        self.inter_latency = 20e-6
+        self.intra_latency = 3e-6
+        self.launch_overhead = 10e-6
+        self.gamma_inter = 0.100
+        self.delta_max = 23.4
+        self.fabric_half_flows = 5000.0
+        self.gamma_intra = 0.89
+
+    def num_gpus(self):
+        return self.n * self.m
+
+    def node_of(self, g):
+        return g // self.m
+
+
+def zipf_fractions(e_total, s):
+    w = [float(e + 1) ** (-s) for e in range(e_total)]
+    total = 0.0
+    for x in w:
+        total += x
+    return [x / total for x in w]
+
+
+def imbalance(loads):
+    if not loads:
+        return 1.0
+    mean = 0.0
+    for x in loads:
+        mean += x
+    mean /= float(len(loads))
+    if mean == 0.0:
+        return 1.0
+    mx = -1.7976931348623157e308  # f64::MIN
+    for x in loads:
+        mx = max(mx, x)
+    return mx / mean
+
+
+class PMap:
+    def __init__(self, n, m, replicas, weights):
+        self.n = n
+        self.m = m
+        self.replicas = replicas
+        self.weights = weights
+
+    @staticmethod
+    def block(spec, e_total):
+        g = spec.num_gpus()
+        return PMap(
+            spec.n,
+            spec.m,
+            [[e % g] for e in range(e_total)],
+            [[1.0] for _ in range(e_total)],
+        )
+
+    def clone(self):
+        return PMap(
+            self.n,
+            self.m,
+            [list(r) for r in self.replicas],
+            [list(w) for w in self.weights],
+        )
+
+    def num_experts(self):
+        return len(self.replicas)
+
+    def num_gpus(self):
+        return self.n * self.m
+
+    def node_of(self, g):
+        return g // self.m
+
+    def slots_per_gpu(self):
+        g = self.num_gpus()
+        return (self.num_experts() + g - 1) // g
+
+    def replicas_per_gpu(self):
+        count = [0] * self.num_gpus()
+        for gs in self.replicas:
+            for g in gs:
+                count[g] += 1
+        return count
+
+    def gpu_loads(self, frac):
+        load = [0.0] * self.num_gpus()
+        for e, (gs, ws) in enumerate(zip(self.replicas, self.weights)):
+            for g, w in zip(gs, ws):
+                load[g] += frac[e] * w
+        total = 0.0
+        for l in load:
+            total += l
+        if total > 0.0:
+            for i in range(len(load)):
+                load[i] /= total
+        return load
+
+    def node_loads(self, frac):
+        gpu = self.gpu_loads(frac)
+        node = [0.0] * self.n
+        for g, l in enumerate(gpu):
+            node[self.node_of(g)] += l
+        return node
+
+    def eq(self, other):
+        return self.replicas == other.replicas and self.weights == other.weights
+
+
+class Cost:
+    def __init__(self, inter_time, intra_time, compute_scale):
+        self.inter_time = inter_time
+        self.intra_time = intra_time
+        self.compute_scale = compute_scale
+
+    def comm_total(self):
+        return self.inter_time + self.intra_time
+
+
+def inter_congestion(spec, flows_per_nic, fabric_flows):
+    f = float(fabric_flows)
+    fh2 = spec.fabric_half_flows * spec.fabric_half_flows
+    return 1.0 + spec.gamma_inter * math.sqrt(float(flows_per_nic)) + spec.delta_max * f * f / (
+        fh2 + f * f
+    )
+
+
+def intra_congestion(spec, flows_per_switch):
+    return 1.0 + spec.gamma_intra * math.sqrt(float(flows_per_switch))
+
+
+def price_placement(pmap, frac, spec, payload):
+    n, m = spec.n, spec.m
+    g_total = spec.num_gpus()
+    gpu = pmap.gpu_loads(frac)
+    node = [0.0] * n
+    for g, l in enumerate(gpu):
+        node[spec.node_of(g)] += l
+    max_node = 0.0
+    for x in node:
+        max_node = max(max_node, x)
+    max_gpu = 0.0
+    for x in gpu:
+        max_gpu = max(max_gpu, x)
+
+    if n > 1:
+        ingress = max_node * float((n - 1) * m) * payload
+        egress = 0.0
+        for f in node:
+            egress = max(egress, float(m) * payload * (1.0 - f))
+        bytes_ = max(ingress, egress)
+        flows_per_nic = m * (n - 1)
+        fabric_flows = n * flows_per_nic
+        inter_time = (
+            bytes_ / spec.inter_bw * inter_congestion(spec, flows_per_nic, fabric_flows)
+            + float(n - 1) * spec.launch_overhead
+            + spec.inter_latency
+        )
+    else:
+        inter_time = 0.0
+
+    if m > 1:
+        bytes_ = max_node * float(n * m) * payload * float(m - 1) / float(m)
+        intra_time = (
+            bytes_ / spec.intra_bw * intra_congestion(spec, m * (m - 1))
+            + float(m - 1) * spec.launch_overhead
+            + spec.intra_latency
+        )
+    else:
+        intra_time = 0.0
+
+    scale = max_gpu * float(g_total) if max_gpu > 0.0 else 1.0
+    return Cost(inter_time, intra_time, scale)
+
+
+def solve_lpt(frac, spec):
+    g_total = spec.num_gpus()
+    e_total = len(frac)
+    slots = (e_total + g_total - 1) // g_total
+    order = sorted(range(e_total), key=lambda e: frac[e], reverse=True)
+    gpu_load = [0.0] * g_total
+    node_load = [0.0] * spec.n
+    count = [0] * g_total
+    replicas = [None] * e_total
+    for e in order:
+        best = None
+        for g in range(g_total):
+            if count[g] >= slots:
+                continue
+            cand = (node_load[spec.node_of(g)], gpu_load[g], g)
+            if best is None or cand < best:
+                best = cand
+        g = best[2]
+        replicas[e] = [g]
+        gpu_load[g] += frac[e]
+        node_load[spec.node_of(g)] += frac[e]
+        count[g] += 1
+    return PMap(spec.n, spec.m, replicas, [[1.0] for _ in range(e_total)])
+
+
+def water_fill(bases, load):
+    r = len(bases)
+    if not (load > 1e-12):
+        return [1.0 / float(r)] * r
+    order = sorted(range(r), key=lambda i: bases[i])
+    prefix = 0.0
+    level = 0.0
+    for k, idx in enumerate(order):
+        prefix += bases[idx]
+        level = (load + prefix) / float(k + 1)
+        if k + 1 == r or level <= bases[order[k + 1]]:
+            break
+    w = [max(level - b, 0.0) / load for b in bases]
+    total = 0.0
+    for x in w:
+        total += x
+    return [x / total for x in w]
+
+
+def refit_expert(pmap, frac, e):
+    gpu = pmap.gpu_loads(frac)
+    bases = []
+    for r, g in enumerate(pmap.replicas[e]):
+        own = frac[e] * pmap.weights[e][r] if r < len(pmap.weights[e]) else 0.0
+        bases.append(gpu[g] - own)
+    pmap.weights[e] = water_fill(bases, frac[e])
+
+
+def refit_weights(pmap, frac):
+    for e in range(pmap.num_experts()):
+        if len(pmap.replicas[e]) > 1:
+            refit_expert(pmap, frac, e)
+
+
+def replicate_hottest(pmap, frac, spec, top_k, max_replicas, hot_threshold):
+    g_total = spec.num_gpus()
+    slot_cap = pmap.slots_per_gpu() + 1
+    order = sorted(range(pmap.num_experts()), key=lambda e: frac[e], reverse=True)
+    frac_total = 0.0
+    for x in frac:
+        frac_total += x
+    mean_gpu = frac_total / float(g_total) if frac_total > 0.0 else 0.0
+    for e in order[:top_k]:
+        while len(pmap.replicas[e]) < min(max_replicas, spec.n):
+            share = frac[e] / float(len(pmap.replicas[e]))
+            if share <= hot_threshold * mean_gpu:
+                break
+            gpu = pmap.gpu_loads(frac)
+            counts = pmap.replicas_per_gpu()
+            used_nodes = [spec.node_of(g) for g in pmap.replicas[e]]
+            best = None
+            for g in range(g_total):
+                if counts[g] >= slot_cap or spec.node_of(g) in used_nodes:
+                    continue
+                cand = (gpu[g], g)
+                if best is None or cand < best:
+                    best = cand
+            if best is None:
+                break
+            pmap.replicas[e].append(best[1])
+            refit_expert(pmap, frac, e)
+    refit_weights(pmap, frac)
+
+
+def refine(pmap, frac, spec, payload, max_swaps):
+    cur = price_placement(pmap, frac, spec, payload).comm_total()
+    applied = 0
+    for _ in range(max_swaps):
+        node = pmap.node_loads(frac)
+        hot = cold = 0
+        for i, l in enumerate(node):
+            if l > node[hot]:
+                hot = i
+            if l < node[cold]:
+                cold = i
+        if hot == cold:
+            break
+
+        def on_node(i):
+            return [
+                e
+                for e in range(pmap.num_experts())
+                if len(pmap.replicas[e]) == 1 and pmap.node_of(pmap.replicas[e][0]) == i
+            ]
+
+        hot_experts = on_node(hot)
+        cold_experts = on_node(cold)
+        best = None
+        for a in hot_experts:
+            for b in cold_experts:
+                ga, gb = pmap.replicas[a][0], pmap.replicas[b][0]
+                pmap.replicas[a][0] = gb
+                pmap.replicas[b][0] = ga
+                cost = price_placement(pmap, frac, spec, payload).comm_total()
+                pmap.replicas[a][0] = ga
+                pmap.replicas[b][0] = gb
+                if cost < cur * (1.0 - 1e-9) and (best is None or cost < best[0]):
+                    best = (cost, a, b)
+        if best is None:
+            break
+        _, a, b = best
+        ga, gb = pmap.replicas[a][0], pmap.replicas[b][0]
+        pmap.replicas[a][0] = gb
+        pmap.replicas[b][0] = ga
+        cur = best[0]
+        applied += 1
+    return applied
+
+
+POLICY = dict(
+    check_every=50,
+    trigger_imbalance=1.25,
+    hysteresis=1.05,
+    top_k_replicate=8,
+    max_replicas=4,
+    hot_threshold=1.5,
+    max_refine_swaps=128,
+    expert_bytes=9.4e6,
+    hops_per_step=24.0,
+    ewma_alpha=0.2,
+)
+
+
+def plan_placement(frac, spec, payload, policy):
+    pmap = solve_lpt(frac, spec)
+    replicate_hottest(
+        pmap,
+        frac,
+        spec,
+        policy["top_k_replicate"],
+        policy["max_replicas"],
+        policy["hot_threshold"],
+    )
+    refine(pmap, frac, spec, payload, policy["max_refine_swaps"])
+    refit_weights(pmap, frac)
+    block = PMap.block(spec, len(frac))
+    planned = price_placement(pmap, frac, spec, payload)
+    blockc = price_placement(block, frac, spec, payload)
+    if planned.comm_total() > blockc.comm_total() or planned.compute_scale > blockc.compute_scale:
+        return block
+    return pmap
+
+
+class Tracker:
+    def __init__(self, e_total, alpha):
+        self.alpha = alpha
+        self.ewma = [1.0 / float(e_total)] * e_total
+        self.steps = 0
+
+    def observe(self, loads):
+        total = 0.0
+        for l in loads:
+            total += l
+        if not (total > 0.0) or math.isinf(total) or math.isnan(total):
+            return
+        a = self.alpha
+        for i, l in enumerate(loads):
+            self.ewma[i] = (1.0 - a) * self.ewma[i] + a * (l / total)
+        self.steps += 1
+
+    def fractions(self):
+        total = 0.0
+        for e in self.ewma:
+            total += e
+        return [e / total for e in self.ewma]
+
+    def imbalance(self):
+        return imbalance(self.fractions())
+
+
+class Rebalancer:
+    def __init__(self, policy, spec, e_total, payload):
+        self.policy = policy
+        self.spec = spec
+        self.payload = payload
+        self.tracker = Tracker(e_total, policy["ewma_alpha"])
+        self.current = PMap.block(spec, e_total)
+        self.last_consult_step = 0
+        self.rebalances = 0
+
+    def observe(self, loads):
+        self.tracker.observe(loads)
+
+    def maybe_rebalance(self, step):
+        p = self.policy
+        ce = p["check_every"]
+        if ce == 0 or step // ce == self.last_consult_step // ce:
+            return None
+        self.last_consult_step = step
+        frac = self.tracker.fractions()
+        node_imb = imbalance(self.current.node_loads(frac))
+        if node_imb < p["trigger_imbalance"]:
+            return None
+        before = price_placement(self.current, frac, self.spec, self.payload)
+        candidate = plan_placement(frac, self.spec, self.payload, p)
+        after = price_placement(candidate, frac, self.spec, self.payload)
+        if before.comm_total() < after.comm_total() * p["hysteresis"]:
+            return None
+        migrated = 0
+        for e in range(candidate.num_experts()):
+            for g in candidate.replicas[e]:
+                if g not in self.current.replicas[e]:
+                    migrated += 1
+        migration_secs = float(migrated) * p["expert_bytes"] / self.spec.inter_bw
+        gain_per_step = (before.comm_total() - after.comm_total()) * p["hops_per_step"]
+        if gain_per_step * float(ce) <= migration_secs:
+            return None
+        decision = dict(
+            step=step,
+            migrated_replicas=migrated,
+            comm_before=before.comm_total(),
+            comm_after=after.comm_total(),
+            migration_secs=migration_secs,
+        )
+        self.current = candidate
+        self.rebalances += 1
+        return decision
+
+
+# ---------------------------------------------------------------------------
+# trace::scenario mirror
+# ---------------------------------------------------------------------------
+
+
+def scenario_weights(kind, e_total, step, params):
+    if kind == "uniform":
+        return [1.0] * e_total
+    if kind == "zipf":
+        return zipf_fractions(e_total, params["s"])
+    if kind == "burst":
+        w = zipf_fractions(e_total, params["s"])
+        if params["start"] <= step < params["end"]:
+            w[params["hot"] % e_total] *= params["boost"]
+        return w
+    raise ValueError(kind)
+
+
+def record_scenario(kind, params, n_nodes, gpus, steps, tokens, cap_factor, payload, seed):
+    e_total = n_nodes * gpus
+    capacity = max(int(cap_factor * float(tokens) / float(e_total)), 1)
+    rng = Rng(seed)
+    trace_steps = []
+    for step in range(steps):
+        w = scenario_weights(kind, e_total, step, params)
+        counts = [0] * e_total
+        for _ in range(tokens):
+            counts[rng.weighted(w)] += 1
+        dropped = sum(max(0, c - capacity) for c in counts)
+        dropped_frac = float(dropped) / float(max(tokens, 1))
+        nodes = [0.0] * n_nodes
+        for e, c in enumerate(counts):
+            nodes[e // gpus] += float(c)
+        trace_steps.append(
+            dict(
+                step=step,
+                experts=[float(c) for c in counts],
+                nodes=nodes,
+                dropped_frac=dropped_frac,
+                tokens=float(tokens),
+            )
+        )
+    return trace_steps, capacity
+
+
+def trace_jsonl(name, seed, n_nodes, gpus, steps, tokens, capacity, payload, trace_steps):
+    lines = [
+        emit(
+            dict(
+                kind="meta",
+                version=1,
+                scenario=name,
+                seed=seed,
+                n_nodes=n_nodes,
+                gpus_per_node=gpus,
+                num_experts=n_nodes * gpus,
+                tokens_per_step=tokens,
+                capacity=capacity,
+                payload_per_gpu=payload,
+            )
+        )
+    ]
+    for s in trace_steps:
+        lines.append(
+            emit(
+                dict(
+                    kind="step",
+                    step=s["step"],
+                    experts=s["experts"],
+                    nodes=s["nodes"],
+                    dropped_frac=s["dropped_frac"],
+                    tokens=s["tokens"],
+                )
+            )
+        )
+    return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# trace::replay mirror
+# ---------------------------------------------------------------------------
+
+
+def replay(trace_steps, n_nodes, gpus, payload, policy):
+    spec = Spec(n_nodes, gpus)
+    e_total = n_nodes * gpus
+    rb = Rebalancer(policy, spec, e_total, payload)
+    block = PMap.block(spec, e_total)
+    rebalance_steps = []
+    migrated_replicas = 0
+    migration_secs = 0.0
+    total_comm = 0.0
+    static_comm = 0.0
+    dropped_sum = 0.0
+    final_comm = 0.0
+    timeline = []
+    for rec in trace_steps:
+        rb.observe(rec["experts"])
+        d = rb.maybe_rebalance(rec["step"])
+        if d is not None:
+            rebalance_steps.append(d["step"])
+            migrated_replicas += d["migrated_replicas"]
+            migration_secs += d["migration_secs"]
+        cost = price_placement(rb.current, rec["experts"], spec, payload)
+        static_cost = price_placement(block, rec["experts"], spec, payload)
+        hops = policy["hops_per_step"]
+        total_comm += cost.comm_total() * hops
+        static_comm += static_cost.comm_total() * hops
+        dropped_sum += rec["dropped_frac"]
+        final_comm = cost.comm_total()
+        timeline.append((rec["step"], cost.comm_total(), d is not None))
+    frac = rb.tracker.fractions()
+    final_node_imb = imbalance(rb.current.node_loads(frac))
+    replicated = sum(1 for e in range(e_total) if len(rb.current.replicas[e]) > 1)
+    steps = len(trace_steps)
+    summary = dict(
+        steps=steps,
+        observed_steps=rb.tracker.steps,
+        rebalances=len(rebalance_steps),
+        rebalance_steps=rebalance_steps,
+        migrated_replicas=migrated_replicas,
+        migration_secs=migration_secs,
+        migration_bytes=float(migrated_replicas) * policy["expert_bytes"],
+        total_comm_secs=total_comm,
+        static_comm_secs=static_comm,
+        final_comm_time=final_comm if steps > 0 else 0.0,
+        final_expert_imbalance=rb.tracker.imbalance(),
+        final_node_imbalance=final_node_imb,
+        mean_dropped_frac=dropped_sum / float(max(steps, 1)),
+        replicated_experts=replicated,
+    )
+    return summary, timeline
+
+
+def summary_pretty(summary):
+    # Json::to_string_pretty mirror (sorted keys, 1-space indent steps)
+    def write(v, indent):
+        pad = " " * indent
+        if isinstance(v, list):
+            if not v:
+                return "[]"
+            inner = ",".join(
+                "\n" + " " * (indent + 1) + write(x, indent + 1) for x in v
+            )
+            return "[" + inner + "\n" + pad + "]"
+        if isinstance(v, dict):
+            if not v:
+                return "{}"
+            inner = ",".join(
+                "\n" + " " * (indent + 1) + emit(k) + ": " + write(v[k], indent + 1)
+                for k in sorted(v)
+            )
+            return "{" + inner + "\n" + pad + "}"
+        return emit(v)
+
+    return write(summary, 0) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# fixture generation
+# ---------------------------------------------------------------------------
+
+
+def main():
+    data_dir = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "data")
+    os.makedirs(data_dir, exist_ok=True)
+
+    n_nodes, gpus, steps, tokens, cap_factor, payload, seed = 4, 8, 200, 1024, 2.0, 1e6, 7
+    cases = [
+        ("trace_uniform", "uniform", dict(), "uniform"),
+        ("trace_zipf12", "zipf", dict(s=1.2), "zipf(1.2)"),
+        (
+            "trace_burst",
+            "burst",
+            dict(s=0.0, hot=3, boost=8.0, start=80, end=140),
+            "burst(s=0,hot=3,boost=8,steps=80..140)",
+        ),
+    ]
+    for fname, kind, params, label in cases:
+        trace_steps, capacity = record_scenario(
+            kind, params, n_nodes, gpus, steps, tokens, cap_factor, payload, seed
+        )
+        text = trace_jsonl(
+            label, seed, n_nodes, gpus, steps, tokens, capacity, payload, trace_steps
+        )
+        with open(os.path.join(data_dir, fname + ".jsonl"), "w") as f:
+            f.write(text)
+        summary, timeline = replay(trace_steps, n_nodes, gpus, payload, POLICY)
+        with open(os.path.join(data_dir, fname + ".summary.json"), "w") as f:
+            f.write(summary_pretty(summary))
+        print(f"== {fname} ({label}) ==")
+        for k in sorted(summary):
+            print(f"  {k}: {summary[k]}")
+        rebal = [t for t in timeline if t[2]]
+        print(f"  rebalance timeline entries: {rebal}")
+        print()
+
+
+if __name__ == "__main__":
+    main()
