@@ -6,7 +6,7 @@
 //! learned-placement follow-up) is dead on arrival.  Writes
 //! reports/bench_trace_replay.json.
 
-use smile::placement::RebalancePolicy;
+use smile::placement::{MigrationConfig, PolicyKind, RebalancePolicy};
 use smile::trace::{record_scenario, RoutingTrace, Scenario, ScenarioConfig, TraceReplayer};
 use smile::util::bench::Bencher;
 
@@ -52,6 +52,23 @@ fn main() {
         "shape check: {} rebalances, comm {:.3} s vs static {:.3} s ✓\n",
         a.summary.rebalances, a.summary.total_comm_secs, a.summary.static_comm_secs
     );
+    let overlapped = TraceReplayer::replay_with(
+        &trace,
+        PolicyKind::Threshold,
+        RebalancePolicy::default(),
+        MigrationConfig::overlapped(0.25),
+    );
+    assert!(
+        overlapped.summary.migration_exposed_secs < a.summary.migration_exposed_secs,
+        "overlap must expose less migration than the lump model"
+    );
+    println!(
+        "migration overlap (25% of inter_bw): exposed {:.3} ms -> {:.3} ms \
+         ({:.3} ms hidden behind steps)\n",
+        a.summary.migration_exposed_secs * 1e3,
+        overlapped.summary.migration_exposed_secs * 1e3,
+        overlapped.summary.migration_overlapped_secs * 1e3
+    );
 
     let mut bench = Bencher::default();
     bench.bench("trace::record_scenario(200 steps x 1024 tok)", || {
@@ -63,6 +80,30 @@ fn main() {
     });
     bench.bench("trace::replay(200 steps, default policy)", || {
         TraceReplayer::replay(&trace, RebalancePolicy::default())
+    });
+    bench.bench("trace::replay(200 steps, threshold + overlap 0.25)", || {
+        TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::Threshold,
+            RebalancePolicy::default(),
+            MigrationConfig::overlapped(0.25),
+        )
+    });
+    bench.bench("trace::replay(200 steps, greedy_every_check)", || {
+        TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::GreedyEveryCheck,
+            RebalancePolicy::default(),
+            MigrationConfig::default(),
+        )
+    });
+    bench.bench("trace::replay(200 steps, static_block)", || {
+        TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::StaticBlock,
+            RebalancePolicy::default(),
+            MigrationConfig::default(),
+        )
     });
     // replay throughput in steps/s (simulated-step pricing rate)
     let mut quick = smile::util::bench::Bencher::quick();

@@ -15,8 +15,11 @@
 //!   that regenerate every table and figure of the paper's evaluation.
 //! - [`placement`] decides where experts live: EWMA load tracking,
 //!   congestion-priced expert->GPU placement, hot-expert replication
-//!   across nodes, and the threshold/hysteresis rebalancing policy the
-//!   step loop consults (the paper's fixed assignment is its baseline).
+//!   across nodes, pluggable routing policies behind the
+//!   `PlacementPolicy` trait (threshold / static / greedy) driven
+//!   through one shared `RoutingPipeline`, and a `MigrationScheduler`
+//!   that overlaps committed expert-weight copies with training steps
+//!   (the paper's fixed assignment is the baseline policy).
 //! - [`trace`] captures routing traffic (trainer or synthetic
 //!   scenarios) as replayable JSONL traces and replays them
 //!   deterministically through the placement pipeline — the offline

@@ -23,7 +23,7 @@ use anyhow::{bail, Result};
 
 use smile::metrics::{CsvLogger, RunSummary, StepLog};
 use smile::netsim::ClusterSpec;
-use smile::placement::{self, PlacementMap, RebalancePolicy};
+use smile::placement::{self, MigrationConfig, PlacementMap, PolicyKind, RebalancePolicy};
 use smile::runtime::Runtime;
 use smile::simtrain::{self, ModelDims, Scaling, Variant};
 use smile::trace::{RoutingTrace, Scenario, ScenarioConfig, TraceReplayer};
@@ -65,7 +65,7 @@ fn print_help() {
          usage: smile <command> [options]\n\n\
          commands:\n\
            train     --config <name> --steps N [--seed S] [--log out.csv] [--ckpt path] [--eval-every N] [--rebalance]\n\
-                     [--trace out.jsonl]\n\
+                     [--policy threshold|static|greedy] [--migration-overlap F] [--trace out.jsonl]\n\
            eval      --config <name> --ckpt path [--batches N]\n\
            simulate  --model 3.7B|13B|48B --nodes N [--variant switch|smile|dense|dense_wide]\n\
            sweep     [--nodes 1,2,4,8,16] [--model 3.7B]\n\
@@ -74,8 +74,10 @@ fn print_help() {
            trace     record --scenario uniform|zipf|burst --out p.jsonl [--nodes N] [--gpus M] [--steps S]\n\
                             [--tokens T] [--seed X] [--skew S] [--hot E] [--boost B] [--burst-start A] [--burst-end Z]\n\
                             [--cap-factor F] [--rebalance]\n\
-           trace     replay --in p.jsonl [--check-every N] [--timeline p.csv] [--summary p.json]\n\
-           trace     summarize --in p.jsonl [--out p.summary.json] [--bless]\n\
+           trace     replay --in p.jsonl [--policy threshold|static|greedy] [--migration-overlap F]\n\
+                            [--check-every N] [--trigger-imbalance I] [--hysteresis H]\n\
+                            [--timeline p.csv] [--summary p.json]\n\
+           trace     summarize --in p.jsonl [same policy overrides as replay] [--out p.summary.json] [--bless]\n\
            info"
     );
 }
@@ -108,8 +110,11 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let rt = Runtime::new(smile::runtime::default_artifacts_dir())?;
     let mut tr = Trainer::new(&rt, &config, seed)?;
-    if args.bool("rebalance", false) {
-        tr.enable_rebalancing(RebalancePolicy::default());
+    // any of the three flags opts into the policy pipeline (threshold
+    // by default), so `--migration-overlap` alone is never a silent no-op
+    if args.bool("rebalance", false) || args.has("policy") || args.has("migration-overlap") {
+        let kind = policy_kind_of(args)?;
+        tr.enable_policy(kind, RebalancePolicy::default(), migration_of(args));
     }
     let trace_out = args.opt_str("trace");
     if trace_out.is_some() {
@@ -178,12 +183,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         summary.first_loss, summary.final_loss, summary.final_ppl, summary.samples_per_sec
     );
     println!("log: {log_path}");
-    if let Some(rb) = &tr.rebalancer {
+    if let Some(pipe) = &tr.pipeline {
         println!(
-            "placement rebalances: {} (node imbalance now {:.2})",
-            rb.rebalances,
-            smile::util::stats::imbalance(&rb.current.node_loads(&rb.tracker.fractions()))
+            "placement policy {}: {} rebalances (node imbalance now {:.2})",
+            pipe.policy().describe(),
+            pipe.rebalances(),
+            pipe.node_imbalance()
         );
+        if pipe.migration.enqueued_bytes() > 0.0 {
+            println!(
+                "  migration: {} moved ({:.1} ms exposed, {:.1} ms overlapped, {} pending)",
+                smile::util::fmt_bytes(pipe.migration.drained_bytes()),
+                pipe.migration.exposed_secs() * 1e3,
+                pipe.migration.overlapped_secs() * 1e3,
+                smile::util::fmt_bytes(pipe.migration.pending_bytes())
+            );
+        }
     }
     if let (Some(path), Some(rec)) = (trace_out, &tr.trace_recorder) {
         rec.write_jsonl(&path)?;
@@ -397,16 +412,31 @@ fn trace_scenario_of(args: &Args) -> Result<Scenario> {
     })
 }
 
-/// Apply `--check-every / --hops / --expert-bytes / --alpha` overrides
-/// so replays can explore policy variants against the same trace.
+/// Apply `--check-every / --trigger-imbalance / --hysteresis / --hops
+/// / --expert-bytes / --alpha` overrides so recorded traces can be
+/// swept against policy variants without recompiling.
 fn trace_policy_of(args: &Args) -> RebalancePolicy {
     let mut p = RebalancePolicy::default();
     p.check_every = args.usize("check-every", p.check_every);
     p.hops_per_step = args.f64("hops", p.hops_per_step);
     p.expert_bytes = args.f64("expert-bytes", p.expert_bytes);
     p.ewma_alpha = args.f64("alpha", p.ewma_alpha);
-    p.trigger_imbalance = args.f64("trigger", p.trigger_imbalance);
+    // --trigger is the PR-1 spelling, kept as an alias
+    p.trigger_imbalance =
+        args.f64("trigger-imbalance", args.f64("trigger", p.trigger_imbalance));
+    p.hysteresis = args.f64("hysteresis", p.hysteresis);
     p
+}
+
+/// `--policy threshold|static|greedy` (default threshold).
+fn policy_kind_of(args: &Args) -> Result<PolicyKind> {
+    PolicyKind::parse(&args.str("policy", "threshold")).map_err(anyhow::Error::msg)
+}
+
+/// `--migration-overlap F`: fraction of inter-node bandwidth the
+/// background weight-copy stream may use (0 = lump-sum pricing).
+fn migration_of(args: &Args) -> MigrationConfig {
+    MigrationConfig::overlapped(args.f64("migration-overlap", 0.0))
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -446,7 +476,12 @@ fn cmd_trace(args: &Args) -> Result<()> {
         "replay" => {
             let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
             let trace = RoutingTrace::read_jsonl(&path).map_err(anyhow::Error::msg)?;
-            let result = TraceReplayer::replay(&trace, trace_policy_of(args));
+            let result = TraceReplayer::replay_with(
+                &trace,
+                policy_kind_of(args)?,
+                trace_policy_of(args),
+                migration_of(args),
+            );
             let mut table = Table::new(&[
                 "step", "expert_imb", "node_imb", "comm(ms)", "straggler", "rebalanced",
             ]);
@@ -473,7 +508,8 @@ fn cmd_trace(args: &Args) -> Result<()> {
             table.print();
             if let Some(csv) = args.opt_str("timeline") {
                 let mut full = Table::new(&[
-                    "step", "expert_imb", "node_imb", "comm_s", "straggler", "rebalanced", "moves",
+                    "step", "expert_imb", "node_imb", "comm_s", "straggler", "rebalanced",
+                    "moves", "migration_exposed_s", "migration_overlapped_s",
                 ]);
                 for o in &result.timeline {
                     full.row(&[
@@ -484,14 +520,18 @@ fn cmd_trace(args: &Args) -> Result<()> {
                         format!("{}", o.compute_scale),
                         (o.rebalanced as usize).to_string(),
                         o.migrated_replicas.to_string(),
+                        format!("{}", o.migration_exposed_secs),
+                        format!("{}", o.migration_overlapped_secs),
                     ]);
                 }
                 full.write_csv(&csv);
             }
             let s = &result.summary;
             println!(
-                "\nsummary: {} rebalances at {:?}; comm {:.3} s (static {:.3} s, {:.2}x); \
-                 {} replica moves ({} migration), final node imbalance {:.3}",
+                "\nsummary [{}]: {} rebalances at {:?}; comm {:.3} s (static {:.3} s, {:.2}x); \
+                 {} replica moves ({} — {:.1} ms exposed, {:.1} ms overlapped, {} pending), \
+                 final node imbalance {:.3}",
+                s.policy,
                 s.rebalances,
                 s.rebalance_steps,
                 s.total_comm_secs,
@@ -499,6 +539,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
                 if s.total_comm_secs > 0.0 { s.static_comm_secs / s.total_comm_secs } else { 1.0 },
                 s.migrated_replicas,
                 smile::util::fmt_bytes(s.migration_bytes),
+                s.migration_exposed_secs * 1e3,
+                s.migration_overlapped_secs * 1e3,
+                smile::util::fmt_bytes(s.migration_pending_bytes),
                 s.final_node_imbalance,
             );
             if let Some(out) = args.opt_str("summary") {
@@ -509,7 +552,12 @@ fn cmd_trace(args: &Args) -> Result<()> {
         "summarize" => {
             let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
             let trace = RoutingTrace::read_jsonl(&path).map_err(anyhow::Error::msg)?;
-            let result = TraceReplayer::replay(&trace, trace_policy_of(args));
+            let result = TraceReplayer::replay_with(
+                &trace,
+                policy_kind_of(args)?,
+                trace_policy_of(args),
+                migration_of(args),
+            );
             let out = if args.bool("bless", false) {
                 // the golden-fixture update procedure: write the
                 // summary next to the trace (rust/tests/data/*.jsonl

@@ -10,20 +10,35 @@
 //!   `netsim::collectives` congestion model.
 //! - [`replicate`]: hot-expert replication across nodes with
 //!   water-filled, gate-proportional traffic splitting.
-//! - [`rebalance`]: the `RebalancePolicy` (threshold + hysteresis +
-//!   migration-cost amortization) the trainer / simtrain step loop
-//!   consults every N steps, and the stateful `Rebalancer`.
+//! - [`rebalance`]: the `RebalancePolicy` knobs + the stateful
+//!   threshold/hysteresis/amortization `Rebalancer`.
+//! - [`policy`]: the pluggable [`PlacementPolicy`] trait
+//!   (`threshold` / `static_block` / `greedy_every_check`) and the
+//!   [`RoutingPipeline`] driver every consumer (trainer, trace
+//!   replayer, scenario recorder, simtrain) delegates to.
+//! - [`migration`]: the [`MigrationScheduler`] that overlaps committed
+//!   expert-weight copies with training steps instead of pricing them
+//!   as a lump-sum stall.
 //!
 //! `moe::dispatch::PlacedPlan` consumes the map when building plans;
 //! `simtrain::step_model::placed_step_time` prices whole training
 //! steps under a placement; `smile placement` is the CLI surface.
 
+pub mod migration;
+pub mod policy;
 pub mod rebalance;
 pub mod replicate;
 pub mod solver;
 pub mod stats;
 
-pub use rebalance::{plan_placement, RebalanceDecision, RebalancePolicy, Rebalancer};
+pub use migration::{MigrationConfig, MigrationScheduler, MigrationTick};
+pub use policy::{
+    GreedyEveryCheck, PipelineStepReport, PlacementPolicy, PolicyKind, RoutingPipeline,
+    StaticBlock,
+};
+pub use rebalance::{
+    count_migrated, plan_placement, RebalanceDecision, RebalancePolicy, Rebalancer,
+};
 pub use replicate::{refit_weights, replicate_hottest, water_fill};
 pub use solver::{price_placement, refine, solve_lpt, PlacementCost, PlacementMap};
 pub use stats::{zipf_fractions, LoadTracker};

@@ -1,0 +1,523 @@
+//! The pluggable routing-policy layer: every consumer of placement
+//! decisions — the live `Trainer`, the `TraceReplayer`, the
+//! `trace::scenario` recorder, and `simtrain::traced_step_times` —
+//! drives the same observe -> consult -> migrate sequence through a
+//! [`RoutingPipeline`] instead of hand-rolling it, and the *strategy*
+//! behind `consult` is a [`PlacementPolicy`] trait object so policies
+//! swap without touching any driver (C2R's argument; the prerequisite
+//! the ROADMAP names for learned placement).
+//!
+//! Shipped policies:
+//!
+//! - [`Rebalancer`] (`threshold`) — the production default: trigger +
+//!   hysteresis + migration-amortization gates (see `rebalance.rs`).
+//! - [`StaticBlock`] (`static`) — the paper's frozen block placement;
+//!   observes loads (so imbalance reporting still works) but never
+//!   commits.  The baseline every other policy is judged against.
+//! - [`GreedyEveryCheck`] (`greedy`) — re-plans at every cadence
+//!   boundary and commits any priced improvement, with no trigger,
+//!   hysteresis, or amortization gate.  The upper envelope of how
+//!   often rebalancing *could* fire — and, fed through the
+//!   `MigrationScheduler`, a stress source of overlapping copies.
+
+use super::migration::{MigrationConfig, MigrationScheduler, MigrationTick};
+use super::rebalance::{RebalanceDecision, RebalancePolicy, Rebalancer};
+use super::solver::{price_placement, PlacementCost, PlacementMap};
+use super::stats::LoadTracker;
+use crate::netsim::topology::ClusterSpec;
+
+/// A routing/placement strategy the [`RoutingPipeline`] consults.
+///
+/// Contract: `observe` folds one step's per-expert load histogram
+/// (token counts or fractions — impls normalize) into the policy's
+/// load picture; `consult` is called with the monotone (or replay-
+/// seeking) step counter and returns a committed decision when the
+/// policy decides to move experts, after which [`placement`] must
+/// reflect the new layout; `describe` names the policy and its live
+/// knobs for reports.
+pub trait PlacementPolicy: std::fmt::Debug {
+    /// Fold one step's per-expert load histogram.
+    fn observe(&mut self, loads: &[f64]);
+    /// Consult at `step`; commit and return a decision when the
+    /// policy's gates pass.
+    fn consult(&mut self, step: usize) -> Option<RebalanceDecision>;
+    /// The placement currently serving traffic.
+    fn placement(&self) -> &PlacementMap;
+    /// The tracker backing the policy's load picture.
+    fn tracker(&self) -> &LoadTracker;
+    /// Rebalances committed so far.
+    fn rebalances(&self) -> usize;
+    /// Bytes to migrate one expert replica (prices migration).
+    fn expert_bytes(&self) -> f64;
+    /// Dispatch hops per optimizer step (prices per-step comm).
+    fn hops_per_step(&self) -> f64;
+    /// Stable short name (lands in `ReplaySummary::policy`).
+    fn name(&self) -> &'static str;
+    /// Human-readable label with the live knobs.
+    fn describe(&self) -> String;
+}
+
+impl PlacementPolicy for Rebalancer {
+    fn observe(&mut self, loads: &[f64]) {
+        self.tracker.observe(loads);
+    }
+
+    fn consult(&mut self, step: usize) -> Option<RebalanceDecision> {
+        self.maybe_rebalance(step)
+    }
+
+    fn placement(&self) -> &PlacementMap {
+        &self.current
+    }
+
+    fn tracker(&self) -> &LoadTracker {
+        &self.tracker
+    }
+
+    fn rebalances(&self) -> usize {
+        self.rebalances
+    }
+
+    fn expert_bytes(&self) -> f64 {
+        self.policy.expert_bytes
+    }
+
+    fn hops_per_step(&self) -> f64 {
+        self.policy.hops_per_step
+    }
+
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "threshold(check_every={}, trigger_imbalance={}, hysteresis={})",
+            self.policy.check_every, self.policy.trigger_imbalance, self.policy.hysteresis
+        )
+    }
+}
+
+/// The paper's frozen block placement: observe, never move.
+#[derive(Debug, Clone)]
+pub struct StaticBlock {
+    knobs: RebalancePolicy,
+    placement: PlacementMap,
+    tracker: LoadTracker,
+}
+
+impl StaticBlock {
+    pub fn new(knobs: RebalancePolicy, spec: &ClusterSpec, num_experts: usize) -> StaticBlock {
+        StaticBlock {
+            tracker: LoadTracker::new(num_experts, knobs.ewma_alpha),
+            placement: PlacementMap::block(spec, num_experts),
+            knobs,
+        }
+    }
+}
+
+impl PlacementPolicy for StaticBlock {
+    fn observe(&mut self, loads: &[f64]) {
+        self.tracker.observe(loads);
+    }
+
+    fn consult(&mut self, _step: usize) -> Option<RebalanceDecision> {
+        None
+    }
+
+    fn placement(&self) -> &PlacementMap {
+        &self.placement
+    }
+
+    fn tracker(&self) -> &LoadTracker {
+        &self.tracker
+    }
+
+    fn rebalances(&self) -> usize {
+        0
+    }
+
+    fn expert_bytes(&self) -> f64 {
+        self.knobs.expert_bytes
+    }
+
+    fn hops_per_step(&self) -> f64 {
+        self.knobs.hops_per_step
+    }
+
+    fn name(&self) -> &'static str {
+        "static_block"
+    }
+
+    fn describe(&self) -> String {
+        "static_block".into()
+    }
+}
+
+/// Re-plan at every cadence boundary; commit any priced improvement.
+/// No trigger, hysteresis, or amortization gate — the flapping this
+/// invites is exactly what it exists to measure.
+#[derive(Debug, Clone)]
+pub struct GreedyEveryCheck {
+    inner: Rebalancer,
+}
+
+impl GreedyEveryCheck {
+    pub fn new(
+        knobs: RebalancePolicy,
+        spec: ClusterSpec,
+        num_experts: usize,
+        payload_per_gpu: f64,
+    ) -> GreedyEveryCheck {
+        GreedyEveryCheck { inner: Rebalancer::new(knobs, spec, num_experts, payload_per_gpu) }
+    }
+}
+
+impl PlacementPolicy for GreedyEveryCheck {
+    fn observe(&mut self, loads: &[f64]) {
+        self.inner.tracker.observe(loads);
+    }
+
+    fn consult(&mut self, step: usize) -> Option<RebalanceDecision> {
+        let rb = &mut self.inner;
+        let p = &rb.policy;
+        // same cadence-window contract as the threshold policy
+        if p.check_every == 0 || step / p.check_every == rb.last_consult_step / p.check_every {
+            return None;
+        }
+        rb.last_consult_step = step;
+        let frac = rb.tracker.fractions();
+        let before = price_placement(&rb.current, &frac, &rb.spec, rb.payload_per_gpu);
+        let candidate = rb.build_candidate();
+        let after = price_placement(&candidate, &frac, &rb.spec, rb.payload_per_gpu);
+        // the only gate: a strict priced improvement
+        if !(after.comm_total() < before.comm_total()) {
+            return None;
+        }
+        Some(rb.commit(step, before.comm_total(), candidate, after.comm_total()))
+    }
+
+    fn placement(&self) -> &PlacementMap {
+        &self.inner.current
+    }
+
+    fn tracker(&self) -> &LoadTracker {
+        &self.inner.tracker
+    }
+
+    fn rebalances(&self) -> usize {
+        self.inner.rebalances
+    }
+
+    fn expert_bytes(&self) -> f64 {
+        self.inner.policy.expert_bytes
+    }
+
+    fn hops_per_step(&self) -> f64 {
+        self.inner.policy.hops_per_step
+    }
+
+    fn name(&self) -> &'static str {
+        "greedy_every_check"
+    }
+
+    fn describe(&self) -> String {
+        format!("greedy_every_check(check_every={})", self.inner.policy.check_every)
+    }
+}
+
+/// Which [`PlacementPolicy`] to build — the CLI / config surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Threshold,
+    StaticBlock,
+    GreedyEveryCheck,
+}
+
+impl PolicyKind {
+    /// Parse a CLI spelling (`threshold | static | greedy`).
+    pub fn parse(s: &str) -> Result<PolicyKind, String> {
+        Ok(match s {
+            "threshold" => PolicyKind::Threshold,
+            "static" | "static_block" => PolicyKind::StaticBlock,
+            "greedy" | "greedy_every_check" => PolicyKind::GreedyEveryCheck,
+            other => return Err(format!("unknown policy {other} (threshold|static|greedy)")),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Threshold => "threshold",
+            PolicyKind::StaticBlock => "static_block",
+            PolicyKind::GreedyEveryCheck => "greedy_every_check",
+        }
+    }
+
+    /// Build the policy with `knobs` on the given cluster shape.
+    pub fn build(
+        self,
+        knobs: RebalancePolicy,
+        spec: ClusterSpec,
+        num_experts: usize,
+        payload_per_gpu: f64,
+    ) -> Box<dyn PlacementPolicy> {
+        match self {
+            PolicyKind::Threshold => {
+                Box::new(Rebalancer::new(knobs, spec, num_experts, payload_per_gpu))
+            }
+            PolicyKind::StaticBlock => Box::new(StaticBlock::new(knobs, &spec, num_experts)),
+            PolicyKind::GreedyEveryCheck => {
+                Box::new(GreedyEveryCheck::new(knobs, spec, num_experts, payload_per_gpu))
+            }
+        }
+    }
+}
+
+/// What one pipeline step did (the consult half; pricing stays with
+/// the caller because only some drivers model time).
+#[derive(Debug)]
+pub struct PipelineStepReport {
+    /// A rebalance the policy committed at this step, if any.
+    pub decision: Option<RebalanceDecision>,
+    /// Exposed migration stall charged at the commit (the full lump
+    /// when overlap is disabled; the flush of a superseded commit's
+    /// leftover copies when enabled).
+    pub commit_stall_secs: f64,
+}
+
+/// The shared routing-policy driver: one observe -> consult ->
+/// migration-enqueue sequence for every consumer, plus the per-step
+/// background drain.  Replaces the four hand-rolled copies that used
+/// to live in `trainer/mod.rs`, `trace/replay.rs`,
+/// `trace/scenario.rs`, and `simtrain/step_model.rs`.
+#[derive(Debug)]
+pub struct RoutingPipeline {
+    pub spec: ClusterSpec,
+    /// Bytes each GPU contributes per dispatch hop (for pricing).
+    pub payload: f64,
+    pub migration: MigrationScheduler,
+    policy: Box<dyn PlacementPolicy>,
+}
+
+impl RoutingPipeline {
+    pub fn new(
+        kind: PolicyKind,
+        knobs: RebalancePolicy,
+        spec: ClusterSpec,
+        num_experts: usize,
+        payload: f64,
+        migration: MigrationConfig,
+    ) -> RoutingPipeline {
+        let policy = kind.build(knobs, spec.clone(), num_experts, payload);
+        RoutingPipeline::from_policy(policy, spec, payload, migration)
+    }
+
+    pub fn from_policy(
+        policy: Box<dyn PlacementPolicy>,
+        spec: ClusterSpec,
+        payload: f64,
+        migration: MigrationConfig,
+    ) -> RoutingPipeline {
+        let migration = MigrationScheduler::new(spec.inter_bw, migration);
+        RoutingPipeline { spec, payload, migration, policy }
+    }
+
+    /// One step of the shared sequence: observe the histogram, consult
+    /// the policy, enqueue any committed migration.
+    pub fn step(&mut self, step: usize, loads: &[f64]) -> PipelineStepReport {
+        self.policy.observe(loads);
+        let decision = self.policy.consult(step);
+        let mut commit_stall_secs = 0.0;
+        if let Some(d) = &decision {
+            let bytes = d.migrated_replicas as f64 * self.policy.expert_bytes();
+            commit_stall_secs = self.migration.enqueue(bytes, d.migration_secs);
+        }
+        PipelineStepReport { decision, commit_stall_secs }
+    }
+
+    /// The trainer's f32 routing metrics, widened losslessly.
+    pub fn step_f32(&mut self, step: usize, loads: &[f32]) -> PipelineStepReport {
+        let wide: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
+        self.step(step, &wide)
+    }
+
+    /// Drain background weight copies over a step window of
+    /// `window_secs` (a wall-clock step for the trainer, the priced
+    /// step time for the simulators).
+    pub fn drain(&mut self, window_secs: f64) -> MigrationTick {
+        self.migration.drain(window_secs)
+    }
+
+    pub fn policy(&self) -> &dyn PlacementPolicy {
+        self.policy.as_ref()
+    }
+
+    pub fn placement(&self) -> &PlacementMap {
+        self.policy.placement()
+    }
+
+    pub fn tracker(&self) -> &LoadTracker {
+        self.policy.tracker()
+    }
+
+    pub fn rebalances(&self) -> usize {
+        self.policy.rebalances()
+    }
+
+    pub fn hops_per_step(&self) -> f64 {
+        self.policy.hops_per_step()
+    }
+
+    pub fn expert_bytes(&self) -> f64 {
+        self.policy.expert_bytes()
+    }
+
+    /// Price one dispatch hop of the live placement under `experts`.
+    pub fn price(&self, experts: &[f64]) -> PlacementCost {
+        price_placement(self.policy.placement(), experts, &self.spec, self.payload)
+    }
+
+    /// Node-level imbalance of the live placement under the tracked
+    /// loads.
+    pub fn node_imbalance(&self) -> f64 {
+        let frac = self.policy.tracker().fractions();
+        crate::util::stats::imbalance(&self.policy.placement().node_loads(&frac))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::stats::zipf_fractions;
+
+    fn skewed_pipeline(kind: PolicyKind) -> RoutingPipeline {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut pipe = RoutingPipeline::new(
+            kind,
+            RebalancePolicy::default(),
+            spec,
+            e,
+            1e6,
+            MigrationConfig::default(),
+        );
+        let frac = zipf_fractions(e, 1.2);
+        for _ in 0..32 {
+            pipe.policy.observe(&frac);
+        }
+        pipe
+    }
+
+    #[test]
+    fn policy_kind_parses_cli_spellings() {
+        assert_eq!(PolicyKind::parse("threshold").unwrap(), PolicyKind::Threshold);
+        assert_eq!(PolicyKind::parse("static").unwrap(), PolicyKind::StaticBlock);
+        assert_eq!(PolicyKind::parse("static_block").unwrap(), PolicyKind::StaticBlock);
+        assert_eq!(PolicyKind::parse("greedy").unwrap(), PolicyKind::GreedyEveryCheck);
+        assert!(PolicyKind::parse("learned").is_err());
+        for kind in [PolicyKind::Threshold, PolicyKind::StaticBlock, PolicyKind::GreedyEveryCheck] {
+            let built = kind.build(RebalancePolicy::default(), ClusterSpec::p4d(2), 16, 1e6);
+            assert_eq!(built.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn static_block_never_moves() {
+        let mut pipe = skewed_pipeline(PolicyKind::StaticBlock);
+        for step in [50, 100, 150, 500] {
+            let r = pipe.step(step, &zipf_fractions(32, 1.2));
+            assert!(r.decision.is_none());
+            assert_eq!(r.commit_stall_secs, 0.0);
+        }
+        assert_eq!(pipe.rebalances(), 0);
+        assert_eq!(pipe.placement(), &PlacementMap::block(&pipe.spec, 32));
+        // but the tracker still sees the skew
+        assert!(pipe.tracker().imbalance() > 2.0);
+    }
+
+    #[test]
+    fn greedy_commits_where_threshold_gates_block() {
+        // make migration unamortizable: the threshold policy rejects,
+        // greedy (no amortization gate) still commits the improvement
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let knobs = RebalancePolicy { expert_bytes: 1e18, ..RebalancePolicy::default() };
+        let frac = zipf_fractions(e, 1.2);
+        let mut threshold = Rebalancer::new(knobs.clone(), spec.clone(), e, 1e6);
+        let mut greedy = GreedyEveryCheck::new(knobs, spec, e, 1e6);
+        for _ in 0..32 {
+            threshold.observe(&frac);
+            PlacementPolicy::observe(&mut greedy, &frac);
+        }
+        assert!(threshold.maybe_rebalance(50).is_none(), "amortization gate must block");
+        let d = greedy.consult(50).expect("greedy must commit the win");
+        assert!(d.comm_after < d.comm_before);
+        assert_eq!(greedy.rebalances(), 1);
+        // and greedy respects the cadence window like every policy
+        assert!(greedy.consult(60).is_none());
+    }
+
+    #[test]
+    fn greedy_does_not_flap_on_a_stable_optimum() {
+        let mut pipe = skewed_pipeline(PolicyKind::GreedyEveryCheck);
+        let frac = zipf_fractions(32, 1.2);
+        assert!(pipe.step(50, &frac).decision.is_some());
+        // same load picture: the candidate can't strictly beat the
+        // placement it just committed
+        assert!(pipe.step(100, &frac).decision.is_none());
+        assert_eq!(pipe.rebalances(), 1);
+    }
+
+    #[test]
+    fn pipeline_threshold_matches_hand_rolled_rebalancer_exactly() {
+        // the trait-object pipeline is a refactor, not a behavior
+        // change: byte-for-byte the sequence trainer/replayer used to
+        // hand-roll
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut pipe = RoutingPipeline::new(
+            PolicyKind::Threshold,
+            RebalancePolicy::default(),
+            spec.clone(),
+            e,
+            1e6,
+            MigrationConfig::default(),
+        );
+        let mut legacy = Rebalancer::new(RebalancePolicy::default(), spec.clone(), e, 1e6);
+        let frac = zipf_fractions(e, 1.3);
+        for step in 0..160 {
+            let r = pipe.step(step, &frac);
+            legacy.observe(&frac);
+            let l = legacy.maybe_rebalance(step);
+            match (&r.decision, &l) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.step, b.step);
+                    assert_eq!(a.placement, b.placement);
+                    assert_eq!(a.migration_secs.to_bits(), b.migration_secs.to_bits());
+                    assert_eq!(a.comm_after.to_bits(), b.comm_after.to_bits());
+                }
+                (None, None) => {}
+                other => panic!("step {step}: pipeline vs legacy diverged: {other:?}"),
+            }
+        }
+        assert_eq!(pipe.rebalances(), legacy.rebalances);
+        assert_eq!(pipe.placement(), &legacy.current);
+        for (a, b) in pipe.tracker().fractions().iter().zip(legacy.tracker.fractions()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // with overlap disabled the scheduler's exposed total is the
+        // legacy lump sum
+        let lump: f64 =
+            legacy.last_decision.as_ref().map(|d| d.migration_secs).unwrap_or(0.0);
+        assert!(pipe.migration.exposed_secs() >= lump);
+    }
+
+    #[test]
+    fn pipeline_prices_and_reports_node_imbalance() {
+        let pipe = skewed_pipeline(PolicyKind::StaticBlock);
+        let frac = zipf_fractions(32, 1.2);
+        let cost = pipe.price(&frac);
+        assert!(cost.comm_total() > 0.0);
+        assert!(pipe.node_imbalance() > 1.0, "skew on a block placement must imbalance");
+    }
+}

@@ -120,7 +120,23 @@ pub fn plan_placement(
     }
 }
 
+/// Replica copies `to` needs that `from` does not already host — the
+/// transfers a commit must materialize (and what the
+/// `MigrationScheduler` enqueues).  Shared by every committing policy.
+pub fn count_migrated(from: &PlacementMap, to: &PlacementMap) -> usize {
+    to.replicas
+        .iter()
+        .enumerate()
+        .map(|(e, gs)| gs.iter().filter(|&g| !from.replicas[e].contains(g)).count())
+        .sum()
+}
+
 /// Stateful rebalancer: owns the tracker and the live placement.
+/// This is the `threshold` [`PlacementPolicy`]
+/// (`placement::policy`) — the production default the trait's other
+/// impls are measured against.
+///
+/// [`PlacementPolicy`]: super::policy::PlacementPolicy
 #[derive(Debug, Clone)]
 pub struct Rebalancer {
     pub policy: RebalancePolicy,
@@ -209,15 +225,7 @@ impl Rebalancer {
         if before.comm_total() < after.comm_total() * p.hysteresis {
             return None;
         }
-        let migrated = candidate
-            .replicas
-            .iter()
-            .enumerate()
-            .map(|(e, gs)| {
-                gs.iter().filter(|&g| !self.current.replicas[e].contains(g)).count()
-            })
-            .sum::<usize>();
-        let migration_secs = migrated as f64 * p.expert_bytes / self.spec.inter_bw;
+        let (_, migration_secs) = self.migration_price(&candidate);
         // comm_total prices ONE dispatch hop; a step executes
         // hops_per_step of them, and the gain accrues until the next
         // policy consult
@@ -225,19 +233,40 @@ impl Rebalancer {
         if gain_per_step * p.check_every as f64 <= migration_secs {
             return None;
         }
+        Some(self.commit(step, before.comm_total(), candidate, after.comm_total()))
+    }
+
+    /// Replica moves `candidate` requires plus their one-off transfer
+    /// lump over the inter-node fabric — the migration-cost model
+    /// every committing policy prices with.
+    pub(crate) fn migration_price(&self, candidate: &PlacementMap) -> (usize, f64) {
+        let migrated = count_migrated(&self.current, candidate);
+        (migrated, migrated as f64 * self.policy.expert_bytes / self.spec.inter_bw)
+    }
+
+    /// Swap `candidate` in and record the decision — the one commit
+    /// path shared by the threshold gates and `GreedyEveryCheck`.
+    pub(crate) fn commit(
+        &mut self,
+        step: usize,
+        comm_before: f64,
+        candidate: PlacementMap,
+        comm_after: f64,
+    ) -> RebalanceDecision {
+        let (migrated, migration_secs) = self.migration_price(&candidate);
         let decision = RebalanceDecision {
             step,
             placement: candidate.clone(),
             migrated_replicas: migrated,
-            comm_before: before.comm_total(),
-            comm_after: after.comm_total(),
+            comm_before,
+            comm_after,
             migration_secs,
         };
         self.current = candidate;
         self.last_rebalance_step = Some(step);
         self.last_decision = Some(decision.clone());
         self.rebalances += 1;
-        Some(decision)
+        decision
     }
 }
 

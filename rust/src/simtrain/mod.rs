@@ -11,5 +11,5 @@ pub use layer_model::{moe_layer_forward, moe_layer_forward_chunked, LayerBreakdo
 pub use models::{ModelDims, Variant};
 pub use step_model::{
     placed_scaling_sweep, placed_step_time, placed_throughput, scaling_sweep, step_time,
-    throughput, traced_step_times, Scaling, StepBreakdown,
+    throughput, traced_step_times, traced_step_times_with, Scaling, StepBreakdown,
 };

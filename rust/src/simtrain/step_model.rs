@@ -18,7 +18,10 @@ use super::compute::{self, BWD_FWD_RATIO};
 use super::models::{ModelDims, Variant};
 use crate::netsim::collectives::{all2all_flat, all2all_inter, all2all_intra, allreduce};
 use crate::netsim::topology::ClusterSpec;
-use crate::placement::{plan_placement, price_placement, PlacementMap, RebalancePolicy, Rebalancer};
+use crate::placement::{
+    plan_placement, price_placement, MigrationConfig, PlacementMap, PolicyKind, RebalancePolicy,
+    RoutingPipeline,
+};
 
 /// Fraction of raw a2a wire time exposed on the critical path.
 pub const EXPOSED_COMM_FRAC: f64 = 0.36;
@@ -36,12 +39,24 @@ pub struct StepBreakdown {
     pub a2a_intra: f64,
     pub a2a_sync: f64,
     pub allreduce: f64,
+    /// Exposed (critical-path) expert-migration stall charged to this
+    /// step: a full lump at the commit when overlap is disabled, or a
+    /// superseded-commit flush when the `MigrationScheduler` runs.
+    pub migration_exposed: f64,
+    /// Background weight-copy time hidden inside this step by the
+    /// scheduler — informational; NOT part of [`StepBreakdown::total`].
+    pub migration_overlapped: f64,
     pub num_micro: usize,
 }
 
 impl StepBreakdown {
     pub fn total(&self) -> f64 {
-        self.compute + self.a2a_inter + self.a2a_intra + self.a2a_sync + self.allreduce
+        self.compute
+            + self.a2a_inter
+            + self.a2a_intra
+            + self.a2a_sync
+            + self.allreduce
+            + self.migration_exposed
     }
 }
 
@@ -206,31 +221,66 @@ pub fn placed_throughput(
 }
 
 /// Replay a recorded `RoutingTrace` through the placed step model: a
-/// `Rebalancer` consumes each step's histogram exactly as the live
-/// trainer would (observe -> consult), and every step is priced with
-/// `placed_step_time` under the placement that served it.  This is how
-/// recorded traffic — synthetic scenarios or real training runs — maps
-/// to simulated wall-clock without a runtime.
+/// `RoutingPipeline` consumes each step's histogram exactly as the
+/// live trainer would (observe -> consult -> migrate), and every step
+/// is priced with `placed_step_time` under the placement that served
+/// it.  This is how recorded traffic — synthetic scenarios or real
+/// training runs — maps to simulated wall-clock without a runtime.
+/// Threshold policy, migration overlap disabled (each commit's lump
+/// lands in that step's `migration_exposed`).
 pub fn traced_step_times(
     dims: &ModelDims,
     trace: &crate::trace::RoutingTrace,
     policy: &RebalancePolicy,
     scaling: Scaling,
 ) -> Vec<StepBreakdown> {
-    let spec = trace.meta.cluster_spec();
-    let mut rb = Rebalancer::new(
+    traced_step_times_with(
+        dims,
+        trace,
+        PolicyKind::Threshold,
         policy.clone(),
+        MigrationConfig::default(),
+        scaling,
+    )
+}
+
+/// [`traced_step_times`] under any policy kind / migration stack.
+/// With overlap enabled, committed weight copies drain across the
+/// following steps' *full* simulated step time (compute + comm — the
+/// real overlap substrate) and surface in each step's
+/// `migration_overlapped`; only commit-flush stalls land in
+/// `migration_exposed`.
+pub fn traced_step_times_with(
+    dims: &ModelDims,
+    trace: &crate::trace::RoutingTrace,
+    kind: PolicyKind,
+    knobs: RebalancePolicy,
+    migration: MigrationConfig,
+    scaling: Scaling,
+) -> Vec<StepBreakdown> {
+    let spec = trace.meta.cluster_spec();
+    let mut pipe = RoutingPipeline::new(
+        kind,
+        knobs,
         spec.clone(),
         trace.meta.num_experts.max(1),
         super::layer_model::hop_payload(dims),
+        migration,
     );
     trace
         .steps
         .iter()
         .map(|s| {
-            rb.observe(&s.experts);
-            rb.maybe_rebalance(s.step);
-            placed_step_time(dims, &spec, &rb.current, &s.experts, scaling)
+            let report = pipe.step(s.step, &s.experts);
+            let mut bd = placed_step_time(dims, &spec, pipe.placement(), &s.experts, scaling);
+            // drain over the base step time, BEFORE charging the
+            // commit stall: during a flush the fabric is already
+            // saturated at full inter_bw, so that wall-clock grants no
+            // background-drain capacity (matches the replay window)
+            let tick = pipe.drain(bd.total());
+            bd.migration_exposed = report.commit_stall_secs;
+            bd.migration_overlapped = tick.overlapped_secs;
+            bd
         })
         .collect()
 }
@@ -483,14 +533,61 @@ mod tests {
         let times = traced_step_times(&dims(), &trace, &policy, paper_scaling());
         assert_eq!(times.len(), 60);
         // the policy consults at step 50; under rank-ordered Zipf(1.2)
-        // it commits, and the placed step time drops
+        // it commits — that step carries the exposed migration lump
+        // (overlap disabled), and the steps after it run cheaper
+        assert!(times[50].migration_exposed > 0.0, "commit step must expose the lump");
+        assert!(times[49].migration_exposed == 0.0 && times[51].migration_exposed == 0.0);
         let mean = |r: std::ops::Range<usize>| {
             let n = r.len() as f64;
             times[r].iter().map(StepBreakdown::total).sum::<f64>() / n
         };
         let before = mean(40..50);
-        let after = mean(50..60);
+        let after = mean(51..60);
         assert!(after < before, "rebalance did not help: {after} >= {before}");
+    }
+
+    #[test]
+    fn traced_step_times_overlap_hides_the_commit_lump() {
+        use crate::placement::{MigrationConfig, PolicyKind};
+        use crate::trace::{record_scenario, Scenario, ScenarioConfig};
+        let cfg = ScenarioConfig {
+            scenario: Scenario::Zipf { s: 1.2 },
+            n_nodes: 4,
+            gpus_per_node: 8,
+            steps: 60,
+            tokens_per_step: 1024,
+            capacity_factor: 2.0,
+            payload_per_gpu: 1e6,
+            seed: 1,
+        };
+        let trace = record_scenario(&cfg, None);
+        let knobs = crate::placement::RebalancePolicy::default();
+        let lump = traced_step_times(&dims(), &trace, &knobs, paper_scaling());
+        let overlapped = traced_step_times_with(
+            &dims(),
+            &trace,
+            PolicyKind::Threshold,
+            knobs,
+            MigrationConfig::overlapped(0.25),
+            paper_scaling(),
+        );
+        let exposed = |ts: &[StepBreakdown]| ts.iter().map(|b| b.migration_exposed).sum::<f64>();
+        let hidden = |ts: &[StepBreakdown]| {
+            ts.iter().map(|b| b.migration_overlapped).sum::<f64>()
+        };
+        assert!(exposed(&lump) > 0.0, "disabled path must expose the lump");
+        assert_eq!(hidden(&lump), 0.0);
+        assert!(
+            exposed(&overlapped) < exposed(&lump),
+            "overlap did not reduce exposure: {} >= {}",
+            exposed(&overlapped),
+            exposed(&lump)
+        );
+        assert!(hidden(&overlapped) > 0.0);
+        // overlap never changes the routing trajectory, so totals only
+        // shrink by the hidden stall
+        let sum = |ts: &[StepBreakdown]| ts.iter().map(StepBreakdown::total).sum::<f64>();
+        assert!(sum(&overlapped) <= sum(&lump) + 1e-12);
     }
 
     #[test]
@@ -499,8 +596,14 @@ mod tests {
         let bd = step_time(&dims(), Variant::Smile, &spec, paper_scaling());
         assert!(bd.compute > 0.0 && bd.a2a_inter > 0.0 && bd.a2a_intra > 0.0);
         assert!(bd.allreduce > 0.0 && bd.a2a_sync > 0.0);
+        assert_eq!(bd.migration_exposed, 0.0, "static step model never migrates");
         assert!((bd.total()
-            - (bd.compute + bd.a2a_inter + bd.a2a_intra + bd.a2a_sync + bd.allreduce))
+            - (bd.compute
+                + bd.a2a_inter
+                + bd.a2a_intra
+                + bd.a2a_sync
+                + bd.allreduce
+                + bd.migration_exposed))
             .abs()
             < 1e-12);
     }

@@ -143,7 +143,12 @@ impl TraceStep {
 
 /// A rebalance the recording run committed (absent in pure traffic
 /// traces; the replayer recomputes its own decisions either way and
-/// can diff against these).
+/// can diff against these).  `migration_secs` here is the decision's
+/// full-bandwidth lump transfer time; how much of it lands on the
+/// critical path is a *replay-time* question — the `ReplaySummary`
+/// splits it into `migration_exposed_secs` + `migration_overlapped_secs`
+/// under the configured `MigrationScheduler`, so the on-disk schema is
+/// unchanged by the overlap model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceDecision {
     pub step: usize,

@@ -11,9 +11,11 @@
 //!   --trace`) and the simtrain scenario generators write through.
 //! - [`scenario`]: deterministic synthetic traffic (uniform / Zipf /
 //!   hot-expert burst) sampled with the seeded xoshiro RNG.
-//! - [`replay`]: the `TraceReplayer` that drives `LoadTracker` ->
-//!   `Rebalancer` -> `price_placement` over a recorded trace and emits
-//!   a per-step timeline plus an end-of-trace `ReplaySummary`.
+//! - [`replay`]: the `TraceReplayer` that drives a
+//!   `placement::RoutingPipeline` (any `PlacementPolicy`, optional
+//!   migration overlap) over a recorded trace and emits a per-step
+//!   timeline plus an end-of-trace `ReplaySummary` with the
+//!   exposed/overlapped migration split.
 //!
 //! Golden traces live under `rust/tests/data/`; their replay summaries
 //! are exact fixtures (see `rust/tests/trace_golden.rs` and the
@@ -27,4 +29,4 @@ pub mod scenario;
 pub use format::{RoutingTrace, TraceDecision, TraceMeta, TraceStep, TRACE_VERSION};
 pub use record::TraceRecorder;
 pub use replay::{ReplayResult, ReplayStepOutcome, ReplaySummary, TraceReplayer};
-pub use scenario::{record_scenario, Scenario, ScenarioConfig};
+pub use scenario::{record_scenario, record_scenario_with, Scenario, ScenarioConfig};

@@ -1,23 +1,31 @@
 //! Deterministic trace replay: feed a recorded `RoutingTrace` through
-//! the same `LoadTracker` -> `Rebalancer` -> `price_placement` pipeline
-//! the live trainer consults, producing a per-step cost/imbalance/
-//! decision timeline and an end-of-trace summary.
+//! the same `RoutingPipeline` (observe -> consult -> migrate) the live
+//! trainer drives, producing a per-step cost/imbalance/decision
+//! timeline and an end-of-trace summary.
 //!
-//! Replay is a pure function of (trace, policy): every step performs
-//! the trainer's exact sequence — observe the step histogram, consult
-//! the policy at the recorded step number, then price one dispatch hop
-//! of the (possibly just-updated) placement under that step's traffic.
-//! Two replays of the same trace therefore produce byte-identical
-//! summaries, and the summaries double as regression fixtures: any
-//! change to rebalance gates, congestion pricing, or EWMA semantics
-//! shifts a summary and fails the golden tests in
-//! `rust/tests/trace_golden.rs` instead of silently moving bench
-//! numbers.
+//! Replay is a pure function of (trace, policy, migration config):
+//! every step performs the trainer's exact sequence — observe the step
+//! histogram, consult the policy at the recorded step number, price
+//! one dispatch hop of the (possibly just-updated) placement under
+//! that step's traffic, then drain background weight copies over the
+//! step's priced comm window.  Two replays of the same trace therefore
+//! produce byte-identical summaries, and the summaries double as
+//! regression fixtures: any change to rebalance gates, congestion
+//! pricing, EWMA semantics, or migration accounting shifts a summary
+//! and fails the golden tests in `rust/tests/trace_golden.rs` instead
+//! of silently moving bench numbers.
+//!
+//! With the `threshold` policy and migration overlap disabled (the
+//! defaults), the summary values reproduce the pre-`RoutingPipeline`
+//! replay byte-for-byte: `migration_exposed_secs` is the old
+//! `migration_secs` lump sum and `migration_overlapped_secs` is 0.
 
 use super::format::RoutingTrace;
 use crate::netsim::topology::ClusterSpec;
 use crate::obj;
-use crate::placement::{price_placement, PlacementMap, RebalancePolicy, Rebalancer};
+use crate::placement::{
+    price_placement, MigrationConfig, PlacementMap, PolicyKind, RebalancePolicy, RoutingPipeline,
+};
 use crate::util::json::Json;
 
 /// One replayed step of the timeline.
@@ -37,11 +45,17 @@ pub struct ReplayStepOutcome {
     /// Whether the policy committed a rebalance at this step.
     pub rebalanced: bool,
     pub migrated_replicas: usize,
+    /// Exposed migration stall charged to this step (lump or flush).
+    pub migration_exposed_secs: f64,
+    /// Background copy time hidden inside this step's comm window.
+    pub migration_overlapped_secs: f64,
 }
 
 /// End-of-trace roll-up — the golden-fixture payload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReplaySummary {
+    /// Stable name of the policy that produced this summary.
+    pub policy: String,
     pub steps: usize,
     /// Histograms the tracker actually folded in (degenerate ones are
     /// skipped and do not advance the EWMA).
@@ -49,16 +63,21 @@ pub struct ReplaySummary {
     pub rebalances: usize,
     pub rebalance_steps: Vec<usize>,
     pub migrated_replicas: usize,
-    /// Total one-off migration time (s) across committed rebalances.
-    pub migration_secs: f64,
+    /// Critical-path migration time (s): the full lump per commit when
+    /// overlap is disabled, otherwise only superseded-commit flushes.
+    pub migration_exposed_secs: f64,
+    /// Copy time (s) hidden behind step comm windows by the scheduler.
+    pub migration_overlapped_secs: f64,
     /// Expert-weight bytes moved: migrated replicas * expert_bytes.
     pub migration_bytes: f64,
+    /// Bytes still in flight when the trace ended.
+    pub migration_pending_bytes: f64,
     /// Total priced dispatch comm (s) over the trace under the
     /// replayed (rebalancing) placement: sum of per-hop comm *
     /// hops_per_step.
     pub total_comm_secs: f64,
     /// Same total under the frozen paper block placement — the
-    /// baseline the rebalancer is judged against.
+    /// baseline every policy is judged against.
     pub static_comm_secs: f64,
     /// Last step's per-hop comm time under the final placement.
     pub final_comm_time: f64,
@@ -72,13 +91,16 @@ pub struct ReplaySummary {
 impl ReplaySummary {
     pub fn to_json(&self) -> Json {
         obj! {
+            "policy" => self.policy.clone(),
             "steps" => self.steps,
             "observed_steps" => self.observed_steps,
             "rebalances" => self.rebalances,
             "rebalance_steps" => self.rebalance_steps.clone(),
             "migrated_replicas" => self.migrated_replicas,
-            "migration_secs" => self.migration_secs,
+            "migration_exposed_secs" => self.migration_exposed_secs,
+            "migration_overlapped_secs" => self.migration_overlapped_secs,
             "migration_bytes" => self.migration_bytes,
+            "migration_pending_bytes" => self.migration_pending_bytes,
             "total_comm_secs" => self.total_comm_secs,
             "static_comm_secs" => self.static_comm_secs,
             "final_comm_time" => self.final_comm_time,
@@ -87,6 +109,11 @@ impl ReplaySummary {
             "mean_dropped_frac" => self.mean_dropped_frac,
             "replicated_experts" => self.replicated_experts,
         }
+    }
+
+    /// Total migration wire time, exposed or not.
+    pub fn migration_total_secs(&self) -> f64 {
+        self.migration_exposed_secs + self.migration_overlapped_secs
     }
 }
 
@@ -100,37 +127,53 @@ pub struct ReplayResult {
 
 /// Stateful replayer; use [`TraceReplayer::replay`] for the one-shot
 /// whole-trace form.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct TraceReplayer {
     pub spec: ClusterSpec,
     pub payload: f64,
-    pub rebalancer: Rebalancer,
+    pub pipeline: RoutingPipeline,
     block: PlacementMap,
     timeline: Vec<ReplayStepOutcome>,
     rebalance_steps: Vec<usize>,
     migrated_replicas: usize,
-    migration_secs: f64,
     total_comm_secs: f64,
     static_comm_secs: f64,
     dropped_sum: f64,
 }
 
 impl TraceReplayer {
+    /// Default stack: `threshold` policy, migration overlap disabled —
+    /// the golden-fixture configuration.
     pub fn new(trace: &RoutingTrace, policy: RebalancePolicy) -> TraceReplayer {
+        TraceReplayer::with_policy(
+            trace,
+            PolicyKind::Threshold,
+            policy,
+            MigrationConfig::default(),
+        )
+    }
+
+    /// Replay under any policy kind / migration configuration.
+    pub fn with_policy(
+        trace: &RoutingTrace,
+        kind: PolicyKind,
+        knobs: RebalancePolicy,
+        migration: MigrationConfig,
+    ) -> TraceReplayer {
         let spec = trace.meta.cluster_spec();
         let num_experts = trace.meta.num_experts.max(1);
         let payload = trace.meta.payload_per_gpu;
-        let rebalancer = Rebalancer::new(policy, spec.clone(), num_experts, payload);
+        let pipeline =
+            RoutingPipeline::new(kind, knobs, spec.clone(), num_experts, payload, migration);
         let block = PlacementMap::block(&spec, num_experts);
         TraceReplayer {
             spec,
             payload,
-            rebalancer,
+            pipeline,
             block,
             timeline: Vec::new(),
             rebalance_steps: Vec::new(),
             migrated_replicas: 0,
-            migration_secs: 0.0,
             total_comm_secs: 0.0,
             static_comm_secs: 0.0,
             dropped_sum: 0.0,
@@ -138,37 +181,38 @@ impl TraceReplayer {
     }
 
     /// Replay one recorded step (the trainer's exact sequence:
-    /// observe, consult, price).
+    /// observe, consult, price, drain).
     pub fn step(&mut self, rec: &super::format::TraceStep) -> ReplayStepOutcome {
-        let rb = &mut self.rebalancer;
-        rb.observe(&rec.experts);
-        let decision = rb.maybe_rebalance(rec.step);
-        let (rebalanced, migrated) = match &decision {
+        let report = self.pipeline.step(rec.step, &rec.experts);
+        let (rebalanced, migrated) = match &report.decision {
             Some(d) => {
                 self.rebalance_steps.push(d.step);
                 self.migrated_replicas += d.migrated_replicas;
-                self.migration_secs += d.migration_secs;
                 (true, d.migrated_replicas)
             }
             None => (false, 0),
         };
-        let frac = rb.tracker.fractions();
-        let node_imbalance =
-            crate::util::stats::imbalance(&rb.current.node_loads(&frac));
-        let cost = price_placement(&rb.current, &rec.experts, &self.spec, self.payload);
+        let node_imbalance = self.pipeline.node_imbalance();
+        let cost = self.pipeline.price(&rec.experts);
         let static_cost = price_placement(&self.block, &rec.experts, &self.spec, self.payload);
-        let hops = rb.policy.hops_per_step;
+        let hops = self.pipeline.hops_per_step();
         self.total_comm_secs += cost.comm_total() * hops;
         self.static_comm_secs += static_cost.comm_total() * hops;
         self.dropped_sum += rec.dropped_frac;
+        // the background copies ride this step's dispatch activity
+        // window (a conservative stand-in for the step's wall time,
+        // which replay does not otherwise model)
+        let tick = self.pipeline.drain(cost.comm_total() * hops);
         let out = ReplayStepOutcome {
             step: rec.step,
-            expert_imbalance: rb.tracker.imbalance(),
+            expert_imbalance: self.pipeline.tracker().imbalance(),
             node_imbalance,
             comm_time: cost.comm_total(),
             compute_scale: cost.compute_scale,
             rebalanced,
             migrated_replicas: migrated,
+            migration_exposed_secs: report.commit_stall_secs,
+            migration_overlapped_secs: tick.overlapped_secs,
         };
         self.timeline.push(out.clone());
         out
@@ -176,35 +220,56 @@ impl TraceReplayer {
 
     /// Roll the replayed state into the summary + timeline.
     pub fn finish(self) -> ReplayResult {
-        let rb = self.rebalancer;
-        let frac = rb.tracker.fractions();
-        let final_node_imbalance =
-            crate::util::stats::imbalance(&rb.current.node_loads(&frac));
+        let pipe = self.pipeline;
+        let final_node_imbalance = pipe.node_imbalance();
+        let placement = pipe.placement();
         let replicated_experts =
-            (0..rb.current.num_experts()).filter(|&e| rb.current.gpus_of(e).len() > 1).count();
+            (0..placement.num_experts()).filter(|&e| placement.gpus_of(e).len() > 1).count();
         let steps = self.timeline.len();
         let summary = ReplaySummary {
+            policy: pipe.policy().name().to_string(),
             steps,
-            observed_steps: rb.tracker.steps(),
+            observed_steps: pipe.tracker().steps(),
             rebalances: self.rebalance_steps.len(),
             rebalance_steps: self.rebalance_steps,
             migrated_replicas: self.migrated_replicas,
-            migration_secs: self.migration_secs,
-            migration_bytes: self.migrated_replicas as f64 * rb.policy.expert_bytes,
+            migration_exposed_secs: pipe.migration.exposed_secs(),
+            migration_overlapped_secs: pipe.migration.overlapped_secs(),
+            migration_bytes: self.migrated_replicas as f64 * pipe.expert_bytes(),
+            migration_pending_bytes: pipe.migration.pending_bytes(),
             total_comm_secs: self.total_comm_secs,
             static_comm_secs: self.static_comm_secs,
             final_comm_time: self.timeline.last().map_or(0.0, |o| o.comm_time),
-            final_expert_imbalance: rb.tracker.imbalance(),
+            final_expert_imbalance: pipe.tracker().imbalance(),
             final_node_imbalance,
             mean_dropped_frac: self.dropped_sum / steps.max(1) as f64,
             replicated_experts,
         };
-        ReplayResult { timeline: self.timeline, summary, final_placement: rb.current }
+        ReplayResult {
+            timeline: self.timeline,
+            summary,
+            final_placement: pipe.placement().clone(),
+        }
     }
 
-    /// One-shot whole-trace replay.
+    /// One-shot whole-trace replay (threshold policy, overlap off).
     pub fn replay(trace: &RoutingTrace, policy: RebalancePolicy) -> ReplayResult {
-        let mut r = TraceReplayer::new(trace, policy);
+        TraceReplayer::replay_with(
+            trace,
+            PolicyKind::Threshold,
+            policy,
+            MigrationConfig::default(),
+        )
+    }
+
+    /// One-shot whole-trace replay under any policy / migration stack.
+    pub fn replay_with(
+        trace: &RoutingTrace,
+        kind: PolicyKind,
+        knobs: RebalancePolicy,
+        migration: MigrationConfig,
+    ) -> ReplayResult {
+        let mut r = TraceReplayer::with_policy(trace, kind, knobs, migration);
         for s in &trace.steps {
             r.step(s);
         }
@@ -215,6 +280,7 @@ impl TraceReplayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::placement::{LoadTracker, Rebalancer};
     use crate::trace::scenario::{record_scenario, Scenario, ScenarioConfig};
 
     fn cfg(scenario: Scenario, steps: usize) -> ScenarioConfig {
@@ -248,13 +314,48 @@ mod tests {
     }
 
     #[test]
+    fn trait_object_replay_matches_pre_refactor_sequence_bytewise() {
+        // parity: the pipeline-driven replay must reproduce the
+        // hand-rolled LoadTracker -> Rebalancer -> price_placement
+        // loop the replayer used before the PlacementPolicy refactor,
+        // byte-for-byte, when overlap is disabled
+        let trace = record_scenario(&cfg(Scenario::Zipf { s: 1.4 }, 120), None);
+        let policy = RebalancePolicy::default();
+        let spec = trace.meta.cluster_spec();
+        let payload = trace.meta.payload_per_gpu;
+        let mut rb =
+            Rebalancer::new(policy.clone(), spec.clone(), trace.meta.num_experts, payload);
+        let block = PlacementMap::block(&spec, trace.meta.num_experts);
+        let (mut total, mut statict, mut migration) = (0.0f64, 0.0f64, 0.0f64);
+        for rec in &trace.steps {
+            rb.observe(&rec.experts);
+            if let Some(d) = rb.maybe_rebalance(rec.step) {
+                migration += d.migration_secs;
+            }
+            let cost = price_placement(&rb.current, &rec.experts, &spec, payload);
+            let stat = price_placement(&block, &rec.experts, &spec, payload);
+            total += cost.comm_total() * rb.policy.hops_per_step;
+            statict += stat.comm_total() * rb.policy.hops_per_step;
+        }
+        let r = TraceReplayer::replay(&trace, policy);
+        assert_eq!(r.summary.total_comm_secs.to_bits(), total.to_bits());
+        assert_eq!(r.summary.static_comm_secs.to_bits(), statict.to_bits());
+        assert_eq!(r.summary.migration_exposed_secs.to_bits(), migration.to_bits());
+        assert_eq!(r.summary.migration_overlapped_secs, 0.0);
+        assert_eq!(r.summary.rebalances, rb.rebalances);
+        assert_eq!(r.final_placement, rb.current);
+        assert_eq!(r.summary.policy, "threshold");
+    }
+
+    #[test]
     fn uniform_trace_never_rebalances() {
         let trace = record_scenario(&cfg(Scenario::Uniform, 120), None);
         let r = TraceReplayer::replay(&trace, RebalancePolicy::default());
         assert_eq!(r.summary.rebalances, 0);
         assert!(r.summary.rebalance_steps.is_empty());
         assert_eq!(r.summary.migrated_replicas, 0);
-        assert_eq!(r.summary.migration_secs, 0.0);
+        assert_eq!(r.summary.migration_exposed_secs, 0.0);
+        assert_eq!(r.summary.migration_overlapped_secs, 0.0);
         // without skew the rebalanced total equals the static total
         assert_eq!(r.summary.total_comm_secs, r.summary.static_comm_secs);
         assert_eq!(r.final_placement, PlacementMap::block(&r.spec, 8));
@@ -279,6 +380,87 @@ mod tests {
     }
 
     #[test]
+    fn static_policy_reproduces_the_static_baseline() {
+        let trace = record_scenario(&cfg(Scenario::Zipf { s: 1.4 }, 120), None);
+        let r = TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::StaticBlock,
+            RebalancePolicy::default(),
+            MigrationConfig::default(),
+        );
+        assert_eq!(r.summary.policy, "static_block");
+        assert_eq!(r.summary.rebalances, 0);
+        assert_eq!(r.summary.total_comm_secs.to_bits(), r.summary.static_comm_secs.to_bits());
+        assert_eq!(r.summary.migration_bytes, 0.0);
+        assert_eq!(r.final_placement, PlacementMap::block(&r.spec, 8));
+    }
+
+    #[test]
+    fn greedy_policy_rebalances_at_least_as_often_as_threshold() {
+        let trace = record_scenario(&cfg(Scenario::Zipf { s: 1.4 }, 120), None);
+        let knobs = RebalancePolicy::default();
+        let threshold = TraceReplayer::replay(&trace, knobs.clone());
+        let greedy = TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::GreedyEveryCheck,
+            knobs,
+            MigrationConfig::default(),
+        );
+        assert_eq!(greedy.summary.policy, "greedy_every_check");
+        assert!(
+            greedy.summary.rebalances >= threshold.summary.rebalances,
+            "greedy {} < threshold {}",
+            greedy.summary.rebalances,
+            threshold.summary.rebalances
+        );
+        // ungated commits must still beat the static baseline
+        assert!(greedy.summary.total_comm_secs < greedy.summary.static_comm_secs);
+    }
+
+    #[test]
+    fn overlap_hides_migration_and_conserves_bytes() {
+        let trace = record_scenario(&cfg(Scenario::Zipf { s: 1.4 }, 120), None);
+        let knobs = RebalancePolicy::default();
+        let off = TraceReplayer::replay(&trace, knobs.clone());
+        assert!(off.summary.migration_exposed_secs > 0.0, "fixture must migrate");
+        let on = TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::Threshold,
+            knobs.clone(),
+            MigrationConfig::overlapped(0.25),
+        );
+        // identical routing decisions: overlap changes only the
+        // migration accounting, never the placement trajectory
+        assert_eq!(on.summary.rebalance_steps, off.summary.rebalance_steps);
+        assert_eq!(on.summary.total_comm_secs.to_bits(), off.summary.total_comm_secs.to_bits());
+        assert!(
+            on.summary.migration_exposed_secs < off.summary.migration_exposed_secs,
+            "overlap did not reduce exposed migration: {:?}",
+            on.summary
+        );
+        assert!(on.summary.migration_overlapped_secs > 0.0);
+        // wire-time conservation: exposed + overlapped + pending == lump
+        let bw = trace.meta.cluster_spec().inter_bw;
+        let total = on.summary.migration_exposed_secs
+            + on.summary.migration_overlapped_secs
+            + on.summary.migration_pending_bytes / bw;
+        assert!(
+            (total - off.summary.migration_exposed_secs).abs() < 1e-12,
+            "wire time not conserved: {total} vs {}",
+            off.summary.migration_exposed_secs
+        );
+        // a starved trickle leaves bytes pending instead of stalling
+        let trickle = TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::Threshold,
+            knobs,
+            MigrationConfig::overlapped(1e-7),
+        );
+        assert!(trickle.summary.migration_pending_bytes > 0.0);
+        assert_eq!(trickle.summary.migration_exposed_secs, 0.0);
+    }
+
+    #[test]
     fn empty_trace_yields_neutral_summary() {
         let trace = record_scenario(&cfg(Scenario::Uniform, 0), None);
         let r = TraceReplayer::replay(&trace, RebalancePolicy::default());
@@ -295,5 +477,19 @@ mod tests {
         let text = r.summary.to_json().to_string_pretty();
         let parsed = Json::parse(&text).unwrap();
         assert_eq!(parsed, r.summary.to_json());
+    }
+
+    #[test]
+    fn replayer_tracker_is_reachable_for_policy_consumers() {
+        // the learned-placement follow-up reads the tracker as its
+        // feature source; keep it reachable through the pipeline
+        let trace = record_scenario(&cfg(Scenario::Zipf { s: 1.2 }, 30), None);
+        let mut r = TraceReplayer::new(&trace, RebalancePolicy::default());
+        for s in &trace.steps {
+            r.step(s);
+        }
+        let t: &LoadTracker = r.pipeline.tracker();
+        assert_eq!(t.steps(), 30);
+        assert!(t.imbalance() > 1.0);
     }
 }

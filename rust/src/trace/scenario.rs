@@ -10,7 +10,9 @@
 use super::format::{RoutingTrace, TraceMeta, TRACE_VERSION};
 use super::record::TraceRecorder;
 use crate::moe::dispatch::{demand_histogram, DispatchPlan, Top1};
-use crate::placement::{zipf_fractions, RebalancePolicy, Rebalancer};
+use crate::placement::{
+    zipf_fractions, MigrationConfig, PolicyKind, RebalancePolicy, RoutingPipeline,
+};
 use crate::util::rng::Rng;
 
 /// A synthetic traffic shape.
@@ -100,15 +102,30 @@ impl ScenarioConfig {
 /// expert choices from the scenario weights, extract the demand
 /// histogram, apply capacity for the drop rate, and aggregate node
 /// demand under the paper's expert->node identity (e / m).  When
-/// `policy` is given, a live `Rebalancer` runs alongside (exactly as
-/// the trainer would drive it) and its committed decisions land in the
-/// trace.
+/// `policy` is given, a live threshold `RoutingPipeline` runs
+/// alongside (the same observe -> consult sequence the trainer
+/// drives) and its committed decisions land in the trace.
 pub fn record_scenario(cfg: &ScenarioConfig, policy: Option<&RebalancePolicy>) -> RoutingTrace {
+    record_scenario_with(cfg, policy.map(|p| (PolicyKind::Threshold, p.clone())))
+}
+
+/// [`record_scenario`] with an explicit policy kind running live.
+pub fn record_scenario_with(
+    cfg: &ScenarioConfig,
+    policy: Option<(PolicyKind, RebalancePolicy)>,
+) -> RoutingTrace {
     let e_total = cfg.num_experts();
     let capacity = cfg.capacity();
     let mut rec = TraceRecorder::new(cfg.meta());
-    let mut rb = policy.map(|p| {
-        Rebalancer::new(p.clone(), cfg.meta().cluster_spec(), e_total, cfg.payload_per_gpu)
+    let mut pipe = policy.map(|(kind, knobs)| {
+        RoutingPipeline::new(
+            kind,
+            knobs,
+            cfg.meta().cluster_spec(),
+            e_total,
+            cfg.payload_per_gpu,
+            MigrationConfig::default(),
+        )
     });
     let mut rng = Rng::new(cfg.seed);
     for step in 0..cfg.steps {
@@ -124,9 +141,8 @@ pub fn record_scenario(cfg: &ScenarioConfig, policy: Option<&RebalancePolicy>) -
             nodes[e / cfg.gpus_per_node] += c;
         }
         rec.record_step(step, &experts, &nodes, dropped_frac, cfg.tokens_per_step as f64);
-        if let Some(rb) = rb.as_mut() {
-            rb.observe(&experts);
-            if let Some(d) = rb.maybe_rebalance(step) {
+        if let Some(pipe) = pipe.as_mut() {
+            if let Some(d) = pipe.step(step, &experts).decision {
                 rec.record_decision(&d);
             }
         }

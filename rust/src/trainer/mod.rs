@@ -15,9 +15,61 @@ use anyhow::{anyhow, Context, Result};
 use crate::data::{Corpus, CorpusSpec, MlmBatch, MlmBatcher, MlmSpec};
 use crate::metrics::StepLog;
 use crate::netsim::ClusterSpec;
-use crate::placement::{RebalancePolicy, Rebalancer};
+use crate::placement::{MigrationConfig, PolicyKind, RebalancePolicy, RoutingPipeline};
 use crate::runtime::{ArtifactConfig, Loaded, Runtime, Tensor};
 use crate::trace::{TraceMeta, TraceRecorder, TRACE_VERSION};
+
+/// Cluster shape the trainer prices on: the artifact's node/GPU counts
+/// with the calibrated P4d bandwidth/congestion constants — the same
+/// substitution `TraceMeta::cluster_spec` makes, so trainer, replayer,
+/// and simtrain sweeps all agree for the same shape.
+pub fn config_cluster_spec(cfg: &ArtifactConfig) -> ClusterSpec {
+    let n_nodes = cfg.n_nodes.max(1);
+    ClusterSpec {
+        n_nodes,
+        gpus_per_node: cfg.gpus_per_node.max(1),
+        ..ClusterSpec::p4d(n_nodes)
+    }
+}
+
+/// Bytes each GPU contributes per dispatch hop for this artifact —
+/// the one payload computation `enable_policy` and
+/// `enable_trace_recording` share.
+pub fn config_hop_payload(cfg: &ArtifactConfig) -> f64 {
+    crate::moe::a2a_payload_bytes(
+        cfg.micro_batch * cfg.seq_len,
+        cfg.hidden_size,
+        cfg.capacity_factor.max(1.0),
+        4,
+    )
+}
+
+/// Per-expert per-step capacity implied by the artifact's
+/// `capacity_factor` — the scenario-recorder formula (factor * tokens
+/// / experts, floored at 1), with tokens per optimizer step counted
+/// across the accumulation steps exactly as the MoE layers apply it
+/// per micro-batch.
+pub fn config_capacity(cfg: &ArtifactConfig) -> usize {
+    let tokens = cfg.accum_steps.max(1) * cfg.micro_batch * cfg.seq_len;
+    let cap = cfg.capacity_factor * tokens as f64 / cfg.num_experts.max(1) as f64;
+    (cap as usize).max(1)
+}
+
+/// The `TraceMeta` header a training run of this artifact records —
+/// real seed, real capacity, shared hop payload.
+pub fn config_trace_meta(cfg: &ArtifactConfig, seed: u64) -> TraceMeta {
+    TraceMeta {
+        version: TRACE_VERSION,
+        scenario: format!("train {}", cfg.name),
+        seed,
+        n_nodes: cfg.n_nodes.max(1),
+        gpus_per_node: cfg.gpus_per_node.max(1),
+        num_experts: cfg.num_experts.max(1),
+        tokens_per_step: cfg.accum_steps * cfg.micro_batch * cfg.seq_len,
+        capacity: config_capacity(cfg),
+        payload_per_gpu: config_hop_payload(cfg),
+    }
+}
 
 pub struct Trainer {
     pub cfg: ArtifactConfig,
@@ -26,12 +78,14 @@ pub struct Trainer {
     /// full training state (params + moments) as host literals
     state: Vec<xla::Literal>,
     pub step: usize,
+    /// the seed the state was initialized from (recorded in traces)
+    pub seed: i32,
     /// last observed per-expert / per-node dispatch fractions
     pub last_expert_frac: Vec<f32>,
     pub last_node_frac: Vec<f32>,
-    /// optional placement rebalancer consulted after every train_call
-    /// (see `enable_rebalancing`)
-    pub rebalancer: Option<Rebalancer>,
+    /// optional routing-policy pipeline consulted after every
+    /// train_call (see `enable_rebalancing` / `enable_policy`)
+    pub pipeline: Option<RoutingPipeline>,
     /// optional routing-trace capture (see `enable_trace_recording`):
     /// every optimizer step's expert/node routing fractions and drop
     /// rate land in the trace, plus any rebalance the policy commits
@@ -63,26 +117,35 @@ impl Trainer {
             eval_art,
             state,
             step: 0,
+            seed,
             last_expert_frac: Vec::new(),
             last_node_frac: Vec::new(),
-            rebalancer: None,
+            pipeline: None,
             trace_recorder: None,
         })
     }
 
-    /// Track per-expert routing fractions and consult `policy` every N
-    /// steps for a congestion-aware expert placement.  The cluster
-    /// shape and hop payload come from the artifact config; bandwidth
-    /// and congestion constants are the calibrated P4d model, so the
-    /// trainer's commit/reject decisions agree with what `smile
-    /// placement` and the simtrain sweeps report for the same shape.
-    pub fn enable_rebalancing(&mut self, mut policy: RebalancePolicy) {
-        let n_nodes = self.cfg.n_nodes.max(1);
-        let spec = ClusterSpec {
-            n_nodes,
-            gpus_per_node: self.cfg.gpus_per_node.max(1),
-            ..ClusterSpec::p4d(n_nodes)
-        };
+    /// Track per-expert routing fractions and consult the default
+    /// `threshold` policy every N steps (migration priced as a lump).
+    pub fn enable_rebalancing(&mut self, policy: RebalancePolicy) {
+        self.enable_policy(PolicyKind::Threshold, policy, MigrationConfig::default());
+    }
+
+    /// Drive any [`PlacementPolicy`](crate::placement::PlacementPolicy)
+    /// from the training loop, with optional migration overlap: the
+    /// cluster shape and hop payload come from the artifact config;
+    /// bandwidth and congestion constants are the calibrated P4d
+    /// model, so the trainer's commit/reject decisions agree with what
+    /// `smile placement`, `smile trace replay`, and the simtrain
+    /// sweeps report for the same shape.  Committed weight copies
+    /// drain across subsequent `train_call` wall-clock windows.
+    pub fn enable_policy(
+        &mut self,
+        kind: PolicyKind,
+        mut policy: RebalancePolicy,
+        migration: MigrationConfig,
+    ) {
+        let spec = config_cluster_spec(&self.cfg);
         let num_experts = self.cfg.num_experts.max(1);
         // 4 hops per MoE layer (every other FFN position) per micro-step
         policy.hops_per_step = 4.0
@@ -92,38 +155,24 @@ impl Trainer {
         // (f32 on the CPU path, like the activations below)
         let (d, f) = (self.cfg.hidden_size as f64, self.cfg.ffn_size as f64);
         policy.expert_bytes = (2.0 * d * f + f + d) * 4.0;
-        let payload = crate::moe::a2a_payload_bytes(
-            self.cfg.micro_batch * self.cfg.seq_len,
-            self.cfg.hidden_size,
-            self.cfg.capacity_factor.max(1.0),
-            4,
-        );
-        self.rebalancer = Some(Rebalancer::new(policy, spec, num_experts, payload));
+        let payload = config_hop_payload(&self.cfg);
+        self.pipeline =
+            Some(RoutingPipeline::new(kind, policy, spec, num_experts, payload, migration));
     }
 
     /// Capture every optimizer step's routing picture as a
-    /// `RoutingTrace` (`smile train --trace out.jsonl`).  Uses the
-    /// artifact's cluster shape like `enable_rebalancing`, and the
-    /// same hop payload, so a recorded trace replays against the
-    /// pricing model the trainer itself consults.
+    /// `RoutingTrace` (`smile train --trace out.jsonl`).  The header
+    /// carries the real training seed, the capacity implied by the
+    /// artifact's `capacity_factor`, and the same hop payload the
+    /// policy pipeline prices with, so a recorded trace replays
+    /// against the model the trainer itself consults.
     pub fn enable_trace_recording(&mut self) {
-        let payload = crate::moe::a2a_payload_bytes(
-            self.cfg.micro_batch * self.cfg.seq_len,
-            self.cfg.hidden_size,
-            self.cfg.capacity_factor.max(1.0),
-            4,
-        );
-        self.trace_recorder = Some(TraceRecorder::new(TraceMeta {
-            version: TRACE_VERSION,
-            scenario: format!("train {}", self.cfg.name),
-            seed: 0,
-            n_nodes: self.cfg.n_nodes.max(1),
-            gpus_per_node: self.cfg.gpus_per_node.max(1),
-            num_experts: self.cfg.num_experts.max(1),
-            tokens_per_step: self.cfg.accum_steps * self.cfg.micro_batch * self.cfg.seq_len,
-            capacity: 0,
-            payload_per_gpu: payload,
-        }));
+        // widen via u32 so a negative i32 seed (a truncated CLI u64)
+        // records as its own bit pattern — `value as i32` recovers the
+        // effective init seed, instead of sign-extending to a u64 that
+        // matches neither the CLI nor the artifact
+        let seed = self.seed as u32 as u64;
+        self.trace_recorder = Some(TraceRecorder::new(config_trace_meta(&self.cfg, seed)));
     }
 
     pub fn param_count(&self) -> usize {
@@ -247,36 +296,53 @@ impl Trainer {
             self.trace_recorder = None;
         }
 
-        let mut disable_rebalancer = false;
-        if let Some(rb) = self.rebalancer.as_mut() {
-            if self.last_expert_frac.len() == rb.tracker.num_experts() {
-                rb.observe_f32(&self.last_expert_frac);
-                if let Some(d) = rb.maybe_rebalance(self.step) {
+        let mut disable_pipeline = false;
+        if let Some(pipe) = self.pipeline.as_mut() {
+            if self.last_expert_frac.len() == pipe.tracker().num_experts() {
+                let report = pipe.step_f32(self.step, &self.last_expert_frac);
+                if let Some(d) = &report.decision {
                     if let Some(rec) = self.trace_recorder.as_mut() {
-                        rec.record_decision(&d);
+                        rec.record_decision(d);
                     }
                     log::info!(
                         "rebalanced expert placement at step {}: hop comm {:.3} ms -> {:.3} ms \
-                         ({} replica moves, migration {:.3} ms)",
+                         ({} replica moves, migration {:.3} ms{})",
                         d.step,
                         d.comm_before * 1e3,
                         d.comm_after * 1e3,
                         d.migrated_replicas,
-                        d.migration_secs * 1e3
+                        d.migration_secs * 1e3,
+                        if pipe.migration.cfg.enabled() { ", overlapping" } else { "" }
+                    );
+                    if report.commit_stall_secs > 0.0 && pipe.migration.cfg.enabled() {
+                        log::info!(
+                            "  flushed {:.3} ms of superseded weight copies",
+                            report.commit_stall_secs * 1e3
+                        );
+                    }
+                }
+                // background weight copies ride this call's wall clock
+                let tick = pipe.drain(elapsed);
+                if tick.drained_bytes > 0.0 {
+                    log::debug!(
+                        "migrated {:.1} MB of expert weights in the background \
+                         ({:.1} MB still pending)",
+                        tick.drained_bytes / 1e6,
+                        pipe.migration.pending_bytes() / 1e6
                     );
                 }
             } else {
                 log::warn!(
-                    "disabling placement rebalancer: artifact reports {} expert fractions \
+                    "disabling placement policy: artifact reports {} expert fractions \
                      but the config declares {} experts",
                     self.last_expert_frac.len(),
-                    rb.tracker.num_experts()
+                    pipe.tracker().num_experts()
                 );
-                disable_rebalancer = true;
+                disable_pipeline = true;
             }
         }
-        if disable_rebalancer {
-            self.rebalancer = None;
+        if disable_pipeline {
+            self.pipeline = None;
         }
         Ok(logs)
     }
@@ -346,5 +412,68 @@ impl Trainer {
 
     pub fn exec_stats(&self) -> crate::runtime::ExecStats {
         self.train_art.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ArtifactConfig {
+        ArtifactConfig {
+            name: "tiny_smile".into(),
+            variant: "smile".into(),
+            vocab_size: 1024,
+            seq_len: 64,
+            micro_batch: 8,
+            accum_steps: 2,
+            steps_per_call: 4,
+            n_nodes: 2,
+            gpus_per_node: 4,
+            num_experts: 8,
+            hidden_size: 128,
+            ffn_size: 512,
+            num_layers: 4,
+            capacity_factor: 1.5,
+            alpha: 0.01,
+            beta: 0.001,
+        }
+    }
+
+    #[test]
+    fn trace_meta_threads_seed_and_capacity() {
+        let cfg = tiny_cfg();
+        let meta = config_trace_meta(&cfg, 42);
+        assert_eq!(meta.seed, 42, "the real training seed must land in the header");
+        assert_eq!(meta.tokens_per_step, 2 * 8 * 64);
+        // capacity_factor * tokens / experts = 1.5 * 1024 / 8 = 192
+        assert_eq!(meta.capacity, 192, "capacity must reflect capacity_factor, not 0");
+        assert_eq!(meta.num_experts, 8);
+        assert_eq!(meta.n_nodes, 2);
+        assert_eq!(meta.scenario, "train tiny_smile");
+        // the header payload is the one pricing payload
+        assert_eq!(meta.payload_per_gpu, config_hop_payload(&cfg));
+        // and the replayer reconstructs the trainer's cluster spec
+        assert_eq!(meta.cluster_spec(), config_cluster_spec(&cfg));
+    }
+
+    #[test]
+    fn capacity_floors_at_one_and_survives_degenerate_configs() {
+        let mut cfg = tiny_cfg();
+        cfg.capacity_factor = 0.0;
+        assert_eq!(config_capacity(&cfg), 1, "0 is the header's 'uncapped' marker");
+        cfg.capacity_factor = 1.5;
+        cfg.num_experts = 0;
+        assert!(config_capacity(&cfg) >= 1);
+    }
+
+    #[test]
+    fn cluster_spec_inherits_p4d_constants() {
+        let spec = config_cluster_spec(&tiny_cfg());
+        let p4d = ClusterSpec::p4d(2);
+        assert_eq!(spec.n_nodes, 2);
+        assert_eq!(spec.gpus_per_node, 4);
+        assert_eq!(spec.inter_bw, p4d.inter_bw);
+        assert_eq!(spec.gamma_inter, p4d.gamma_inter);
     }
 }

@@ -5,7 +5,9 @@ use smile::cluster::ProcessGroups;
 use smile::moe::{self, BiLevelPlan, DispatchPlan, PlacedPlan};
 use smile::netsim::collectives::{all2all_flat, all2all_inter, all2all_intra, allreduce};
 use smile::netsim::{ClusterSpec, DagSim};
-use smile::placement::{self, PlacementMap, RebalancePolicy};
+use smile::placement::{
+    self, MigrationConfig, MigrationScheduler, PlacementMap, PolicyKind, RebalancePolicy,
+};
 use smile::prop_assert;
 use smile::trace::{record_scenario, RoutingTrace, Scenario, ScenarioConfig, TraceReplayer};
 use smile::util::json::Json;
@@ -400,6 +402,75 @@ fn prop_placed_plan_conserves_tokens() {
 }
 
 // ---------------------------------------------------------------------------
+// migration scheduler ledger laws
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_migration_scheduler_conserves_bytes() {
+    check(
+        "migration: enqueued == drained + pending; drain rate <= bandwidth share",
+        &cfg(),
+        |rng| {
+            let inter_bw = 1e9 + rng.f64() * 1e11;
+            let overlap = match rng.below(4) {
+                0 => 0.0, // lump-sum mode must obey the same ledger
+                _ => 1e-3 + rng.f64() * 0.999,
+            };
+            // interleaved enqueue (commit) and drain (step) events
+            let events: Vec<(bool, f64)> = (0..1 + rng.below(40))
+                .map(|_| {
+                    if rng.below(3) == 0 {
+                        (true, rng.f64() * 5e8) // enqueue bytes
+                    } else {
+                        (false, rng.f64() * 0.05) // drain window secs
+                    }
+                })
+                .collect();
+            (inter_bw, overlap, events)
+        },
+        |(inter_bw, overlap, events)| {
+            let cfg = MigrationConfig::overlapped(*overlap);
+            let mut s = MigrationScheduler::new(*inter_bw, cfg);
+            for (is_enqueue, x) in events {
+                if *is_enqueue {
+                    let stall = s.enqueue(*x, x / inter_bw);
+                    prop_assert!(stall >= 0.0, "negative stall");
+                } else {
+                    let tick = s.drain(*x);
+                    let share = overlap * inter_bw * x;
+                    prop_assert!(
+                        tick.drained_bytes <= share + share.abs() * 1e-12 + 1e-9,
+                        "drained {} > share {share}",
+                        tick.drained_bytes
+                    );
+                    prop_assert!(
+                        (tick.overlapped_secs - tick.drained_bytes / inter_bw).abs() < 1e-12,
+                        "tick time does not match its bytes"
+                    );
+                }
+                // ledger closes after every event
+                let ledger = s.drained_bytes() + s.pending_bytes();
+                prop_assert!(
+                    (s.enqueued_bytes() - ledger).abs() <= s.enqueued_bytes() * 1e-12 + 1e-6,
+                    "bytes leaked: enqueued {} != drained+pending {ledger}",
+                    s.enqueued_bytes()
+                );
+                prop_assert!(s.pending_bytes() >= 0.0, "negative pending");
+            }
+            // wire-time conservation: exposed + overlapped + pending/bw
+            // equals the lump-sum transfer time of everything enqueued
+            let total = s.exposed_secs() + s.overlapped_secs() + s.pending_bytes() / inter_bw;
+            let lump = s.enqueued_bytes() / inter_bw;
+            prop_assert!(
+                (total - lump).abs() <= lump * 1e-9 + 1e-12,
+                "wire time not conserved: {total} vs lump {lump}"
+            );
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
 // trace capture / replay determinism
 // ---------------------------------------------------------------------------
 
@@ -465,6 +536,63 @@ fn prop_trace_jsonl_roundtrip_bitwise() {
             }
             // serialization is a fixed point (idempotent)
             prop_assert!(back.to_jsonl() == text, "re-serialization drifted");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_replay_deterministic_across_policies() {
+    // replay stays a pure function of (trace, policy, migration) for
+    // EVERY policy kind, not just the threshold default
+    check(
+        "trace: replay_with(kind, overlap) is deterministic and baseline-bounded",
+        &cfg(),
+        |rng| {
+            let sc = random_scenario(rng);
+            let kind = match rng.below(3) {
+                0 => PolicyKind::Threshold,
+                1 => PolicyKind::StaticBlock,
+                _ => PolicyKind::GreedyEveryCheck,
+            };
+            let overlap = if rng.below(2) == 0 { 0.0 } else { rng.f64() * 0.9 };
+            (sc, kind, overlap)
+        },
+        |(sc, kind, overlap)| {
+            let trace = record_scenario(sc, None);
+            let migration = MigrationConfig::overlapped(*overlap);
+            let knobs = RebalancePolicy { check_every: 20, ..RebalancePolicy::default() };
+            let a = TraceReplayer::replay_with(&trace, *kind, knobs.clone(), migration);
+            let b = TraceReplayer::replay_with(&trace, *kind, knobs, migration);
+            prop_assert!(a == b, "replay_with({kind:?}, {overlap}) not deterministic");
+            prop_assert!(
+                a.summary.policy == kind.name(),
+                "summary labels {} != {}",
+                a.summary.policy,
+                kind.name()
+            );
+            prop_assert!(
+                a.summary.migration_exposed_secs >= 0.0
+                    && a.summary.migration_overlapped_secs >= 0.0
+                    && a.summary.migration_pending_bytes >= 0.0,
+                "negative migration accounting: {:?}",
+                a.summary
+            );
+            let bw = trace.meta.cluster_spec().inter_bw;
+            let wire = a.summary.migration_exposed_secs
+                + a.summary.migration_overlapped_secs
+                + a.summary.migration_pending_bytes / bw;
+            let lump = a.summary.migration_bytes / bw;
+            prop_assert!(
+                (wire - lump).abs() <= lump * 1e-9 + 1e-12,
+                "migration wire time {wire} != lump {lump}"
+            );
+            if *kind == PolicyKind::StaticBlock {
+                prop_assert!(
+                    a.summary.total_comm_secs == a.summary.static_comm_secs,
+                    "static policy diverged from the static baseline"
+                );
+            }
             Ok(())
         },
     );

@@ -14,7 +14,7 @@
 //!   cargo run --release -- trace summarize --in tests/data/trace_uniform.jsonl --bless
 //! (repeat for trace_zipf12 / trace_burst), then review the diff.
 
-use smile::placement::RebalancePolicy;
+use smile::placement::{MigrationConfig, PolicyKind, RebalancePolicy};
 use smile::trace::{ReplayResult, RoutingTrace, TraceReplayer};
 use smile::util::json::Json;
 
@@ -59,6 +59,8 @@ fn golden_uniform_never_rebalances() {
     let r = assert_matches_golden("trace_uniform");
     assert_eq!(r.summary.rebalances, 0, "uniform traffic must not rebalance");
     assert_eq!(r.summary.migrated_replicas, 0);
+    assert_eq!(r.summary.migration_exposed_secs, 0.0);
+    assert_eq!(r.summary.migration_overlapped_secs, 0.0);
     // without a commit the rebalanced and static totals coincide
     assert_eq!(r.summary.total_comm_secs, r.summary.static_comm_secs);
 }
@@ -86,6 +88,88 @@ fn golden_burst_reacts_inside_the_burst_window() {
     assert!(
         (80..=150).contains(&first),
         "first rebalance at {first}, expected within/just after the 80..140 burst"
+    );
+}
+
+#[test]
+fn golden_overlap_hides_migration_behind_steps() {
+    // the migration-overlap acceptance criterion: on the skewed golden
+    // traces, draining weight copies at 25% of inter_bw exposes less
+    // migration than the lump-sum model, while the rebalanced comm
+    // plus whatever stays exposed still beats the static baseline
+    for name in ["trace_zipf12", "trace_burst"] {
+        let trace = RoutingTrace::read_jsonl(data_path(&format!("{name}.jsonl"))).unwrap();
+        let lump = TraceReplayer::replay(&trace, RebalancePolicy::default());
+        assert!(lump.summary.migration_exposed_secs > 0.0, "{name}: fixture must migrate");
+        let overlap = TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::Threshold,
+            RebalancePolicy::default(),
+            MigrationConfig::overlapped(0.25),
+        );
+        // the overlap model never changes the routing trajectory
+        assert_eq!(overlap.summary.rebalance_steps, lump.summary.rebalance_steps);
+        assert_eq!(
+            overlap.summary.total_comm_secs.to_bits(),
+            lump.summary.total_comm_secs.to_bits(),
+            "{name}: overlap must not move priced comm"
+        );
+        assert!(
+            overlap.summary.migration_exposed_secs < lump.summary.migration_exposed_secs,
+            "{name}: exposed {} not below the lump {}",
+            overlap.summary.migration_exposed_secs,
+            lump.summary.migration_exposed_secs
+        );
+        assert!(overlap.summary.migration_overlapped_secs > 0.0, "{name}: nothing overlapped");
+        assert!(
+            overlap.summary.total_comm_secs + overlap.summary.migration_exposed_secs
+                < overlap.summary.static_comm_secs,
+            "{name}: comm + exposed migration must beat the static baseline"
+        );
+    }
+}
+
+#[test]
+fn golden_policy_sweep_brackets_the_threshold_policy() {
+    // the trait refactor's point: swap the policy, keep the trace.
+    // static_block reproduces the baseline exactly; greedy (no gates)
+    // rebalances at least as often as threshold and still beats static
+    let trace = RoutingTrace::read_jsonl(data_path("trace_zipf12.jsonl")).unwrap();
+    let threshold = TraceReplayer::replay(&trace, RebalancePolicy::default());
+    let stat = TraceReplayer::replay_with(
+        &trace,
+        PolicyKind::StaticBlock,
+        RebalancePolicy::default(),
+        MigrationConfig::default(),
+    );
+    assert_eq!(stat.summary.rebalances, 0);
+    assert_eq!(
+        stat.summary.total_comm_secs.to_bits(),
+        stat.summary.static_comm_secs.to_bits()
+    );
+    assert_eq!(
+        stat.summary.static_comm_secs.to_bits(),
+        threshold.summary.static_comm_secs.to_bits(),
+        "every policy prices the same static baseline"
+    );
+    let greedy = TraceReplayer::replay_with(
+        &trace,
+        PolicyKind::GreedyEveryCheck,
+        RebalancePolicy::default(),
+        MigrationConfig::default(),
+    );
+    assert!(greedy.summary.rebalances >= threshold.summary.rebalances);
+    assert!(greedy.summary.total_comm_secs < greedy.summary.static_comm_secs);
+    // the greedy consult path has its own exact fixture, so Rust and
+    // the Python mirror can't drift apart on a non-threshold policy
+    let golden_text = std::fs::read_to_string(data_path("trace_zipf12.greedy.summary.json"))
+        .expect("greedy golden summary exists");
+    let golden = Json::parse(&golden_text).expect("greedy golden summary parses");
+    assert_eq!(
+        greedy.summary.to_json(),
+        golden,
+        "greedy replay of trace_zipf12 drifted from its golden fixture.\ngot:\n{}",
+        greedy.summary.to_json().to_string_pretty()
     );
 }
 

@@ -2,10 +2,14 @@
 # CI entrypoints for the repo.
 #
 #   scripts/ci.sh              tier-1 gate: release build + tests + fmt check
-#   scripts/ci.sh gate         (same; includes the trace-golden suite)
+#   scripts/ci.sh gate         (same; includes the trace-golden suite and the
+#                              mirror-check)
 #   scripts/ci.sh trace-golden golden-trace regression gate only: replay the
 #                              checked-in traces under rust/tests/data/ and
 #                              fail on any summary drift
+#   scripts/ci.sh mirror-check regenerate the golden fixtures from the Python
+#                              mirror (scripts/gen_golden_traces.py) and fail
+#                              on any byte drift — no Rust toolchain needed
 #   scripts/ci.sh bench-json   run the placement bench and write
 #                              BENCH_placement.json at the repo root for
 #                              the perf trajectory
@@ -33,11 +37,15 @@ case "$cmd" in
     # drift in the fixtures must fail loudly with its own banner
     cargo test -q --test trace_golden
     cargo fmt --check
+    python3 "$repo_root/scripts/gen_golden_traces.py" --check
     ;;
   trace-golden)
     require_manifest
     cd "$repo_root/rust"
     cargo test -q --test trace_golden
+    ;;
+  mirror-check)
+    python3 "$repo_root/scripts/gen_golden_traces.py" --check
     ;;
   bench-json)
     require_manifest

@@ -2,17 +2,25 @@
 """Offline generator for the golden trace fixtures under rust/tests/data/.
 
 This is a line-by-line Python mirror of the Rust trace record/replay
-path (rust/src/trace/{scenario,replay}.rs and the placement pipeline
-it drives).  Every operation on that path is pure IEEE-754 f64
-arithmetic plus sqrt — no libm transcendentals — so CPython doubles
-reproduce the Rust computation bit-for-bit, and the JSON emitted here
-matches `Json::to_string()` byte-for-byte (sorted keys, compact
-separators, integers printed without a fraction, shortest-round-trip
-decimals without exponents).
+path — rust/src/trace/{scenario,replay}.rs, the placement pipeline,
+the placement::policy layer (threshold / static_block /
+greedy_every_check behind the PlacementPolicy trait), and the
+placement::migration::MigrationScheduler byte ledger the
+RoutingPipeline drives.  Every operation on that path is pure IEEE-754
+f64 arithmetic plus sqrt — no libm transcendentals — so CPython
+doubles reproduce the Rust computation bit-for-bit, and the JSON
+emitted here matches `Json::to_string()` byte-for-byte (sorted keys,
+compact separators, integers printed without a fraction,
+shortest-round-trip decimals without exponents).
 
 This script exists to bootstrap the fixtures in environments without a
-Rust toolchain.  The canonical update procedure once `smile` builds is
-(from rust/, where the manifest lives)
+Rust toolchain, and doubles as CI's drift gate:
+
+    python3 scripts/gen_golden_traces.py          # regenerate fixtures
+    python3 scripts/gen_golden_traces.py --check  # scripts/ci.sh mirror-check
+
+The canonical update procedure once `smile` builds is (from rust/,
+where the manifest lives)
 
     cargo run --release -- trace summarize --in tests/data/<name>.jsonl --bless
 
@@ -22,6 +30,7 @@ parsed JSON, so only value drift — never formatting — can fail it).
 
 import math
 import os
+import sys
 
 MASK = (1 << 64) - 1
 
@@ -515,7 +524,20 @@ class Tracker:
         return imbalance(self.fractions())
 
 
+def count_migrated(current, candidate):
+    migrated = 0
+    for e in range(candidate.num_experts()):
+        for g in candidate.replicas[e]:
+            if g not in current.replicas[e]:
+                migrated += 1
+    return migrated
+
+
 class Rebalancer:
+    """placement::rebalance::Rebalancer — the `threshold` policy."""
+
+    name = "threshold"
+
     def __init__(self, policy, spec, e_total, payload):
         self.policy = policy
         self.spec = spec
@@ -528,7 +550,19 @@ class Rebalancer:
     def observe(self, loads):
         self.tracker.observe(loads)
 
-    def maybe_rebalance(self, step):
+    def _commit(self, step, before, candidate, after, migrated, migration_secs):
+        decision = dict(
+            step=step,
+            migrated_replicas=migrated,
+            comm_before=before.comm_total(),
+            comm_after=after.comm_total(),
+            migration_secs=migration_secs,
+        )
+        self.current = candidate
+        self.rebalances += 1
+        return decision
+
+    def consult(self, step):
         p = self.policy
         ce = p["check_every"]
         if ce == 0 or step // ce == self.last_consult_step // ce:
@@ -543,25 +577,88 @@ class Rebalancer:
         after = price_placement(candidate, frac, self.spec, self.payload)
         if before.comm_total() < after.comm_total() * p["hysteresis"]:
             return None
-        migrated = 0
-        for e in range(candidate.num_experts()):
-            for g in candidate.replicas[e]:
-                if g not in self.current.replicas[e]:
-                    migrated += 1
+        migrated = count_migrated(self.current, candidate)
         migration_secs = float(migrated) * p["expert_bytes"] / self.spec.inter_bw
         gain_per_step = (before.comm_total() - after.comm_total()) * p["hops_per_step"]
         if gain_per_step * float(ce) <= migration_secs:
             return None
-        decision = dict(
-            step=step,
-            migrated_replicas=migrated,
-            comm_before=before.comm_total(),
-            comm_after=after.comm_total(),
-            migration_secs=migration_secs,
-        )
-        self.current = candidate
-        self.rebalances += 1
-        return decision
+        return self._commit(step, before, candidate, after, migrated, migration_secs)
+
+
+class StaticBlock(Rebalancer):
+    """placement::policy::StaticBlock — observe, never move."""
+
+    name = "static_block"
+
+    def consult(self, step):
+        return None
+
+
+class GreedyEveryCheck(Rebalancer):
+    """placement::policy::GreedyEveryCheck — commit any priced win."""
+
+    name = "greedy_every_check"
+
+    def consult(self, step):
+        p = self.policy
+        ce = p["check_every"]
+        if ce == 0 or step // ce == self.last_consult_step // ce:
+            return None
+        self.last_consult_step = step
+        frac = self.tracker.fractions()
+        before = price_placement(self.current, frac, self.spec, self.payload)
+        candidate = plan_placement(frac, self.spec, self.payload, p)
+        after = price_placement(candidate, frac, self.spec, self.payload)
+        if not (after.comm_total() < before.comm_total()):
+            return None
+        migrated = count_migrated(self.current, candidate)
+        migration_secs = float(migrated) * p["expert_bytes"] / self.spec.inter_bw
+        return self._commit(step, before, candidate, after, migrated, migration_secs)
+
+
+POLICY_KINDS = {
+    "threshold": Rebalancer,
+    "static_block": StaticBlock,
+    "greedy_every_check": GreedyEveryCheck,
+}
+
+
+class MigrationScheduler:
+    """placement::migration::MigrationScheduler — exact byte ledger."""
+
+    def __init__(self, inter_bw, overlap_frac):
+        self.inter_bw = inter_bw
+        self.overlap_frac = overlap_frac
+        self.pending_bytes = 0.0
+        self.enqueued_bytes = 0.0
+        self.exposed_secs = 0.0
+        self.overlapped_secs = 0.0
+
+    def enabled(self):
+        return self.overlap_frac > 0.0
+
+    def enqueue(self, bytes_, lump_secs):
+        self.enqueued_bytes += bytes_
+        if not self.enabled():
+            self.exposed_secs += lump_secs
+            return lump_secs
+        stall = 0.0
+        if self.pending_bytes > 0.0:
+            stall = self.pending_bytes / self.inter_bw
+            self.exposed_secs += stall
+            self.pending_bytes = 0.0
+        self.pending_bytes += bytes_
+        return stall
+
+    def drain(self, window_secs):
+        if not self.enabled() or not (self.pending_bytes > 0.0) or not (window_secs > 0.0):
+            return 0.0
+        capacity = self.overlap_frac * self.inter_bw * window_secs
+        drained = min(self.pending_bytes, capacity)
+        self.pending_bytes -= drained
+        overlapped = drained / self.inter_bw
+        self.overlapped_secs += overlapped
+        return overlapped
 
 
 # ---------------------------------------------------------------------------
@@ -647,14 +744,17 @@ def trace_jsonl(name, seed, n_nodes, gpus, steps, tokens, capacity, payload, tra
 # ---------------------------------------------------------------------------
 
 
-def replay(trace_steps, n_nodes, gpus, payload, policy):
+def replay(trace_steps, n_nodes, gpus, payload, policy, kind="threshold", overlap_frac=0.0):
+    """trace::replay::TraceReplayer::replay_with — the RoutingPipeline
+    sequence: observe -> consult -> migration-enqueue -> price ->
+    drain, per recorded step."""
     spec = Spec(n_nodes, gpus)
     e_total = n_nodes * gpus
-    rb = Rebalancer(policy, spec, e_total, payload)
+    rb = POLICY_KINDS[kind](policy, spec, e_total, payload)
+    scheduler = MigrationScheduler(spec.inter_bw, overlap_frac)
     block = PMap.block(spec, e_total)
     rebalance_steps = []
     migrated_replicas = 0
-    migration_secs = 0.0
     total_comm = 0.0
     static_comm = 0.0
     dropped_sum = 0.0
@@ -662,17 +762,19 @@ def replay(trace_steps, n_nodes, gpus, payload, policy):
     timeline = []
     for rec in trace_steps:
         rb.observe(rec["experts"])
-        d = rb.maybe_rebalance(rec["step"])
+        d = rb.consult(rec["step"])
         if d is not None:
+            bytes_ = float(d["migrated_replicas"]) * policy["expert_bytes"]
+            scheduler.enqueue(bytes_, d["migration_secs"])
             rebalance_steps.append(d["step"])
             migrated_replicas += d["migrated_replicas"]
-            migration_secs += d["migration_secs"]
         cost = price_placement(rb.current, rec["experts"], spec, payload)
         static_cost = price_placement(block, rec["experts"], spec, payload)
         hops = policy["hops_per_step"]
         total_comm += cost.comm_total() * hops
         static_comm += static_cost.comm_total() * hops
         dropped_sum += rec["dropped_frac"]
+        scheduler.drain(cost.comm_total() * hops)
         final_comm = cost.comm_total()
         timeline.append((rec["step"], cost.comm_total(), d is not None))
     frac = rb.tracker.fractions()
@@ -680,13 +782,16 @@ def replay(trace_steps, n_nodes, gpus, payload, policy):
     replicated = sum(1 for e in range(e_total) if len(rb.current.replicas[e]) > 1)
     steps = len(trace_steps)
     summary = dict(
+        policy=rb.name,
         steps=steps,
         observed_steps=rb.tracker.steps,
         rebalances=len(rebalance_steps),
         rebalance_steps=rebalance_steps,
         migrated_replicas=migrated_replicas,
-        migration_secs=migration_secs,
+        migration_exposed_secs=scheduler.exposed_secs,
+        migration_overlapped_secs=scheduler.overlapped_secs,
         migration_bytes=float(migrated_replicas) * policy["expert_bytes"],
+        migration_pending_bytes=scheduler.pending_bytes,
         total_comm_secs=total_comm,
         static_comm_secs=static_comm,
         final_comm_time=final_comm if steps > 0 else 0.0,
@@ -727,10 +832,8 @@ def summary_pretty(summary):
 # ---------------------------------------------------------------------------
 
 
-def main():
-    data_dir = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "data")
-    os.makedirs(data_dir, exist_ok=True)
-
+def fixture_files():
+    """(filename, bytes) for every golden fixture, fully in memory."""
     n_nodes, gpus, steps, tokens, cap_factor, payload, seed = 4, 8, 200, 1024, 2.0, 1e6, 7
     cases = [
         ("trace_uniform", "uniform", dict(), "uniform"),
@@ -742,6 +845,7 @@ def main():
             "burst(s=0,hot=3,boost=8,steps=80..140)",
         ),
     ]
+    out = []
     for fname, kind, params, label in cases:
         trace_steps, capacity = record_scenario(
             kind, params, n_nodes, gpus, steps, tokens, cap_factor, payload, seed
@@ -749,12 +853,64 @@ def main():
         text = trace_jsonl(
             label, seed, n_nodes, gpus, steps, tokens, capacity, payload, trace_steps
         )
+        # goldens are blessed under the default stack: threshold
+        # policy, migration overlap disabled
+        summary, timeline = replay(trace_steps, n_nodes, gpus, payload, POLICY)
+        summaries = [(".summary.json", summary)]
+        if fname == "trace_zipf12":
+            # one non-threshold fixture so the mirror-check and golden
+            # suite also pin the greedy_every_check consult path
+            greedy, _ = replay(
+                trace_steps, n_nodes, gpus, payload, POLICY, kind="greedy_every_check"
+            )
+            summaries.append((".greedy.summary.json", greedy))
+        out.append((fname, label, text, summaries, timeline))
+    return out
+
+
+def check(data_dir):
+    """scripts/ci.sh mirror-check: regenerate every fixture from this
+    mirror and fail on any byte drift against the checked-in files."""
+    drifted = []
+    checked = 0
+    for fname, label, text, summaries, _ in fixture_files():
+        files = [(".jsonl", text)]
+        files += [(suffix, summary_pretty(s)) for suffix, s in summaries]
+        for suffix, want in files:
+            checked += 1
+            path = os.path.join(data_dir, fname + suffix)
+            try:
+                with open(path, "r") as f:
+                    got = f.read()
+            except OSError:
+                got = None
+            if got != want:
+                drifted.append(fname + suffix)
+    if drifted:
+        print("mirror-check FAILED — fixtures drifted from the Python mirror:")
+        for name in drifted:
+            print(f"  rust/tests/data/{name}")
+        print("regenerate with: python3 scripts/gen_golden_traces.py")
+        print("(or, with a Rust toolchain: cargo run --release -- trace summarize "
+              "--in tests/data/<name>.jsonl --bless)")
+        return 1
+    print(f"mirror-check ok: {checked} fixture files match the mirror")
+    return 0
+
+
+def main():
+    data_dir = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "data")
+    if "--check" in sys.argv[1:]:
+        sys.exit(check(data_dir))
+    os.makedirs(data_dir, exist_ok=True)
+    for fname, label, text, summaries, timeline in fixture_files():
         with open(os.path.join(data_dir, fname + ".jsonl"), "w") as f:
             f.write(text)
-        summary, timeline = replay(trace_steps, n_nodes, gpus, payload, POLICY)
-        with open(os.path.join(data_dir, fname + ".summary.json"), "w") as f:
-            f.write(summary_pretty(summary))
+        for suffix, summary in summaries:
+            with open(os.path.join(data_dir, fname + suffix), "w") as f:
+                f.write(summary_pretty(summary))
         print(f"== {fname} ({label}) ==")
+        summary = summaries[0][1]
         for k in sorted(summary):
             print(f"  {k}: {summary[k]}")
         rebal = [t for t in timeline if t[2]]
