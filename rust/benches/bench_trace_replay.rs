@@ -105,6 +105,17 @@ fn main() {
             MigrationConfig::default(),
         )
     });
+    // the adaptive policy probes 5x more often than threshold and
+    // plans two candidates per armed consult — this entry keeps that
+    // overhead visible so offline tuning sweeps stay tractable
+    bench.bench("trace::replay(200 steps, adaptive)", || {
+        TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::Adaptive,
+            RebalancePolicy::default(),
+            MigrationConfig::default(),
+        )
+    });
     // replay throughput in steps/s (simulated-step pricing rate)
     let mut quick = smile::util::bench::Bencher::quick();
     let ns = quick.bench("trace::replay (for steps/s)", || {

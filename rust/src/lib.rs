@@ -16,10 +16,12 @@
 //! - [`placement`] decides where experts live: EWMA load tracking,
 //!   congestion-priced expert->GPU placement, hot-expert replication
 //!   across nodes, pluggable routing policies behind the
-//!   `PlacementPolicy` trait (threshold / static / greedy) driven
-//!   through one shared `RoutingPipeline`, and a `MigrationScheduler`
-//!   that overlaps committed expert-weight copies with training steps
-//!   (the paper's fixed assignment is the baseline policy).
+//!   `PlacementPolicy` trait (threshold / static / greedy / the
+//!   forecast + bandit adaptive policy, tuned offline via `smile
+//!   tune`) driven through one shared `RoutingPipeline`, and a
+//!   `MigrationScheduler` that overlaps committed expert-weight
+//!   copies with training steps (the paper's fixed assignment is the
+//!   baseline policy).
 //! - [`trace`] captures routing traffic (trainer or synthetic
 //!   scenarios) as replayable JSONL traces and replays them
 //!   deterministically through the placement pipeline — the offline

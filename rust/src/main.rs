@@ -8,6 +8,7 @@
 //!   layer          single-MoE-layer breakdown (Table 3 / Figs 9-11)
 //!   placement      congestion-aware expert placement report under skew
 //!   trace          record / replay / summarize routing traces
+//!   tune           grid-sweep adaptive-policy hyperparameters over a trace
 //!   info           list artifacts and their configs
 //!
 //! Examples:
@@ -23,7 +24,10 @@ use anyhow::{bail, Result};
 
 use smile::metrics::{CsvLogger, RunSummary, StepLog};
 use smile::netsim::ClusterSpec;
-use smile::placement::{self, MigrationConfig, PlacementMap, PolicyKind, RebalancePolicy};
+use smile::placement::{
+    self, AdaptiveConfig, AdaptivePolicy, MigrationConfig, PlacementMap, PolicyKind,
+    RebalancePolicy,
+};
 use smile::runtime::Runtime;
 use smile::simtrain::{self, ModelDims, Scaling, Variant};
 use smile::trace::{RoutingTrace, Scenario, ScenarioConfig, TraceReplayer};
@@ -51,6 +55,7 @@ fn run() -> Result<()> {
         "layer" => cmd_layer(&args),
         "placement" => cmd_placement(&args),
         "trace" => cmd_trace(&args),
+        "tune" => cmd_tune(&args),
         "info" => cmd_info(&args),
         _ => {
             print_help();
@@ -65,7 +70,8 @@ fn print_help() {
          usage: smile <command> [options]\n\n\
          commands:\n\
            train     --config <name> --steps N [--seed S] [--log out.csv] [--ckpt path] [--eval-every N] [--rebalance]\n\
-                     [--policy threshold|static|greedy] [--migration-overlap F] [--trace out.jsonl]\n\
+                     [--policy threshold|static|greedy|adaptive] [--migration-overlap F] [--trace out.jsonl]\n\
+                     (adaptive knobs as in trace replay apply to --policy adaptive here and in trace record)\n\
            eval      --config <name> --ckpt path [--batches N]\n\
            simulate  --model 3.7B|13B|48B --nodes N [--variant switch|smile|dense|dense_wide]\n\
            sweep     [--nodes 1,2,4,8,16] [--model 3.7B]\n\
@@ -73,11 +79,17 @@ fn print_help() {
            placement [--nodes N] [--skew S] [--model 3.7B] [--replicate K] [--max-replicas R] [--out path.json]\n\
            trace     record --scenario uniform|zipf|burst --out p.jsonl [--nodes N] [--gpus M] [--steps S]\n\
                             [--tokens T] [--seed X] [--skew S] [--hot E] [--boost B] [--burst-start A] [--burst-end Z]\n\
-                            [--cap-factor F] [--rebalance]\n\
-           trace     replay --in p.jsonl [--policy threshold|static|greedy] [--migration-overlap F]\n\
+                            [--cap-factor F] [--rebalance] [--policy threshold|static|greedy|adaptive]\n\
+           trace     replay --in p.jsonl [--policy threshold|static|greedy|adaptive] [--migration-overlap F]\n\
                             [--check-every N] [--trigger-imbalance I] [--hysteresis H]\n\
+                            [adaptive knobs: --window W --horizon H --probe-every N --ucb-c C --min-improvement R]\n\
                             [--timeline p.csv] [--summary p.json]\n\
            trace     summarize --in p.jsonl [same policy overrides as replay] [--out p.summary.json] [--bless]\n\
+           tune      --in p.jsonl [--window W] [--min-improvement R] [--migration-overlap F]\n\
+                     [--policy <baseline kind, default threshold>] [--out p.csv]\n\
+                     grid-sweeps the adaptive policy's probe_every x horizon x ucb_c over a\n\
+                     recorded trace via replay and prints the Pareto set of\n\
+                     (total_comm_secs + migration_exposed_secs) vs rebalance count\n\
            info"
     );
 }
@@ -114,7 +126,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     // by default), so `--migration-overlap` alone is never a silent no-op
     if args.bool("rebalance", false) || args.has("policy") || args.has("migration-overlap") {
         let kind = policy_kind_of(args)?;
-        tr.enable_policy(kind, RebalancePolicy::default(), migration_of(args));
+        tr.enable_policy_tuned(
+            kind,
+            RebalancePolicy::default(),
+            adaptive_config_of(args)?,
+            migration_of(args),
+        );
     }
     let trace_out = args.opt_str("trace");
     if trace_out.is_some() {
@@ -428,7 +445,7 @@ fn trace_policy_of(args: &Args) -> RebalancePolicy {
     p
 }
 
-/// `--policy threshold|static|greedy` (default threshold).
+/// `--policy threshold|static|greedy|adaptive` (default threshold).
 fn policy_kind_of(args: &Args) -> Result<PolicyKind> {
     PolicyKind::parse(&args.str("policy", "threshold")).map_err(anyhow::Error::msg)
 }
@@ -437,6 +454,52 @@ fn policy_kind_of(args: &Args) -> Result<PolicyKind> {
 /// background weight-copy stream may use (0 = lump-sum pricing).
 fn migration_of(args: &Args) -> MigrationConfig {
     MigrationConfig::overlapped(args.f64("migration-overlap", 0.0))
+}
+
+/// The adaptive policy's knobs: `--window / --horizon / --probe-every
+/// / --ucb-c / --min-improvement` over [`AdaptiveConfig::default`].
+fn adaptive_config_of(args: &Args) -> Result<AdaptiveConfig> {
+    let d = AdaptiveConfig::default();
+    let cfg = AdaptiveConfig {
+        window: args.usize("window", d.window),
+        horizon: args.f64("horizon", d.horizon),
+        probe_every: args.usize("probe-every", d.probe_every),
+        ucb_c: args.f64("ucb-c", d.ucb_c),
+        min_improvement: args.f64("min-improvement", d.min_improvement),
+    };
+    if cfg.window < 2 {
+        bail!("--window must be >= 2 (a trend needs two observations), got {}", cfg.window);
+    }
+    Ok(cfg)
+}
+
+/// Replay a trace under the CLI's policy/migration flags.  The
+/// adaptive kind takes its own knob set, so it is built explicitly
+/// and driven through the boxed-policy replay entry point.  Returns
+/// the result plus the policy's consult cadence in steps (for
+/// readable timeline printing).
+fn replay_trace_cli(
+    trace: &RoutingTrace,
+    args: &Args,
+) -> Result<(smile::trace::ReplayResult, usize)> {
+    let kind = policy_kind_of(args)?;
+    let knobs = trace_policy_of(args);
+    let migration = migration_of(args);
+    Ok(if kind == PolicyKind::Adaptive {
+        let cfg = adaptive_config_of(args)?;
+        let cadence = cfg.probe_every.max(1);
+        let policy = AdaptivePolicy::new(
+            knobs,
+            cfg,
+            trace.meta.cluster_spec(),
+            trace.meta.num_experts.max(1),
+            trace.meta.payload_per_gpu,
+        );
+        (TraceReplayer::replay_boxed(trace, Box::new(policy), migration), cadence)
+    } else {
+        let cadence = knobs.check_every.max(1);
+        (TraceReplayer::replay_with(trace, kind, knobs, migration), cadence)
+    })
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -458,8 +521,17 @@ fn cmd_trace(args: &Args) -> Result<()> {
                 payload_per_gpu: args.f64("payload", 1e6),
                 seed: args.u64("seed", 7),
             };
-            let policy = args.bool("rebalance", false).then(|| trace_policy_of(args));
-            let trace = smile::trace::record_scenario(&cfg, policy.as_ref());
+            // `--rebalance` runs the default threshold policy live;
+            // `--policy <kind>` picks any registered policy (and
+            // implies a live pipeline, so it is never a silent no-op)
+            let live = if args.has("policy") {
+                Some((policy_kind_of(args)?, trace_policy_of(args), adaptive_config_of(args)?))
+            } else if args.bool("rebalance", false) {
+                Some((PolicyKind::Threshold, trace_policy_of(args), adaptive_config_of(args)?))
+            } else {
+                None
+            };
+            let trace = smile::trace::record_scenario_tuned(&cfg, live);
             let out = args.str("out", "reports/trace.jsonl");
             trace.write_jsonl(&out)?;
             println!(
@@ -476,18 +548,12 @@ fn cmd_trace(args: &Args) -> Result<()> {
         "replay" => {
             let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
             let trace = RoutingTrace::read_jsonl(&path).map_err(anyhow::Error::msg)?;
-            let result = TraceReplayer::replay_with(
-                &trace,
-                policy_kind_of(args)?,
-                trace_policy_of(args),
-                migration_of(args),
-            );
+            // print the timeline at a readable cadence: every consult
+            // boundary plus every rebalance step
+            let (result, cadence) = replay_trace_cli(&trace, args)?;
             let mut table = Table::new(&[
                 "step", "expert_imb", "node_imb", "comm(ms)", "straggler", "rebalanced",
             ]);
-            // print the timeline at a readable cadence: every consult
-            // boundary plus every rebalance step
-            let cadence = trace_policy_of(args).check_every.max(1);
             for o in &result.timeline {
                 if o.rebalanced || o.step % cadence == 0 {
                     table.row(&[
@@ -552,12 +618,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         "summarize" => {
             let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
             let trace = RoutingTrace::read_jsonl(&path).map_err(anyhow::Error::msg)?;
-            let result = TraceReplayer::replay_with(
-                &trace,
-                policy_kind_of(args)?,
-                trace_policy_of(args),
-                migration_of(args),
-            );
+            let (result, _) = replay_trace_cli(&trace, args)?;
             let out = if args.bool("bless", false) {
                 // the golden-fixture update procedure: write the
                 // summary next to the trace (rust/tests/data/*.jsonl
@@ -576,6 +637,133 @@ fn cmd_trace(args: &Args) -> Result<()> {
             bail!("unknown trace subcommand {other} (record|replay|summarize)")
         }
     }
+}
+
+/// `smile tune --in trace.jsonl`: grid-sweep the adaptive policy's
+/// hyperparameters offline over a recorded trace via deterministic
+/// replay, and print the Pareto set of cost
+/// (`total_comm_secs + migration_exposed_secs`) vs rebalance count.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
+    let trace = RoutingTrace::read_jsonl(&path).map_err(anyhow::Error::msg)?;
+    let knobs = trace_policy_of(args);
+    let migration = migration_of(args);
+    let spec = trace.meta.cluster_spec();
+    let num_experts = trace.meta.num_experts.max(1);
+    let payload = trace.meta.payload_per_gpu;
+    // --window / --min-improvement come from the shared flag set (and
+    // are validated there); the grid sweeps the other three knobs
+    let base_cfg = adaptive_config_of(args)?;
+    let (window, min_improvement) = (base_cfg.window, base_cfg.min_improvement);
+
+    // the baseline policy the sweep is judged against (--policy,
+    // default threshold — same parser, so bad kinds fail loudly here
+    // with the full list of valid spellings; an adaptive baseline
+    // honors the same knob flags `trace replay` takes)
+    let baseline_kind = policy_kind_of(args)?;
+    let (baseline, _) = replay_trace_cli(&trace, args)?;
+    let cost_of = |s: &smile::trace::ReplaySummary| s.total_comm_secs + s.migration_exposed_secs;
+    println!(
+        "tune over {} ({} steps, {} experts): {} baseline cost {:.6} s ({} rebalances), \
+         static {:.6} s",
+        trace.meta.scenario,
+        trace.steps.len(),
+        num_experts,
+        baseline_kind.name(),
+        cost_of(&baseline.summary),
+        baseline.summary.rebalances,
+        baseline.summary.static_comm_secs,
+    );
+
+    struct Row {
+        cfg: AdaptiveConfig,
+        cost: f64,
+        rebalances: usize,
+        migrated: usize,
+        pareto: bool,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for &probe_every in &[5usize, 10, 25, 50] {
+        for &horizon in &[10.0f64, 25.0, 50.0] {
+            for &ucb_c in &[0.0f64, 0.5, 2.0] {
+                let cfg = AdaptiveConfig { window, horizon, probe_every, ucb_c, min_improvement };
+                let policy = AdaptivePolicy::new(
+                    knobs.clone(),
+                    cfg.clone(),
+                    spec.clone(),
+                    num_experts,
+                    payload,
+                );
+                let r = TraceReplayer::replay_boxed(&trace, Box::new(policy), migration);
+                rows.push(Row {
+                    cfg,
+                    cost: cost_of(&r.summary),
+                    rebalances: r.summary.rebalances,
+                    migrated: r.summary.migrated_replicas,
+                    pareto: false,
+                });
+            }
+        }
+    }
+    // Pareto front: minimize (cost, rebalance count)
+    let pareto: Vec<bool> = (0..rows.len())
+        .map(|i| {
+            !rows.iter().enumerate().any(|(j, r)| {
+                j != i
+                    && r.cost <= rows[i].cost
+                    && r.rebalances <= rows[i].rebalances
+                    && (r.cost < rows[i].cost || r.rebalances < rows[i].rebalances)
+            })
+        })
+        .collect();
+    for (r, p) in rows.iter_mut().zip(pareto) {
+        r.pareto = p;
+    }
+    rows.sort_by(|a, b| a.cost.total_cmp(&b.cost).then(a.rebalances.cmp(&b.rebalances)));
+
+    let mut table = Table::new(&[
+        "probe_every", "horizon", "ucb_c", "cost(s)", "vs_baseline", "rebalances", "moves",
+        "pareto",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.cfg.probe_every.to_string(),
+            format!("{}", r.cfg.horizon),
+            format!("{}", r.cfg.ucb_c),
+            format!("{:.6}", r.cost),
+            format!("{:+.2}%", (r.cost / cost_of(&baseline.summary) - 1.0) * 100.0),
+            r.rebalances.to_string(),
+            r.migrated.to_string(),
+            if r.pareto { "*".into() } else { "".into() },
+        ]);
+    }
+    table.print();
+    if let Some(out) = args.opt_str("out") {
+        table.write_csv(&out);
+        println!("sweep: {out}");
+    }
+
+    println!("\nPareto set (cost vs rebalance count):");
+    for r in rows.iter().filter(|r| r.pareto) {
+        println!(
+            "  probe_every={:<3} horizon={:<5} ucb_c={:<4} -> cost {:.6} s, {} rebalances",
+            r.cfg.probe_every, r.cfg.horizon, r.cfg.ucb_c, r.cost, r.rebalances
+        );
+    }
+    let best = rows.first().expect("non-empty grid");
+    println!(
+        "\nbest ({:+.2}% vs {}); replay it with:\n  \
+         smile trace replay --in {path} --policy adaptive --probe-every {} --horizon {} \
+         --ucb-c {} --window {} --min-improvement {}",
+        (best.cost / cost_of(&baseline.summary) - 1.0) * 100.0,
+        baseline_kind.name(),
+        best.cfg.probe_every,
+        best.cfg.horizon,
+        best.cfg.ucb_c,
+        window,
+        min_improvement,
+    );
+    Ok(())
 }
 
 fn write_summary(path: &str, s: &smile::trace::ReplaySummary) -> Result<()> {

@@ -1,0 +1,448 @@
+//! The adaptive (forecast + bandit) placement policy: a forecasting,
+//! bandit-style rebalancer that beats the reactive EWMA threshold
+//! policy on bursty/shifting traffic and matches it on steady loads.
+//!
+//! Where the `threshold` policy reacts to the load picture the EWMA
+//! has *already* converged to, `AdaptivePolicy` projects where the
+//! load is *going*: a [`LoadForecaster`] ring buffer over recent
+//! histograms supplies a per-expert trend, the forecast fractions are
+//! priced through `price_placement`, and a small candidate set —
+//! stay / re-plan / re-plan + replicate hot experts — is scored as
+//! (priced comm over the forecast horizon) + (amortized migration
+//! cost).  Candidate selection is a UCB-style bandit whose reward is
+//! the *realized* priced-comm delta observed after each commit, so the
+//! policy learns when re-planning pays and when hysteresis should
+//! hold.  The exploration bonus is `c * scale * sqrt(consults) /
+//! (1 + plays)` — deliberately sqrt-only (no `ln`), so the Python
+//! golden-trace mirror reproduces every decision bit-for-bit.
+//!
+//! Commit discipline (all gates must pass):
+//!   1. trigger — node-level imbalance of the current placement under
+//!      the *forecast* fractions exceeds `trigger_imbalance` (forward-
+//!      looking: a rising burst arms the policy before the EWMA has
+//!      fully converged, and a decaying one arms the un-do);
+//!   2. bandit — the UCB pick is a non-stay arm;
+//!   3. profit — the picked candidate's forecast gain over the horizon
+//!      clears its migration cost, its priced improvement clears
+//!      `min_improvement`, and it actually differs from the current
+//!      placement.
+//!
+//! Everything on this path is pure f64 arithmetic plus sqrt, mirrored
+//! line-for-line by `scripts/gen_golden_traces.py`.
+
+use super::policy::PlacementPolicy;
+use super::rebalance::{count_migrated, plan_placement, RebalanceDecision, RebalancePolicy};
+use super::solver::{price_placement, PlacementMap};
+use super::stats::{LoadForecaster, LoadTracker};
+use crate::netsim::topology::ClusterSpec;
+
+/// Knobs of the adaptive policy (see ROADMAP.md `## adaptive`).
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Forecaster ring-buffer length (histograms of trend evidence).
+    pub window: usize,
+    /// Steps ahead the forecast projects — also the amortization
+    /// horizon candidate gains are accrued over.
+    pub horizon: f64,
+    /// Consult cadence in steps (same boundary contract as the
+    /// threshold policy's `check_every`, typically finer); 0 disables.
+    pub probe_every: usize,
+    /// UCB exploration coefficient (0 = pure greedy on the scores).
+    pub ucb_c: f64,
+    /// Required ratio of stay-cost to candidate-cost under the
+    /// forecast before a commit (the adaptive hysteresis).
+    pub min_improvement: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            window: 16,
+            horizon: 25.0,
+            probe_every: 10,
+            ucb_c: 0.5,
+            min_improvement: 1.02,
+        }
+    }
+}
+
+/// The bandit's arms, in tie-break order: 0 = stay, 1 = re-plan
+/// (replication off), 2 = re-plan + replicate hot experts.
+const ARM_STAY: usize = 0;
+const NUM_ARMS: usize = 3;
+
+/// A commit whose realized reward is still pending: settled at the
+/// next consult against the traffic that actually arrived.
+#[derive(Debug, Clone)]
+struct PendingReward {
+    arm: usize,
+    prev: PlacementMap,
+    step: usize,
+    migration_secs: f64,
+}
+
+/// Forecasting bandit rebalancer — the `adaptive` [`PlacementPolicy`].
+#[derive(Debug, Clone)]
+pub struct AdaptivePolicy {
+    pub knobs: RebalancePolicy,
+    pub cfg: AdaptiveConfig,
+    spec: ClusterSpec,
+    payload: f64,
+    tracker: LoadTracker,
+    forecaster: LoadForecaster,
+    current: PlacementMap,
+    last_consult_step: usize,
+    rebalances: usize,
+    /// Times each arm's realized reward has been settled.
+    arm_plays: [usize; NUM_ARMS],
+    /// Running mean realized reward (secs of comm saved net of
+    /// migration) per arm.
+    arm_mean: [f64; NUM_ARMS],
+    /// Armed consults so far (drives the exploration bonus).
+    consults: usize,
+    pending: Option<PendingReward>,
+}
+
+impl AdaptivePolicy {
+    pub fn new(
+        knobs: RebalancePolicy,
+        cfg: AdaptiveConfig,
+        spec: ClusterSpec,
+        num_experts: usize,
+        payload: f64,
+    ) -> AdaptivePolicy {
+        let tracker = LoadTracker::new(num_experts, knobs.ewma_alpha);
+        let forecaster = LoadForecaster::new(num_experts, cfg.window);
+        let current = PlacementMap::block(&spec, num_experts);
+        AdaptivePolicy {
+            knobs,
+            cfg,
+            spec,
+            payload,
+            tracker,
+            forecaster,
+            current,
+            last_consult_step: 0,
+            rebalances: 0,
+            arm_plays: [0; NUM_ARMS],
+            arm_mean: [0.0; NUM_ARMS],
+            consults: 0,
+            pending: None,
+        }
+    }
+
+    /// Realized rewards settled per arm so far — (plays, mean reward).
+    pub fn arm_stats(&self) -> [(usize, f64); NUM_ARMS] {
+        [
+            (self.arm_plays[0], self.arm_mean[0]),
+            (self.arm_plays[1], self.arm_mean[1]),
+            (self.arm_plays[2], self.arm_mean[2]),
+        ]
+    }
+
+    /// Settle the previous commit's realized reward: the priced-comm
+    /// delta (old placement vs committed one) under the traffic that
+    /// actually arrived, accrued over the elapsed steps, net of the
+    /// migration that was paid.
+    fn settle(&mut self, step: usize) {
+        let p = match self.pending.take() {
+            Some(p) => p,
+            None => return,
+        };
+        let elapsed = step.saturating_sub(p.step) as f64;
+        if !(elapsed > 0.0) {
+            return;
+        }
+        let frac = self.tracker.fractions();
+        let before = price_placement(&p.prev, &frac, &self.spec, self.payload).comm_total();
+        let after = price_placement(&self.current, &frac, &self.spec, self.payload).comm_total();
+        let reward = (before - after) * self.knobs.hops_per_step * elapsed - p.migration_secs;
+        self.arm_plays[p.arm] += 1;
+        self.arm_mean[p.arm] += (reward - self.arm_mean[p.arm]) / self.arm_plays[p.arm] as f64;
+    }
+}
+
+impl PlacementPolicy for AdaptivePolicy {
+    fn observe(&mut self, loads: &[f64]) {
+        self.tracker.observe(loads);
+        self.forecaster.observe(loads);
+    }
+
+    fn consult(&mut self, step: usize) -> Option<RebalanceDecision> {
+        let pe = self.cfg.probe_every;
+        if pe == 0 || step / pe == self.last_consult_step / pe {
+            return None;
+        }
+        self.last_consult_step = step;
+        self.settle(step);
+        let base = self.tracker.fractions();
+        let fhat = self.forecaster.forecast(&base, self.cfg.horizon)?;
+        // trigger: only arm when the forecast says the current
+        // placement is (or is becoming) node-imbalanced
+        let node_imb = crate::util::stats::imbalance(&self.current.node_loads(&fhat));
+        if node_imb < self.knobs.trigger_imbalance {
+            self.arm_plays[ARM_STAY] += 1;
+            return None;
+        }
+        self.consults += 1;
+        let cost_stay =
+            price_placement(&self.current, &fhat, &self.spec, self.payload).comm_total();
+        let noreps = RebalancePolicy { top_k_replicate: 0, ..self.knobs.clone() };
+        let cands = [
+            plan_placement(&fhat, &self.spec, self.payload, &noreps),
+            plan_placement(&fhat, &self.spec, self.payload, &self.knobs),
+        ];
+        // score: forecast comm gain over the horizon, net of migration
+        let mut gains = [0.0f64; NUM_ARMS];
+        let mut costs = [cost_stay; NUM_ARMS];
+        let mut migs = [(0usize, 0.0f64); NUM_ARMS];
+        for (i, cand) in cands.iter().enumerate() {
+            let arm = i + 1;
+            let c = price_placement(cand, &fhat, &self.spec, self.payload).comm_total();
+            let migrated = count_migrated(&self.current, cand);
+            let mig_secs = migrated as f64 * self.knobs.expert_bytes / self.spec.inter_bw;
+            gains[arm] =
+                (cost_stay - c) * self.knobs.hops_per_step * self.cfg.horizon - mig_secs;
+            costs[arm] = c;
+            migs[arm] = (migrated, mig_secs);
+        }
+        // UCB-style pick: score + learned bias + sqrt exploration
+        let scale = cost_stay * self.knobs.hops_per_step;
+        let root = (self.consults as f64).sqrt();
+        let mut arm = ARM_STAY;
+        let mut best = f64::NEG_INFINITY;
+        for a in 0..NUM_ARMS {
+            let v = gains[a]
+                + self.arm_mean[a]
+                + self.cfg.ucb_c * scale * root / (1 + self.arm_plays[a]) as f64;
+            if v > best {
+                arm = a;
+                best = v;
+            }
+        }
+        let commit = arm != ARM_STAY
+            && gains[arm] > 0.0
+            && cost_stay > costs[arm] * self.cfg.min_improvement
+            && cands[arm - 1] != self.current;
+        if !commit {
+            self.arm_plays[ARM_STAY] += 1;
+            return None;
+        }
+        let (migrated, migration_secs) = migs[arm];
+        let candidate = cands[arm - 1].clone();
+        let prev = std::mem::replace(&mut self.current, candidate.clone());
+        self.rebalances += 1;
+        self.pending = Some(PendingReward { arm, prev: prev.clone(), step, migration_secs });
+        // decision pricing is under the *tracked* loads, like every
+        // other policy's decision record
+        let frac = self.tracker.fractions();
+        let comm_before = price_placement(&prev, &frac, &self.spec, self.payload).comm_total();
+        let comm_after =
+            price_placement(&self.current, &frac, &self.spec, self.payload).comm_total();
+        Some(RebalanceDecision {
+            step,
+            placement: candidate,
+            migrated_replicas: migrated,
+            comm_before,
+            comm_after,
+            migration_secs,
+        })
+    }
+
+    fn placement(&self) -> &PlacementMap {
+        &self.current
+    }
+
+    fn tracker(&self) -> &LoadTracker {
+        &self.tracker
+    }
+
+    fn rebalances(&self) -> usize {
+        self.rebalances
+    }
+
+    fn expert_bytes(&self) -> f64 {
+        self.knobs.expert_bytes
+    }
+
+    fn hops_per_step(&self) -> f64 {
+        self.knobs.hops_per_step
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "adaptive(window={}, horizon={}, probe_every={}, ucb_c={}, min_improvement={})",
+            self.cfg.window,
+            self.cfg.horizon,
+            self.cfg.probe_every,
+            self.cfg.ucb_c,
+            self.cfg.min_improvement
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::stats::zipf_fractions;
+
+    fn adaptive(spec: ClusterSpec, e: usize) -> AdaptivePolicy {
+        AdaptivePolicy::new(RebalancePolicy::default(), AdaptiveConfig::default(), spec, e, 1e6)
+    }
+
+    #[test]
+    fn uniform_traffic_never_commits() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut pol = adaptive(spec.clone(), e);
+        let flat = zipf_fractions(e, 0.0);
+        for step in 0..200 {
+            pol.observe(&flat);
+            assert!(pol.consult(step).is_none(), "flat load committed at {step}");
+        }
+        assert_eq!(pol.rebalances(), 0);
+        assert_eq!(pol.placement(), &PlacementMap::block(&spec, e));
+    }
+
+    #[test]
+    fn skew_commits_and_respects_the_probe_cadence() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut pol = adaptive(spec, e);
+        let frac = zipf_fractions(e, 1.2);
+        for _ in 0..16 {
+            pol.observe(&frac);
+        }
+        assert!(pol.consult(0).is_none(), "step 0 is inside the first probe window");
+        assert!(pol.consult(7).is_none(), "off-cadence consult fired");
+        let d = pol.consult(10).expect("steady skew must commit");
+        assert!(d.comm_after < d.comm_before, "{d:?}");
+        assert!(d.migrated_replicas > 0);
+        assert_eq!(pol.rebalances(), 1);
+        // same window: silent; same load at the next window: the
+        // committed placement is already optimal, so no flapping
+        assert!(pol.consult(13).is_none());
+        pol.observe(&frac);
+        assert!(pol.consult(20).is_none());
+        assert_eq!(pol.rebalances(), 1);
+    }
+
+    #[test]
+    fn rising_burst_arms_before_the_ewma_converges() {
+        // the forecast trigger's point: a ramp on one expert arms the
+        // policy while the same EWMA state leaves the threshold
+        // policy's (non-forecast) trigger cold
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut pol = adaptive(spec.clone(), e);
+        let mut thr = crate::placement::Rebalancer::new(
+            RebalancePolicy { check_every: 10, ..RebalancePolicy::default() },
+            spec,
+            e,
+            1e6,
+        );
+        let flat = zipf_fractions(e, 0.0);
+        for _ in 0..20 {
+            pol.observe(&flat);
+            thr.observe(&flat);
+        }
+        // burst: expert 3 ramps to 7x over 20 steps; both policies
+        // consult at the same 10-step cadence boundaries
+        let mut step = 20;
+        let (mut armed_at, mut thr_at) = (None, None);
+        for i in 0..20 {
+            let mut w = flat.clone();
+            w[3] *= 1.0 + 0.3 * (i + 1) as f64;
+            pol.observe(&w);
+            thr.observe(&w);
+            step += 1;
+            if pol.consult(step).is_some() && armed_at.is_none() {
+                armed_at = Some(step);
+            }
+            if thr.maybe_rebalance(step).is_some() && thr_at.is_none() {
+                thr_at = Some(step);
+            }
+        }
+        let armed_at = armed_at.expect("forecast never armed during the ramp");
+        let thr_at = thr_at.expect("the ramp must eventually arm the threshold policy too");
+        assert!(
+            armed_at < thr_at,
+            "forecast armed at {armed_at}, not before the EWMA trigger's {thr_at}"
+        );
+    }
+
+    #[test]
+    fn realized_rewards_settle_into_the_bandit() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut pol = adaptive(spec, e);
+        let frac = zipf_fractions(e, 1.3);
+        for _ in 0..16 {
+            pol.observe(&frac);
+        }
+        let d = pol.consult(10).expect("skew must commit");
+        let arm_before = pol.arm_stats();
+        // keep routing the same skew: the committed placement keeps
+        // paying off, so the settled reward must be positive
+        for _ in 0..10 {
+            pol.observe(&frac);
+        }
+        assert!(pol.consult(20).is_none(), "stable optimum re-committed");
+        let arm_after = pol.arm_stats();
+        let settled: usize =
+            arm_after[1].0 + arm_after[2].0 - arm_before[1].0 - arm_before[2].0;
+        assert_eq!(settled, 1, "exactly one pending reward settles");
+        let committed_arm = if arm_after[2].0 > arm_before[2].0 { 2 } else { 1 };
+        assert!(
+            arm_after[committed_arm].1 > 0.0,
+            "reward for a persistent win must be positive: {arm_after:?}"
+        );
+        assert!(d.migration_secs > 0.0);
+    }
+
+    #[test]
+    fn probe_zero_disables_consulting() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut pol = AdaptivePolicy::new(
+            RebalancePolicy::default(),
+            AdaptiveConfig { probe_every: 0, ..AdaptiveConfig::default() },
+            spec,
+            e,
+            1e6,
+        );
+        let frac = zipf_fractions(e, 1.3);
+        for _ in 0..32 {
+            pol.observe(&frac);
+        }
+        assert!(pol.consult(500).is_none());
+        assert_eq!(pol.rebalances(), 0);
+    }
+
+    #[test]
+    fn degenerate_observations_leave_the_policy_inert() {
+        let spec = ClusterSpec::p4d(2);
+        let e = spec.num_gpus();
+        let mut pol = adaptive(spec.clone(), e);
+        for step in 0..40 {
+            pol.observe(&vec![0.0; e]);
+            pol.observe(&vec![f64::NAN; e]);
+            assert!(pol.consult(step).is_none());
+        }
+        assert_eq!(pol.tracker().steps(), 0);
+        assert_eq!(pol.placement(), &PlacementMap::block(&spec, e));
+    }
+
+    #[test]
+    fn describe_names_the_knobs() {
+        let spec = ClusterSpec::p4d(2);
+        let pol = adaptive(spec, 16);
+        assert_eq!(pol.name(), "adaptive");
+        let d = pol.describe();
+        assert!(d.contains("window=16") && d.contains("probe_every=10"), "{d}");
+    }
+}

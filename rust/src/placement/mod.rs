@@ -13,9 +13,15 @@
 //! - [`rebalance`]: the `RebalancePolicy` knobs + the stateful
 //!   threshold/hysteresis/amortization `Rebalancer`.
 //! - [`policy`]: the pluggable [`PlacementPolicy`] trait
-//!   (`threshold` / `static_block` / `greedy_every_check`) and the
-//!   [`RoutingPipeline`] driver every consumer (trainer, trace
-//!   replayer, scenario recorder, simtrain) delegates to.
+//!   (`threshold` / `static_block` / `greedy_every_check` /
+//!   `adaptive`) and the [`RoutingPipeline`] driver every consumer
+//!   (trainer, trace replayer, scenario recorder, simtrain)
+//!   delegates to.
+//! - [`adaptive`]: the forecast + bandit [`AdaptivePolicy`] — a
+//!   [`LoadForecaster`] ring buffer projects per-expert trends, a
+//!   UCB-style bandit over {stay, re-plan, re-plan + replicate}
+//!   learns from realized priced-comm deltas when re-planning pays
+//!   (`smile tune` sweeps its hyperparameters offline over a trace).
 //! - [`migration`]: the [`MigrationScheduler`] that overlaps committed
 //!   expert-weight copies with training steps instead of pricing them
 //!   as a lump-sum stall.
@@ -24,6 +30,7 @@
 //! `simtrain::step_model::placed_step_time` prices whole training
 //! steps under a placement; `smile placement` is the CLI surface.
 
+pub mod adaptive;
 pub mod migration;
 pub mod policy;
 pub mod rebalance;
@@ -31,6 +38,7 @@ pub mod replicate;
 pub mod solver;
 pub mod stats;
 
+pub use adaptive::{AdaptiveConfig, AdaptivePolicy};
 pub use migration::{MigrationConfig, MigrationScheduler, MigrationTick};
 pub use policy::{
     GreedyEveryCheck, PipelineStepReport, PlacementPolicy, PolicyKind, RoutingPipeline,
@@ -41,4 +49,4 @@ pub use rebalance::{
 };
 pub use replicate::{refit_weights, replicate_hottest, water_fill};
 pub use solver::{price_placement, refine, solve_lpt, PlacementCost, PlacementMap};
-pub use stats::{zipf_fractions, LoadTracker};
+pub use stats::{zipf_fractions, ForecastFeatures, LoadForecaster, LoadTracker};

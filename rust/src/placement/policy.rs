@@ -20,6 +20,7 @@
 //!   often rebalancing *could* fire — and, fed through the
 //!   `MigrationScheduler`, a stress source of overlapping copies.
 
+use super::adaptive::{AdaptiveConfig, AdaptivePolicy};
 use super::migration::{MigrationConfig, MigrationScheduler, MigrationTick};
 use super::rebalance::{RebalanceDecision, RebalancePolicy, Rebalancer};
 use super::solver::{price_placement, PlacementCost, PlacementMap};
@@ -232,16 +233,27 @@ pub enum PolicyKind {
     Threshold,
     StaticBlock,
     GreedyEveryCheck,
+    Adaptive,
 }
 
 impl PolicyKind {
-    /// Parse a CLI spelling (`threshold | static | greedy`).
+    /// The CLI spellings [`PolicyKind::parse`] accepts, for error
+    /// messages and help text on every surface.
+    pub const VALID: &'static str = "threshold|static|greedy|adaptive";
+
+    /// Parse a CLI spelling (`threshold | static | greedy | adaptive`).
     pub fn parse(s: &str) -> Result<PolicyKind, String> {
         Ok(match s {
             "threshold" => PolicyKind::Threshold,
             "static" | "static_block" => PolicyKind::StaticBlock,
             "greedy" | "greedy_every_check" => PolicyKind::GreedyEveryCheck,
-            other => return Err(format!("unknown policy {other} (threshold|static|greedy)")),
+            "adaptive" => PolicyKind::Adaptive,
+            other => {
+                return Err(format!(
+                    "unknown policy '{other}' (expected one of: {})",
+                    PolicyKind::VALID
+                ))
+            }
         })
     }
 
@@ -250,13 +262,30 @@ impl PolicyKind {
             PolicyKind::Threshold => "threshold",
             PolicyKind::StaticBlock => "static_block",
             PolicyKind::GreedyEveryCheck => "greedy_every_check",
+            PolicyKind::Adaptive => "adaptive",
         }
     }
 
-    /// Build the policy with `knobs` on the given cluster shape.
+    /// Build the policy with `knobs` on the given cluster shape
+    /// (`Adaptive` with [`AdaptiveConfig::default`]).
     pub fn build(
         self,
         knobs: RebalancePolicy,
+        spec: ClusterSpec,
+        num_experts: usize,
+        payload_per_gpu: f64,
+    ) -> Box<dyn PlacementPolicy> {
+        self.build_with(knobs, AdaptiveConfig::default(), spec, num_experts, payload_per_gpu)
+    }
+
+    /// [`PolicyKind::build`] with explicit adaptive knobs — the path
+    /// every CLI surface takes so `--probe-every`-style overrides
+    /// reach the policy no matter which driver runs it.  Non-adaptive
+    /// kinds ignore `adaptive`.
+    pub fn build_with(
+        self,
+        knobs: RebalancePolicy,
+        adaptive: AdaptiveConfig,
         spec: ClusterSpec,
         num_experts: usize,
         payload_per_gpu: f64,
@@ -268,6 +297,9 @@ impl PolicyKind {
             PolicyKind::StaticBlock => Box::new(StaticBlock::new(knobs, &spec, num_experts)),
             PolicyKind::GreedyEveryCheck => {
                 Box::new(GreedyEveryCheck::new(knobs, spec, num_experts, payload_per_gpu))
+            }
+            PolicyKind::Adaptive => {
+                Box::new(AdaptivePolicy::new(knobs, adaptive, spec, num_experts, payload_per_gpu))
             }
         }
     }
@@ -297,6 +329,9 @@ pub struct RoutingPipeline {
     pub payload: f64,
     pub migration: MigrationScheduler,
     policy: Box<dyn PlacementPolicy>,
+    /// Reusable f32 -> f64 widening buffer for [`RoutingPipeline::step_f32`]
+    /// (the trainer calls it every optimizer step; no per-step allocation).
+    widen_buf: Vec<f64>,
 }
 
 impl RoutingPipeline {
@@ -319,7 +354,7 @@ impl RoutingPipeline {
         migration: MigrationConfig,
     ) -> RoutingPipeline {
         let migration = MigrationScheduler::new(spec.inter_bw, migration);
-        RoutingPipeline { spec, payload, migration, policy }
+        RoutingPipeline { spec, payload, migration, policy, widen_buf: Vec::new() }
     }
 
     /// One step of the shared sequence: observe the histogram, consult
@@ -335,10 +370,15 @@ impl RoutingPipeline {
         PipelineStepReport { decision, commit_stall_secs }
     }
 
-    /// The trainer's f32 routing metrics, widened losslessly.
+    /// The trainer's f32 routing metrics, widened losslessly into a
+    /// reused buffer (this runs every optimizer step).
     pub fn step_f32(&mut self, step: usize, loads: &[f32]) -> PipelineStepReport {
-        let wide: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
-        self.step(step, &wide)
+        let mut wide = std::mem::take(&mut self.widen_buf);
+        wide.clear();
+        wide.extend(loads.iter().map(|&l| l as f64));
+        let report = self.step(step, &wide);
+        self.widen_buf = wide;
+        report
     }
 
     /// Drain background weight copies over a step window of
@@ -414,10 +454,52 @@ mod tests {
         assert_eq!(PolicyKind::parse("static").unwrap(), PolicyKind::StaticBlock);
         assert_eq!(PolicyKind::parse("static_block").unwrap(), PolicyKind::StaticBlock);
         assert_eq!(PolicyKind::parse("greedy").unwrap(), PolicyKind::GreedyEveryCheck);
-        assert!(PolicyKind::parse("learned").is_err());
-        for kind in [PolicyKind::Threshold, PolicyKind::StaticBlock, PolicyKind::GreedyEveryCheck] {
+        assert_eq!(PolicyKind::parse("adaptive").unwrap(), PolicyKind::Adaptive);
+        // unknown tokens name every valid kind, not just the bad input
+        let err = PolicyKind::parse("learned").unwrap_err();
+        for kind in ["threshold", "static", "greedy", "adaptive"] {
+            assert!(err.contains(kind), "parse error '{err}' does not name {kind}");
+        }
+        for kind in [
+            PolicyKind::Threshold,
+            PolicyKind::StaticBlock,
+            PolicyKind::GreedyEveryCheck,
+            PolicyKind::Adaptive,
+        ] {
             let built = kind.build(RebalancePolicy::default(), ClusterSpec::p4d(2), 16, 1e6);
             assert_eq!(built.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn step_f32_matches_step_exactly_without_reallocating() {
+        // the widening buffer is an allocation fix, not a semantic
+        // change: pipeline state after step_f32 must be bit-identical
+        // to stepping the widened values
+        let spec = ClusterSpec::p4d(2);
+        let e = spec.num_gpus();
+        let mk = || {
+            RoutingPipeline::new(
+                PolicyKind::Threshold,
+                RebalancePolicy::default(),
+                spec.clone(),
+                e,
+                1e6,
+                MigrationConfig::default(),
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let frac32: Vec<f32> = zipf_fractions(e, 1.2).iter().map(|&f| f as f32).collect();
+        let wide: Vec<f64> = frac32.iter().map(|&f| f as f64).collect();
+        for step in 0..120 {
+            let ra = a.step_f32(step, &frac32);
+            let rb = b.step(step, &wide);
+            assert_eq!(ra.decision.is_some(), rb.decision.is_some(), "step {step}");
+        }
+        assert_eq!(a.rebalances(), b.rebalances());
+        assert_eq!(a.placement(), b.placement());
+        for (x, y) in a.tracker().fractions().iter().zip(b.tracker().fractions()) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

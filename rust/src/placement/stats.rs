@@ -54,10 +54,22 @@ impl LoadTracker {
         self.steps += 1;
     }
 
-    /// Observe the trainer's `last_expert_frac` metric directly.
+    /// Observe the trainer's `last_expert_frac` metric directly.  This
+    /// runs on the hot per-step path, so the f32 -> f64 widening is
+    /// folded into the EWMA loop instead of materializing a temporary
+    /// `Vec<f64>` — the arithmetic (widen, sum in order, divide by the
+    /// total) is exactly what observing the widened values would do,
+    /// so the EWMA state stays bit-identical to [`LoadTracker::observe`].
     pub fn observe_f32(&mut self, loads: &[f32]) {
-        let as64: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
-        self.observe(&as64);
+        assert_eq!(loads.len(), self.num_experts, "histogram arity mismatch");
+        let total: f64 = loads.iter().map(|&l| l as f64).sum();
+        if !(total > 0.0) || !total.is_finite() {
+            return;
+        }
+        for (e, &l) in self.ewma.iter_mut().zip(loads) {
+            *e = (1.0 - self.alpha) * *e + self.alpha * (l as f64 / total);
+        }
+        self.steps += 1;
     }
 
     /// Observe pre-capacity routing *demand*: every token's chosen
@@ -92,6 +104,151 @@ impl LoadTracker {
     /// Expert-level imbalance of the tracked loads (max/mean, 1 = flat).
     pub fn imbalance(&self) -> f64 {
         crate::util::stats::imbalance(&self.fractions())
+    }
+}
+
+/// Per-expert features extracted from a [`LoadForecaster`] window —
+/// the trend/variance/burst picture the memoryless EWMA forgets.
+/// Every field is finite for any history the forecaster accepted
+/// (degenerate histograms never enter the ring buffer).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ForecastFeatures {
+    /// Mean load fraction over the window.
+    pub mean: f64,
+    /// Least-squares slope of the fraction per step (0 with < 2 obs).
+    pub slope: f64,
+    /// Population variance of the fraction over the window.
+    pub variance: f64,
+    /// Newest fraction over the window mean (1 = steady; > 1 = a load
+    /// burst is arriving on this expert).
+    pub burst: f64,
+}
+
+impl ForecastFeatures {
+    fn neutral() -> ForecastFeatures {
+        ForecastFeatures { mean: 0.0, slope: 0.0, variance: 0.0, burst: 1.0 }
+    }
+}
+
+/// Short ring-buffer history of per-expert load fractions — the
+/// feature source for forecasting policies.  Where the EWMA
+/// [`LoadTracker`] is memoryless (a burst and a steady shift look the
+/// same once converged), the forecaster keeps the last `window` raw
+/// histograms so trend and burst structure stay observable.
+///
+/// Everything here is pure f64 arithmetic (no transcendentals), so the
+/// Python golden-trace mirror reproduces it bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct LoadForecaster {
+    num_experts: usize,
+    window: usize,
+    hist: std::collections::VecDeque<Vec<f64>>,
+}
+
+impl LoadForecaster {
+    pub fn new(num_experts: usize, window: usize) -> LoadForecaster {
+        assert!(num_experts > 0, "need at least one expert");
+        assert!(window >= 2, "window {window} too short to fit a trend");
+        LoadForecaster { num_experts, window, hist: std::collections::VecDeque::new() }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    /// Configured history bound; `len() <= window()` always holds.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Histograms currently held (the newest `min(observed, window)`).
+    pub fn len(&self) -> usize {
+        self.hist.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hist.is_empty()
+    }
+
+    /// Push one step's histogram (counts or fractions; normalized on
+    /// entry).  Degenerate histograms — all-zero, non-finite sum — are
+    /// skipped through the same gate as [`LoadTracker::observe`], so
+    /// the history only ever holds finite rows summing to 1.  This
+    /// sits on the trainer's per-step observe path, so once the ring
+    /// is full the evicted row's buffer is reused — steady-state
+    /// observation allocates nothing.
+    pub fn observe(&mut self, loads: &[f64]) {
+        assert_eq!(loads.len(), self.num_experts, "histogram arity mismatch");
+        let total: f64 = loads.iter().sum();
+        if !(total > 0.0) || !total.is_finite() {
+            return;
+        }
+        let mut row = if self.hist.len() == self.window {
+            self.hist.pop_front().expect("window >= 2, so a full ring is non-empty")
+        } else {
+            Vec::with_capacity(self.num_experts)
+        };
+        row.clear();
+        row.extend(loads.iter().map(|&l| l / total));
+        self.hist.push_back(row);
+    }
+
+    /// Per-expert trend/variance/burst features over the window.
+    /// Neutral (finite) features when no history has been accepted.
+    pub fn features(&self) -> Vec<ForecastFeatures> {
+        let k = self.hist.len();
+        if k == 0 {
+            return vec![ForecastFeatures::neutral(); self.num_experts];
+        }
+        let tbar = (k - 1) as f64 / 2.0;
+        let mut den = 0.0;
+        for t in 0..k {
+            let d = t as f64 - tbar;
+            den += d * d;
+        }
+        (0..self.num_experts)
+            .map(|e| {
+                let mut mean = 0.0;
+                for t in 0..k {
+                    mean += self.hist[t][e];
+                }
+                mean /= k as f64;
+                let mut num = 0.0;
+                let mut var = 0.0;
+                for t in 0..k {
+                    let dx = self.hist[t][e] - mean;
+                    num += (t as f64 - tbar) * dx;
+                    var += dx * dx;
+                }
+                let slope = if k >= 2 { num / den } else { 0.0 };
+                let last = self.hist[k - 1][e];
+                let burst = if mean > 0.0 { last / mean } else { 1.0 };
+                ForecastFeatures { mean, slope, variance: var / k as f64, burst }
+            })
+            .collect()
+    }
+
+    /// Forecast the load fractions `horizon` steps ahead: project each
+    /// expert's [`ForecastFeatures::slope`] from the `base` level (the
+    /// EWMA fractions — stable where single histograms are noisy),
+    /// clamp at zero, and renormalize.  `None` until two histograms
+    /// have been accepted; a degenerate projection (all experts
+    /// clamped to zero) falls back to `base` unchanged.
+    pub fn forecast(&self, base: &[f64], horizon: f64) -> Option<Vec<f64>> {
+        assert_eq!(base.len(), self.num_experts, "base arity mismatch");
+        if self.hist.len() < 2 {
+            return None;
+        }
+        let mut pred = Vec::with_capacity(self.num_experts);
+        for (b, f) in base.iter().zip(self.features()) {
+            let p = b + f.slope * horizon;
+            pred.push(if p > 0.0 { p } else { 0.0 });
+        }
+        let total: f64 = pred.iter().sum();
+        if !(total > 0.0) || !total.is_finite() {
+            return Some(base.to_vec());
+        }
+        Some(pred.into_iter().map(|p| p / total).collect())
     }
 }
 
@@ -198,6 +355,74 @@ mod tests {
         c.observe_f32(&[f32::NAN, 1.0]);
         c.observe_f32(&[0.0, 0.0]);
         assert_eq!(c.steps(), 0);
+    }
+
+    #[test]
+    fn forecaster_ring_buffer_is_bounded() {
+        let mut fc = LoadForecaster::new(2, 4);
+        assert!(fc.is_empty());
+        for i in 0..32 {
+            fc.observe(&[1.0 + i as f64, 1.0]);
+            assert!(fc.len() <= fc.window(), "ring exceeded window at {i}");
+        }
+        assert_eq!(fc.len(), 4);
+    }
+
+    #[test]
+    fn forecaster_skips_degenerate_histograms() {
+        let mut fc = LoadForecaster::new(3, 8);
+        for bad in [
+            vec![0.0, 0.0, 0.0],
+            vec![-1.0, 0.5, 0.5],
+            vec![f64::INFINITY, 1.0, 1.0],
+            vec![1.0, f64::NAN, 1.0],
+        ] {
+            fc.observe(&bad);
+            assert!(fc.is_empty(), "{bad:?} entered the history");
+        }
+        // features are neutral and finite with no history
+        for f in fc.features() {
+            assert!(f.mean == 0.0 && f.slope == 0.0 && f.variance == 0.0 && f.burst == 1.0);
+        }
+        assert!(fc.forecast(&[0.4, 0.3, 0.3], 10.0).is_none(), "no trend from no data");
+    }
+
+    #[test]
+    fn forecaster_detects_a_rising_trend() {
+        let mut fc = LoadForecaster::new(2, 8);
+        // expert 0 ramps from 10% to 45% of traffic over 8 steps
+        for i in 0..8 {
+            let hot = 0.1 + 0.05 * i as f64;
+            fc.observe(&[hot, 1.0 - hot]);
+        }
+        let feats = fc.features();
+        assert!(feats[0].slope > 0.04, "{feats:?}");
+        assert!(feats[1].slope < -0.04, "{feats:?}");
+        assert!(feats[0].burst > 1.5, "{feats:?}");
+        assert!(feats[0].variance > 0.0 && feats[0].variance.is_finite());
+        // the forecast projects past the newest observation
+        let base = [0.45, 0.55];
+        let f = fc.forecast(&base, 4.0).unwrap();
+        assert!(f[0] > base[0], "forecast {f:?} did not extrapolate the ramp");
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forecaster_steady_history_forecasts_the_base() {
+        let mut fc = LoadForecaster::new(4, 8);
+        for _ in 0..8 {
+            fc.observe(&[1.0, 2.0, 3.0, 2.0]);
+        }
+        let base = [0.125, 0.25, 0.375, 0.25];
+        let f = fc.forecast(&base, 25.0).unwrap();
+        for (got, want) in f.iter().zip(base) {
+            assert!((got - want).abs() < 1e-9, "{f:?}");
+        }
+        // a degenerate projection (flat trend from an all-zero base
+        // clamps every expert to zero) falls back to the base verbatim
+        let zero = [0.0; 4];
+        let f = fc.forecast(&zero, 25.0).unwrap();
+        assert_eq!(f, zero);
     }
 
     #[test]

@@ -591,6 +591,48 @@ mod tests {
     }
 
     #[test]
+    fn traced_step_times_run_the_adaptive_policy_unchanged() {
+        // the PolicyKind registration is all the simulator needs: the
+        // adaptive policy drives the same pipeline, deterministically
+        use crate::placement::PolicyKind;
+        use crate::trace::{record_scenario, Scenario, ScenarioConfig};
+        let cfg = ScenarioConfig {
+            scenario: Scenario::Burst { s: 0.0, hot_expert: 3, boost: 8.0, start: 20, end: 45 },
+            n_nodes: 4,
+            gpus_per_node: 8,
+            steps: 60,
+            tokens_per_step: 1024,
+            capacity_factor: 2.0,
+            payload_per_gpu: 1e6,
+            seed: 1,
+        };
+        let trace = record_scenario(&cfg, None);
+        let knobs = crate::placement::RebalancePolicy::default();
+        let run = || {
+            traced_step_times_with(
+                &dims(),
+                &trace,
+                PolicyKind::Adaptive,
+                knobs.clone(),
+                crate::placement::MigrationConfig::default(),
+                paper_scaling(),
+            )
+        };
+        let times = run();
+        assert_eq!(times.len(), 60);
+        for (i, bd) in times.iter().enumerate() {
+            assert!(bd.total().is_finite() && bd.total() > 0.0, "step {i}: {bd:?}");
+            assert!(bd.migration_exposed >= 0.0 && bd.migration_overlapped == 0.0);
+        }
+        // deterministic across runs (the bandit has no hidden entropy)
+        let again = run();
+        for (a, b) in times.iter().zip(&again) {
+            assert_eq!(a.total().to_bits(), b.total().to_bits());
+            assert_eq!(a.migration_exposed.to_bits(), b.migration_exposed.to_bits());
+        }
+    }
+
+    #[test]
     fn step_breakdown_components_positive() {
         let spec = ClusterSpec::p4d(4);
         let bd = step_time(&dims(), Variant::Smile, &spec, paper_scaling());

@@ -29,4 +29,6 @@ pub mod scenario;
 pub use format::{RoutingTrace, TraceDecision, TraceMeta, TraceStep, TRACE_VERSION};
 pub use record::TraceRecorder;
 pub use replay::{ReplayResult, ReplayStepOutcome, ReplaySummary, TraceReplayer};
-pub use scenario::{record_scenario, record_scenario_with, Scenario, ScenarioConfig};
+pub use scenario::{
+    record_scenario, record_scenario_tuned, record_scenario_with, Scenario, ScenarioConfig,
+};

@@ -24,7 +24,8 @@ use super::format::RoutingTrace;
 use crate::netsim::topology::ClusterSpec;
 use crate::obj;
 use crate::placement::{
-    price_placement, MigrationConfig, PlacementMap, PolicyKind, RebalancePolicy, RoutingPipeline,
+    price_placement, MigrationConfig, PlacementMap, PlacementPolicy, PolicyKind, RebalancePolicy,
+    RoutingPipeline,
 };
 use crate::util::json::Json;
 
@@ -163,8 +164,24 @@ impl TraceReplayer {
         let spec = trace.meta.cluster_spec();
         let num_experts = trace.meta.num_experts.max(1);
         let payload = trace.meta.payload_per_gpu;
-        let pipeline =
-            RoutingPipeline::new(kind, knobs, spec.clone(), num_experts, payload, migration);
+        let policy = kind.build(knobs, spec.clone(), num_experts, payload);
+        TraceReplayer::with_boxed_policy(trace, policy, migration)
+    }
+
+    /// Replay under a caller-built [`PlacementPolicy`] — the entry
+    /// point for policies whose knobs go beyond `RebalancePolicy`
+    /// (e.g. `smile tune` sweeping `AdaptiveConfig` grids).  The
+    /// policy must have been built for this trace's cluster shape,
+    /// expert count, and payload.
+    pub fn with_boxed_policy(
+        trace: &RoutingTrace,
+        policy: Box<dyn PlacementPolicy>,
+        migration: MigrationConfig,
+    ) -> TraceReplayer {
+        let spec = trace.meta.cluster_spec();
+        let num_experts = trace.meta.num_experts.max(1);
+        let payload = trace.meta.payload_per_gpu;
+        let pipeline = RoutingPipeline::from_policy(policy, spec.clone(), payload, migration);
         let block = PlacementMap::block(&spec, num_experts);
         TraceReplayer {
             spec,
@@ -270,6 +287,20 @@ impl TraceReplayer {
         migration: MigrationConfig,
     ) -> ReplayResult {
         let mut r = TraceReplayer::with_policy(trace, kind, knobs, migration);
+        for s in &trace.steps {
+            r.step(s);
+        }
+        r.finish()
+    }
+
+    /// One-shot whole-trace replay under a caller-built policy (cf.
+    /// [`TraceReplayer::with_boxed_policy`]).
+    pub fn replay_boxed(
+        trace: &RoutingTrace,
+        policy: Box<dyn PlacementPolicy>,
+        migration: MigrationConfig,
+    ) -> ReplayResult {
+        let mut r = TraceReplayer::with_boxed_policy(trace, policy, migration);
         for s in &trace.steps {
             r.step(s);
         }
@@ -458,6 +489,81 @@ mod tests {
         );
         assert!(trickle.summary.migration_pending_bytes > 0.0);
         assert_eq!(trickle.summary.migration_exposed_secs, 0.0);
+    }
+
+    #[test]
+    fn adaptive_replay_is_deterministic_and_labeled() {
+        // the determinism criterion for the new policy: two adaptive
+        // replays of the same trace are byte-identical, including
+        // through a serialization cycle
+        let trace = record_scenario(&cfg(Scenario::Zipf { s: 1.4 }, 120), None);
+        let run = || {
+            TraceReplayer::replay_with(
+                &trace,
+                PolicyKind::Adaptive,
+                RebalancePolicy::default(),
+                MigrationConfig::default(),
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert_eq!(
+            a.summary.to_json().to_string_pretty(),
+            b.summary.to_json().to_string_pretty()
+        );
+        let back = RoutingTrace::from_jsonl(&trace.to_jsonl()).unwrap();
+        let c = TraceReplayer::replay_with(
+            &back,
+            PolicyKind::Adaptive,
+            RebalancePolicy::default(),
+            MigrationConfig::default(),
+        );
+        assert_eq!(a, c);
+        assert_eq!(a.summary.policy, "adaptive");
+        // skew must commit and beat the static baseline
+        assert!(a.summary.rebalances >= 1, "{:?}", a.summary);
+        assert!(a.summary.total_comm_secs < a.summary.static_comm_secs);
+    }
+
+    #[test]
+    fn adaptive_matches_static_on_uniform_traffic() {
+        // the uniform acceptance criterion: no spurious rebalances, so
+        // the adaptive total equals the static baseline exactly
+        let trace = record_scenario(&cfg(Scenario::Uniform, 120), None);
+        let r = TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::Adaptive,
+            RebalancePolicy::default(),
+            MigrationConfig::default(),
+        );
+        assert_eq!(r.summary.rebalances, 0, "{:?}", r.summary);
+        assert_eq!(r.summary.total_comm_secs.to_bits(), r.summary.static_comm_secs.to_bits());
+        assert_eq!(r.summary.migration_exposed_secs, 0.0);
+    }
+
+    #[test]
+    fn boxed_policy_replay_matches_the_kind_path() {
+        // with_boxed_policy is the tune entry point; under default
+        // AdaptiveConfig it must reproduce PolicyKind::Adaptive exactly
+        use crate::placement::{AdaptiveConfig, AdaptivePolicy};
+        let trace = record_scenario(&cfg(Scenario::Zipf { s: 1.4 }, 120), None);
+        let by_kind = TraceReplayer::replay_with(
+            &trace,
+            PolicyKind::Adaptive,
+            RebalancePolicy::default(),
+            MigrationConfig::default(),
+        );
+        let policy = AdaptivePolicy::new(
+            RebalancePolicy::default(),
+            AdaptiveConfig::default(),
+            trace.meta.cluster_spec(),
+            trace.meta.num_experts,
+            trace.meta.payload_per_gpu,
+        );
+        let boxed =
+            TraceReplayer::replay_boxed(&trace, Box::new(policy), MigrationConfig::default());
+        assert_eq!(by_kind, boxed);
     }
 
     #[test]

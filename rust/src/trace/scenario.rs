@@ -11,7 +11,8 @@ use super::format::{RoutingTrace, TraceMeta, TRACE_VERSION};
 use super::record::TraceRecorder;
 use crate::moe::dispatch::{demand_histogram, DispatchPlan, Top1};
 use crate::placement::{
-    zipf_fractions, MigrationConfig, PolicyKind, RebalancePolicy, RoutingPipeline,
+    zipf_fractions, AdaptiveConfig, MigrationConfig, PolicyKind, RebalancePolicy,
+    RoutingPipeline,
 };
 use crate::util::rng::Rng;
 
@@ -114,18 +115,22 @@ pub fn record_scenario_with(
     cfg: &ScenarioConfig,
     policy: Option<(PolicyKind, RebalancePolicy)>,
 ) -> RoutingTrace {
+    record_scenario_tuned(cfg, policy.map(|(k, p)| (k, p, AdaptiveConfig::default())))
+}
+
+/// [`record_scenario_with`] with explicit adaptive knobs, so tuned
+/// configs drive live capture too (non-adaptive kinds ignore them).
+pub fn record_scenario_tuned(
+    cfg: &ScenarioConfig,
+    policy: Option<(PolicyKind, RebalancePolicy, AdaptiveConfig)>,
+) -> RoutingTrace {
     let e_total = cfg.num_experts();
     let capacity = cfg.capacity();
     let mut rec = TraceRecorder::new(cfg.meta());
-    let mut pipe = policy.map(|(kind, knobs)| {
-        RoutingPipeline::new(
-            kind,
-            knobs,
-            cfg.meta().cluster_spec(),
-            e_total,
-            cfg.payload_per_gpu,
-            MigrationConfig::default(),
-        )
+    let mut pipe = policy.map(|(kind, knobs, adaptive)| {
+        let spec = cfg.meta().cluster_spec();
+        let boxed = kind.build_with(knobs, adaptive, spec.clone(), e_total, cfg.payload_per_gpu);
+        RoutingPipeline::from_policy(boxed, spec, cfg.payload_per_gpu, MigrationConfig::default())
     });
     let mut rng = Rng::new(cfg.seed);
     for step in 0..cfg.steps {
@@ -213,6 +218,42 @@ mod tests {
         let s0 = &t.steps[0];
         assert!(s0.experts[0] > s0.experts[7], "{:?}", s0.experts);
         assert!(t.mean_dropped_frac() > 0.0);
+    }
+
+    #[test]
+    fn tuned_adaptive_capture_honors_its_knobs() {
+        // the tuned entry point threads AdaptiveConfig into live
+        // capture: a different probe cadence moves the recorded
+        // decisions, while the sampled histograms stay identical
+        let mut c = cfg(Scenario::Zipf { s: 1.5 });
+        c.steps = 120;
+        let knobs = RebalancePolicy::default();
+        let dflt = record_scenario_tuned(
+            &c,
+            Some((PolicyKind::Adaptive, knobs.clone(), AdaptiveConfig::default())),
+        );
+        let tuned = record_scenario_tuned(
+            &c,
+            Some((
+                PolicyKind::Adaptive,
+                knobs.clone(),
+                AdaptiveConfig { probe_every: 7, ..AdaptiveConfig::default() },
+            )),
+        );
+        let steps_of = |t: &RoutingTrace| -> Vec<usize> {
+            t.decisions.iter().map(|d| d.step).collect::<Vec<_>>()
+        };
+        assert!(!steps_of(&dflt).is_empty(), "skew must commit under adaptive capture");
+        assert!(steps_of(&dflt).iter().all(|s| s % 10 == 0), "{:?}", steps_of(&dflt));
+        assert!(steps_of(&tuned).iter().all(|s| s % 7 == 0), "{:?}", steps_of(&tuned));
+        assert_ne!(steps_of(&dflt), steps_of(&tuned));
+        for (a, b) in dflt.steps.iter().zip(&tuned.steps) {
+            assert_eq!(a.experts, b.experts, "capture must not depend on the policy");
+        }
+        // the un-tuned wrapper is the tuned path at default knobs
+        let via_with =
+            record_scenario_with(&c, Some((PolicyKind::Adaptive, knobs)));
+        assert_eq!(via_with, dflt);
     }
 
     #[test]

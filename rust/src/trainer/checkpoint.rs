@@ -14,8 +14,29 @@ use anyhow::{bail, Context, Result};
 
 use crate::runtime::{DType, Tensor, TensorSpec};
 
+/// The only header version this build reads or writes.
+const CHECKPOINT_VERSION: u32 = 1;
+/// Caps on length fields read from the file, validated *before* any
+/// allocation sized by them — a corrupt or truncated checkpoint must
+/// fail with a clear error, never an OOM or a multi-GiB read.
+const MAX_NAME_LEN: usize = 4096;
+const MAX_NDIMS: usize = 16;
+
 pub fn save(path: impl AsRef<Path>, specs: &[TensorSpec], tensors: &[Tensor]) -> Result<()> {
     assert_eq!(specs.len(), tensors.len());
+    // enforce the same bounds load validates, so every file this build
+    // writes is a file this build can read back — and do it BEFORE
+    // touching the destination, so a bad spec never truncates an
+    // existing good checkpoint
+    for (spec, t) in specs.iter().zip(tensors) {
+        let name_len = spec.name.len();
+        if name_len == 0 || name_len > MAX_NAME_LEN {
+            bail!("tensor name '{}' length {name_len} outside 1..={MAX_NAME_LEN}", spec.name);
+        }
+        if t.shape().len() > MAX_NDIMS {
+            bail!("tensor '{}' rank {} exceeds {MAX_NDIMS}", spec.name, t.shape().len());
+        }
+    }
     if let Some(dir) = path.as_ref().parent() {
         std::fs::create_dir_all(dir).ok();
     }
@@ -23,7 +44,7 @@ pub fn save(path: impl AsRef<Path>, specs: &[TensorSpec], tensors: &[Tensor]) ->
         .with_context(|| format!("creating {}", path.as_ref().display()))?;
     let mut out = std::io::BufWriter::new(f);
     out.write_all(b"SMCK")?;
-    out.write_all(&1u32.to_le_bytes())?;
+    out.write_all(&CHECKPOINT_VERSION.to_le_bytes())?;
     out.write_all(&(specs.len() as u32).to_le_bytes())?;
     for (spec, t) in specs.iter().zip(tensors) {
         let name = spec.name.as_bytes();
@@ -60,9 +81,13 @@ pub fn load(path: impl AsRef<Path>, specs: &[TensorSpec]) -> Result<Vec<Tensor>>
         .with_context(|| format!("opening {}", path.as_ref().display()))?;
     let mut r = std::io::BufReader::new(f);
     let mut hdr = [0u8; 12];
-    r.read_exact(&mut hdr)?;
+    r.read_exact(&mut hdr).context("reading checkpoint header")?;
     if &hdr[0..4] != b"SMCK" {
         bail!("bad checkpoint magic");
+    }
+    let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    if version != CHECKPOINT_VERSION {
+        bail!("unsupported checkpoint version {version} (this build reads {CHECKPOINT_VERSION})");
     }
     let count = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
     if count != specs.len() {
@@ -71,29 +96,43 @@ pub fn load(path: impl AsRef<Path>, specs: &[TensorSpec]) -> Result<Vec<Tensor>>
     let mut out = Vec::with_capacity(count);
     for spec in specs {
         let mut b4 = [0u8; 4];
-        r.read_exact(&mut b4)?;
+        r.read_exact(&mut b4).context("reading tensor name length")?;
         let name_len = u32::from_le_bytes(b4) as usize;
+        if name_len == 0 || name_len > MAX_NAME_LEN {
+            bail!(
+                "corrupt checkpoint: tensor name length {name_len} outside 1..={MAX_NAME_LEN} \
+                 (expecting '{}')",
+                spec.name
+            );
+        }
         let mut name = vec![0u8; name_len];
-        r.read_exact(&mut name)?;
-        let name = String::from_utf8(name)?;
+        r.read_exact(&mut name).context("reading tensor name")?;
+        let name = String::from_utf8(name).context("tensor name is not UTF-8")?;
         if name != spec.name {
             bail!("checkpoint tensor '{name}' where manifest expects '{}'", spec.name);
         }
         let mut b1 = [0u8; 1];
-        r.read_exact(&mut b1)?;
-        r.read_exact(&mut b4)?;
+        r.read_exact(&mut b1).context("reading dtype tag")?;
+        r.read_exact(&mut b4).context("reading rank")?;
         let ndims = u32::from_le_bytes(b4) as usize;
+        if ndims > MAX_NDIMS {
+            bail!("corrupt checkpoint: '{name}' claims rank {ndims} (max {MAX_NDIMS})");
+        }
         let mut dims = Vec::with_capacity(ndims);
         for _ in 0..ndims {
-            r.read_exact(&mut b4)?;
+            r.read_exact(&mut b4).context("reading dims")?;
             dims.push(u32::from_le_bytes(b4) as usize);
         }
+        // shape validation doubles as the element-count bound: the
+        // data allocation below is sized by the manifest's own shape,
+        // never by unvalidated file contents
         if dims != spec.shape {
             bail!("checkpoint '{name}' shape {dims:?} != manifest {:?}", spec.shape);
         }
         let n: usize = dims.iter().product();
         let mut data = vec![0u8; n * 4];
-        r.read_exact(&mut data)?;
+        r.read_exact(&mut data)
+            .with_context(|| format!("reading {n} elements of '{name}' (truncated checkpoint?)"))?;
         let tensor = match b1[0] {
             0 => Tensor::F32(
                 data.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
@@ -132,6 +171,82 @@ mod tests {
         let back = load(&path, &specs()).unwrap();
         assert_eq!(back, tensors);
         std::fs::remove_file(path).ok();
+    }
+
+    /// Write a valid checkpoint, then corrupt it with `f` and assert
+    /// load fails with a message containing `expect`.
+    fn assert_corrupt_rejected(tag: &str, expect: &str, f: impl FnOnce(&mut Vec<u8>)) {
+        let path = std::env::temp_dir().join(format!("smile_test_ckpt_{tag}.bin"));
+        let tensors = vec![
+            Tensor::f32(vec![0.0; 6], &[2, 3]),
+            Tensor::f32(vec![0.0; 4], &[4]),
+        ];
+        save(&path, &specs(), &tensors).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        f(&mut bytes);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = match load(&path, &specs()) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("{tag}: corrupt checkpoint loaded successfully"),
+        };
+        assert!(err.contains(expect), "{tag}: error '{err}' does not mention '{expect}'");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_rejects_specs_load_could_not_read_back() {
+        // and the rejection happens before the destination is touched:
+        // a bad spec must never truncate an existing good checkpoint
+        let path = std::env::temp_dir().join("smile_test_ckpt_badspec.bin");
+        let good = vec![Tensor::f32(vec![0.5], &[1])];
+        let good_specs =
+            vec![TensorSpec { name: "params.w".into(), shape: vec![1], dtype: DType::F32 }];
+        save(&path, &good_specs, &good).unwrap();
+        let before = std::fs::read(&path).unwrap();
+        let specs = vec![TensorSpec { name: String::new(), shape: vec![1], dtype: DType::F32 }];
+        let tensors = vec![Tensor::f32(vec![0.0], &[1])];
+        let err = save(&path, &specs, &tensors).unwrap_err();
+        assert!(format!("{err:#}").contains("length"), "{err:#}");
+        assert_eq!(std::fs::read(&path).unwrap(), before, "bad spec clobbered the file");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_version_rejected() {
+        assert_corrupt_rejected("version", "unsupported checkpoint version", |b| {
+            b[4..8].copy_from_slice(&99u32.to_le_bytes());
+        });
+    }
+
+    #[test]
+    fn corrupt_name_len_rejected_before_allocating() {
+        // a name length claiming ~4 GiB must be rejected up front, not
+        // allocated and read
+        assert_corrupt_rejected("name_len", "name length", |b| {
+            b[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        });
+        assert_corrupt_rejected("name_len_zero", "name length", |b| {
+            b[12..16].copy_from_slice(&0u32.to_le_bytes());
+        });
+    }
+
+    #[test]
+    fn corrupt_rank_rejected() {
+        // tensor 0: name_len(4) + "params.w"(8) + dtype(1) => rank at 25
+        assert_corrupt_rejected("rank", "rank", |b| {
+            b[25..29].copy_from_slice(&u32::MAX.to_le_bytes());
+        });
+    }
+
+    #[test]
+    fn truncated_checkpoint_rejected() {
+        assert_corrupt_rejected("truncated", "truncated checkpoint", |b| {
+            b.truncate(b.len() - 9);
+        });
+        // even a header-only stub fails cleanly
+        assert_corrupt_rejected("header_only", "", |b| {
+            b.truncate(6);
+        });
     }
 
     #[test]

@@ -15,7 +15,9 @@ use anyhow::{anyhow, Context, Result};
 use crate::data::{Corpus, CorpusSpec, MlmBatch, MlmBatcher, MlmSpec};
 use crate::metrics::StepLog;
 use crate::netsim::ClusterSpec;
-use crate::placement::{MigrationConfig, PolicyKind, RebalancePolicy, RoutingPipeline};
+use crate::placement::{
+    AdaptiveConfig, MigrationConfig, PolicyKind, RebalancePolicy, RoutingPipeline,
+};
 use crate::runtime::{ArtifactConfig, Loaded, Runtime, Tensor};
 use crate::trace::{TraceMeta, TraceRecorder, TRACE_VERSION};
 
@@ -142,7 +144,21 @@ impl Trainer {
     pub fn enable_policy(
         &mut self,
         kind: PolicyKind,
+        policy: RebalancePolicy,
+        migration: MigrationConfig,
+    ) {
+        self.enable_policy_tuned(kind, policy, AdaptiveConfig::default(), migration);
+    }
+
+    /// [`Trainer::enable_policy`] with explicit adaptive knobs, so a
+    /// config that won a `smile tune` sweep drives live training
+    /// (`smile train --policy adaptive --probe-every N ...`) instead
+    /// of silently falling back to the defaults.
+    pub fn enable_policy_tuned(
+        &mut self,
+        kind: PolicyKind,
         mut policy: RebalancePolicy,
+        adaptive: AdaptiveConfig,
         migration: MigrationConfig,
     ) {
         let spec = config_cluster_spec(&self.cfg);
@@ -156,8 +172,8 @@ impl Trainer {
         let (d, f) = (self.cfg.hidden_size as f64, self.cfg.ffn_size as f64);
         policy.expert_bytes = (2.0 * d * f + f + d) * 4.0;
         let payload = config_hop_payload(&self.cfg);
-        self.pipeline =
-            Some(RoutingPipeline::new(kind, policy, spec, num_experts, payload, migration));
+        let boxed = kind.build_with(policy, adaptive, spec.clone(), num_experts, payload);
+        self.pipeline = Some(RoutingPipeline::from_policy(boxed, spec, payload, migration));
     }
 
     /// Capture every optimizer step's routing picture as a

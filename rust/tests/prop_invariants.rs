@@ -550,10 +550,11 @@ fn prop_replay_deterministic_across_policies() {
         &cfg(),
         |rng| {
             let sc = random_scenario(rng);
-            let kind = match rng.below(3) {
+            let kind = match rng.below(4) {
                 0 => PolicyKind::Threshold,
                 1 => PolicyKind::StaticBlock,
-                _ => PolicyKind::GreedyEveryCheck,
+                2 => PolicyKind::GreedyEveryCheck,
+                _ => PolicyKind::Adaptive,
             };
             let overlap = if rng.below(2) == 0 { 0.0 } else { rng.f64() * 0.9 };
             (sc, kind, overlap)
@@ -639,6 +640,78 @@ fn prop_replay_deterministic_across_serialization() {
                 a.summary.observed_steps <= a.summary.steps,
                 "observed > steps"
             );
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// load forecaster invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_forecaster_ring_bounded_and_features_finite() {
+    // the adaptive policy's feature source: whatever mix of valid and
+    // degenerate (all-zero / NaN / inf / negative) histograms arrives,
+    // the ring buffer never exceeds its window and every extracted
+    // feature plus the forecast stays finite and normalized
+    check(
+        "forecaster: len <= window; features/forecast finite under garbage input",
+        &cfg(),
+        |rng| {
+            let e = 1 + rng.below(16) as usize;
+            let window = 2 + rng.below(30) as usize;
+            let horizon = rng.f64() * 100.0;
+            let rows: Vec<Vec<f64>> = (0..rng.below(80))
+                .map(|_| {
+                    (0..e)
+                        .map(|_| match rng.below(12) {
+                            0 => 0.0,
+                            1 => f64::NAN,
+                            2 => f64::INFINITY,
+                            3 => -rng.f64(),
+                            _ => rng.f64() * 100.0,
+                        })
+                        .collect()
+                })
+                .collect();
+            (e, window, horizon, rows)
+        },
+        |(e, window, horizon, rows)| {
+            let mut fc = placement::LoadForecaster::new(*e, *window);
+            let base = vec![1.0 / *e as f64; *e];
+            for row in rows {
+                fc.observe(row);
+                prop_assert!(
+                    fc.len() <= fc.window(),
+                    "ring {} exceeded window {}",
+                    fc.len(),
+                    fc.window()
+                );
+                let feats = fc.features();
+                prop_assert!(feats.len() == *e, "feature arity");
+                for f in &feats {
+                    prop_assert!(
+                        f.mean.is_finite()
+                            && f.slope.is_finite()
+                            && f.variance.is_finite()
+                            && f.burst.is_finite(),
+                        "non-finite features {f:?} (row {row:?})"
+                    );
+                    prop_assert!(f.variance >= 0.0, "negative variance {f:?}");
+                }
+                if let Some(fhat) = fc.forecast(&base, *horizon) {
+                    let total: f64 = fhat.iter().sum();
+                    prop_assert!(
+                        fhat.iter().all(|x| x.is_finite() && *x >= 0.0),
+                        "bad forecast {fhat:?}"
+                    );
+                    prop_assert!(
+                        (total - 1.0).abs() < 1e-9,
+                        "forecast not normalized: {total}"
+                    );
+                }
+            }
             Ok(())
         },
     );

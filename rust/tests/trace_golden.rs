@@ -174,6 +174,65 @@ fn golden_policy_sweep_brackets_the_threshold_policy() {
 }
 
 #[test]
+fn golden_burst_adaptive_beats_threshold() {
+    // the adaptive (forecast + bandit) acceptance criteria, pinned as
+    // an exact fixture: on the burst trace its cost
+    // (total_comm_secs + migration_exposed_secs) is strictly below the
+    // threshold policy's, and on the uniform trace it matches the
+    // threshold total within 1% (it commits nothing there)
+    let burst = RoutingTrace::read_jsonl(data_path("trace_burst.jsonl")).unwrap();
+    let adaptive = TraceReplayer::replay_with(
+        &burst,
+        PolicyKind::Adaptive,
+        RebalancePolicy::default(),
+        MigrationConfig::default(),
+    );
+    assert_eq!(adaptive.summary.policy, "adaptive");
+    let golden_text = std::fs::read_to_string(data_path("trace_burst.adaptive.summary.json"))
+        .expect("adaptive golden summary exists");
+    let golden = Json::parse(&golden_text).expect("adaptive golden summary parses");
+    assert_eq!(
+        adaptive.summary.to_json(),
+        golden,
+        "adaptive replay of trace_burst drifted from its golden fixture.\ngot:\n{}",
+        adaptive.summary.to_json().to_string_pretty()
+    );
+    let threshold = TraceReplayer::replay(&burst, RebalancePolicy::default());
+    let cost = |s: &smile::trace::ReplaySummary| s.total_comm_secs + s.migration_exposed_secs;
+    assert!(
+        cost(&adaptive.summary) < cost(&threshold.summary),
+        "adaptive cost {} not strictly below threshold {}",
+        cost(&adaptive.summary),
+        cost(&threshold.summary)
+    );
+    // the forecast trigger reacts inside the burst window, before the
+    // threshold policy's first commit
+    assert!(adaptive.summary.rebalances >= 1);
+    assert!(
+        adaptive.summary.rebalance_steps[0] <= threshold.summary.rebalance_steps[0],
+        "adaptive reacted at {} after threshold's {}",
+        adaptive.summary.rebalance_steps[0],
+        threshold.summary.rebalance_steps[0]
+    );
+    // uniform parity: no spurious commits, so the totals coincide
+    let uniform = RoutingTrace::read_jsonl(data_path("trace_uniform.jsonl")).unwrap();
+    let a = TraceReplayer::replay_with(
+        &uniform,
+        PolicyKind::Adaptive,
+        RebalancePolicy::default(),
+        MigrationConfig::default(),
+    );
+    let t = TraceReplayer::replay(&uniform, RebalancePolicy::default());
+    assert!(
+        (cost(&a.summary) - cost(&t.summary)).abs() <= 0.01 * cost(&t.summary),
+        "uniform: adaptive {} not within 1% of threshold {}",
+        cost(&a.summary),
+        cost(&t.summary)
+    );
+    assert_eq!(a.summary.rebalances, 0, "uniform traffic must not rebalance");
+}
+
+#[test]
 fn golden_traces_parse_and_validate() {
     for name in ["trace_uniform", "trace_zipf12", "trace_burst"] {
         let trace = RoutingTrace::read_jsonl(data_path(&format!("{name}.jsonl"))).unwrap();

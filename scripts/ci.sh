@@ -9,7 +9,9 @@
 #                              fail on any summary drift
 #   scripts/ci.sh mirror-check regenerate the golden fixtures from the Python
 #                              mirror (scripts/gen_golden_traces.py) and fail
-#                              on any byte drift — no Rust toolchain needed
+#                              on any byte drift — no Rust toolchain needed;
+#                              covers every policy fixture, including the
+#                              forecaster/bandit trace_burst.adaptive one
 #   scripts/ci.sh bench-json   run the placement bench and write
 #                              BENCH_placement.json at the repo root for
 #                              the perf trajectory

@@ -4,10 +4,12 @@
 This is a line-by-line Python mirror of the Rust trace record/replay
 path — rust/src/trace/{scenario,replay}.rs, the placement pipeline,
 the placement::policy layer (threshold / static_block /
-greedy_every_check behind the PlacementPolicy trait), and the
-placement::migration::MigrationScheduler byte ledger the
-RoutingPipeline drives.  Every operation on that path is pure IEEE-754
-f64 arithmetic plus sqrt — no libm transcendentals — so CPython
+greedy_every_check / adaptive behind the PlacementPolicy trait,
+including the adaptive policy's LoadForecaster ring buffer and its
+UCB-style bandit), and the placement::migration::MigrationScheduler
+byte ledger the RoutingPipeline drives.  Every operation on that path
+is pure IEEE-754 f64 arithmetic plus sqrt — no libm transcendentals
+(the bandit's exploration bonus is sqrt-based, not ln) — so CPython
 doubles reproduce the Rust computation bit-for-bit, and the JSON
 emitted here matches `Json::to_string()` byte-for-byte (sorted keys,
 compact separators, integers printed without a fraction,
@@ -616,10 +618,183 @@ class GreedyEveryCheck(Rebalancer):
         return self._commit(step, before, candidate, after, migrated, migration_secs)
 
 
+ADAPTIVE = dict(
+    window=16,
+    horizon=25.0,
+    probe_every=10,
+    ucb_c=0.5,
+    min_improvement=1.02,
+)
+
+
+class Forecaster:
+    """placement::stats::LoadForecaster — ring buffer + trend forecast."""
+
+    def __init__(self, e_total, window):
+        self.e_total = e_total
+        self.window = window
+        self.hist = []
+
+    def observe(self, loads):
+        total = 0.0
+        for l in loads:
+            total += l
+        if not (total > 0.0) or math.isinf(total) or math.isnan(total):
+            return
+        if len(self.hist) == self.window:
+            self.hist.pop(0)
+        self.hist.append([l / total for l in loads])
+
+    def forecast(self, base, horizon):
+        k = len(self.hist)
+        if k < 2:
+            return None
+        tbar = float(k - 1) / 2.0
+        den = 0.0
+        for t in range(k):
+            d = float(t) - tbar
+            den += d * d
+        pred = []
+        for e in range(self.e_total):
+            mean = 0.0
+            for t in range(k):
+                mean += self.hist[t][e]
+            mean /= float(k)
+            num = 0.0
+            for t in range(k):
+                num += (float(t) - tbar) * (self.hist[t][e] - mean)
+            slope = num / den
+            p = base[e] + slope * horizon
+            pred.append(p if p > 0.0 else 0.0)
+        total = 0.0
+        for p in pred:
+            total += p
+        if not (total > 0.0) or math.isinf(total) or math.isnan(total):
+            return list(base)
+        return [p / total for p in pred]
+
+
+class AdaptivePolicy:
+    """placement::adaptive::AdaptivePolicy — the forecast + bandit
+    `adaptive` policy: trend forecast over a ring-buffer history, a
+    forward-looking imbalance trigger, and a UCB-style (sqrt-only, no
+    libm transcendentals) bandit over {stay, re-plan, re-plan +
+    replicate} whose reward is the realized priced-comm delta."""
+
+    name = "adaptive"
+
+    def __init__(self, policy, spec, e_total, payload, cfg=ADAPTIVE):
+        self.policy = policy
+        self.cfg = cfg
+        self.spec = spec
+        self.payload = payload
+        self.tracker = Tracker(e_total, policy["ewma_alpha"])
+        self.fc = Forecaster(e_total, cfg["window"])
+        self.current = PMap.block(spec, e_total)
+        self.last_consult_step = 0
+        self.rebalances = 0
+        self.arm_plays = [0, 0, 0]
+        self.arm_mean = [0.0, 0.0, 0.0]
+        self.consults = 0
+        self.pending = None  # (arm, prev_pmap, step, migration_secs)
+
+    def observe(self, loads):
+        self.tracker.observe(loads)
+        self.fc.observe(loads)
+
+    def _settle(self, step):
+        if self.pending is None:
+            return
+        arm, prev, at, mig = self.pending
+        self.pending = None
+        elapsed = float(step - at)
+        if not (elapsed > 0.0):
+            return
+        frac = self.tracker.fractions()
+        before = price_placement(prev, frac, self.spec, self.payload).comm_total()
+        after = price_placement(self.current, frac, self.spec, self.payload).comm_total()
+        reward = (before - after) * self.policy["hops_per_step"] * elapsed - mig
+        self.arm_plays[arm] += 1
+        self.arm_mean[arm] += (reward - self.arm_mean[arm]) / float(self.arm_plays[arm])
+
+    def consult(self, step):
+        pe = self.cfg["probe_every"]
+        if pe == 0 or step // pe == self.last_consult_step // pe:
+            return None
+        self.last_consult_step = step
+        self._settle(step)
+        base = self.tracker.fractions()
+        fhat = self.fc.forecast(base, self.cfg["horizon"])
+        if fhat is None:
+            return None
+        node_imb = imbalance(self.current.node_loads(fhat))
+        if node_imb < self.policy["trigger_imbalance"]:
+            self.arm_plays[0] += 1
+            return None
+        self.consults += 1
+        p = self.policy
+        cost_stay = price_placement(self.current, fhat, self.spec, self.payload).comm_total()
+        noreps = dict(p)
+        noreps["top_k_replicate"] = 0
+        cands = [
+            plan_placement(fhat, self.spec, self.payload, noreps),
+            plan_placement(fhat, self.spec, self.payload, p),
+        ]
+        gains = [0.0, 0.0, 0.0]
+        costs = [cost_stay, cost_stay, cost_stay]
+        migs = [(0, 0.0), (0, 0.0), (0, 0.0)]
+        for i, cand in enumerate(cands):
+            arm = i + 1
+            c = price_placement(cand, fhat, self.spec, self.payload).comm_total()
+            migrated = count_migrated(self.current, cand)
+            mig_secs = float(migrated) * p["expert_bytes"] / self.spec.inter_bw
+            gains[arm] = (cost_stay - c) * p["hops_per_step"] * self.cfg["horizon"] - mig_secs
+            costs[arm] = c
+            migs[arm] = (migrated, mig_secs)
+        scale = cost_stay * p["hops_per_step"]
+        root = math.sqrt(float(self.consults))
+        arm = 0
+        best = None
+        for a in range(3):
+            v = (
+                gains[a]
+                + self.arm_mean[a]
+                + self.cfg["ucb_c"] * scale * root / float(1 + self.arm_plays[a])
+            )
+            if best is None or v > best:
+                arm = a
+                best = v
+        commit = (
+            arm != 0
+            and gains[arm] > 0.0
+            and cost_stay > costs[arm] * self.cfg["min_improvement"]
+            and not cands[arm - 1].eq(self.current)
+        )
+        if not commit:
+            self.arm_plays[0] += 1
+            return None
+        migrated, migration_secs = migs[arm]
+        prev = self.current
+        self.current = cands[arm - 1]
+        self.rebalances += 1
+        self.pending = (arm, prev, step, migration_secs)
+        frac = self.tracker.fractions()
+        before = price_placement(prev, frac, self.spec, self.payload).comm_total()
+        after = price_placement(self.current, frac, self.spec, self.payload).comm_total()
+        return dict(
+            step=step,
+            migrated_replicas=migrated,
+            comm_before=before,
+            comm_after=after,
+            migration_secs=migration_secs,
+        )
+
+
 POLICY_KINDS = {
     "threshold": Rebalancer,
     "static_block": StaticBlock,
     "greedy_every_check": GreedyEveryCheck,
+    "adaptive": AdaptivePolicy,
 }
 
 
@@ -864,6 +1039,13 @@ def fixture_files():
                 trace_steps, n_nodes, gpus, payload, POLICY, kind="greedy_every_check"
             )
             summaries.append((".greedy.summary.json", greedy))
+        if fname == "trace_burst":
+            # the adaptive acceptance fixture: forecast + bandit on the
+            # hot-expert burst, pinning the whole forecaster/bandit path
+            adaptive, _ = replay(
+                trace_steps, n_nodes, gpus, payload, POLICY, kind="adaptive"
+            )
+            summaries.append((".adaptive.summary.json", adaptive))
         out.append((fname, label, text, summaries, timeline))
     return out
 
