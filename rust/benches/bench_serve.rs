@@ -1,0 +1,80 @@
+//! Bench: the request-driven serving simulator — how fast one full
+//! serving run (workload generation, continuous batching, per-token
+//! routing, live placement policy, pricing) executes per policy and
+//! workload.  A serving run must stay cheap enough that policy sweeps
+//! over workload grids (the serving analogue of `smile tune`) remain
+//! interactive.  Writes reports/bench_serve.json.
+
+use smile::placement::{MigrationConfig, PolicyKind};
+use smile::serve::{serve, ServeConfig, WorkloadKind};
+use smile::util::bench::Bencher;
+
+fn cfg(kind: WorkloadKind) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.workload.kind = kind;
+    cfg
+}
+
+fn main() {
+    // shape checks before timing anything: the acceptance headline
+    // must hold on the bench config (the golden-fixture defaults)
+    let flash = cfg(WorkloadKind::flash_default());
+    let adaptive = serve(&flash, PolicyKind::Adaptive, MigrationConfig::default());
+    let stat = serve(&flash, PolicyKind::StaticBlock, MigrationConfig::default());
+    assert!(adaptive.summary.rebalances >= 1, "adaptive must react to the flash crowd");
+    assert!(
+        adaptive.summary.ttft_p99 < stat.summary.ttft_p99,
+        "adaptive p99 TTFT {} not below static {}",
+        adaptive.summary.ttft_p99,
+        stat.summary.ttft_p99
+    );
+    assert!(adaptive.summary.total_comm_secs < stat.summary.total_comm_secs);
+    let poisson = cfg(WorkloadKind::Poisson);
+    let steady = serve(&poisson, PolicyKind::Adaptive, MigrationConfig::default());
+    assert_eq!(steady.summary.rebalances, 0, "steady traffic must not rebalance");
+    println!(
+        "shape check: flash p99 TTFT {:.1} ms (adaptive) vs {:.1} ms (static), \
+         {} rebalances; poisson clean ✓\n",
+        adaptive.summary.ttft_p99 * 1e3,
+        stat.summary.ttft_p99 * 1e3,
+        adaptive.summary.rebalances
+    );
+    println!(
+        "run shape: {} iterations, {} requests, {} routed tokens over {:.2} s virtual\n",
+        adaptive.summary.iterations,
+        adaptive.summary.requests_completed,
+        adaptive.summary.routed_tokens,
+        adaptive.summary.virtual_secs
+    );
+
+    let mut bench = Bencher::default();
+    bench.bench("serve::generate(flash workload)", || flash.workload.generate());
+    for kind in [
+        PolicyKind::StaticBlock,
+        PolicyKind::Threshold,
+        PolicyKind::GreedyEveryCheck,
+        PolicyKind::Adaptive,
+    ] {
+        bench.bench(&format!("serve(flash, {})", kind.name()), || {
+            serve(&flash, kind, MigrationConfig::default())
+        });
+    }
+    bench.bench("serve(poisson, adaptive)", || {
+        serve(&poisson, PolicyKind::Adaptive, MigrationConfig::default())
+    });
+    bench.bench("serve(flash, adaptive, overlap 0.25)", || {
+        serve(&flash, PolicyKind::Adaptive, MigrationConfig::overlapped(0.25))
+    });
+
+    // serving throughput: simulated iterations per wall-second
+    let mut quick = Bencher::quick();
+    let ns = quick.bench("serve (for iters/s)", || {
+        serve(&flash, PolicyKind::Adaptive, MigrationConfig::default())
+    });
+    println!(
+        "\nserving-sim throughput: {:.0} iterations/s, {:.0} requests/s (wall)",
+        adaptive.summary.iterations as f64 / (ns * 1e-9),
+        adaptive.summary.requests_completed as f64 / (ns * 1e-9)
+    );
+    bench.write_report("reports/bench_serve.json");
+}

@@ -27,6 +27,11 @@
 //!   deterministically through the placement pipeline — the offline
 //!   policy-evaluation substrate and the golden-trace regression
 //!   harness.
+//! - [`serve`]: the request-driven inference-serving simulator —
+//!   seeded workloads (Poisson / diurnal / flash crowd / replayed
+//!   trace), continuous batching, live placement policies during
+//!   serving, and SLA percentile metrics (`smile serve`, pinned by
+//!   the serve golden fixtures).
 //! - [`data`] is the synthetic-corpus stand-in for C4; [`metrics`]
 //!   the profiler stand-in; [`util`] the from-scratch substrate
 //!   (json/cli/rng/stats/bench — the offline image vendors none of the
@@ -39,6 +44,7 @@ pub mod moe;
 pub mod netsim;
 pub mod placement;
 pub mod runtime;
+pub mod serve;
 pub mod simtrain;
 pub mod trace;
 pub mod trainer;

@@ -1,6 +1,9 @@
 //! `smile` — leader entrypoint / CLI.
 //!
-//! Subcommands:
+//! Subcommands (the [`COMMANDS`] table is the single source of truth:
+//! dispatch and the help text are both generated from it, and policy
+//! option lists expand from `PolicyKind::VALID`, so neither can drift
+//! from the real dispatch surface):
 //!   train          real MLM pre-training over PJRT (AOT artifacts)
 //!   eval           held-out perplexity of a checkpoint
 //!   simulate       step-time / throughput simulation on the P4d model
@@ -9,6 +12,7 @@
 //!   placement      congestion-aware expert placement report under skew
 //!   trace          record / replay / summarize routing traces
 //!   tune           grid-sweep adaptive-policy hyperparameters over a trace
+//!   serve          request-driven inference-serving simulation
 //!   info           list artifacts and their configs
 //!
 //! Examples:
@@ -19,6 +23,9 @@
 //!   smile placement --nodes 16 --skew 1.2
 //!   smile trace record --scenario zipf --skew 1.2 --out reports/zipf.jsonl
 //!   smile trace replay --in reports/zipf.jsonl
+//!   smile serve --workload flash --policy adaptive
+//!   smile serve --workload poisson --policy threshold --sla-ms 800
+//!   smile serve --workload trace --in reports/zipf.jsonl --policy adaptive
 
 use anyhow::{bail, Result};
 
@@ -29,6 +36,7 @@ use smile::placement::{
     RebalancePolicy,
 };
 use smile::runtime::Runtime;
+use smile::serve::{self, ServeConfig, WorkloadKind};
 use smile::simtrain::{self, ModelDims, Scaling, Variant};
 use smile::trace::{RoutingTrace, Scenario, ScenarioConfig, TraceReplayer};
 use smile::trainer::Trainer;
@@ -43,21 +51,96 @@ fn main() {
     }
 }
 
+/// One dispatchable subcommand.  This table is the single source of
+/// truth for BOTH dispatch and the help text, and every usage string
+/// spells policy options as the `<POLICIES>` placeholder (expanded
+/// from [`PolicyKind::VALID`] at print time) — so a new command or a
+/// new policy kind cannot leave the help behind.
+struct CommandSpec {
+    name: &'static str,
+    run: fn(&Args) -> Result<()>,
+    usage: &'static str,
+}
+
+const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "train",
+        run: cmd_train,
+        usage: "--config <name> --steps N [--seed S] [--log out.csv] [--ckpt path] [--eval-every N] [--rebalance]\n\
+                [--policy <POLICIES>] [--migration-overlap F] [--trace out.jsonl]\n\
+                (adaptive knobs as in trace replay apply to --policy adaptive here and in trace record)",
+    },
+    CommandSpec {
+        name: "eval",
+        run: cmd_eval,
+        usage: "--config <name> --ckpt path [--batches N]",
+    },
+    CommandSpec {
+        name: "simulate",
+        run: cmd_simulate,
+        usage: "--model 3.7B|13B|48B --nodes N [--variant switch|smile|dense|dense_wide]",
+    },
+    CommandSpec {
+        name: "sweep",
+        run: cmd_sweep,
+        usage: "[--nodes 1,2,4,8,16] [--model 3.7B]",
+    },
+    CommandSpec {
+        name: "layer",
+        run: cmd_layer,
+        usage: "--variant switch|smile [--nodes N] [--timeline]",
+    },
+    CommandSpec {
+        name: "placement",
+        run: cmd_placement,
+        usage: "[--nodes N] [--skew S] [--model 3.7B] [--replicate K] [--max-replicas R] [--out path.json]",
+    },
+    CommandSpec {
+        name: "trace",
+        run: cmd_trace,
+        usage: "record --scenario uniform|zipf|burst --out p.jsonl [--nodes N] [--gpus M] [--steps S]\n\
+                       [--tokens T] [--seed X] [--skew S] [--hot E] [--boost B] [--burst-start A] [--burst-end Z]\n\
+                       [--cap-factor F] [--rebalance] [--policy <POLICIES>]\n\
+                replay --in p.jsonl [--policy <POLICIES>] [--migration-overlap F]\n\
+                       [--check-every N] [--trigger-imbalance I] [--hysteresis H]\n\
+                       [adaptive knobs: --window W --horizon H --probe-every N --ucb-c C --min-improvement R]\n\
+                       [--timeline p.csv] [--summary p.json]\n\
+                summarize --in p.jsonl [same policy overrides as replay] [--out p.summary.json] [--bless]",
+    },
+    CommandSpec {
+        name: "tune",
+        run: cmd_tune,
+        usage: "--in p.jsonl [--window W] [--min-improvement R] [--migration-overlap F]\n\
+                [--policy <baseline: POLICIES>] [--out p.csv]\n\
+                grid-sweeps the adaptive policy's probe_every x horizon x ucb_c over a\n\
+                recorded trace via replay and prints the Pareto set of\n\
+                (total_comm_secs + migration_exposed_secs) vs rebalance count",
+    },
+    CommandSpec {
+        name: "serve",
+        run: cmd_serve,
+        usage: "--workload poisson|diurnal|flash|trace [--in p.jsonl] [--policy <POLICIES>] [--sla-ms F]\n\
+                [--rate R] [--seed X] [--ticks N] [--tick-secs F] [--sub-slots N] [--nodes N] [--gpus M]\n\
+                [--prompt-min N --prompt-max N --output-min N --output-max N] [--model 3.7B|13B|48B]\n\
+                [--max-batch-tokens N] [--max-batch-size N] [--max-queue N] [--cap-factor F]\n\
+                [--bytes-per-token F] [--iter-overhead F] [--hysteresis H]\n\
+                [--spike-mult F --spike-start F --spike-end F --hot E --boost F] [--amp F --period F]\n\
+                [--check-every N] [--trigger-imbalance I] [--min-improvement R] [--observe-every N]\n\
+                [--min-observe-tokens N] [--migration-overlap F] [adaptive knobs as in trace replay]\n\
+                [--timeline p.csv] [--summary p.json] [--bless]\n\
+                request-driven serving simulation: continuous batching over a seeded workload with\n\
+                the placement policy rebalancing live; reports TTFT/TPOT/e2e p50/p95/p99 + SLA goodput",
+    },
+    CommandSpec { name: "info", run: cmd_info, usage: "" },
+];
+
 fn run() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     let args = Args::parse(argv);
-    match cmd.as_str() {
-        "train" => cmd_train(&args),
-        "eval" => cmd_eval(&args),
-        "simulate" => cmd_simulate(&args),
-        "sweep" => cmd_sweep(&args),
-        "layer" => cmd_layer(&args),
-        "placement" => cmd_placement(&args),
-        "trace" => cmd_trace(&args),
-        "tune" => cmd_tune(&args),
-        "info" => cmd_info(&args),
-        _ => {
+    match COMMANDS.iter().find(|c| c.name == cmd) {
+        Some(spec) => (spec.run)(&args),
+        None => {
             print_help();
             Ok(())
         }
@@ -65,33 +148,32 @@ fn run() -> Result<()> {
 }
 
 fn print_help() {
-    println!(
+    println!("{}", help_text());
+}
+
+/// The full help text, generated from [`COMMANDS`] with policy lists
+/// expanded from [`PolicyKind::VALID`].
+fn help_text() -> String {
+    let mut out = String::from(
         "smile — bi-level MoE routing (SMILE) reproduction\n\n\
          usage: smile <command> [options]\n\n\
-         commands:\n\
-           train     --config <name> --steps N [--seed S] [--log out.csv] [--ckpt path] [--eval-every N] [--rebalance]\n\
-                     [--policy threshold|static|greedy|adaptive] [--migration-overlap F] [--trace out.jsonl]\n\
-                     (adaptive knobs as in trace replay apply to --policy adaptive here and in trace record)\n\
-           eval      --config <name> --ckpt path [--batches N]\n\
-           simulate  --model 3.7B|13B|48B --nodes N [--variant switch|smile|dense|dense_wide]\n\
-           sweep     [--nodes 1,2,4,8,16] [--model 3.7B]\n\
-           layer     --variant switch|smile [--nodes N] [--timeline]\n\
-           placement [--nodes N] [--skew S] [--model 3.7B] [--replicate K] [--max-replicas R] [--out path.json]\n\
-           trace     record --scenario uniform|zipf|burst --out p.jsonl [--nodes N] [--gpus M] [--steps S]\n\
-                            [--tokens T] [--seed X] [--skew S] [--hot E] [--boost B] [--burst-start A] [--burst-end Z]\n\
-                            [--cap-factor F] [--rebalance] [--policy threshold|static|greedy|adaptive]\n\
-           trace     replay --in p.jsonl [--policy threshold|static|greedy|adaptive] [--migration-overlap F]\n\
-                            [--check-every N] [--trigger-imbalance I] [--hysteresis H]\n\
-                            [adaptive knobs: --window W --horizon H --probe-every N --ucb-c C --min-improvement R]\n\
-                            [--timeline p.csv] [--summary p.json]\n\
-           trace     summarize --in p.jsonl [same policy overrides as replay] [--out p.summary.json] [--bless]\n\
-           tune      --in p.jsonl [--window W] [--min-improvement R] [--migration-overlap F]\n\
-                     [--policy <baseline kind, default threshold>] [--out p.csv]\n\
-                     grid-sweeps the adaptive policy's probe_every x horizon x ucb_c over a\n\
-                     recorded trace via replay and prints the Pareto set of\n\
-                     (total_comm_secs + migration_exposed_secs) vs rebalance count\n\
-           info"
+         commands:\n",
     );
+    for c in COMMANDS {
+        let usage = c.usage.replace("POLICIES", PolicyKind::VALID);
+        if usage.is_empty() {
+            out.push_str(&format!("  {}\n", c.name));
+            continue;
+        }
+        for (i, line) in usage.lines().enumerate() {
+            if i == 0 {
+                out.push_str(&format!("  {:<9} {}\n", c.name, line.trim_start()));
+            } else {
+                out.push_str(&format!("  {:<9} {}\n", "", line.trim_start()));
+            }
+        }
+    }
+    out
 }
 
 fn variant_of(name: &str) -> Result<Variant> {
@@ -774,6 +856,217 @@ fn write_summary(path: &str, s: &smile::trace::ReplaySummary) -> Result<()> {
     Ok(())
 }
 
+/// Build the serving configuration from CLI flags over the golden-
+/// fixture defaults (`ServeConfig::default`), so `smile serve
+/// --workload flash --policy adaptive` with no other flags reproduces
+/// `rust/tests/data/serve_flash.adaptive.summary.json` exactly.
+fn serve_config_of(args: &Args) -> Result<ServeConfig> {
+    let mut cfg = ServeConfig::default();
+    let kind = match args.str("workload", "poisson").as_str() {
+        "poisson" => WorkloadKind::Poisson,
+        "diurnal" => WorkloadKind::Diurnal {
+            amp: args.f64("amp", 0.5),
+            period_secs: args.f64("period", 4.0),
+        },
+        "flash" => WorkloadKind::Flash {
+            spike_mult: args.f64("spike-mult", 2.2),
+            spike_start: args.f64("spike-start", 1.5),
+            spike_end: args.f64("spike-end", 3.5),
+            hot_expert: args.usize("hot", 3),
+            boost: args.f64("boost", 12.0),
+        },
+        "trace" => {
+            let path = args
+                .opt_str("in")
+                .ok_or_else(|| anyhow::anyhow!("--in required for --workload trace"))?;
+            let trace = RoutingTrace::read_jsonl(&path).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(!trace.steps.is_empty(), "{path}: trace has no steps");
+            WorkloadKind::from_trace(&trace)
+        }
+        other => bail!("unknown workload {other} (poisson|diurnal|flash|trace)"),
+    };
+    cfg.workload.kind = kind;
+    cfg.workload.seed = args.u64("seed", cfg.workload.seed);
+    cfg.workload.rate = args.f64("rate", cfg.workload.rate);
+    cfg.workload.n_ticks = args.usize("ticks", cfg.workload.n_ticks);
+    cfg.workload.tick_secs = args.f64("tick-secs", cfg.workload.tick_secs);
+    cfg.workload.sub_slots = args.usize("sub-slots", cfg.workload.sub_slots);
+    cfg.workload.prompt_min = args.usize("prompt-min", cfg.workload.prompt_min);
+    cfg.workload.prompt_max = args.usize("prompt-max", cfg.workload.prompt_max);
+    cfg.workload.output_min = args.usize("output-min", cfg.workload.output_min);
+    cfg.workload.output_max = args.usize("output-max", cfg.workload.output_max);
+    cfg.batcher.max_batch_tokens =
+        args.usize("max-batch-tokens", cfg.batcher.max_batch_tokens);
+    cfg.batcher.max_batch_size = args.usize("max-batch-size", cfg.batcher.max_batch_size);
+    cfg.batcher.max_queue = args.usize("max-queue", cfg.batcher.max_queue);
+    cfg.n_nodes = args.usize("nodes", cfg.n_nodes);
+    cfg.gpus_per_node = args.usize("gpus", cfg.gpus_per_node);
+    cfg.dims = dims_of(&args.str("model", "3.7B"))?;
+    cfg.bytes_per_token = args.f64(
+        "bytes-per-token",
+        (cfg.dims.hidden * cfg.dims.dtype_bytes * 64) as f64,
+    );
+    cfg.capacity_factor = args.f64("cap-factor", cfg.capacity_factor);
+    cfg.iter_overhead_secs = args.f64("iter-overhead", cfg.iter_overhead_secs);
+    cfg.sla_ms = args.f64("sla-ms", cfg.sla_ms);
+    cfg.check_every = args.usize("check-every", cfg.check_every);
+    cfg.trigger_imbalance =
+        args.f64("trigger-imbalance", args.f64("trigger", cfg.trigger_imbalance));
+    cfg.min_improvement = args.f64("min-improvement", cfg.min_improvement);
+    cfg.observe_every = args.usize("observe-every", cfg.observe_every);
+    cfg.min_observe_tokens = args.usize("min-observe-tokens", cfg.min_observe_tokens);
+    anyhow::ensure!(cfg.observe_every >= 1, "--observe-every must be >= 1");
+    anyhow::ensure!(
+        cfg.workload.prompt_max > cfg.workload.prompt_min
+            && cfg.workload.output_max > cfg.workload.output_min,
+        "token ranges must be non-empty ([min, max))"
+    );
+    anyhow::ensure!(
+        cfg.workload.prompt_min >= 1 && cfg.workload.output_min >= 1,
+        "--prompt-min and --output-min must be >= 1 (every request needs a prefill \
+         token and an output token)"
+    );
+    anyhow::ensure!(
+        cfg.workload.tick_secs > 0.0 && cfg.workload.tick_secs.is_finite(),
+        "--tick-secs must be a positive duration"
+    );
+    anyhow::ensure!(cfg.workload.sub_slots >= 1, "--sub-slots must be >= 1");
+    anyhow::ensure!(
+        cfg.workload.peak_rate() * cfg.workload.tick_secs
+            <= cfg.workload.sub_slots as f64,
+        "peak arrival rate {} req/s saturates Bernoulli thinning: raise --sub-slots \
+         above rate*spike*tick ({:.1}) or lower --rate / --tick-secs",
+        cfg.workload.peak_rate(),
+        cfg.workload.peak_rate() * cfg.workload.tick_secs,
+    );
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serve_config_of(args)?;
+    let kind = policy_kind_of(args)?;
+    let migration = migration_of(args);
+    // policy knobs: serve gate defaults, then the same override flags
+    // trace replay takes
+    let mut knobs = cfg.policy_knobs();
+    knobs.hops_per_step = args.f64("hops", knobs.hops_per_step);
+    knobs.expert_bytes = args.f64("expert-bytes", knobs.expert_bytes);
+    knobs.ewma_alpha = args.f64("alpha", knobs.ewma_alpha);
+    knobs.hysteresis = args.f64("hysteresis", knobs.hysteresis);
+    let mut adaptive = cfg.adaptive_knobs();
+    adaptive.window = args.usize("window", adaptive.window);
+    adaptive.horizon = args.f64("horizon", adaptive.horizon);
+    adaptive.probe_every = args.usize("probe-every", adaptive.probe_every);
+    adaptive.ucb_c = args.f64("ucb-c", adaptive.ucb_c);
+    anyhow::ensure!(adaptive.window >= 2, "--window must be >= 2");
+
+    let report = serve::serve_with(&cfg, kind, knobs, adaptive, migration);
+    let s = &report.summary;
+    println!(
+        "serve [{}] on {} ({} nodes x {} GPUs, {} experts): {} iterations over {:.2} s virtual",
+        s.policy,
+        s.workload,
+        cfg.n_nodes,
+        cfg.gpus_per_node,
+        cfg.spec().num_gpus(),
+        s.iterations,
+        s.virtual_secs,
+    );
+    println!(
+        "requests: {} arrived, {} admitted, {} completed, {} rejected; \
+         tokens: {} routed ({} prompt + {} output, {:.2}% dropped over capacity)",
+        s.requests_arrived,
+        s.requests_admitted,
+        s.requests_completed,
+        s.requests_rejected,
+        s.routed_tokens,
+        s.prompt_tokens,
+        s.output_tokens,
+        s.dropped_token_frac * 100.0,
+    );
+    let mut table = Table::new(&["metric", "p50", "p95", "p99"]);
+    let ms = |v: f64| format!("{:.1}", v * 1e3);
+    table.row(&["ttft(ms)".into(), ms(s.ttft_p50), ms(s.ttft_p95), ms(s.ttft_p99)]);
+    table.row(&["tpot(ms)".into(), ms(s.tpot_p50), ms(s.tpot_p95), ms(s.tpot_p99)]);
+    table.row(&["e2e(ms)".into(), ms(s.e2e_p50), ms(s.e2e_p95), ms(s.e2e_p99)]);
+    table.print();
+    println!(
+        "SLA {} ms: {:.1}% attainment, goodput {:.0} output tokens/s; \
+         queue depth mean {:.1} / peak {}; mean batch {:.0} tokens",
+        s.sla_ms,
+        s.sla_attainment * 100.0,
+        s.goodput_tokens_per_sec,
+        s.mean_queue_depth,
+        s.peak_queue_depth,
+        s.mean_batch_tokens,
+    );
+    println!(
+        "priced: comm {:.3} s, compute {:.3} s; {} rebalances at {:?} ({} replica moves, \
+         {:.1} ms exposed, {:.1} ms overlapped, {} pending)",
+        s.total_comm_secs,
+        s.total_compute_secs,
+        s.rebalances,
+        s.rebalance_iters,
+        s.migrated_replicas,
+        s.migration_exposed_secs * 1e3,
+        s.migration_overlapped_secs * 1e3,
+        smile::util::fmt_bytes(s.migration_pending_bytes),
+    );
+    if let Some(csv) = args.opt_str("timeline") {
+        let mut full = Table::new(&[
+            "iter", "end_secs", "batch_tokens", "batch_requests", "queue_depth",
+            "active", "comm_s", "compute_s", "stall_s", "overlapped_s", "dropped",
+            "rebalanced",
+        ]);
+        for it in &report.timeline {
+            full.row(&[
+                it.iter.to_string(),
+                format!("{}", it.end_secs),
+                it.batch_tokens.to_string(),
+                it.batch_requests.to_string(),
+                it.queue_depth.to_string(),
+                it.active_requests.to_string(),
+                format!("{}", it.comm_secs),
+                format!("{}", it.compute_secs),
+                format!("{}", it.stall_secs),
+                format!("{}", it.overlapped_secs),
+                it.dropped_tokens.to_string(),
+                (it.rebalanced as usize).to_string(),
+            ]);
+        }
+        full.write_csv(&csv);
+        println!("timeline: {csv}");
+    }
+    let out = if args.bool("bless", false) {
+        // golden-fixture update procedure (cf. trace summarize
+        // --bless): write into the crate's tests/data/ regardless of
+        // the working directory, named by workload + the CLI policy
+        // spelling
+        let token = match kind {
+            PolicyKind::Threshold => "threshold",
+            PolicyKind::StaticBlock => "static",
+            PolicyKind::GreedyEveryCheck => "greedy",
+            PolicyKind::Adaptive => "adaptive",
+        };
+        Some(format!(
+            "{}/tests/data/serve_{}.{}.summary.json",
+            env!("CARGO_MANIFEST_DIR"),
+            s.workload,
+            token
+        ))
+    } else {
+        args.opt_str("summary")
+    };
+    if let Some(path) = out {
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(&path, s.to_json().to_string_pretty())?;
+        println!("summary: {path}");
+    }
+    Ok(())
+}
+
 fn cmd_info(_args: &Args) -> Result<()> {
     let rt = Runtime::new(smile::runtime::default_artifacts_dir())?;
     let mut table = Table::new(&["artifact", "kind", "config", "params", "inputs", "outputs"]);
@@ -789,4 +1082,103 @@ fn cmd_info(_args: &Args) -> Result<()> {
     }
     table.print();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn command_table_names_are_unique() {
+        let mut names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate command name in COMMANDS");
+    }
+
+    #[test]
+    fn help_is_generated_from_the_dispatch_table() {
+        // every dispatched command appears in the help with its usage
+        // — the table IS the dispatch, so nothing can be documented
+        // but unreachable, or dispatched but undocumented
+        let help = help_text();
+        for c in COMMANDS {
+            assert!(
+                help.lines().any(|l| l.trim_start().starts_with(c.name)),
+                "command '{}' missing from help",
+                c.name
+            );
+        }
+        for name in ["train", "serve", "tune", "trace", "info"] {
+            assert!(COMMANDS.iter().any(|c| c.name == name), "{name} not dispatchable");
+        }
+    }
+
+    #[test]
+    fn policy_lists_come_from_one_source() {
+        // usage strings must spell policy options via the POLICIES
+        // placeholder, never a hand-written kind list that would rot
+        // when a PolicyKind is added
+        for c in COMMANDS {
+            assert!(
+                !c.usage.contains("threshold|"),
+                "command '{}' hardcodes a policy list; use the POLICIES placeholder",
+                c.name
+            );
+        }
+        // and the expansion lands the full canonical list in the help
+        let help = help_text();
+        let hits = help.matches(PolicyKind::VALID).count();
+        assert!(
+            hits >= 4,
+            "expected PolicyKind::VALID ({}) on train/trace/tune/serve usage, found {hits}",
+            PolicyKind::VALID
+        );
+        assert!(!help.contains("POLICIES"), "unexpanded placeholder in help:\n{help}");
+    }
+
+    #[test]
+    fn serve_defaults_are_the_fixture_configuration() {
+        // `smile serve --workload flash --policy adaptive` with no
+        // other flags must reproduce the golden fixture: the CLI
+        // builder over empty args returns ServeConfig::default with
+        // only the workload kind switched
+        let args = Args::parse(["--workload".to_string(), "flash".to_string()]);
+        let cfg = serve_config_of(&args).unwrap();
+        let d = ServeConfig::default();
+        assert_eq!(cfg.workload.kind, WorkloadKind::flash_default());
+        assert_eq!(cfg.workload.seed, d.workload.seed);
+        assert_eq!(cfg.workload.rate, d.workload.rate);
+        assert_eq!(cfg.workload.n_ticks, d.workload.n_ticks);
+        assert_eq!(cfg.batcher.max_batch_tokens, d.batcher.max_batch_tokens);
+        assert_eq!(cfg.n_nodes, d.n_nodes);
+        assert_eq!(cfg.gpus_per_node, d.gpus_per_node);
+        assert_eq!(cfg.bytes_per_token, d.bytes_per_token);
+        assert_eq!(cfg.check_every, d.check_every);
+        assert_eq!(cfg.trigger_imbalance, d.trigger_imbalance);
+        assert_eq!(cfg.min_improvement, d.min_improvement);
+        assert_eq!(cfg.observe_every, d.observe_every);
+        assert_eq!(cfg.min_observe_tokens, d.min_observe_tokens);
+        // and bad inputs fail loudly
+        let bad = Args::parse(["--workload".to_string(), "sinusoid".to_string()]);
+        assert!(serve_config_of(&bad).is_err());
+        let bad_range = Args::parse(
+            ["--prompt-min", "64", "--prompt-max", "64"].map(String::from).to_vec(),
+        );
+        assert!(serve_config_of(&bad_range).is_err());
+        let zero_output = Args::parse(
+            ["--output-min", "0", "--output-max", "1"].map(String::from).to_vec(),
+        );
+        assert!(serve_config_of(&zero_output).is_err());
+        // a rate the Bernoulli thinning cannot represent fails as a
+        // clean CLI error, not an assert inside generate()
+        let hot_rate =
+            Args::parse(["--rate", "10000"].map(String::from).to_vec());
+        assert!(serve_config_of(&hot_rate).is_err());
+        let bad_tick = Args::parse(["--tick-secs", "0"].map(String::from).to_vec());
+        assert!(serve_config_of(&bad_tick).is_err());
+        let bad_slots = Args::parse(["--sub-slots", "0"].map(String::from).to_vec());
+        assert!(serve_config_of(&bad_slots).is_err());
+    }
 }

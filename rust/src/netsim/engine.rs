@@ -52,8 +52,19 @@ impl Timeline {
             .sum()
     }
 
-    pub fn span_of(&self, task: TaskId) -> &Span {
-        self.spans.iter().find(|s| s.task == task).expect("task simulated")
+    /// The span a task ran as, or `None` for a task id the simulation
+    /// never scheduled (ids are caller-side handles, so a stale or
+    /// foreign id is a caller bug the type now surfaces instead of a
+    /// panic deep inside reporting code).
+    pub fn span_of(&self, task: TaskId) -> Option<&Span> {
+        self.spans.iter().find(|s| s.task == task)
+    }
+
+    /// [`Timeline::span_of`] for callers that hold a known-simulated
+    /// id (panics with the task id on a miss).
+    pub fn span_of_expect(&self, task: TaskId) -> &Span {
+        self.span_of(task)
+            .unwrap_or_else(|| panic!("task {task} was never simulated"))
     }
 }
 
@@ -242,7 +253,7 @@ mod tests {
         let a = sim.task("a", r1, 4.0, &[]);
         let b = sim.task("b", r2, 1.0, &[a]);
         let t = sim.run();
-        assert!((t.span_of(b).start - 4.0).abs() < 1e-12);
+        assert!((t.span_of(b).expect("simulated").start - 4.0).abs() < 1e-12);
     }
 
     #[test]
@@ -267,7 +278,7 @@ mod tests {
         let c = sim.task("c", r2, 3.0, &[a]);
         let d = sim.task("d", r1, 1.0, &[b, c]);
         let t = sim.run();
-        assert!((t.span_of(d).start - 4.0).abs() < 1e-12);
+        assert!((t.span_of(d).expect("simulated").start - 4.0).abs() < 1e-12);
         assert!((t.makespan - 5.0).abs() < 1e-12);
     }
 
@@ -279,7 +290,7 @@ mod tests {
         let b = sim.task("b", r, 0.0, &[a]);
         let t = sim.run();
         assert_eq!(t.makespan, 0.0);
-        assert!(t.span_of(b).start >= t.span_of(a).end);
+        assert!(t.span_of(b).unwrap().start >= t.span_of(a).unwrap().end);
     }
 
     #[test]
@@ -288,5 +299,28 @@ mod tests {
         let mut sim = DagSim::new();
         let r = sim.resource("r");
         sim.task("a", r, 1.0, &[5]);
+    }
+
+    #[test]
+    fn span_of_miss_is_none_not_a_panic() {
+        let mut sim = DagSim::new();
+        let r = sim.resource("r");
+        let a = sim.task("a", r, 1.0, &[]);
+        let t = sim.run();
+        assert!(t.span_of(a).is_some());
+        // a task id this simulation never scheduled
+        assert!(t.span_of(a + 1).is_none());
+        assert!(t.span_of(usize::MAX).is_none());
+        // the checked variant still panics, but names the id
+        assert_eq!(t.span_of_expect(a).task, a);
+    }
+
+    #[test]
+    #[should_panic(expected = "task 7 was never simulated")]
+    fn span_of_expect_names_the_missing_task() {
+        let mut sim = DagSim::new();
+        let r = sim.resource("r");
+        sim.task("a", r, 1.0, &[]);
+        sim.run().span_of_expect(7);
     }
 }

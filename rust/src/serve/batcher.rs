@@ -1,0 +1,341 @@
+//! Continuous-batching scheduler: the admission queue and the
+//! per-iteration token batch.
+//!
+//! Every iteration the batcher forms one token batch under two
+//! budgets — `max_batch_tokens` (tokens this iteration) and
+//! `max_batch_size` (concurrent requests) — with the standard
+//! continuous-batching priority order:
+//!
+//!   1. one decode token for every in-flight request past prefill,
+//!   2. prefill continuations (chunked prefill: a prompt larger than
+//!      the remaining budget spreads across iterations),
+//!   3. new admissions from the FIFO queue while both budgets allow.
+//!
+//! Arrivals beyond `max_queue` waiting requests are rejected at
+//! admission.  All decisions are integer bookkeeping in admission
+//! order — no RNG, no floats — so the batch sequence is a pure
+//! function of (arrival schedule, budgets), which the serving-engine
+//! determinism and conservation properties rely on.
+
+use super::workload::Request;
+use std::collections::VecDeque;
+
+/// Batch/queue budgets.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Token budget per iteration (prefill chunks + decodes).
+    pub max_batch_tokens: usize,
+    /// Concurrent in-flight request ceiling.
+    pub max_batch_size: usize,
+    /// Waiting-queue bound; arrivals past it are rejected.
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch_tokens: 2048, max_batch_size: 320, max_queue: 100_000 }
+    }
+}
+
+/// One in-flight request's progress.
+#[derive(Debug, Clone)]
+pub struct ActiveReq {
+    /// Index into the workload's request array.
+    pub req: usize,
+    pub prefill_remaining: usize,
+    pub decode_remaining: usize,
+    /// Tokens scheduled for it in the current batch.
+    pub sched: usize,
+}
+
+/// What one applied iteration did to the request population.
+#[derive(Debug, Clone, Default)]
+pub struct BatchProgress {
+    /// Requests whose prefill completed this iteration (first token).
+    pub first_tokens: Vec<usize>,
+    /// Requests that finished their last output token this iteration.
+    pub completions: Vec<usize>,
+}
+
+/// The admission queue + in-flight set.
+#[derive(Debug)]
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    queue: VecDeque<usize>,
+    active: Vec<ActiveReq>,
+    next_arrival: usize,
+    /// Request ids rejected at admission (queue overflow).
+    pub rejected: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        assert!(cfg.max_batch_tokens > 0 && cfg.max_batch_size > 0, "degenerate budgets");
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            next_arrival: 0,
+            rejected: Vec::new(),
+        }
+    }
+
+    /// Admit every arrival at or before `now`; returns how many were
+    /// admitted (the rest were rejected on a full queue).
+    pub fn admit(&mut self, requests: &[Request], now: f64) -> usize {
+        let mut admitted = 0;
+        while self.next_arrival < requests.len()
+            && requests[self.next_arrival].arrival_secs <= now
+        {
+            if self.queue.len() >= self.cfg.max_queue {
+                self.rejected.push(self.next_arrival);
+            } else {
+                self.queue.push_back(self.next_arrival);
+                admitted += 1;
+            }
+            self.next_arrival += 1;
+        }
+        admitted
+    }
+
+    /// Nothing queued or in flight.
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty() && self.queue.is_empty()
+    }
+
+    /// Index of the next not-yet-admitted arrival.
+    pub fn next_arrival_index(&self) -> usize {
+        self.next_arrival
+    }
+
+    /// Form the next token batch; returns the scheduled token count.
+    /// Non-zero whenever the batcher is not idle.
+    pub fn form_batch(&mut self, requests: &[Request]) -> usize {
+        let mut budget = self.cfg.max_batch_tokens;
+        // 1. decodes: one token per in-flight request past prefill
+        for a in &mut self.active {
+            if a.prefill_remaining == 0 && budget > 0 {
+                a.sched = 1;
+                budget -= 1;
+            }
+        }
+        // 2. prefill continuations, chunked to the remaining budget
+        for a in &mut self.active {
+            if a.prefill_remaining > 0 && budget > 0 {
+                let chunk = a.prefill_remaining.min(budget);
+                a.sched = chunk;
+                budget -= chunk;
+            }
+        }
+        // 3. new admissions from the FIFO queue
+        while budget > 0
+            && self.active.len() < self.cfg.max_batch_size
+            && !self.queue.is_empty()
+        {
+            let rid = self.queue.pop_front().expect("non-empty queue");
+            let prompt = requests[rid].prompt_tokens;
+            let chunk = prompt.min(budget);
+            self.active.push(ActiveReq {
+                req: rid,
+                prefill_remaining: prompt,
+                decode_remaining: requests[rid].output_tokens,
+                sched: chunk,
+            });
+            budget -= chunk;
+        }
+        self.cfg.max_batch_tokens - budget
+    }
+
+    /// Apply the formed batch: advance prefill/decode counters, emit
+    /// first-token and completion events, retire finished requests.
+    pub fn apply(&mut self) -> BatchProgress {
+        let mut progress = BatchProgress::default();
+        for a in &mut self.active {
+            if a.sched == 0 {
+                continue;
+            }
+            if a.prefill_remaining > 0 {
+                a.prefill_remaining -= a.sched;
+                if a.prefill_remaining == 0 {
+                    // the prefill-completing iteration also produces
+                    // the first output token (standard continuous
+                    // batching)
+                    progress.first_tokens.push(a.req);
+                    a.decode_remaining -= 1;
+                    if a.decode_remaining == 0 {
+                        progress.completions.push(a.req);
+                    }
+                }
+            } else {
+                a.decode_remaining -= 1;
+                if a.decode_remaining == 0 {
+                    progress.completions.push(a.req);
+                }
+            }
+            a.sched = 0;
+        }
+        if !progress.completions.is_empty() {
+            self.active.retain(|a| a.decode_remaining > 0);
+        }
+        progress
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Waiting request ids in FIFO order.
+    pub fn queue_ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.queue.iter().copied()
+    }
+
+    /// In-flight requests (admission order).
+    pub fn active_reqs(&self) -> &[ActiveReq] {
+        &self.active
+    }
+
+    /// Total prompt+output token budget of the waiting queue.
+    pub fn queued_tokens(&self, requests: &[Request]) -> usize {
+        self.queue.iter().map(|&r| requests[r].total_tokens()).sum()
+    }
+
+    /// Total prompt+output token budget of the in-flight set.
+    pub fn inflight_tokens(&self, requests: &[Request]) -> usize {
+        self.active.iter().map(|a| requests[a.req].total_tokens()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs(specs: &[(f64, usize, usize)]) -> Vec<Request> {
+        specs
+            .iter()
+            .map(|&(t, p, o)| Request { arrival_secs: t, prompt_tokens: p, output_tokens: o })
+            .collect()
+    }
+
+    fn cfg(tokens: usize, size: usize, queue: usize) -> BatcherConfig {
+        BatcherConfig { max_batch_tokens: tokens, max_batch_size: size, max_queue: queue }
+    }
+
+    #[test]
+    fn prefill_then_decode_lifecycle() {
+        let requests = reqs(&[(0.0, 4, 3)]);
+        let mut b = Batcher::new(cfg(16, 4, 8));
+        assert_eq!(b.admit(&requests, 0.0), 1);
+        // iteration 1: full prefill (4 tokens) -> first token
+        assert_eq!(b.form_batch(&requests), 4);
+        let p = b.apply();
+        assert_eq!(p.first_tokens, vec![0]);
+        assert!(p.completions.is_empty());
+        // two more decode iterations finish output 3
+        assert_eq!(b.form_batch(&requests), 1);
+        assert!(b.apply().completions.is_empty());
+        assert_eq!(b.form_batch(&requests), 1);
+        assert_eq!(b.apply().completions, vec![0]);
+        assert!(b.is_idle());
+    }
+
+    #[test]
+    fn chunked_prefill_spreads_across_iterations() {
+        let requests = reqs(&[(0.0, 10, 2)]);
+        let mut b = Batcher::new(cfg(4, 4, 8));
+        b.admit(&requests, 0.0);
+        // 10-token prompt over a 4-token budget: 4 + 4 + 2
+        assert_eq!(b.form_batch(&requests), 4);
+        assert!(b.apply().first_tokens.is_empty());
+        assert_eq!(b.form_batch(&requests), 4);
+        assert!(b.apply().first_tokens.is_empty());
+        assert_eq!(b.form_batch(&requests), 2);
+        assert_eq!(b.apply().first_tokens, vec![0]);
+        // one decode left (output 2, first token consumed one)
+        assert_eq!(b.form_batch(&requests), 1);
+        assert_eq!(b.apply().completions, vec![0]);
+    }
+
+    #[test]
+    fn decodes_preempt_prefills_within_the_budget() {
+        let requests = reqs(&[(0.0, 3, 4), (0.0, 100, 2)]);
+        let mut b = Batcher::new(cfg(8, 4, 8));
+        b.admit(&requests, 0.0);
+        // iter 1: req0 prefill 3, req1 prefill chunk 5
+        assert_eq!(b.form_batch(&requests), 8);
+        b.apply();
+        // iter 2: req0 decodes first (1 token), req1 continues prefill
+        assert_eq!(b.form_batch(&requests), 8);
+        let a = b.active_reqs();
+        assert_eq!(a[0].req, 0);
+        assert_eq!(a[1].req, 1);
+        b.apply();
+        assert_eq!(b.active_reqs()[1].prefill_remaining, 100 - 5 - 7);
+    }
+
+    #[test]
+    fn batch_size_budget_holds_admissions_back() {
+        let requests = reqs(&[(0.0, 2, 2), (0.0, 2, 2), (0.0, 2, 2)]);
+        let mut b = Batcher::new(cfg(64, 2, 8));
+        b.admit(&requests, 0.0);
+        assert_eq!(b.form_batch(&requests), 4, "only 2 of 3 admitted");
+        assert_eq!(b.active_len(), 2);
+        assert_eq!(b.queue_len(), 1);
+        // prefill completes -> first token; one decode token remains
+        assert_eq!(b.apply().first_tokens, vec![0, 1]);
+        // a slot frees only when someone completes
+        assert_eq!(b.form_batch(&requests), 2);
+        assert_eq!(b.apply().completions, vec![0, 1]);
+        assert_eq!(b.form_batch(&requests), 2, "queued request finally admitted");
+    }
+
+    #[test]
+    fn queue_overflow_rejects_in_arrival_order() {
+        let requests = reqs(&[(0.0, 2, 2), (0.0, 2, 2), (0.0, 2, 2), (0.0, 2, 2)]);
+        let mut b = Batcher::new(cfg(64, 8, 2));
+        assert_eq!(b.admit(&requests, 0.0), 2);
+        assert_eq!(b.rejected, vec![2, 3]);
+        assert_eq!(b.next_arrival_index(), 4);
+    }
+
+    #[test]
+    fn admission_respects_arrival_times() {
+        let requests = reqs(&[(0.5, 2, 2), (1.5, 2, 2)]);
+        let mut b = Batcher::new(cfg(64, 8, 8));
+        assert_eq!(b.admit(&requests, 0.0), 0);
+        assert!(b.is_idle());
+        assert_eq!(b.admit(&requests, 0.5), 1);
+        assert_eq!(b.admit(&requests, 1.0), 0);
+        assert_eq!(b.admit(&requests, 2.0), 1);
+    }
+
+    #[test]
+    fn token_accounting_closes() {
+        let requests = reqs(&[(0.0, 5, 3), (0.0, 7, 2), (0.0, 4, 6)]);
+        let mut b = Batcher::new(cfg(6, 2, 8));
+        b.admit(&requests, 0.0);
+        let admitted: usize = requests.iter().map(Request::total_tokens).sum();
+        let mut scheduled = 0;
+        let mut completed_tokens = 0;
+        for _ in 0..64 {
+            if b.is_idle() {
+                break;
+            }
+            scheduled += b.form_batch(&requests);
+            for r in b.apply().completions {
+                completed_tokens += requests[r].total_tokens();
+            }
+            // conservation at every iteration: admitted budget splits
+            // into completed + in-flight + queued
+            assert_eq!(
+                admitted,
+                completed_tokens + b.inflight_tokens(&requests) + b.queued_tokens(&requests)
+            );
+        }
+        assert!(b.is_idle(), "batcher failed to drain");
+        assert_eq!(scheduled, admitted, "every budgeted token scheduled exactly once");
+    }
+}

@@ -1,0 +1,405 @@
+//! Per-request latency metrics and the `ServeSummary` roll-up — the
+//! serve golden-fixture payload.
+//!
+//! Latency definitions (all in virtual seconds):
+//! - **TTFT** — time to first token: prefill-completion time minus
+//!   arrival (queueing included).
+//! - **TPOT** — time per output token: (completion - first token) /
+//!   (output_tokens - 1), for requests generating >= 2 tokens.
+//! - **e2e** — completion minus arrival.
+//!
+//! Percentiles are *exact order statistics* via
+//! [`crate::util::stats::quantile_exact_sorted`] — no interpolation,
+//! so a summary value is always one of the observed samples and the
+//! Python mirror reproduces it bit-for-bit.  Goodput counts a request
+//! as "good" when its e2e latency meets the SLA cutoff.
+
+use crate::obj;
+use crate::util::json::Json;
+use crate::util::stats::quantile_exact_sorted;
+
+/// One request's recorded lifecycle.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub arrival_secs: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    /// Rejected at admission (queue overflow) — never served.
+    pub rejected: bool,
+    /// Virtual time of prefill completion / first output token.
+    pub first_token_secs: Option<f64>,
+    /// Virtual time of the last output token.
+    pub completion_secs: Option<f64>,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_secs.map(|t| t - self.arrival_secs)
+    }
+
+    pub fn e2e(&self) -> Option<f64> {
+        self.completion_secs.map(|t| t - self.arrival_secs)
+    }
+
+    pub fn tpot(&self) -> Option<f64> {
+        if self.output_tokens < 2 {
+            return None;
+        }
+        match (self.first_token_secs, self.completion_secs) {
+            (Some(first), Some(done)) => {
+                Some((done - first) / (self.output_tokens - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// One engine iteration's diagnostics (the serving timeline; also the
+/// substrate of the conservation property tests).
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iter: usize,
+    /// Virtual clock at the iteration's end.
+    pub end_secs: f64,
+    pub batch_tokens: usize,
+    /// Requests that received at least one token this iteration.
+    pub batch_requests: usize,
+    /// Waiting queue depth after batch formation.
+    pub queue_depth: usize,
+    pub active_requests: usize,
+    pub comm_secs: f64,
+    pub compute_secs: f64,
+    /// Exposed migration stall charged to this iteration.
+    pub stall_secs: f64,
+    /// Background weight-copy time hidden inside this iteration.
+    pub overlapped_secs: f64,
+    pub dropped_tokens: usize,
+    pub rebalanced: bool,
+    // -- running conservation ledger (requests and token budgets) ----
+    pub requests_arrived: usize,
+    pub requests_admitted: usize,
+    pub requests_rejected: usize,
+    pub requests_completed: usize,
+    /// Prompt+output budget of every admitted request so far.
+    pub tokens_admitted: usize,
+    /// Prompt+output budget of every completed request so far.
+    pub tokens_completed: usize,
+    /// Prompt+output budget waiting in the queue.
+    pub tokens_queued: usize,
+    /// Prompt+output budget of the in-flight set.
+    pub tokens_inflight: usize,
+}
+
+/// End-of-run roll-up — the golden-fixture payload (exact-compared as
+/// parsed JSON by `rust/tests/serve_golden.rs` and reproduced
+/// bit-for-bit by `scripts/gen_golden_traces.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSummary {
+    pub policy: String,
+    pub workload: String,
+    pub iterations: usize,
+    pub virtual_secs: f64,
+    pub requests_arrived: usize,
+    pub requests_admitted: usize,
+    pub requests_completed: usize,
+    pub requests_rejected: usize,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    /// Tokens routed through the MoE layers (prefill + decode).
+    pub routed_tokens: usize,
+    /// Fraction of routed tokens dropped over expert capacity.
+    pub dropped_token_frac: f64,
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p95: f64,
+    pub tpot_p99: f64,
+    pub e2e_p50: f64,
+    pub e2e_p95: f64,
+    pub e2e_p99: f64,
+    pub sla_ms: f64,
+    /// Fraction of completed requests with e2e <= SLA.
+    pub sla_attainment: f64,
+    /// Output tokens of SLA-good requests per virtual second.
+    pub goodput_tokens_per_sec: f64,
+    pub mean_queue_depth: f64,
+    pub peak_queue_depth: usize,
+    pub mean_batch_tokens: f64,
+    /// Priced dispatch+combine comm over the whole run (s).
+    pub total_comm_secs: f64,
+    /// Roofline compute (dense + expert straggler) over the run (s).
+    pub total_compute_secs: f64,
+    pub rebalances: usize,
+    pub rebalance_iters: Vec<usize>,
+    pub migrated_replicas: usize,
+    pub migration_exposed_secs: f64,
+    pub migration_overlapped_secs: f64,
+    pub migration_pending_bytes: f64,
+}
+
+impl ServeSummary {
+    pub fn to_json(&self) -> Json {
+        obj! {
+            "policy" => self.policy.clone(),
+            "workload" => self.workload.clone(),
+            "iterations" => self.iterations,
+            "virtual_secs" => self.virtual_secs,
+            "requests_arrived" => self.requests_arrived,
+            "requests_admitted" => self.requests_admitted,
+            "requests_completed" => self.requests_completed,
+            "requests_rejected" => self.requests_rejected,
+            "prompt_tokens" => self.prompt_tokens,
+            "output_tokens" => self.output_tokens,
+            "routed_tokens" => self.routed_tokens,
+            "dropped_token_frac" => self.dropped_token_frac,
+            "ttft_p50" => self.ttft_p50,
+            "ttft_p95" => self.ttft_p95,
+            "ttft_p99" => self.ttft_p99,
+            "tpot_p50" => self.tpot_p50,
+            "tpot_p95" => self.tpot_p95,
+            "tpot_p99" => self.tpot_p99,
+            "e2e_p50" => self.e2e_p50,
+            "e2e_p95" => self.e2e_p95,
+            "e2e_p99" => self.e2e_p99,
+            "sla_ms" => self.sla_ms,
+            "sla_attainment" => self.sla_attainment,
+            "goodput_tokens_per_sec" => self.goodput_tokens_per_sec,
+            "mean_queue_depth" => self.mean_queue_depth,
+            "peak_queue_depth" => self.peak_queue_depth,
+            "mean_batch_tokens" => self.mean_batch_tokens,
+            "total_comm_secs" => self.total_comm_secs,
+            "total_compute_secs" => self.total_compute_secs,
+            "rebalances" => self.rebalances,
+            "rebalance_iters" => self.rebalance_iters.clone(),
+            "migrated_replicas" => self.migrated_replicas,
+            "migration_exposed_secs" => self.migration_exposed_secs,
+            "migration_overlapped_secs" => self.migration_overlapped_secs,
+            "migration_pending_bytes" => self.migration_pending_bytes,
+        }
+    }
+
+    /// The serving cost a policy is judged by: priced comm plus any
+    /// exposed migration stall (cf. the tune cost in trace replay).
+    pub fn cost_secs(&self) -> f64 {
+        self.total_comm_secs + self.migration_exposed_secs
+    }
+}
+
+/// Engine-side counters the summary builder folds in (kept separate
+/// so `engine.rs` stays a pure loop and `metrics.rs` owns the math).
+#[derive(Debug, Clone, Default)]
+pub struct RunCounters {
+    pub iterations: usize,
+    pub virtual_secs: f64,
+    pub requests_admitted: usize,
+    pub requests_completed: usize,
+    pub requests_rejected: usize,
+    pub routed_tokens: usize,
+    pub dropped_tokens: usize,
+    pub queue_depth_sum: usize,
+    pub peak_queue_depth: usize,
+    pub total_comm_secs: f64,
+    pub total_compute_secs: f64,
+    pub rebalance_iters: Vec<usize>,
+    pub migrated_replicas: usize,
+    pub migration_exposed_secs: f64,
+    pub migration_overlapped_secs: f64,
+    pub migration_pending_bytes: f64,
+}
+
+/// Exact quantile over possibly-empty samples: 0.0 when empty (keeps
+/// the summary JSON numeric), otherwise the order statistic.
+fn quantile_or_zero(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        0.0
+    } else {
+        quantile_exact_sorted(sorted, q)
+    }
+}
+
+/// Roll per-request records + engine counters into a [`ServeSummary`].
+pub fn summarize(
+    policy: &str,
+    workload: &str,
+    sla_ms: f64,
+    records: &[RequestRecord],
+    c: &RunCounters,
+) -> ServeSummary {
+    let mut ttft = Vec::new();
+    let mut e2e = Vec::new();
+    let mut tpot = Vec::new();
+    let mut good_requests = 0usize;
+    let mut good_output_tokens = 0usize;
+    let mut prompt_tokens = 0usize;
+    let mut output_tokens = 0usize;
+    let sla_secs = sla_ms / 1000.0;
+    for r in records {
+        if r.rejected || r.completion_secs.is_none() {
+            continue;
+        }
+        prompt_tokens += r.prompt_tokens;
+        output_tokens += r.output_tokens;
+        let t_first = r.ttft().expect("completed request has a first token");
+        let t_e2e = r.e2e().expect("completed request has a completion");
+        ttft.push(t_first);
+        e2e.push(t_e2e);
+        if let Some(t) = r.tpot() {
+            tpot.push(t);
+        }
+        if t_e2e <= sla_secs {
+            good_requests += 1;
+            good_output_tokens += r.output_tokens;
+        }
+    }
+    ttft.sort_by(f64::total_cmp);
+    e2e.sort_by(f64::total_cmp);
+    tpot.sort_by(f64::total_cmp);
+    let itf = if c.iterations > 0 { 1.0 / c.iterations as f64 } else { 0.0 };
+    ServeSummary {
+        policy: policy.to_string(),
+        workload: workload.to_string(),
+        iterations: c.iterations,
+        virtual_secs: c.virtual_secs,
+        requests_arrived: records.len(),
+        requests_admitted: c.requests_admitted,
+        requests_completed: c.requests_completed,
+        requests_rejected: c.requests_rejected,
+        prompt_tokens,
+        output_tokens,
+        routed_tokens: c.routed_tokens,
+        dropped_token_frac: if c.routed_tokens > 0 {
+            c.dropped_tokens as f64 / c.routed_tokens as f64
+        } else {
+            0.0
+        },
+        ttft_p50: quantile_or_zero(&ttft, 0.50),
+        ttft_p95: quantile_or_zero(&ttft, 0.95),
+        ttft_p99: quantile_or_zero(&ttft, 0.99),
+        tpot_p50: quantile_or_zero(&tpot, 0.50),
+        tpot_p95: quantile_or_zero(&tpot, 0.95),
+        tpot_p99: quantile_or_zero(&tpot, 0.99),
+        e2e_p50: quantile_or_zero(&e2e, 0.50),
+        e2e_p95: quantile_or_zero(&e2e, 0.95),
+        e2e_p99: quantile_or_zero(&e2e, 0.99),
+        sla_ms,
+        sla_attainment: if c.requests_completed > 0 {
+            good_requests as f64 / c.requests_completed as f64
+        } else {
+            0.0
+        },
+        goodput_tokens_per_sec: if c.virtual_secs > 0.0 {
+            good_output_tokens as f64 / c.virtual_secs
+        } else {
+            0.0
+        },
+        mean_queue_depth: c.queue_depth_sum as f64 * itf,
+        peak_queue_depth: c.peak_queue_depth,
+        mean_batch_tokens: c.routed_tokens as f64 * itf,
+        total_comm_secs: c.total_comm_secs,
+        total_compute_secs: c.total_compute_secs,
+        rebalances: c.rebalance_iters.len(),
+        rebalance_iters: c.rebalance_iters.clone(),
+        migrated_replicas: c.migrated_replicas,
+        migration_exposed_secs: c.migration_exposed_secs,
+        migration_overlapped_secs: c.migration_overlapped_secs,
+        migration_pending_bytes: c.migration_pending_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(arrival: f64, first: f64, done: f64, output: usize) -> RequestRecord {
+        RequestRecord {
+            arrival_secs: arrival,
+            prompt_tokens: 8,
+            output_tokens: output,
+            rejected: false,
+            first_token_secs: Some(first),
+            completion_secs: Some(done),
+        }
+    }
+
+    #[test]
+    fn latency_definitions() {
+        let r = record(1.0, 1.25, 2.25, 5);
+        assert!((r.ttft().unwrap() - 0.25).abs() < 1e-12);
+        assert!((r.e2e().unwrap() - 1.25).abs() < 1e-12);
+        assert!((r.tpot().unwrap() - 0.25).abs() < 1e-12); // 1.0 s / 4 tokens
+        // single-token outputs have no TPOT
+        assert!(record(0.0, 0.5, 0.5, 1).tpot().is_none());
+    }
+
+    #[test]
+    fn summarize_counts_and_quantiles() {
+        let records = vec![
+            record(0.0, 0.1, 1.0, 4),
+            record(0.0, 0.2, 2.0, 4),
+            record(0.0, 0.9, 9.0, 4),
+            RequestRecord {
+                arrival_secs: 0.0,
+                prompt_tokens: 8,
+                output_tokens: 4,
+                rejected: true,
+                first_token_secs: None,
+                completion_secs: None,
+            },
+        ];
+        let c = RunCounters {
+            iterations: 10,
+            virtual_secs: 10.0,
+            requests_admitted: 3,
+            requests_completed: 3,
+            requests_rejected: 1,
+            routed_tokens: 100,
+            dropped_tokens: 5,
+            queue_depth_sum: 20,
+            peak_queue_depth: 7,
+            ..RunCounters::default()
+        };
+        let s = summarize("threshold", "poisson", 2000.0, &records, &c);
+        assert_eq!(s.requests_arrived, 4);
+        assert_eq!(s.requests_completed, 3);
+        assert_eq!(s.prompt_tokens, 24);
+        assert_eq!(s.output_tokens, 12);
+        assert!((s.dropped_token_frac - 0.05).abs() < 1e-12);
+        // exact order statistics: p50 of [0.1, 0.2, 0.9] is 0.2
+        assert_eq!(s.ttft_p50, 0.2);
+        assert_eq!(s.ttft_p99, 0.9);
+        // SLA 2 s: two of three good
+        assert!((s.sla_attainment - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.goodput_tokens_per_sec - 0.8).abs() < 1e-12);
+        assert!((s.mean_queue_depth - 2.0).abs() < 1e-12);
+        assert_eq!(s.peak_queue_depth, 7);
+        assert!((s.mean_batch_tokens - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_yields_zeroed_summary() {
+        let s = summarize("static_block", "poisson", 100.0, &[], &RunCounters::default());
+        assert_eq!(s.requests_arrived, 0);
+        assert_eq!(s.ttft_p99, 0.0, "empty quantiles must stay numeric");
+        assert_eq!(s.sla_attainment, 0.0);
+        assert_eq!(s.goodput_tokens_per_sec, 0.0);
+        // and the JSON stays parseable
+        let text = s.to_json().to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), s.to_json());
+    }
+
+    #[test]
+    fn summary_json_roundtrips() {
+        let c = RunCounters {
+            iterations: 3,
+            virtual_secs: 1.5,
+            rebalance_iters: vec![1, 2],
+            ..RunCounters::default()
+        };
+        let s = summarize("adaptive", "flash", 250.0, &[record(0.0, 0.1, 0.4, 3)], &c);
+        let parsed = Json::parse(&s.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed, s.to_json());
+        assert_eq!(parsed.get("rebalances").and_then(Json::as_usize), Some(2));
+        assert_eq!(s.cost_secs(), s.total_comm_secs + s.migration_exposed_secs);
+    }
+}

@@ -1,0 +1,42 @@
+//! Request-driven MoE inference serving simulator (system S9): the
+//! repo's first *latency-bound* workload axis — SMILE's bi-level
+//! routing argument priced under continuous batching instead of
+//! optimizer steps.
+//!
+//! - [`workload`]: seeded request generators — Poisson steady state,
+//!   diurnal wave, flash crowd (rate spike + hot expert), and
+//!   replayed-trace arrivals — all Bernoulli-thinned integer sampling
+//!   over `util::rng` (no libm), plus uniform prompt/output lengths.
+//! - [`batcher`]: the continuous-batching scheduler — FIFO admission
+//!   queue with a rejection bound, per-iteration token/size budgets,
+//!   decode-first priority with chunked prefill.
+//! - [`engine`]: the serving loop — routes each batch through
+//!   `moe::dispatch` (top-1 + capacity + replica round-robin), drives
+//!   the shared `placement::RoutingPipeline` on aggregated histograms
+//!   so every `PolicyKind` (threshold / static / greedy / adaptive)
+//!   rebalances live *during serving* with migrations overlapped via
+//!   the `MigrationScheduler`, prices comm with the
+//!   `netsim::collectives` congestion model and compute with the
+//!   `simtrain` roofline, and advances a virtual clock.
+//! - [`metrics`]: per-request TTFT/TPOT/e2e, exact-quantile
+//!   p50/p95/p99 (`util::stats::quantile_exact_sorted`), SLA goodput,
+//!   queue depths, and per-policy rebalance/migration accounting,
+//!   serialized through `util::json` as a [`ServeSummary`].
+//!
+//! Golden fixtures live at `rust/tests/data/serve_*.summary.json`
+//! (exact-compared by `rust/tests/serve_golden.rs`, reproduced
+//! bit-for-bit by `scripts/gen_golden_traces.py`, gated by
+//! `scripts/ci.sh serve-golden` / `mirror-check`).  The acceptance
+//! headline: under the flash-crowd workload the adaptive policy beats
+//! static placement on p99 TTFT and total priced comm, while steady
+//! Poisson shows adaptive == threshold with zero spurious rebalances.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod workload;
+
+pub use batcher::{ActiveReq, BatchProgress, Batcher, BatcherConfig};
+pub use engine::{serve, serve_with, ServeConfig, ServeReport, ROUTE_SEED_XOR};
+pub use metrics::{summarize, IterStats, RequestRecord, RunCounters, ServeSummary};
+pub use workload::{Request, WorkloadConfig, WorkloadKind};

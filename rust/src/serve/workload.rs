@@ -1,0 +1,469 @@
+//! Seeded request-workload generators for the serving simulator.
+//!
+//! A workload is (a) an arrival process — requests per second as a
+//! function of virtual time — and (b) an expert-traffic mix the
+//! router samples per routed token.  Everything here is pure f64
+//! arithmetic plus the shared xoshiro RNG: arrivals come from
+//! Bernoulli thinning (a binomial per tick — no libm `exp`/`ln`, so
+//! the Python mirror in `scripts/gen_golden_traces.py` reproduces the
+//! schedule bit-for-bit), the diurnal wave is a quadratic
+//! sinusoid-substitute (no libm `sin`), and prompt/output token counts
+//! are uniform integers via Lemire's bounded sampler.
+//!
+//! Shapes:
+//! - [`WorkloadKind::Poisson`] — steady-state arrivals, uniform mix.
+//! - [`WorkloadKind::Diurnal`] — the rate swings `±amp` around the
+//!   base on a `period_secs` wave; uniform mix.
+//! - [`WorkloadKind::Flash`] — a flash crowd: `spike_mult` x arrivals
+//!   inside `[spike_start, spike_end)` AND one hot expert boosted by
+//!   `boost` — the workload that shifts placement calculus mid-run.
+//! - [`WorkloadKind::Trace`] — replayed-trace arrivals: per-window
+//!   relative intensity and expert mix lifted from a recorded
+//!   `RoutingTrace` (`WorkloadKind::from_trace`).
+
+use crate::trace::RoutingTrace;
+use crate::util::rng::Rng;
+
+/// The arrival/mix shape of a serving workload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadKind {
+    /// Steady-state arrivals at the base rate, uniform expert mix.
+    Poisson,
+    /// Rate modulated by a quadratic sine-substitute wave:
+    /// `rate * (1 + amp * wave(t / period_secs))`, uniform mix.
+    Diurnal { amp: f64, period_secs: f64 },
+    /// Flash crowd: `spike_mult` x arrivals and `boost` x traffic on
+    /// `hot_expert` while `spike_start <= t < spike_end`.
+    Flash { spike_mult: f64, spike_start: f64, spike_end: f64, hot_expert: usize, boost: f64 },
+    /// Replayed-trace arrivals: window `i` (one per recorded step)
+    /// scales the base rate by `intensity[i]` (step tokens / mean
+    /// step tokens) and routes with the recorded expert histogram.
+    Trace { intensity: Vec<f64>, histograms: Vec<Vec<f64>> },
+}
+
+impl WorkloadKind {
+    /// Stable label (lands in `ServeSummary::workload`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Poisson => "poisson",
+            WorkloadKind::Diurnal { .. } => "diurnal",
+            WorkloadKind::Flash { .. } => "flash",
+            WorkloadKind::Trace { .. } => "trace",
+        }
+    }
+
+    /// The default flash crowd the golden fixtures pin: 2.2x arrivals
+    /// and a 12x-hot expert 3 during seconds [1.5, 3.5).
+    pub fn flash_default() -> WorkloadKind {
+        WorkloadKind::Flash {
+            spike_mult: 2.2,
+            spike_start: 1.5,
+            spike_end: 3.5,
+            hot_expert: 3,
+            boost: 12.0,
+        }
+    }
+
+    /// The default diurnal wave: ±50% around the base on a 4 s period.
+    pub fn diurnal_default() -> WorkloadKind {
+        WorkloadKind::Diurnal { amp: 0.5, period_secs: 4.0 }
+    }
+
+    /// Lift arrivals + expert mix from a recorded routing trace: one
+    /// workload window per recorded step, intensity = step tokens /
+    /// mean step tokens (1.0 when the trace carries no token counts),
+    /// mix = the recorded per-expert histogram.
+    pub fn from_trace(trace: &RoutingTrace) -> WorkloadKind {
+        let mut mean = 0.0;
+        for s in &trace.steps {
+            mean += s.tokens;
+        }
+        mean /= trace.steps.len().max(1) as f64;
+        let intensity = trace
+            .steps
+            .iter()
+            .map(|s| if mean > 0.0 { s.tokens / mean } else { 1.0 })
+            .collect();
+        let histograms = trace.steps.iter().map(|s| s.experts.clone()).collect();
+        WorkloadKind::Trace { intensity, histograms }
+    }
+}
+
+/// One generated request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub arrival_secs: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+impl Request {
+    /// Total token budget (prefill + generated).
+    pub fn total_tokens(&self) -> usize {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// Arrival-process + token-length knobs (see the serve ROADMAP
+/// section for the fixture defaults).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub kind: WorkloadKind,
+    pub seed: u64,
+    /// Base arrival rate, requests/second.
+    pub rate: f64,
+    /// Arrival horizon: `n_ticks * tick_secs` of virtual time.
+    pub n_ticks: usize,
+    pub tick_secs: f64,
+    /// Bernoulli trials per tick (the binomial's n); must satisfy
+    /// `peak_rate * tick_secs <= sub_slots` or thinning saturates.
+    pub sub_slots: usize,
+    /// Prompt tokens uniform in `[prompt_min, prompt_max)`.
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    /// Output tokens uniform in `[output_min, output_max)`.
+    pub output_min: usize,
+    pub output_max: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            kind: WorkloadKind::Poisson,
+            seed: 7,
+            rate: 125.0,
+            n_ticks: 120,
+            tick_secs: 0.05,
+            sub_slots: 128,
+            prompt_min: 192,
+            prompt_max: 320,
+            output_min: 24,
+            output_max: 56,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// Arrival rate (requests/second) at virtual time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match &self.kind {
+            WorkloadKind::Poisson => self.rate,
+            WorkloadKind::Flash { spike_mult, spike_start, spike_end, .. } => {
+                if *spike_start <= t && t < *spike_end {
+                    self.rate * spike_mult
+                } else {
+                    self.rate
+                }
+            }
+            WorkloadKind::Diurnal { amp, period_secs } => {
+                // quadratic sine substitute: smooth, periodic, in
+                // [-1, 1], and free of libm transcendentals
+                let x = t / period_secs;
+                let ph = x - x.floor();
+                let w = if ph < 0.5 {
+                    let q = 2.0 * ph;
+                    4.0 * q * (1.0 - q)
+                } else {
+                    let q = 2.0 * ph - 1.0;
+                    -(4.0 * q * (1.0 - q))
+                };
+                self.rate * (1.0 + amp * w)
+            }
+            WorkloadKind::Trace { intensity, .. } => {
+                self.rate * intensity[self.window_of(t, intensity.len())]
+            }
+        }
+    }
+
+    /// Unnormalized per-expert routing weights at virtual time `t`
+    /// (`Rng::weighted` normalizes internally).
+    pub fn expert_weights(&self, num_experts: usize, t: f64) -> Vec<f64> {
+        match &self.kind {
+            WorkloadKind::Flash { spike_start, spike_end, hot_expert, boost, .. } => {
+                let mut w = vec![1.0; num_experts];
+                if *spike_start <= t && t < *spike_end {
+                    w[hot_expert % num_experts] *= boost;
+                }
+                w
+            }
+            WorkloadKind::Trace { histograms, .. } => {
+                let h = &histograms[self.window_of(t, histograms.len())];
+                // recorded arity can differ from the serving cluster;
+                // fold the tail back in (mod) so weights stay total
+                let mut w = vec![0.0; num_experts];
+                for (e, &v) in h.iter().enumerate() {
+                    w[e % num_experts] += v;
+                }
+                if w.iter().all(|&v| v <= 0.0) {
+                    w = vec![1.0; num_experts];
+                }
+                w
+            }
+            _ => vec![1.0; num_experts],
+        }
+    }
+
+    /// Effective tick count (a trace workload has one window per step).
+    pub fn effective_ticks(&self) -> usize {
+        match &self.kind {
+            WorkloadKind::Trace { intensity, .. } => intensity.len(),
+            _ => self.n_ticks,
+        }
+    }
+
+    fn window_of(&self, t: f64, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        let w = (t / self.tick_secs) as usize;
+        w.min(len - 1)
+    }
+
+    /// Arrival rate for tick `tick` — what [`WorkloadConfig::generate`]
+    /// uses.  The trace workload indexes its recorded window by the
+    /// integer tick directly (`t / tick_secs` truncation can land one
+    /// window early for tick starts whose quotient rounds fractionally
+    /// below the integer); the analytic kinds evaluate at the tick's
+    /// start time exactly as before.
+    pub fn rate_for_tick(&self, tick: usize) -> f64 {
+        match &self.kind {
+            WorkloadKind::Trace { intensity, .. } => {
+                if intensity.is_empty() {
+                    self.rate
+                } else {
+                    self.rate * intensity[tick.min(intensity.len() - 1)]
+                }
+            }
+            _ => self.rate_at(tick as f64 * self.tick_secs),
+        }
+    }
+
+    /// The highest arrival rate the workload can reach — what the
+    /// thinning budget must accommodate: generation requires
+    /// `peak_rate() * tick_secs <= sub_slots` (per-slot probability
+    /// <= 1), which CLI validation checks up front.
+    pub fn peak_rate(&self) -> f64 {
+        match &self.kind {
+            WorkloadKind::Poisson => self.rate,
+            WorkloadKind::Flash { spike_mult, .. } => self.rate * spike_mult.max(1.0),
+            WorkloadKind::Diurnal { amp, .. } => self.rate * (1.0 + amp.abs()),
+            WorkloadKind::Trace { intensity, .. } => {
+                self.rate * intensity.iter().cloned().fold(1.0, f64::max)
+            }
+        }
+    }
+
+    /// Generate the full arrival schedule: per tick, `sub_slots`
+    /// Bernoulli trials at `p = rate_at(tick_start) * tick_secs /
+    /// sub_slots`, each success an arrival at the slot's midpoint with
+    /// uniform prompt/output lengths.  Sorted by arrival time by
+    /// construction; bit-deterministic in (kind, seed).
+    pub fn generate(&self) -> Vec<Request> {
+        assert!(self.sub_slots > 0 && self.tick_secs > 0.0, "degenerate workload ticks");
+        assert!(
+            self.prompt_max > self.prompt_min && self.output_max > self.output_min,
+            "token ranges must be non-empty ([min, max))"
+        );
+        // a request must carry at least one prefill token (else it can
+        // never produce a first token) and one output token (else the
+        // decode counter would underflow at prefill completion)
+        assert!(
+            self.prompt_min >= 1 && self.output_min >= 1,
+            "prompt_min and output_min must be >= 1"
+        );
+        let mut rng = Rng::new(self.seed);
+        let sub = self.sub_slots;
+        let sub_dt = self.tick_secs / sub as f64;
+        let mut requests = Vec::new();
+        for tick in 0..self.effective_ticks() {
+            let t0 = tick as f64 * self.tick_secs;
+            let rate = self.rate_for_tick(tick);
+            let p = rate * self.tick_secs / sub as f64;
+            assert!(
+                p <= 1.0,
+                "arrival rate {rate} too high for {sub} sub-slots per {}s tick (p = {p})",
+                self.tick_secs
+            );
+            for slot in 0..sub {
+                if rng.f64() < p {
+                    let arrival = t0 + (slot as f64 + 0.5) * sub_dt;
+                    let prompt = self.prompt_min
+                        + rng.below((self.prompt_max - self.prompt_min) as u64) as usize;
+                    let output = self.output_min
+                        + rng.below((self.output_max - self.output_min) as u64) as usize;
+                    requests.push(Request {
+                        arrival_secs: arrival,
+                        prompt_tokens: prompt,
+                        output_tokens: output,
+                    });
+                }
+            }
+        }
+        requests
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: WorkloadKind) -> WorkloadConfig {
+        WorkloadConfig { kind, ..WorkloadConfig::default() }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_sorted() {
+        let c = cfg(WorkloadKind::Poisson);
+        let a = c.generate();
+        let b = c.generate();
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "default rate must produce arrivals");
+        for w in a.windows(2) {
+            assert!(w[0].arrival_secs <= w[1].arrival_secs, "arrivals out of order");
+        }
+        let mut c2 = c.clone();
+        c2.seed = 8;
+        assert_ne!(c2.generate(), a, "seed must move the schedule");
+    }
+
+    #[test]
+    fn token_lengths_respect_bounds() {
+        let c = cfg(WorkloadKind::Poisson);
+        for r in c.generate() {
+            assert!((c.prompt_min..c.prompt_max).contains(&r.prompt_tokens));
+            assert!((c.output_min..c.output_max).contains(&r.output_tokens));
+            assert_eq!(r.total_tokens(), r.prompt_tokens + r.output_tokens);
+        }
+    }
+
+    #[test]
+    fn flash_spikes_arrivals_and_expert_mix_inside_the_window() {
+        let c = cfg(WorkloadKind::flash_default());
+        assert_eq!(c.rate_at(0.0), c.rate);
+        assert_eq!(c.rate_at(2.0), c.rate * 2.2);
+        assert_eq!(c.rate_at(3.5), c.rate, "spike end is exclusive");
+        let inside = c.expert_weights(16, 2.0);
+        let outside = c.expert_weights(16, 0.5);
+        assert_eq!(inside[3], 12.0);
+        assert!(outside.iter().all(|&w| w == 1.0));
+        // the 2 s spike window must be markedly denser than a 2 s
+        // steady window after it
+        let reqs = c.generate();
+        let count = |lo: f64, hi: f64| {
+            reqs.iter().filter(|r| (lo..hi).contains(&r.arrival_secs)).count()
+        };
+        assert!(
+            count(1.5, 3.5) * 2 > count(3.5, 5.5) * 3,
+            "spike window not denser: {} vs {}",
+            count(1.5, 3.5),
+            count(3.5, 5.5)
+        );
+    }
+
+    #[test]
+    fn diurnal_wave_stays_within_amp_band() {
+        let c = cfg(WorkloadKind::diurnal_default());
+        let mut saw_high = false;
+        let mut saw_low = false;
+        for i in 0..400 {
+            let t = i as f64 * 0.01 * 4.0;
+            let r = c.rate_at(t);
+            assert!(r >= c.rate * 0.5 - 1e-9 && r <= c.rate * 1.5 + 1e-9, "rate {r}");
+            saw_high |= r > c.rate * 1.4;
+            saw_low |= r < c.rate * 0.6;
+        }
+        assert!(saw_high && saw_low, "wave never reached its extremes");
+        // periodicity of the quadratic wave
+        assert_eq!(c.rate_at(0.3).to_bits(), c.rate_at(0.3 + 4.0).to_bits());
+    }
+
+    #[test]
+    fn trace_workload_lifts_intensity_and_mix() {
+        use crate::trace::{record_scenario, Scenario, ScenarioConfig};
+        let trace = record_scenario(
+            &ScenarioConfig {
+                scenario: Scenario::Zipf { s: 1.4 },
+                n_nodes: 2,
+                gpus_per_node: 4,
+                steps: 20,
+                tokens_per_step: 256,
+                capacity_factor: 2.0,
+                payload_per_gpu: 1e6,
+                seed: 3,
+            },
+            None,
+        );
+        let kind = WorkloadKind::from_trace(&trace);
+        let c = WorkloadConfig { kind, ..WorkloadConfig::default() };
+        assert_eq!(c.effective_ticks(), 20);
+        // constant step tokens -> unit intensity everywhere
+        assert!((c.rate_at(0.0) - c.rate).abs() < 1e-9);
+        // the zipf mix is skewed toward expert 0 and window-clamped
+        let w = c.expert_weights(8, 0.0);
+        assert!(w[0] > w[7], "{w:?}");
+        let beyond = c.expert_weights(8, 1e9);
+        assert_eq!(beyond.len(), 8);
+        // arity folding: fewer serving experts than recorded bins
+        let folded = c.expert_weights(4, 0.0);
+        assert!((folded.iter().sum::<f64>() - w.iter().sum::<f64>()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_rate_bounds_every_kind() {
+        assert_eq!(cfg(WorkloadKind::Poisson).peak_rate(), 125.0);
+        assert_eq!(cfg(WorkloadKind::flash_default()).peak_rate(), 125.0 * 2.2);
+        assert_eq!(cfg(WorkloadKind::diurnal_default()).peak_rate(), 125.0 * 1.5);
+        // every realized rate stays at or below the peak
+        let c = cfg(WorkloadKind::diurnal_default());
+        for i in 0..200 {
+            assert!(c.rate_at(i as f64 * 0.04) <= c.peak_rate() + 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "too high")]
+    fn generate_rejects_saturating_rates() {
+        let mut c = cfg(WorkloadKind::Poisson);
+        c.rate = 1e6;
+        c.generate();
+    }
+
+    #[test]
+    #[should_panic(expected = "must be >= 1")]
+    fn generate_rejects_zero_minimum_outputs() {
+        // output 0 would underflow the decode counter at prefill
+        // completion; prompt 0 would never produce a first token
+        let mut c = cfg(WorkloadKind::Poisson);
+        c.output_min = 0;
+        c.output_max = 1;
+        c.generate();
+    }
+
+    #[test]
+    fn trace_rate_for_tick_indexes_windows_exactly() {
+        // tick -> recorded-step mapping must be the integer index, not
+        // a float division that can truncate one window early (e.g.
+        // 43 * 0.05 / 0.05 < 43.0 in f64)
+        let intensity: Vec<f64> = (0..200).map(|i| 1.0 + i as f64).collect();
+        let c = WorkloadConfig {
+            kind: WorkloadKind::Trace { intensity, histograms: vec![vec![1.0]; 200] },
+            ..WorkloadConfig::default()
+        };
+        for tick in [0usize, 43, 81, 86, 91, 199] {
+            let want = c.rate * (1.0 + tick as f64);
+            assert_eq!(
+                c.rate_for_tick(tick).to_bits(),
+                want.to_bits(),
+                "tick {tick} mapped to the wrong recorded step"
+            );
+        }
+        // beyond the trace, the last window holds
+        assert_eq!(c.rate_for_tick(10_000), c.rate * 200.0);
+        // analytic kinds evaluate at the tick start exactly as before
+        let p = cfg(WorkloadKind::flash_default());
+        assert_eq!(
+            p.rate_for_tick(43).to_bits(),
+            p.rate_at(43.0 * p.tick_secs).to_bits()
+        );
+    }
+}

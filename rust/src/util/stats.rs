@@ -36,6 +36,32 @@ impl Summary {
     }
 }
 
+/// Exact order-statistic quantile over a pre-sorted slice — NO
+/// interpolation: the result is always one of the observed samples
+/// (the smallest element whose rank covers `ceil(q * n)`), so two
+/// implementations can agree bit-for-bit and ties behave trivially.
+/// `q = 0` is the minimum, `q = 1` the maximum; empty input is NaN.
+///
+/// This is the serving-percentile definition (`serve::metrics`): an
+/// SLA p99 must be a latency that actually happened, not a blend of
+/// two neighbors.
+pub fn quantile_exact_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let n = sorted.len();
+    let rank = (q.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// [`quantile_exact_sorted`] over unsorted samples (clones + sorts;
+/// call the sorted variant when taking several quantiles).
+pub fn quantile_exact(samples: &[f64], q: f64) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    quantile_exact_sorted(&sorted, q)
+}
+
 /// Linear-interpolated percentile over a pre-sorted slice.
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
@@ -134,6 +160,50 @@ mod tests {
     fn summary_empty() {
         let s = Summary::of(&[]);
         assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn quantile_exact_is_an_order_statistic() {
+        let sorted = [1.0, 2.0, 3.0, 4.0];
+        // p50 of 4 samples: rank ceil(0.5*4) = 2 -> second element
+        assert_eq!(quantile_exact_sorted(&sorted, 0.5), 2.0);
+        // never interpolates: every answer is an observed sample
+        for q in [0.01, 0.26, 0.49, 0.51, 0.74, 0.99] {
+            assert!(sorted.contains(&quantile_exact_sorted(&sorted, q)));
+        }
+        assert_eq!(quantile_exact(&[3.0, 1.0, 4.0, 2.0], 0.5), 2.0);
+    }
+
+    #[test]
+    fn quantile_exact_edges() {
+        // n = 1: every quantile is the single sample
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(quantile_exact_sorted(&[7.5], q), 7.5);
+        }
+        // p = 0 -> min, p = 1 -> max; out-of-range clamps
+        let sorted = [1.0, 2.0, 3.0];
+        assert_eq!(quantile_exact_sorted(&sorted, 0.0), 1.0);
+        assert_eq!(quantile_exact_sorted(&sorted, 1.0), 3.0);
+        assert_eq!(quantile_exact_sorted(&sorted, -2.0), 1.0);
+        assert_eq!(quantile_exact_sorted(&sorted, 2.0), 3.0);
+        // empty input is NaN (callers decide their own sentinel)
+        assert!(quantile_exact_sorted(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn quantile_exact_ties_are_unambiguous() {
+        let sorted = [1.0, 2.0, 2.0, 2.0, 9.0];
+        // rank arithmetic lands inside the tie run — the answer is
+        // the tied value regardless of which index it came from
+        for q in [0.21, 0.4, 0.6, 0.79] {
+            assert_eq!(quantile_exact_sorted(&sorted, q), 2.0);
+        }
+        assert_eq!(quantile_exact_sorted(&sorted, 0.99), 9.0);
+        // all-equal samples: every quantile is that value
+        let flat = [5.0; 10];
+        for q in [0.0, 0.3, 0.77, 1.0] {
+            assert_eq!(quantile_exact_sorted(&flat, q), 5.0);
+        }
     }
 
     #[test]

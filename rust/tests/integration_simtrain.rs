@@ -118,7 +118,8 @@ fn straggler_injection_extends_makespan() {
     }
     let combine = sim.task("a2a.combine", nic, 10.0, &ffn);
     let tl = sim.run();
-    assert!((tl.span_of(combine).start - 60.0).abs() < 1e-9, "combine gated by straggler");
+    let combine_span = tl.span_of(combine).expect("combine task simulated");
+    assert!((combine_span.start - 60.0).abs() < 1e-9, "combine gated by straggler");
     assert!((tl.makespan - 70.0).abs() < 1e-9);
 
     // without the straggler the layer is 25s: quantifies the blast

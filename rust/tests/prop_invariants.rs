@@ -9,6 +9,7 @@ use smile::placement::{
     self, MigrationConfig, MigrationScheduler, PlacementMap, PolicyKind, RebalancePolicy,
 };
 use smile::prop_assert;
+use smile::serve::{serve, ServeConfig, WorkloadKind};
 use smile::trace::{record_scenario, RoutingTrace, Scenario, ScenarioConfig, TraceReplayer};
 use smile::util::json::Json;
 use smile::util::proptest::{check, Config};
@@ -235,11 +236,12 @@ fn prop_dag_sim_causality() {
                 ids.push(sim.task(&format!("t{t}"), res[resources[t]], durations[t], &dep_ids));
             }
             let tl = sim.run();
-            // dependency causality
+            // dependency causality (span_of returns None only for
+            // ids the simulation never saw — ours are all real)
             for (t, deps) in edges.iter().enumerate() {
-                let span = tl.span_of(ids[t]);
+                let span = tl.span_of(ids[t]).expect("task simulated");
                 for &d in deps {
-                    let dspan = tl.span_of(ids[d]);
+                    let dspan = tl.span_of(ids[d]).expect("dep simulated");
                     prop_assert!(
                         span.start >= dspan.end - 1e-9,
                         "task {t} starts {} before dep {d} ends {}",
@@ -639,6 +641,151 @@ fn prop_replay_deterministic_across_serialization() {
             prop_assert!(
                 a.summary.observed_steps <= a.summary.steps,
                 "observed > steps"
+            );
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// serving determinism + conservation
+// ---------------------------------------------------------------------------
+
+fn random_serve_config(rng: &mut Rng) -> (ServeConfig, PolicyKind) {
+    let mut cfg = ServeConfig::default();
+    cfg.workload.kind = match rng.below(4) {
+        0 => WorkloadKind::Poisson,
+        1 => WorkloadKind::diurnal_default(),
+        2 => WorkloadKind::flash_default(),
+        _ => WorkloadKind::Flash {
+            spike_mult: 1.2 + rng.f64() * 1.5,
+            spike_start: rng.f64() * 0.5,
+            spike_end: 0.5 + rng.f64(),
+            hot_expert: rng.below(64) as usize,
+            boost: 1.0 + rng.f64() * 15.0,
+        },
+    };
+    // shrunk horizon so 128 cases stay fast; budgets vary to stress
+    // the batcher's chunking/admission edges
+    cfg.workload.seed = rng.next_u64() >> 12;
+    cfg.workload.n_ticks = 4 + rng.below(16) as usize;
+    cfg.workload.rate = 20.0 + rng.f64() * 200.0;
+    cfg.workload.prompt_min = 1 + rng.below(64) as usize;
+    cfg.workload.prompt_max = cfg.workload.prompt_min + 1 + rng.below(128) as usize;
+    cfg.workload.output_min = 1 + rng.below(8) as usize;
+    cfg.workload.output_max = cfg.workload.output_min + 1 + rng.below(16) as usize;
+    cfg.batcher.max_batch_tokens = 16 + rng.below(512) as usize;
+    cfg.batcher.max_batch_size = 1 + rng.below(64) as usize;
+    cfg.batcher.max_queue = match rng.below(3) {
+        0 => 2 + rng.below(16) as usize, // exercise rejection
+        _ => 100_000,
+    };
+    cfg.n_nodes = 1 + rng.below(4) as usize;
+    cfg.gpus_per_node = 1 + rng.below(4) as usize;
+    cfg.observe_every = 1 + rng.below(12) as usize;
+    cfg.min_observe_tokens = rng.below(1024) as usize;
+    let kind = match rng.below(4) {
+        0 => PolicyKind::Threshold,
+        1 => PolicyKind::StaticBlock,
+        2 => PolicyKind::GreedyEveryCheck,
+        _ => PolicyKind::Adaptive,
+    };
+    (cfg, kind)
+}
+
+#[test]
+fn prop_serve_deterministic_and_conserving() {
+    // the serving acceptance properties: two runs with identical
+    // (workload seed, policy, knobs) produce byte-identical
+    // ServeSummary JSON, and the token/request ledgers close at every
+    // iteration — admitted = completed + queued + in-flight
+    let cfg_prop = Config { cases: 48, ..Config::default() };
+    check(
+        "serve: byte-identical reruns; per-iteration conservation",
+        &cfg_prop,
+        random_serve_config,
+        |(cfg, kind)| {
+            let a = serve(cfg, *kind, MigrationConfig::default());
+            let b = serve(cfg, *kind, MigrationConfig::default());
+            prop_assert!(
+                a.summary.to_json().to_string_pretty()
+                    == b.summary.to_json().to_string_pretty(),
+                "serve({:?}, {kind:?}) is not byte-deterministic",
+                cfg.workload.kind
+            );
+            let s = &a.summary;
+            prop_assert!(
+                s.policy == kind.name(),
+                "summary policy {} != {}",
+                s.policy,
+                kind.name()
+            );
+            prop_assert!(
+                s.requests_arrived == s.requests_admitted + s.requests_rejected,
+                "arrived {} != admitted {} + rejected {}",
+                s.requests_arrived,
+                s.requests_admitted,
+                s.requests_rejected
+            );
+            prop_assert!(
+                s.requests_admitted == s.requests_completed,
+                "run did not drain: admitted {} completed {}",
+                s.requests_admitted,
+                s.requests_completed
+            );
+            let mut routed = 0usize;
+            for it in &a.timeline {
+                prop_assert!(
+                    it.tokens_admitted
+                        == it.tokens_completed + it.tokens_queued + it.tokens_inflight,
+                    "iteration {}: token ledger leaked ({} != {} + {} + {})",
+                    it.iter,
+                    it.tokens_admitted,
+                    it.tokens_completed,
+                    it.tokens_queued,
+                    it.tokens_inflight
+                );
+                prop_assert!(
+                    it.batch_tokens >= 1 && it.batch_tokens <= cfg.batcher.max_batch_tokens,
+                    "iteration {}: batch {} outside (0, {}]",
+                    it.iter,
+                    it.batch_tokens,
+                    cfg.batcher.max_batch_tokens
+                );
+                prop_assert!(
+                    it.batch_requests <= cfg.batcher.max_batch_size,
+                    "iteration {}: {} requests > cap {}",
+                    it.iter,
+                    it.batch_requests,
+                    cfg.batcher.max_batch_size
+                );
+                prop_assert!(
+                    it.dropped_tokens <= it.batch_tokens,
+                    "iteration {}: dropped > routed",
+                    it.iter
+                );
+                routed += it.batch_tokens;
+            }
+            prop_assert!(
+                routed == s.routed_tokens,
+                "timeline tokens {routed} != summary {}",
+                s.routed_tokens
+            );
+            // every admitted token budget was scheduled exactly once
+            let budget: usize = a
+                .requests
+                .iter()
+                .filter(|r| !r.rejected)
+                .map(|r| r.prompt_tokens + r.output_tokens)
+                .sum();
+            prop_assert!(
+                routed == budget,
+                "scheduled {routed} != admitted budget {budget}"
+            );
+            prop_assert!(
+                s.ttft_p50 <= s.ttft_p95 && s.ttft_p95 <= s.ttft_p99,
+                "quantiles out of order: {:?}",
+                (s.ttft_p50, s.ttft_p95, s.ttft_p99)
             );
             Ok(())
         },

@@ -1,0 +1,167 @@
+//! Serve golden-fixture regression tests: the flash-crowd and steady
+//! Poisson serving runs under the default `ServeConfig` are exact
+//! fixtures (`tests/data/serve_*.summary.json`), reproduced
+//! bit-for-bit by the Python mirror (`scripts/gen_golden_traces.py`)
+//! and gated by `scripts/ci.sh serve-golden` / `mirror-check`.
+//!
+//! Comparison happens on *parsed* JSON (exact f64 equality) so a
+//! fixture can only fail on value drift — any change to the batcher,
+//! the workload sampling, the pricing, or the policy gates moves a
+//! summary value and fails here instead of silently shifting latency
+//! numbers.
+//!
+//! Re-blessing after a deliberate change (from `rust/`):
+//!   cargo run --release -- serve --workload flash --policy adaptive --bless
+//! (repeat for --policy static / threshold and --workload poisson
+//! --policy adaptive), or regenerate all four plus the trace fixtures
+//! with `python3 scripts/gen_golden_traces.py`.
+
+use smile::placement::{MigrationConfig, PolicyKind};
+use smile::serve::{serve, ServeConfig, ServeReport, WorkloadKind};
+use smile::util::json::Json;
+
+fn data_path(name: &str) -> String {
+    format!("{}/tests/data/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_config(kind: WorkloadKind) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.workload.kind = kind;
+    cfg
+}
+
+fn assert_matches_golden(kind: WorkloadKind, policy: PolicyKind, fixture: &str) -> ServeReport {
+    let cfg = fixture_config(kind);
+    let report = serve(&cfg, policy, MigrationConfig::default());
+    let golden_text =
+        std::fs::read_to_string(data_path(fixture)).expect("serve golden fixture exists");
+    let golden = Json::parse(&golden_text).expect("serve golden fixture parses");
+    assert_eq!(
+        report.summary.to_json(),
+        golden,
+        "serve summary drifted from {fixture}.\n\
+         If this change is deliberate, re-bless with (from rust/):\n  \
+         cargo run --release -- serve --workload {} --policy {} --bless\n\
+         got:\n{}",
+        report.summary.workload,
+        report.summary.policy,
+        report.summary.to_json().to_string_pretty()
+    );
+    // determinism: a second run is byte-identical
+    let again = serve(&cfg, policy, MigrationConfig::default());
+    assert_eq!(
+        again.summary.to_json().to_string_pretty(),
+        report.summary.to_json().to_string_pretty(),
+        "{fixture}: two serving runs are not byte-identical"
+    );
+    report
+}
+
+#[test]
+fn golden_flash_adaptive_beats_static_on_p99_ttft_and_comm() {
+    // the tentpole acceptance criterion: under the flash crowd the
+    // forecasting adaptive policy beats the frozen static placement
+    // on p99 time-to-first-token AND on total priced communication
+    let adaptive = assert_matches_golden(
+        WorkloadKind::flash_default(),
+        PolicyKind::Adaptive,
+        "serve_flash.adaptive.summary.json",
+    );
+    let stat = assert_matches_golden(
+        WorkloadKind::flash_default(),
+        PolicyKind::StaticBlock,
+        "serve_flash.static.summary.json",
+    );
+    let a = &adaptive.summary;
+    let s = &stat.summary;
+    assert!(a.rebalances >= 1, "adaptive must react to the flash crowd");
+    assert_eq!(s.rebalances, 0, "static never moves");
+    assert!(
+        a.ttft_p99 < s.ttft_p99,
+        "adaptive p99 TTFT {} not below static {}",
+        a.ttft_p99,
+        s.ttft_p99
+    );
+    assert!(
+        a.total_comm_secs < s.total_comm_secs,
+        "adaptive comm {} not below static {}",
+        a.total_comm_secs,
+        s.total_comm_secs
+    );
+    // the win shows up end-to-end too: better SLA attainment and a
+    // shorter virtual run for the same request population
+    assert_eq!(a.requests_arrived, s.requests_arrived);
+    assert_eq!(a.requests_completed, s.requests_completed);
+    assert!(a.sla_attainment > s.sla_attainment);
+    assert!(a.virtual_secs < s.virtual_secs);
+    assert!(a.e2e_p99 < s.e2e_p99);
+}
+
+#[test]
+fn golden_flash_threshold_reacts_but_after_adaptive() {
+    // the reactive baseline: threshold eventually commits, but its
+    // EWMA + coarse cadence arm after the forecasting policy
+    let threshold = assert_matches_golden(
+        WorkloadKind::flash_default(),
+        PolicyKind::Threshold,
+        "serve_flash.threshold.summary.json",
+    );
+    let cfg = fixture_config(WorkloadKind::flash_default());
+    let adaptive = serve(&cfg, PolicyKind::Adaptive, MigrationConfig::default());
+    let t = &threshold.summary;
+    let a = &adaptive.summary;
+    assert!(t.rebalances >= 1, "threshold must eventually react");
+    assert!(
+        a.rebalance_iters[0] <= t.rebalance_iters[0],
+        "adaptive reacted at iter {} after threshold's {}",
+        a.rebalance_iters[0],
+        t.rebalance_iters[0]
+    );
+    assert!(
+        a.ttft_p99 < t.ttft_p99,
+        "forecasting must beat reacting on p99 TTFT under a flash crowd"
+    );
+}
+
+#[test]
+fn golden_poisson_adaptive_matches_threshold_with_zero_rebalances() {
+    // steady-state acceptance: on uniform Poisson traffic the
+    // adaptive policy commits nothing, so its run is identical to the
+    // threshold policy's in everything but the label
+    let adaptive = assert_matches_golden(
+        WorkloadKind::Poisson,
+        PolicyKind::Adaptive,
+        "serve_poisson.adaptive.summary.json",
+    );
+    let cfg = fixture_config(WorkloadKind::Poisson);
+    let threshold = serve(&cfg, PolicyKind::Threshold, MigrationConfig::default());
+    let a = &adaptive.summary;
+    let t = &threshold.summary;
+    assert_eq!(a.rebalances, 0, "steady traffic must not rebalance");
+    assert_eq!(t.rebalances, 0);
+    assert_eq!(a.total_comm_secs.to_bits(), t.total_comm_secs.to_bits());
+    assert_eq!(a.ttft_p99.to_bits(), t.ttft_p99.to_bits());
+    assert_eq!(a.e2e_p99.to_bits(), t.e2e_p99.to_bits());
+    assert_eq!(a.virtual_secs.to_bits(), t.virtual_secs.to_bits());
+    assert_eq!(a.iterations, t.iterations);
+    assert_eq!(a.sla_attainment, 1.0, "steady poisson must meet its SLA");
+}
+
+#[test]
+fn golden_serve_fixtures_parse_and_label_correctly() {
+    for (fixture, policy, workload) in [
+        ("serve_flash.adaptive.summary.json", "adaptive", "flash"),
+        ("serve_flash.static.summary.json", "static_block", "flash"),
+        ("serve_flash.threshold.summary.json", "threshold", "flash"),
+        ("serve_poisson.adaptive.summary.json", "adaptive", "poisson"),
+    ] {
+        let text = std::fs::read_to_string(data_path(fixture)).expect("fixture exists");
+        let v = Json::parse(&text).expect("fixture parses");
+        assert_eq!(v.get("policy").and_then(Json::as_str), Some(policy), "{fixture}");
+        assert_eq!(v.get("workload").and_then(Json::as_str), Some(workload), "{fixture}");
+        let completed = v.get("requests_completed").and_then(Json::as_usize).unwrap();
+        let admitted = v.get("requests_admitted").and_then(Json::as_usize).unwrap();
+        assert_eq!(completed, admitted, "{fixture}: fixture run must drain");
+        assert!(completed > 0, "{fixture}: empty fixture");
+    }
+}

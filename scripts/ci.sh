@@ -7,11 +7,15 @@
 #   scripts/ci.sh trace-golden golden-trace regression gate only: replay the
 #                              checked-in traces under rust/tests/data/ and
 #                              fail on any summary drift
+#   scripts/ci.sh serve-golden serving golden gate only: rerun the flash /
+#                              poisson serving fixtures under rust/tests/data/
+#                              (serve_*.summary.json) and fail on any drift
 #   scripts/ci.sh mirror-check regenerate the golden fixtures from the Python
 #                              mirror (scripts/gen_golden_traces.py) and fail
 #                              on any byte drift — no Rust toolchain needed;
 #                              covers every policy fixture, including the
-#                              forecaster/bandit trace_burst.adaptive one
+#                              forecaster/bandit trace_burst.adaptive one and
+#                              the four serve_* serving summaries
 #   scripts/ci.sh bench-json   run the placement bench and write
 #                              BENCH_placement.json at the repo root for
 #                              the perf trajectory
@@ -35,9 +39,10 @@ case "$cmd" in
     cd "$repo_root/rust"
     cargo build --release
     cargo test -q
-    # explicit golden-trace pass: cargo test above already runs it, but
+    # explicit golden passes: cargo test above already runs them, but
     # drift in the fixtures must fail loudly with its own banner
     cargo test -q --test trace_golden
+    cargo test -q --test serve_golden
     cargo fmt --check
     python3 "$repo_root/scripts/gen_golden_traces.py" --check
     ;;
@@ -45,6 +50,11 @@ case "$cmd" in
     require_manifest
     cd "$repo_root/rust"
     cargo test -q --test trace_golden
+    ;;
+  serve-golden)
+    require_manifest
+    cd "$repo_root/rust"
+    cargo test -q --test serve_golden
     ;;
   mirror-check)
     python3 "$repo_root/scripts/gen_golden_traces.py" --check
@@ -57,7 +67,7 @@ case "$cmd" in
     echo "wrote $repo_root/BENCH_placement.json"
     ;;
   *)
-    echo "usage: scripts/ci.sh [gate|trace-golden|bench-json]" >&2
+    echo "usage: scripts/ci.sh [gate|trace-golden|serve-golden|mirror-check|bench-json]" >&2
     exit 2
     ;;
 esac

@@ -72,6 +72,19 @@ class Rng:
     def f64(self):
         return (self.next_u64() >> 11) * (1.0 / (1 << 53))
 
+    def below(self, n):
+        # Lemire's unbiased bounded sampler (util::rng::Rng::below)
+        x = self.next_u64()
+        m = x * n
+        l = m & MASK
+        if l < n:
+            t = ((1 << 64) - n) % n
+            while l < t:
+                x = self.next_u64()
+                m = x * n
+                l = m & MASK
+        return m >> 64
+
     def weighted(self, weights):
         total = 0.0
         for w in weights:
@@ -1003,6 +1016,437 @@ def summary_pretty(summary):
 
 
 # ---------------------------------------------------------------------------
+# serve mirror: rust/src/serve/{workload,batcher,engine,metrics}.rs
+#
+# The request-driven inference-serving simulator.  Every operation on
+# this path is pure IEEE-754 f64 arithmetic (+ sqrt inside
+# price_placement), integer bookkeeping, and the shared xoshiro RNG —
+# so the ServeSummary fixtures below reproduce the Rust `smile serve`
+# output bit-for-bit.  The iteration recipe (engine.rs) is:
+#   admit -> form batch -> sample expert choices -> pipeline.step
+#   (observe/consult/migrate) -> placed dispatch (capacity + replica
+#   split) -> price comm (price_placement) + compute (roofline) ->
+#   drain -> advance the virtual clock -> apply request progress.
+# ---------------------------------------------------------------------------
+
+
+def quantile_exact(sorted_vals, q):
+    """util::stats::quantile_exact_sorted — exact order statistic."""
+    n = len(sorted_vals)
+    if n == 0:
+        return float("nan")
+    qq = min(max(q, 0.0), 1.0)
+    rank = math.ceil(qq * float(n))
+    rank = min(max(rank, 1), n)
+    return sorted_vals[rank - 1]
+
+
+# ServeConfig defaults (rust/src/serve/engine.rs) — the CLI-default
+# knob set every serve fixture is recorded under.  Model constants are
+# the 3.7B dims (hidden 768, ffn 3072, 12 layers / 6 MoE, seq 128).
+SERVE = dict(
+    n_nodes=4,
+    gpus_per_node=4,
+    seed=7,
+    n_ticks=120,
+    tick_secs=0.05,
+    sub_slots=128,
+    rate=125.0,
+    prompt_min=192,
+    prompt_max=320,
+    output_min=24,
+    output_max=56,
+    max_batch_tokens=2048,
+    max_batch_size=320,
+    max_queue=100000,
+    capacity_factor=2.0,
+    bytes_per_token=98304.0,  # hidden * dtype_bytes * 64 (KV/activation amplification)
+    iter_overhead_secs=0.002,
+    sla_ms=1250.0,
+    # flash-crowd knobs
+    spike_mult=2.2,
+    spike_start=1.5,
+    spike_end=3.5,
+    hot_expert=3,
+    boost=12.0,
+    # diurnal knobs
+    amp=0.5,
+    period_secs=4.0,
+    # serve-specific policy gate defaults: iterations are milliseconds
+    # (not optimizer steps), and small batches carry multinomial
+    # sampling noise, so serving consults faster and arms stiffer than
+    # the training-trace defaults
+    check_every=20,
+    trigger_imbalance=1.5,
+    min_improvement=1.1,
+    # the pipeline observes the SUM of recent iterations' histograms (a
+    # single iteration's batch is too small a sample; the aggregate is
+    # the serving analogue of one routing step): at every
+    # observe_every-th iteration boundary, the accumulated histogram is
+    # folded in only once it carries at least min_observe_tokens —
+    # sparse warm-up/drain windows keep accumulating instead of feeding
+    # the forecaster noise
+    observe_every=10,
+    min_observe_tokens=1024,
+)
+
+# serve routes tokens with its own RNG stream, derived from the
+# workload seed by this xor (serve::engine::ROUTE_SEED_XOR)
+ROUTE_SEED_XOR = 0x5345525645  # "SERVE"
+
+# 3.7B model constants (simtrain::compute roofline)
+SERVE_HIDDEN = 768
+SERVE_FFN = 3072
+SERVE_SEQ = 128
+SERVE_LAYERS = 12
+SERVE_MOE_LAYERS = 6
+SERVE_EFF_FLOPS = 312e12 * 0.4  # ClusterSpec::p4d effective_flops
+SERVE_ATTN_FPT = float(8 * SERVE_HIDDEN * SERVE_HIDDEN + 4 * SERVE_SEQ * SERVE_HIDDEN)
+SERVE_FFN_FPT = float(4 * SERVE_HIDDEN * SERVE_FFN)
+SERVE_DENSE_FPT = float(SERVE_LAYERS) * SERVE_ATTN_FPT + float(
+    SERVE_LAYERS - SERVE_MOE_LAYERS
+) * SERVE_FFN_FPT
+SERVE_HOPS = float(2 * SERVE_MOE_LAYERS)  # dispatch + combine per MoE layer
+
+
+def serve_rate_at(cfg, kind, t):
+    """workload::rate_at — arrival rate (req/s) at virtual time t."""
+    rate = cfg["rate"]
+    if kind == "poisson":
+        return rate
+    if kind == "flash":
+        if cfg["spike_start"] <= t < cfg["spike_end"]:
+            return rate * cfg["spike_mult"]
+        return rate
+    if kind == "diurnal":
+        x = t / cfg["period_secs"]
+        ph = x - math.floor(x)
+        if ph < 0.5:
+            q = 2.0 * ph
+            w = 4.0 * q * (1.0 - q)
+        else:
+            q = 2.0 * ph - 1.0
+            w = -(4.0 * q * (1.0 - q))
+        return rate * (1.0 + cfg["amp"] * w)
+    raise ValueError(kind)
+
+
+def serve_expert_weights(cfg, kind, e_total, t):
+    """workload::expert_weights — per-expert routing mix at time t.
+    Uniform base; the flash crowd multiplies one hot expert inside its
+    spike window (what shifts placement calculus mid-run)."""
+    w = [1.0] * e_total
+    if kind == "flash" and cfg["spike_start"] <= t < cfg["spike_end"]:
+        w[cfg["hot_expert"] % e_total] *= cfg["boost"]
+    return w
+
+
+def serve_generate_requests(cfg, kind):
+    """workload::generate — Bernoulli-thinned arrival schedule (a
+    binomial per tick, sub_slots trials; no libm exp/ln) with uniform
+    prompt/output token counts, arrival-sorted by construction."""
+    rng = Rng(cfg["seed"])
+    sub = cfg["sub_slots"]
+    sub_dt = cfg["tick_secs"] / float(sub)
+    requests = []
+    for tick in range(cfg["n_ticks"]):
+        t0 = float(tick) * cfg["tick_secs"]
+        p = serve_rate_at(cfg, kind, t0) * cfg["tick_secs"] / float(sub)
+        for slot in range(sub):
+            if rng.f64() < p:
+                arrival = t0 + (float(slot) + 0.5) * sub_dt
+                prompt = cfg["prompt_min"] + rng.below(
+                    cfg["prompt_max"] - cfg["prompt_min"]
+                )
+                output = cfg["output_min"] + rng.below(
+                    cfg["output_max"] - cfg["output_min"]
+                )
+                requests.append([arrival, int(prompt), int(output)])
+    return requests
+
+
+def serve_run(cfg, kind, policy_kind, overlap_frac=0.0):
+    """serve::engine::serve — the whole deterministic serving loop.
+    Returns the ServeSummary dict (sorted-key JSON payload)."""
+    spec = Spec(cfg["n_nodes"], cfg["gpus_per_node"])
+    e_total = spec.num_gpus()  # one expert per GPU, the paper's shape
+    g = float(spec.num_gpus())
+    requests = serve_generate_requests(cfg, kind)
+    route_rng = Rng(cfg["seed"] ^ ROUTE_SEED_XOR)
+
+    knobs = dict(POLICY)
+    knobs["hops_per_step"] = SERVE_HOPS
+    knobs["check_every"] = cfg["check_every"]
+    knobs["trigger_imbalance"] = cfg["trigger_imbalance"]
+    nominal_payload = (
+        cfg["capacity_factor"]
+        * (float(cfg["max_batch_tokens"]) / g)
+        * cfg["bytes_per_token"]
+    )
+    if policy_kind == "adaptive":
+        acfg = dict(ADAPTIVE)
+        acfg["min_improvement"] = cfg["min_improvement"]
+        rb = AdaptivePolicy(knobs, spec, e_total, nominal_payload, acfg)
+    else:
+        rb = POLICY_KINDS[policy_kind](knobs, spec, e_total, nominal_payload)
+    scheduler = MigrationScheduler(spec.inter_bw, overlap_frac)
+
+    # batcher state (serve::batcher) — queue/active of request indices
+    queue = []
+    active = []  # [req_idx, prefill_remaining, decode_remaining, sched]
+    next_arrival = 0
+    first_token = [None] * len(requests)
+    completion = [None] * len(requests)
+    rejected = [False] * len(requests)
+
+    now = 0.0
+    iters = 0
+    accum = [0.0] * e_total
+    accum_tokens = 0
+    requests_admitted = 0
+    requests_rejected = 0
+    requests_completed = 0
+    routed_tokens = 0
+    dropped_tokens = 0
+    rebalance_iters = []
+    migrated_replicas = 0
+    total_comm = 0.0
+    total_compute = 0.0
+    queue_depth_sum = 0
+    peak_queue_depth = 0
+
+    while True:
+        # 1. admit every arrival at or before the current virtual time
+        while next_arrival < len(requests) and requests[next_arrival][0] <= now:
+            if len(queue) >= cfg["max_queue"]:
+                rejected[next_arrival] = True
+                requests_rejected += 1
+            else:
+                queue.append(next_arrival)
+                requests_admitted += 1
+            next_arrival += 1
+        if not active and not queue:
+            if next_arrival < len(requests):
+                # idle hop: jump the clock to the next arrival
+                t = requests[next_arrival][0]
+                now = now if now > t else t
+                continue
+            break
+
+        # 2. form the continuous batch: decodes, prefill continuations,
+        #    then new admissions, under the token/size budgets
+        budget = cfg["max_batch_tokens"]
+        for a in active:
+            if a[1] == 0 and budget > 0:
+                a[3] = 1
+                budget -= 1
+        for a in active:
+            if a[1] > 0 and budget > 0:
+                chunk = a[1] if a[1] < budget else budget
+                a[3] = chunk
+                budget -= chunk
+        while budget > 0 and len(active) < cfg["max_batch_size"] and queue:
+            rid = queue.pop(0)
+            prompt = requests[rid][1]
+            chunk = prompt if prompt < budget else budget
+            active.append([rid, prompt, requests[rid][2], chunk])
+            budget -= chunk
+        b_tokens = cfg["max_batch_tokens"] - budget
+        queue_depth_sum += len(queue)
+        if len(queue) > peak_queue_depth:
+            peak_queue_depth = len(queue)
+
+        # 3. route the batch's tokens (top-1 over the workload mix)
+        w = serve_expert_weights(cfg, kind, e_total, now)
+        counts = [0] * e_total
+        for _ in range(b_tokens):
+            counts[route_rng.weighted(w)] += 1
+        experts = [float(c) for c in counts]
+        routed_tokens += b_tokens
+
+        # 4. the shared routing pipeline: observe the aggregated
+        #    histogram at every observe_every-th iteration, consult,
+        #    enqueue any committed migration
+        for e in range(e_total):
+            accum[e] += experts[e]
+        accum_tokens += b_tokens
+        stall = 0.0
+        if (iters + 1) % cfg["observe_every"] == 0 and accum_tokens >= cfg[
+            "min_observe_tokens"
+        ]:
+            rb.observe(accum)
+            accum = [0.0] * e_total
+            accum_tokens = 0
+            d = rb.consult(iters)
+            if d is not None:
+                bytes_ = float(d["migrated_replicas"]) * knobs["expert_bytes"]
+                stall = scheduler.enqueue(bytes_, d["migration_secs"])
+                rebalance_iters.append(iters)
+                migrated_replicas += d["migrated_replicas"]
+
+        # 5. placed dispatch: capacity clip + replica round-robin
+        #    (moe::dispatch::PlacedPlan under the live placement)
+        capacity = int(cfg["capacity_factor"] * float(b_tokens) / float(e_total))
+        if capacity < 1:
+            capacity = 1
+        gpu_counts = [0] * spec.num_gpus()
+        kept_total = 0
+        for e in range(e_total):
+            kept = counts[e] if counts[e] < capacity else capacity
+            kept_total += kept
+            gs = rb.current.replicas[e]
+            ws = rb.current.weights[e]
+            sent = [0] * len(gs)
+            for _ in range(kept):
+                best = 0
+                best_score = float("inf")
+                for r, wgt in enumerate(ws):
+                    if wgt <= 0.0:
+                        continue
+                    score = float(sent[r] + 1) / wgt
+                    if score < best_score:
+                        best_score = score
+                        best = r
+                sent[best] += 1
+            for r, gpu in enumerate(gs):
+                gpu_counts[gpu] += sent[r]
+        dropped_tokens += b_tokens - kept_total
+        max_gpu = 0
+        for c in gpu_counts:
+            if c > max_gpu:
+                max_gpu = c
+
+        # 6. price the iteration: bi-level comm under the live
+        #    placement + roofline compute (dense data-parallel, expert
+        #    straggler-bound), plus overhead and any migration stall
+        b = float(b_tokens)
+        payload = cfg["capacity_factor"] * (b / g) * cfg["bytes_per_token"]
+        cost = price_placement(rb.current, experts, spec, payload)
+        comm = cost.comm_total() * SERVE_HOPS
+        dense = b * SERVE_DENSE_FPT / (g * SERVE_EFF_FLOPS)
+        expert = float(max_gpu) * SERVE_FFN_FPT * float(SERVE_MOE_LAYERS) / SERVE_EFF_FLOPS
+        compute = dense + expert
+        iter_secs = compute + comm + cfg["iter_overhead_secs"] + stall
+        scheduler.drain(iter_secs)
+        total_comm += comm
+        total_compute += compute
+        now += iter_secs
+        iters += 1
+
+        # 7. apply request progress at the iteration's completion time
+        done = []
+        for a in active:
+            if a[3] == 0:
+                continue
+            if a[1] > 0:
+                a[1] -= a[3]
+                if a[1] == 0:
+                    first_token[a[0]] = now
+                    a[2] -= 1
+                    if a[2] == 0:
+                        completion[a[0]] = now
+                        done.append(a[0])
+            else:
+                a[2] -= 1
+                if a[2] == 0:
+                    completion[a[0]] = now
+                    done.append(a[0])
+            a[3] = 0
+        if done:
+            requests_completed += len(done)
+            active = [a for a in active if a[2] > 0]
+
+    # metrics roll-up (serve::metrics::ServeSummary)
+    ttft = []
+    e2e = []
+    tpot = []
+    good_requests = 0
+    good_output_tokens = 0
+    prompt_tokens = 0
+    output_tokens = 0
+    sla_secs = cfg["sla_ms"] / 1000.0
+    for i, (arrival, prompt, output) in enumerate(requests):
+        if rejected[i] or completion[i] is None:
+            continue
+        prompt_tokens += prompt
+        output_tokens += output
+        t_first = first_token[i] - arrival
+        t_e2e = completion[i] - arrival
+        ttft.append(t_first)
+        e2e.append(t_e2e)
+        if output >= 2:
+            tpot.append((completion[i] - first_token[i]) / float(output - 1))
+        if t_e2e <= sla_secs:
+            good_requests += 1
+            good_output_tokens += output
+    ttft.sort()
+    e2e.sort()
+    tpot.sort()
+    itf = 1.0 / float(iters) if iters > 0 else 0.0
+    return dict(
+        policy=rb.name,
+        workload=kind,
+        iterations=iters,
+        virtual_secs=now,
+        requests_arrived=len(requests),
+        requests_admitted=requests_admitted,
+        requests_completed=requests_completed,
+        requests_rejected=requests_rejected,
+        prompt_tokens=prompt_tokens,
+        output_tokens=output_tokens,
+        routed_tokens=routed_tokens,
+        dropped_token_frac=(
+            float(dropped_tokens) / float(routed_tokens) if routed_tokens > 0 else 0.0
+        ),
+        ttft_p50=quantile_exact(ttft, 0.50),
+        ttft_p95=quantile_exact(ttft, 0.95),
+        ttft_p99=quantile_exact(ttft, 0.99),
+        tpot_p50=quantile_exact(tpot, 0.50),
+        tpot_p95=quantile_exact(tpot, 0.95),
+        tpot_p99=quantile_exact(tpot, 0.99),
+        e2e_p50=quantile_exact(e2e, 0.50),
+        e2e_p95=quantile_exact(e2e, 0.95),
+        e2e_p99=quantile_exact(e2e, 0.99),
+        sla_ms=cfg["sla_ms"],
+        sla_attainment=(
+            float(good_requests) / float(requests_completed)
+            if requests_completed > 0
+            else 0.0
+        ),
+        goodput_tokens_per_sec=(
+            float(good_output_tokens) / now if now > 0.0 else 0.0
+        ),
+        mean_queue_depth=float(queue_depth_sum) * itf,
+        peak_queue_depth=peak_queue_depth,
+        mean_batch_tokens=float(routed_tokens) * itf,
+        total_comm_secs=total_comm,
+        total_compute_secs=total_compute,
+        rebalances=len(rebalance_iters),
+        rebalance_iters=rebalance_iters,
+        migrated_replicas=migrated_replicas,
+        migration_exposed_secs=scheduler.exposed_secs,
+        migration_overlapped_secs=scheduler.overlapped_secs,
+        migration_pending_bytes=scheduler.pending_bytes,
+    )
+
+
+def serve_fixture_files():
+    """(filename, summary) for the serve golden fixtures: the flash
+    crowd under adaptive / static / threshold (the p99-TTFT acceptance
+    triple) and steady Poisson under adaptive (the no-spurious-
+    rebalance anchor)."""
+    out = []
+    for kind, policy, fname in [
+        ("flash", "adaptive", "serve_flash.adaptive.summary.json"),
+        ("flash", "static_block", "serve_flash.static.summary.json"),
+        ("flash", "threshold", "serve_flash.threshold.summary.json"),
+        ("poisson", "adaptive", "serve_poisson.adaptive.summary.json"),
+    ]:
+        out.append((fname, serve_run(SERVE, kind, policy)))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # fixture generation
 # ---------------------------------------------------------------------------
 
@@ -1068,6 +1512,17 @@ def check(data_dir):
                 got = None
             if got != want:
                 drifted.append(fname + suffix)
+    for fname, summary in serve_fixture_files():
+        checked += 1
+        want = summary_pretty(summary)
+        path = os.path.join(data_dir, fname)
+        try:
+            with open(path, "r") as f:
+                got = f.read()
+        except OSError:
+            got = None
+        if got != want:
+            drifted.append(fname)
     if drifted:
         print("mirror-check FAILED — fixtures drifted from the Python mirror:")
         for name in drifted:
@@ -1097,6 +1552,15 @@ def main():
             print(f"  {k}: {summary[k]}")
         rebal = [t for t in timeline if t[2]]
         print(f"  rebalance timeline entries: {rebal}")
+        print()
+    for fname, summary in serve_fixture_files():
+        with open(os.path.join(data_dir, fname), "w") as f:
+            f.write(summary_pretty(summary))
+        print(f"== {fname} ==")
+        for k in ["policy", "workload", "iterations", "requests_completed",
+                  "ttft_p99", "e2e_p99", "total_comm_secs", "rebalances",
+                  "rebalance_iters", "sla_attainment"]:
+            print(f"  {k}: {summary[k]}")
         print()
 
 
