@@ -32,6 +32,12 @@
 //!   trace), continuous batching, live placement policies during
 //!   serving, and SLA percentile metrics (`smile serve`, pinned by
 //!   the serve golden fixtures).
+//! - [`obs`]: the unified observability layer — structured event bus
+//!   (rebalance decision audits, bandit rewards, migration byte
+//!   deltas, queue depth), Chrome-trace span timelines on the virtual
+//!   clock, and an exact-quantile metrics registry (`--events` /
+//!   `--spans` / `smile obs report`), deterministic and zero-cost
+//!   when no sink is attached.
 //! - [`data`] is the synthetic-corpus stand-in for C4; [`metrics`]
 //!   the profiler stand-in; [`util`] the from-scratch substrate
 //!   (json/cli/rng/stats/bench — the offline image vendors none of the
@@ -42,6 +48,7 @@ pub mod data;
 pub mod metrics;
 pub mod moe;
 pub mod netsim;
+pub mod obs;
 pub mod placement;
 pub mod runtime;
 pub mod serve;

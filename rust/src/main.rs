@@ -13,6 +13,7 @@
 //!   trace          record / replay / summarize routing traces
 //!   tune           grid-sweep adaptive-policy hyperparameters over a trace
 //!   serve          request-driven inference-serving simulation
+//!   obs            aggregate a --events stream into a metrics report
 //!   info           list artifacts and their configs
 //!
 //! Examples:
@@ -23,14 +24,21 @@
 //!   smile placement --nodes 16 --skew 1.2
 //!   smile trace record --scenario zipf --skew 1.2 --out reports/zipf.jsonl
 //!   smile trace replay --in reports/zipf.jsonl
+//!   smile trace replay --in reports/zipf.jsonl --events reports/zipf.events.jsonl
 //!   smile serve --workload flash --policy adaptive
 //!   smile serve --workload poisson --policy threshold --sla-ms 800
 //!   smile serve --workload trace --in reports/zipf.jsonl --policy adaptive
+//!   smile serve --workload flash --policy adaptive --spans reports/serve.spans.json
+//!   smile obs report --in reports/zipf.events.jsonl
+//!
+//! Every command takes `--quiet` (progress to stderr off, errors
+//! only); `SMILE_LOG=error|warn|info|debug` sets the level explicitly.
 
 use anyhow::{bail, Result};
 
 use smile::metrics::{CsvLogger, RunSummary, StepLog};
 use smile::netsim::ClusterSpec;
+use smile::obs::{EventSink, ObsReport, SharedSink, SpanTimeline};
 use smile::placement::{
     self, AdaptiveConfig, AdaptivePolicy, MigrationConfig, PlacementMap, PolicyKind,
     RebalancePolicy,
@@ -68,6 +76,7 @@ const COMMANDS: &[CommandSpec] = &[
         run: cmd_train,
         usage: "--config <name> --steps N [--seed S] [--log out.csv] [--ckpt path] [--eval-every N] [--rebalance]\n\
                 [--policy <POLICIES>] [--migration-overlap F] [--trace out.jsonl]\n\
+                [--events out.events.jsonl] [--spans out.spans.json]\n\
                 (adaptive knobs as in trace replay apply to --policy adaptive here and in trace record)",
     },
     CommandSpec {
@@ -104,7 +113,7 @@ const COMMANDS: &[CommandSpec] = &[
                 replay --in p.jsonl [--policy <POLICIES>] [--migration-overlap F]\n\
                        [--check-every N] [--trigger-imbalance I] [--hysteresis H]\n\
                        [adaptive knobs: --window W --horizon H --probe-every N --ucb-c C --min-improvement R]\n\
-                       [--timeline p.csv] [--summary p.json]\n\
+                       [--timeline p.csv] [--summary p.json] [--events p.events.jsonl] [--spans p.spans.json]\n\
                 summarize --in p.jsonl [same policy overrides as replay] [--out p.summary.json] [--bless]",
     },
     CommandSpec {
@@ -128,8 +137,16 @@ const COMMANDS: &[CommandSpec] = &[
                 [--check-every N] [--trigger-imbalance I] [--min-improvement R] [--observe-every N]\n\
                 [--min-observe-tokens N] [--migration-overlap F] [adaptive knobs as in trace replay]\n\
                 [--timeline p.csv] [--summary p.json] [--bless]\n\
+                [--events p.events.jsonl] [--spans p.spans.json]\n\
                 request-driven serving simulation: continuous batching over a seeded workload with\n\
                 the placement policy rebalancing live; reports TTFT/TPOT/e2e p50/p95/p99 + SLA goodput",
+    },
+    CommandSpec {
+        name: "obs",
+        run: cmd_obs,
+        usage: "report --in run.events.jsonl\n\
+                aggregates a --events JSONL stream (from train / trace replay / serve) into\n\
+                counters, gauges, and histograms with exact-order-statistic quantiles",
     },
     CommandSpec { name: "info", run: cmd_info, usage: "" },
 ];
@@ -138,6 +155,11 @@ fn run() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     let args = Args::parse(argv);
+    // progress-log level: SMILE_LOG env first, then --quiet wins
+    smile::obs::log::init_from_env();
+    if args.bool("quiet", false) {
+        smile::obs::log::set_level(smile::obs::log::Level::Error);
+    }
     match COMMANDS.iter().find(|c| c.name == cmd) {
         Some(spec) => (spec.run)(&args),
         None => {
@@ -219,8 +241,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     if trace_out.is_some() {
         tr.enable_trace_recording();
     }
+    let events = obs_sink_of(args)?;
+    if let Some((sink, _)) = &events {
+        tr.attach_obs(sink.clone());
+    }
+    // `--spans`: per-step spans on the accumulated step-time clock
+    let spans_out = args.opt_str("spans");
+    let mut span_tl = spans_out.as_ref().map(|_| SpanTimeline::new());
+    let mut span_clock = 0.0f64;
     let (k, a, b, s) = tr.batch_dims();
-    println!(
+    smile::log_info!(
         "config {config}: {} params, batch [K={k} A={a} B={b} S={s}], target {steps} steps",
         tr.param_count()
     );
@@ -236,11 +266,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         for l in &logs {
             logger.log(l)?;
             total_secs += l.step_secs;
+            if let Some(tl) = &mut span_tl {
+                tl.push("step", &format!("step {}", l.step), span_clock, span_clock + l.step_secs);
+                span_clock += l.step_secs;
+            }
             if first_loss.is_none() {
                 first_loss = Some(l.loss as f64);
             }
             if l.step % 10 == 0 || l.step + 1 == steps {
-                println!(
+                smile::log_info!(
                     "step {:>5}  loss {:.4}  ppl {:>9.2}  lb {:.5}  (inter {:.5} intra {:.5})  {:.0} ms/step",
                     l.step,
                     l.loss,
@@ -255,13 +289,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         if eval_every > 0 && tr.step % eval_every == 0 {
             let mut eb = tr.make_batcher(0xEAA1);
-            println!("  eval ppl @{}: {:.2}", tr.step, tr.evaluate(&mut eb, 4)?);
+            smile::log_info!("  eval ppl @{}: {:.2}", tr.step, tr.evaluate(&mut eb, 4)?);
         }
     }
     logger.flush()?;
     if let Some(ckpt) = args.opt_str("ckpt") {
         tr.save_checkpoint(&ckpt)?;
-        println!("checkpoint: {ckpt}");
+        smile::log_info!("checkpoint: {ckpt}");
     }
     let last = last.expect("at least one step");
     let samples = tr.step * a * b;
@@ -281,7 +315,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "done: loss {:.4} -> {:.4}, ppl {:.2}, {:.1} samples/s (wall)",
         summary.first_loss, summary.final_loss, summary.final_ppl, summary.samples_per_sec
     );
-    println!("log: {log_path}");
+    smile::log_info!("log: {log_path}");
     if let Some(pipe) = &tr.pipeline {
         println!(
             "placement policy {}: {} rebalances (node imbalance now {:.2})",
@@ -301,11 +335,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let (Some(path), Some(rec)) = (trace_out, &tr.trace_recorder) {
         rec.write_jsonl(&path)?;
-        println!("routing trace: {path} ({} steps)", rec.len());
+        smile::log_info!("routing trace: {path} ({} steps)", rec.len());
         if rec.skipped() > 0 {
-            println!("  warning: {} steps skipped (non-finite routing metrics)", rec.skipped());
+            smile::log_warn!("{} steps skipped (non-finite routing metrics)", rec.skipped());
         }
     }
+    if let (Some(path), Some(tl)) = (&spans_out, &span_tl) {
+        write_spans(path, tl)?;
+    }
+    finish_events(&events);
     Ok(())
 }
 
@@ -402,7 +440,7 @@ fn cmd_layer(args: &Args) -> Result<()> {
             let path = format!("reports/timeline_{}_{}nodes.json", v.name(), nodes);
             std::fs::create_dir_all("reports").ok();
             std::fs::write(&path, json.to_string_pretty())?;
-            println!("timeline: {path}");
+            smile::log_info!("timeline: {path}");
         }
     }
     println!("single MoE layer forward, {} nodes (paper Table 3):", nodes);
@@ -492,7 +530,7 @@ fn cmd_placement(args: &Args) -> Result<()> {
     let parsed = Json::parse(&std::fs::read_to_string(&out)?)?;
     let back = PlacementMap::from_json(&parsed).map_err(anyhow::Error::msg)?;
     anyhow::ensure!(back == planned, "placement JSON round-trip mismatch");
-    println!("\nplacement map: {out} (JSON round-trip ok)");
+    smile::log_info!("placement map: {out} (JSON round-trip ok)");
     Ok(())
 }
 
@@ -555,15 +593,51 @@ fn adaptive_config_of(args: &Args) -> Result<AdaptiveConfig> {
     Ok(cfg)
 }
 
-/// Replay a trace under the CLI's policy/migration flags.  The
+/// `--events out.jsonl`: a shared sink streaming every event to the
+/// file as canonical JSONL.  Returns the sink plus the path (for the
+/// end-of-run confirmation via [`finish_events`]).
+fn obs_sink_of(args: &Args) -> Result<Option<(SharedSink, String)>> {
+    let path = match args.opt_str("events") {
+        Some(p) => p,
+        None => return Ok(None),
+    };
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let f = std::fs::File::create(&path)?;
+    let sink = EventSink::shared_with_writer(Box::new(std::io::BufWriter::new(f)));
+    Ok(Some((sink, path)))
+}
+
+/// Flush a `--events` stream and confirm where it went.
+fn finish_events(events: &Option<(SharedSink, String)>) {
+    if let Some((sink, path)) = events {
+        let emitted = {
+            let mut s = sink.borrow_mut();
+            s.flush();
+            s.emitted()
+        };
+        smile::log_info!("events: {path} ({emitted} events)");
+    }
+}
+
+/// Write a span timeline as Chrome trace-event JSON (`--spans`),
+/// loadable in Perfetto / chrome://tracing.
+fn write_spans(path: &str, spans: &SpanTimeline) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(path, spans.to_chrome_trace().to_string_pretty())?;
+    smile::log_info!("spans: {path} ({} spans on {} tracks)", spans.len(), spans.tracks().len());
+    Ok(())
+}
+
+/// Build a replayer under the CLI's policy/migration flags.  The
 /// adaptive kind takes its own knob set, so it is built explicitly
-/// and driven through the boxed-policy replay entry point.  Returns
-/// the result plus the policy's consult cadence in steps (for
-/// readable timeline printing).
-fn replay_trace_cli(
-    trace: &RoutingTrace,
-    args: &Args,
-) -> Result<(smile::trace::ReplayResult, usize)> {
+/// and driven through the boxed-policy entry point.  Returns the
+/// replayer plus the policy's consult cadence in steps (for readable
+/// timeline printing).
+fn replayer_cli(trace: &RoutingTrace, args: &Args) -> Result<(TraceReplayer, usize)> {
     let kind = policy_kind_of(args)?;
     let knobs = trace_policy_of(args);
     let migration = migration_of(args);
@@ -577,11 +651,24 @@ fn replay_trace_cli(
             trace.meta.num_experts.max(1),
             trace.meta.payload_per_gpu,
         );
-        (TraceReplayer::replay_boxed(trace, Box::new(policy), migration), cadence)
+        (TraceReplayer::with_boxed_policy(trace, Box::new(policy), migration), cadence)
     } else {
         let cadence = knobs.check_every.max(1);
-        (TraceReplayer::replay_with(trace, kind, knobs, migration), cadence)
+        (TraceReplayer::with_policy(trace, kind, knobs, migration), cadence)
     })
+}
+
+/// One-shot replay of a whole trace under the CLI flags (no
+/// observability attachments) — the summarize / tune entry point.
+fn replay_trace_cli(
+    trace: &RoutingTrace,
+    args: &Args,
+) -> Result<(smile::trace::ReplayResult, usize)> {
+    let (mut r, cadence) = replayer_cli(trace, args)?;
+    for s in &trace.steps {
+        r.step(s);
+    }
+    Ok((r.finish(), cadence))
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -616,7 +703,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
             let trace = smile::trace::record_scenario_tuned(&cfg, live);
             let out = args.str("out", "reports/trace.jsonl");
             trace.write_jsonl(&out)?;
-            println!(
+            smile::log_info!(
                 "recorded {} ({} steps, {} experts on {}x{}, {} live decisions): {out}",
                 trace.meta.scenario,
                 trace.steps.len(),
@@ -630,9 +717,22 @@ fn cmd_trace(args: &Args) -> Result<()> {
         "replay" => {
             let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
             let trace = RoutingTrace::read_jsonl(&path).map_err(anyhow::Error::msg)?;
+            let events = obs_sink_of(args)?;
+            let spans_out = args.opt_str("spans");
+            let (mut replayer, cadence) = replayer_cli(&trace, args)?;
+            if let Some((sink, _)) = &events {
+                replayer.attach_obs(sink.clone());
+            }
+            if spans_out.is_some() {
+                replayer.enable_spans();
+            }
+            for s in &trace.steps {
+                replayer.step(s);
+            }
+            let spans = replayer.take_spans();
+            let result = replayer.finish();
             // print the timeline at a readable cadence: every consult
             // boundary plus every rebalance step
-            let (result, cadence) = replay_trace_cli(&trace, args)?;
             let mut table = Table::new(&[
                 "step", "expert_imb", "node_imb", "comm(ms)", "straggler", "rebalanced",
             ]);
@@ -695,6 +795,10 @@ fn cmd_trace(args: &Args) -> Result<()> {
             if let Some(out) = args.opt_str("summary") {
                 write_summary(&out, s)?;
             }
+            if let Some(out) = &spans_out {
+                write_spans(out, &spans)?;
+            }
+            finish_events(&events);
             Ok(())
         }
         "summarize" => {
@@ -712,7 +816,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
             };
             write_summary(&out, &result.summary)?;
             println!("{}", result.summary.to_json().to_string_pretty());
-            println!("summary: {out}");
+            smile::log_info!("summary: {out}");
             Ok(())
         }
         other => {
@@ -822,7 +926,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     table.print();
     if let Some(out) = args.opt_str("out") {
         table.write_csv(&out);
-        println!("sweep: {out}");
+        smile::log_info!("sweep: {out}");
     }
 
     println!("\nPareto set (cost vs rebalance count):");
@@ -960,7 +1064,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     adaptive.ucb_c = args.f64("ucb-c", adaptive.ucb_c);
     anyhow::ensure!(adaptive.window >= 2, "--window must be >= 2");
 
-    let report = serve::serve_with(&cfg, kind, knobs, adaptive, migration);
+    let events = obs_sink_of(args)?;
+    let spans_out = args.opt_str("spans");
+    let mut spans = SpanTimeline::new();
+    let report = if events.is_some() || spans_out.is_some() {
+        serve::serve_with_obs(
+            &cfg,
+            kind,
+            knobs,
+            adaptive,
+            migration,
+            events.as_ref().map(|(sink, _)| sink.clone()),
+            spans_out.as_ref().map(|_| &mut spans),
+        )
+    } else {
+        serve::serve_with(&cfg, kind, knobs, adaptive, migration)
+    };
     let s = &report.summary;
     println!(
         "serve [{}] on {} ({} nodes x {} GPUs, {} experts): {} iterations over {:.2} s virtual",
@@ -1035,7 +1154,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ]);
         }
         full.write_csv(&csv);
-        println!("timeline: {csv}");
+        smile::log_info!("timeline: {csv}");
     }
     let out = if args.bool("bless", false) {
         // golden-fixture update procedure (cf. trace summarize
@@ -1062,9 +1181,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
             std::fs::create_dir_all(dir).ok();
         }
         std::fs::write(&path, s.to_json().to_string_pretty())?;
-        println!("summary: {path}");
+        smile::log_info!("summary: {path}");
     }
+    if let Some(path) = &spans_out {
+        write_spans(path, &spans)?;
+    }
+    finish_events(&events);
     Ok(())
+}
+
+/// `smile obs report --in run.events.jsonl`: digest a `--events`
+/// stream into the metrics registry and print it as pretty JSON.
+fn cmd_obs(args: &Args) -> Result<()> {
+    let sub = args
+        .positional()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help")
+        .to_string();
+    match sub.as_str() {
+        "report" => {
+            let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
+            let text = std::fs::read_to_string(&path)?;
+            let report = ObsReport::from_jsonl(&text).map_err(anyhow::Error::msg)?;
+            println!("{}", report.to_json().to_string_pretty());
+            Ok(())
+        }
+        other => bail!("unknown obs subcommand {other} (report)"),
+    }
 }
 
 fn cmd_info(_args: &Args) -> Result<()> {

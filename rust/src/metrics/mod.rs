@@ -153,6 +153,94 @@ mod tests {
     }
 
     #[test]
+    fn csv_row_formatting_is_pinned() {
+        // exactly-representable values so the formatted row is
+        // unambiguous across platforms
+        let path = std::env::temp_dir().join("smile_test_row_format.csv");
+        {
+            let mut l = CsvLogger::create(&path).unwrap();
+            l.log(&StepLog {
+                step: 7,
+                loss: 1.5,
+                mlm_loss: 0.25,
+                lb_loss: 0.5,
+                lb_inter: 0.125,
+                lb_intra: 0.0625,
+                dropped_frac: 0.75,
+                grad_norm: 2.0,
+                lr: 0.03125,
+                step_secs: 0.5,
+            })
+            .unwrap();
+            l.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "step,loss,mlm_loss,perplexity,lb_loss,lb_inter,lb_intra,dropped_frac,\
+             grad_norm,lr,step_secs"
+        );
+        let row = lines.next().unwrap();
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(cols.len(), 11, "one column per header field: {row}");
+        assert_eq!(cols[0], "7");
+        assert_eq!(cols[1], "1.500000");
+        assert_eq!(cols[2], "0.250000");
+        // perplexity = exp(0.25), formatted at 4 decimals
+        assert_eq!(cols[3], format!("{:.4}", (0.25f64).exp()));
+        assert_eq!(cols[4], "0.50000000");
+        assert_eq!(cols[7], "0.750000");
+        assert_eq!(cols[8], "2.00000");
+        assert_eq!(cols[9], "0.03125000");
+        assert_eq!(cols[10], "0.5000");
+        assert!(lines.next().is_none());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_logger_creates_missing_nested_directories() {
+        let dir = std::env::temp_dir().join("smile_test_csv_nested");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("a/b/curves.csv");
+        {
+            let mut l = CsvLogger::create(&path).expect("create() must mkdir -p the parent");
+            l.log(&StepLog { step: 0, ..Default::default() }).unwrap();
+            l.flush().unwrap();
+        }
+        assert!(path.is_file());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_rows_read_back_the_logged_scalars() {
+        let path = std::env::temp_dir().join("smile_test_csv_roundtrip.csv");
+        let logged = [
+            StepLog { step: 3, loss: 4.5, mlm_loss: 4.25, lr: 0.5, step_secs: 0.25, ..Default::default() },
+            StepLog { step: 4, loss: 4.0, mlm_loss: 3.75, lr: 0.25, step_secs: 0.125, ..Default::default() },
+        ];
+        {
+            let mut l = CsvLogger::create(&path).unwrap();
+            for s in &logged {
+                l.log(s).unwrap();
+            }
+            l.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        for (line, s) in text.lines().skip(1).zip(&logged) {
+            let cols: Vec<&str> = line.split(',').collect();
+            assert_eq!(cols[0].parse::<usize>().unwrap(), s.step);
+            // exactly-representable scalars survive the fixed-decimal
+            // format bit-for-bit
+            assert_eq!(cols[1].parse::<f32>().unwrap(), s.loss);
+            assert_eq!(cols[2].parse::<f32>().unwrap(), s.mlm_loss);
+            assert_eq!(cols[9].parse::<f32>().unwrap(), s.lr);
+            assert_eq!(cols[10].parse::<f64>().unwrap(), s.step_secs);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn perplexity_is_exp_of_mlm_loss() {
         let s = StepLog { mlm_loss: 2.0, ..Default::default() };
         assert!((s.perplexity() - (2.0f64).exp()).abs() < 1e-9);

@@ -25,6 +25,12 @@ pub struct Span {
     pub end: f64,
 }
 
+impl Span {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
 #[derive(Debug, Clone)]
 struct Task {
     name: String,
@@ -39,6 +45,9 @@ pub struct Timeline {
     pub spans: Vec<Span>,
     /// Busy time per resource.
     pub busy: Vec<f64>,
+    /// Resource names, indexed by `ResourceId` (the track labels the
+    /// obs span-timeline exporter uses).
+    pub resources: Vec<String>,
 }
 
 impl Timeline {
@@ -48,7 +57,7 @@ impl Timeline {
         self.spans
             .iter()
             .filter(|s| s.name.starts_with(prefix))
-            .map(|s| s.end - s.start)
+            .map(Span::duration)
             .sum()
     }
 
@@ -199,9 +208,9 @@ impl DagSim {
         let makespan = spans.iter().map(|s| s.end).fold(0.0, f64::max);
         let mut busy = vec![0.0; self.resources.len()];
         for s in &spans {
-            busy[s.resource] += s.end - s.start;
+            busy[s.resource] += s.duration();
         }
-        Timeline { makespan, spans, busy }
+        Timeline { makespan, spans, busy, resources: self.resources.clone() }
     }
 }
 

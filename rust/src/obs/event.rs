@@ -1,0 +1,309 @@
+//! Structured event bus: typed [`Event`]s on the virtual clock, a
+//! ring-buffered [`EventSink`] with an optional streaming JSONL
+//! writer, and the [`SharedSink`] handle the drivers thread through
+//! [`RoutingPipeline`](crate::placement::RoutingPipeline).
+//!
+//! Design contract (golden-tested by `tests/obs_golden.rs` and the
+//! Python mirror's `--check-obs`):
+//!
+//! - **Byte-deterministic.**  Every event payload is a copy of an
+//!   f64/usize the emitter already computed on its priced path, and
+//!   serialization goes through `util::json` (sorted keys, canonical
+//!   number formatting), so the JSONL stream of a seeded run is a
+//!   reproducible fixture.
+//! - **Zero-cost when absent.**  Emitters are gated on the sink being
+//!   attached (`RoutingPipeline::attach_obs` flips the policies'
+//!   audit switch); with no sink the priced timeline executes the
+//!   byte-identical float sequence (property-tested: summaries with
+//!   and without a sink match bit-for-bit).
+//! - **Clock-stamped, never clock-advancing.**  The driver that owns
+//!   the virtual clock calls [`EventSink::set_now`] before stepping;
+//!   events only ever read `now`.
+//!
+//! Line format (one compact JSON object per line, sorted keys):
+//! `{"data":{...},"kind":"rebalance.armed","step":80,"t":0.123}` —
+//! the first line is always a `meta` record carrying
+//! [`EVENTS_VERSION`], the emitting driver, and the policy name.
+
+use std::collections::VecDeque;
+use std::io::Write;
+
+use crate::obj;
+use crate::util::json::Json;
+
+/// Version of the event-stream schema (mirrors `TRACE_VERSION`'s
+/// role for `RoutingTrace`): bump when an event kind changes its
+/// payload shape, and re-bless `trace_burst.adaptive.events.jsonl`.
+pub const EVENTS_VERSION: u32 = 1;
+
+/// One structured event on the virtual clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Dotted kind, e.g. `rebalance.armed`, `migration.enqueue`,
+    /// `bandit.reward`, `queue.depth`.
+    pub kind: String,
+    /// The emitting driver's step / iteration counter.
+    pub step: usize,
+    /// Virtual-clock seconds at emission (set via `set_now` by the
+    /// driver that owns the clock — cumulative priced comm in replay,
+    /// the serving clock in serve, cumulative wall step time in train).
+    pub t: f64,
+    /// Kind-specific payload (already-computed values only).
+    pub data: Json,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        obj! {
+            "kind" => self.kind.as_str(),
+            "step" => self.step,
+            "t" => self.t,
+            "data" => self.data.clone(),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Event, String> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("event missing 'kind'")?
+            .to_string();
+        let step = v.get("step").and_then(Json::as_usize).ok_or("event missing 'step'")?;
+        let t = v.get("t").and_then(Json::as_f64).ok_or("event missing 't'")?;
+        let data = v.get("data").cloned().unwrap_or(Json::Null);
+        Ok(Event { kind, step, t, data })
+    }
+}
+
+/// Ring-buffered event collector with an optional streaming JSONL
+/// writer.  The ring keeps the most recent `cap` events for post-hoc
+/// [`ObsReport`](crate::obs::ObsReport) construction; the writer (if
+/// any) sees every event, so a file stream is never truncated by the
+/// ring.
+pub struct EventSink {
+    ring: VecDeque<Event>,
+    cap: usize,
+    writer: Option<Box<dyn Write>>,
+    now: f64,
+    emitted: usize,
+}
+
+impl std::fmt::Debug for EventSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventSink")
+            .field("retained", &self.ring.len())
+            .field("cap", &self.cap)
+            .field("has_writer", &self.writer.is_some())
+            .field("now", &self.now)
+            .field("emitted", &self.emitted)
+            .finish()
+    }
+}
+
+/// The handle emitters hold: single-threaded shared ownership so the
+/// driver, the pipeline, and the CLI can all reach one sink.
+pub type SharedSink = std::rc::Rc<std::cell::RefCell<EventSink>>;
+
+/// Default ring capacity: enough for every golden run with headroom.
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+impl EventSink {
+    pub fn new(cap: usize) -> EventSink {
+        EventSink { ring: VecDeque::new(), cap: cap.max(1), writer: None, now: 0.0, emitted: 0 }
+    }
+
+    pub fn with_writer(cap: usize, writer: Box<dyn Write>) -> EventSink {
+        EventSink { writer: Some(writer), ..EventSink::new(cap) }
+    }
+
+    /// A [`SharedSink`] with the default ring capacity.
+    pub fn shared() -> SharedSink {
+        std::rc::Rc::new(std::cell::RefCell::new(EventSink::new(DEFAULT_RING_CAP)))
+    }
+
+    /// A [`SharedSink`] streaming every event to `writer` as JSONL.
+    pub fn shared_with_writer(writer: Box<dyn Write>) -> SharedSink {
+        std::rc::Rc::new(std::cell::RefCell::new(EventSink::with_writer(
+            DEFAULT_RING_CAP,
+            writer,
+        )))
+    }
+
+    /// Advance the sink's notion of the virtual clock.  Only the
+    /// driver that owns the clock calls this; emitters never do.
+    pub fn set_now(&mut self, t: f64) {
+        self.now = t;
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Emit the stream header: schema version + driver + policy name.
+    /// Always the first line of a JSONL stream.
+    pub fn meta(&mut self, source: &str, policy: &str) {
+        let data = obj! {
+            "schema_version" => EVENTS_VERSION as usize,
+            "source" => source,
+            "policy" => policy,
+        };
+        self.emit("meta", 0, data);
+    }
+
+    /// Record one event at the current clock.
+    pub fn emit(&mut self, kind: &str, step: usize, data: Json) {
+        let ev = Event { kind: kind.to_string(), step, t: self.now, data };
+        if let Some(w) = self.writer.as_mut() {
+            // report files are best-effort; the ring is the source of
+            // truth for in-process reports
+            let _ = writeln!(w, "{}", ev.to_json().to_string());
+        }
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(ev);
+        self.emitted += 1;
+    }
+
+    /// Events currently retained in the ring (oldest first).
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.ring.iter()
+    }
+
+    /// Total events emitted over the sink's lifetime (>= retained).
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// The retained events as canonical JSONL (the golden-fixture
+    /// byte format; one `Event::to_json` per line).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.ring {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Flush the streaming writer (if any).
+    pub fn flush(&mut self) {
+        if let Some(w) = self.writer.as_mut() {
+            let _ = w.flush();
+        }
+    }
+
+    /// Events with a given kind, retained order.
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a Event> {
+        self.ring.iter().filter(move |e| e.kind == kind)
+    }
+}
+
+/// Parse a JSONL event stream (as written by `--events` / the
+/// fixture) back into events; fails with line context.
+pub fn parse_jsonl(text: &str) -> Result<Vec<Event>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        out.push(Event::from_json(&v).map_err(|e| format!("line {}: {e}", i + 1))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_format_is_sorted_and_compact() {
+        let mut sink = EventSink::new(8);
+        sink.set_now(0.25);
+        sink.emit("rebalance.armed", 80, obj! {"gain" => 1.5, "arm" => 2usize});
+        let line = sink.to_jsonl();
+        assert_eq!(
+            line,
+            "{\"data\":{\"arm\":2,\"gain\":1.5},\"kind\":\"rebalance.armed\",\"step\":80,\"t\":0.25}\n"
+        );
+    }
+
+    #[test]
+    fn meta_is_versioned() {
+        let mut sink = EventSink::new(8);
+        sink.meta("replay", "adaptive");
+        let ev = sink.events().next().unwrap();
+        assert_eq!(ev.kind, "meta");
+        assert_eq!(ev.t, 0.0);
+        assert_eq!(
+            ev.data.get("schema_version").and_then(Json::as_usize),
+            Some(EVENTS_VERSION as usize)
+        );
+        assert_eq!(ev.data.get("source").and_then(Json::as_str), Some("replay"));
+        assert_eq!(ev.data.get("policy").and_then(Json::as_str), Some("adaptive"));
+    }
+
+    #[test]
+    fn ring_drops_oldest_but_counts_all() {
+        let mut sink = EventSink::new(2);
+        for i in 0..5 {
+            sink.emit("tick", i, Json::Null);
+        }
+        assert_eq!(sink.len(), 2);
+        assert_eq!(sink.emitted(), 5);
+        let steps: Vec<usize> = sink.events().map(|e| e.step).collect();
+        assert_eq!(steps, vec![3, 4]);
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let mut sink = EventSink::new(8);
+        sink.meta("serve", "threshold");
+        sink.set_now(1.5);
+        sink.emit("queue.depth", 3, obj! {"depth" => 7usize});
+        let text = sink.to_jsonl();
+        let parsed = parse_jsonl(&text).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[1].kind, "queue.depth");
+        assert_eq!(parsed[1].t, 1.5);
+        assert_eq!(parsed[1].data.get("depth").and_then(Json::as_usize), Some(7));
+        // and re-serialization is a fixed point
+        let again: String =
+            parsed.iter().map(|e| e.to_json().to_string() + "\n").collect();
+        assert_eq!(again, text);
+    }
+
+    #[test]
+    fn writer_sees_every_event_past_the_ring() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        struct Shared(Rc<RefCell<Vec<u8>>>);
+        impl Write for Shared {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.borrow_mut().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = Rc::new(RefCell::new(Vec::new()));
+        let mut sink = EventSink::with_writer(2, Box::new(Shared(buf.clone())));
+        for i in 0..4 {
+            sink.emit("tick", i, Json::Null);
+        }
+        let text = String::from_utf8(buf.borrow().clone()).unwrap();
+        assert_eq!(text.lines().count(), 4, "writer must not be truncated by the ring");
+        assert_eq!(sink.len(), 2);
+    }
+}

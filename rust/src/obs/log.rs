@@ -1,0 +1,125 @@
+//! Leveled progress logging for the CLI surfaces.
+//!
+//! Progress noise ("wrote file X", per-step tickers) goes to stderr
+//! through the [`log_info!`](crate::log_info)/[`log_warn!`](crate::log_warn)/
+//! [`log_debug!`](crate::log_debug) macros, gated by a process-wide
+//! level; machine-readable output (summaries, tables, pretty JSON)
+//! stays on stdout via plain `println!`.  That split keeps piped
+//! stdout clean: `smile trace summarize ... | jq` never sees a
+//! "summary: path" confirmation interleaved with the JSON.
+//!
+//! The level comes from the `SMILE_LOG` environment variable
+//! (`error|warn|info|debug`, default `info`) and the `--quiet` CLI
+//! flag (forces `error`).  The macros are named `log_*` (not
+//! `info!`/`warn!`) so they never collide with the external `log`
+//! crate the trainer uses for its own diagnostics.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        Some(match s {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            _ => return None,
+        })
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        3 => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+/// True when a message at `at` should print.
+pub fn enabled(at: Level) -> bool {
+    at <= level()
+}
+
+/// Read `SMILE_LOG` (error|warn|info|debug); unknown values keep the
+/// current level.  Call once at CLI startup, before `--quiet`.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("SMILE_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+/// Progress message (stderr, level `info`).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Warning (stderr, level `warn`).
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            eprintln!("warning: {}", format_args!($($arg)*));
+        }
+    };
+}
+
+/// Diagnostic detail (stderr, level `debug`; off by default).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_parse() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Debug);
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("loud"), None);
+    }
+
+    #[test]
+    fn quiet_gates_info_but_not_error() {
+        // note: the level is process-global; restore it to keep other
+        // tests deterministic under parallel execution
+        let before = level();
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(before);
+    }
+}

@@ -1,0 +1,42 @@
+//! Unified observability layer: structured event bus, span timelines,
+//! and a metrics registry — deterministic and virtual-clock-native,
+//! shared by all four drivers (Trainer, TraceReplayer, scenario
+//! capture, serve engine).
+//!
+//! Three pillars:
+//!
+//! 1. **Event bus** ([`event`]): typed [`Event`]s (rebalance
+//!    armed/committed/rejected with the deciding gate, bandit arm
+//!    scores and realized rewards, migration enqueue/drain byte
+//!    deltas, batcher admissions/rejections, queue depth) into a
+//!    ring-buffered [`EventSink`] with an optional streaming JSONL
+//!    writer (`--events run.events.jsonl`).  The stream is
+//!    byte-deterministic and golden-pinned
+//!    (`tests/data/trace_burst.adaptive.events.jsonl`, mirrored by
+//!    `scripts/gen_golden_traces.py --check-obs`).
+//! 2. **Span timelines** ([`span`]): hierarchical `[start, end]`
+//!    intervals on the virtual clock, one track per lane (serve
+//!    iterations, migration exposed/overlapped, comm/compute),
+//!    exported as Chrome trace-event JSON (`--spans out.json`,
+//!    Perfetto-loadable), with a converter from
+//!    `netsim::engine::Timeline`.
+//! 3. **Metrics registry** ([`report`]): counters / gauges /
+//!    histograms with exact-order-statistic quantiles scraped into an
+//!    [`ObsReport`] (`smile obs report --in run.events.jsonl`).
+//!
+//! Invariant: observability never perturbs the priced timeline — with
+//! no sink attached the drivers execute the byte-identical float
+//! sequence (property-tested in `tests/obs_golden.rs`).
+//!
+//! [`log`] is the fourth, humbler piece: leveled progress logging to
+//! stderr (`--quiet` / `SMILE_LOG`) so machine-readable stdout stays
+//! clean.
+
+pub mod event;
+pub mod log;
+pub mod report;
+pub mod span;
+
+pub use event::{parse_jsonl, Event, EventSink, SharedSink, EVENTS_VERSION};
+pub use report::ObsReport;
+pub use span::{Span, SpanTimeline};

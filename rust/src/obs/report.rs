@@ -1,0 +1,178 @@
+//! Run-level metrics registry scraped from an event stream: counters
+//! (events per kind), gauges (sampled series — queue depth), and
+//! histograms (observation series — bandit rewards, migration bytes),
+//! digested with exact order statistics ([`ExactStats`]) into an
+//! [`ObsReport`].
+//!
+//! The report is built post-hoc from retained/parsed events (the ring
+//! of a live [`EventSink`](crate::obs::EventSink) or a `--events`
+//! JSONL file via `smile obs report --in run.events.jsonl`), so the
+//! hot emitters stay write-only.
+
+use std::collections::BTreeMap;
+
+use crate::obj;
+use crate::obs::event::{parse_jsonl, Event, EVENTS_VERSION};
+use crate::util::json::Json;
+use crate::util::stats::ExactStats;
+
+/// Event kinds whose payload field is sampled as a gauge series.
+const GAUGE_FIELDS: &[(&str, &str)] = &[("queue.depth", "depth")];
+
+/// Event kinds whose payload field is recorded as a histogram.
+const HIST_FIELDS: &[(&str, &str)] =
+    &[("bandit.reward", "reward"), ("migration.enqueue", "bytes")];
+
+/// Aggregated view of one run's event stream.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsReport {
+    pub schema_version: u32,
+    /// Emitting driver from the `meta` header (`replay`/`serve`/`train`).
+    pub source: String,
+    /// Policy name from the `meta` header.
+    pub policy: String,
+    /// Total events ingested (including `meta`).
+    pub events: usize,
+    /// Events per kind.
+    pub counters: BTreeMap<String, usize>,
+    /// Sampled series (e.g. `queue.depth`): mean / peak (max) / p99
+    /// make flash-crowd onset visible without replaying the run.
+    pub gauges: BTreeMap<String, ExactStats>,
+    /// Observation series (e.g. `bandit.reward`, migration bytes).
+    pub histograms: BTreeMap<String, ExactStats>,
+}
+
+impl ObsReport {
+    pub fn from_events<'a, I: IntoIterator<Item = &'a Event>>(events: I) -> ObsReport {
+        let mut report = ObsReport { schema_version: EVENTS_VERSION, ..ObsReport::default() };
+        let mut series: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+        for ev in events {
+            report.events += 1;
+            *report.counters.entry(ev.kind.clone()).or_insert(0) += 1;
+            if ev.kind == "meta" {
+                if let Some(s) = ev.data.get("source").and_then(Json::as_str) {
+                    report.source = s.to_string();
+                }
+                if let Some(p) = ev.data.get("policy").and_then(Json::as_str) {
+                    report.policy = p.to_string();
+                }
+                if let Some(v) = ev.data.get("schema_version").and_then(Json::as_usize) {
+                    report.schema_version = v as u32;
+                }
+                continue;
+            }
+            for &(kind, field) in GAUGE_FIELDS.iter().chain(HIST_FIELDS) {
+                if ev.kind == kind {
+                    if let Some(v) = ev.data.get(field).and_then(Json::as_f64) {
+                        series.entry(kind).or_default().push(v);
+                    }
+                }
+            }
+        }
+        for (kind, samples) in series {
+            let stats = ExactStats::of(&samples);
+            if GAUGE_FIELDS.iter().any(|(k, _)| *k == kind) {
+                report.gauges.insert(kind.to_string(), stats);
+            } else {
+                report.histograms.insert(kind.to_string(), stats);
+            }
+        }
+        report
+    }
+
+    /// Build a report from a `--events` JSONL stream.
+    pub fn from_jsonl(text: &str) -> Result<ObsReport, String> {
+        let events = parse_jsonl(text)?;
+        Ok(ObsReport::from_events(events.iter()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let stats_json = |s: &ExactStats| {
+            obj! {
+                "count" => s.count,
+                "mean" => s.mean,
+                "min" => s.min,
+                "max" => s.max,
+                "p50" => s.p50,
+                "p99" => s.p99,
+            }
+        };
+        let counters: BTreeMap<String, Json> =
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::from(*v))).collect();
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|(k, s)| (k.clone(), stats_json(s))).collect();
+        let histograms: BTreeMap<String, Json> =
+            self.histograms.iter().map(|(k, s)| (k.clone(), stats_json(s))).collect();
+        obj! {
+            "schema_version" => self.schema_version as usize,
+            "source" => self.source.as_str(),
+            "policy" => self.policy.as_str(),
+            "events" => self.events,
+            "counters" => Json::Obj(counters),
+            "gauges" => Json::Obj(gauges),
+            "histograms" => Json::Obj(histograms),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventSink;
+
+    fn sample_sink() -> EventSink {
+        let mut sink = EventSink::new(64);
+        sink.meta("serve", "adaptive");
+        for (i, depth) in [0usize, 3, 9, 4].iter().enumerate() {
+            sink.set_now(i as f64 * 0.01);
+            sink.emit("queue.depth", i, obj! {"depth" => *depth});
+        }
+        sink.emit("bandit.reward", 90, obj! {"arm" => 1usize, "reward" => 0.25});
+        sink.emit("bandit.reward", 170, obj! {"arm" => 2usize, "reward" => -0.5});
+        sink.emit("rebalance.committed", 80, obj! {"arm" => 1usize});
+        sink
+    }
+
+    #[test]
+    fn report_counts_and_digests() {
+        let sink = sample_sink();
+        let r = ObsReport::from_events(sink.events());
+        assert_eq!(r.schema_version, EVENTS_VERSION);
+        assert_eq!(r.source, "serve");
+        assert_eq!(r.policy, "adaptive");
+        assert_eq!(r.events, 8);
+        assert_eq!(r.counters["queue.depth"], 4);
+        assert_eq!(r.counters["rebalance.committed"], 1);
+        let depth = &r.gauges["queue.depth"];
+        assert_eq!(depth.count, 4);
+        assert_eq!(depth.max, 9.0, "gauge peak is the series max");
+        assert_eq!(depth.p99, 9.0);
+        assert!((depth.mean - 4.0).abs() < 1e-12);
+        let reward = &r.histograms["bandit.reward"];
+        assert_eq!(reward.count, 2);
+        assert_eq!(reward.min, -0.5);
+    }
+
+    #[test]
+    fn report_round_trips_through_jsonl() {
+        let sink = sample_sink();
+        let direct = ObsReport::from_events(sink.events());
+        let parsed = ObsReport::from_jsonl(&sink.to_jsonl()).unwrap();
+        assert_eq!(direct, parsed, "ring and JSONL ingestion must agree");
+        let j = direct.to_json();
+        assert_eq!(j.get("events").and_then(Json::as_usize), Some(8));
+        assert_eq!(
+            j.at(&["gauges", "queue.depth", "max"]).and_then(Json::as_f64),
+            Some(9.0)
+        );
+        assert_eq!(j.get("policy").and_then(Json::as_str), Some("adaptive"));
+    }
+
+    #[test]
+    fn empty_stream_is_a_valid_report() {
+        let r = ObsReport::from_jsonl("").unwrap();
+        assert_eq!(r.events, 0);
+        assert!(r.gauges.is_empty());
+        assert!(ObsReport::from_jsonl("not json\n").is_err());
+    }
+}

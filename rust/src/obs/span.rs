@@ -1,0 +1,188 @@
+//! Hierarchical span timelines on the virtual clock, exported as
+//! Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! A [`Span`] is a named `[start, end]` interval on a *track*; tracks
+//! map to Chrome trace threads (one `tid` per track, in order of
+//! first appearance), so replay steps, serve iterations, and the
+//! exposed/overlapped migration streams render as parallel lanes of
+//! one timeline.
+//!
+//! Exactness contract (golden-tested): the driver records span
+//! endpoints as the *exact* virtual-clock values it advanced through
+//! — never re-derived sums — so on the primary track (`step` in
+//! replay, `iter` in serve) consecutive spans are bitwise contiguous
+//! and the final `end` equals the run's virtual-clock total
+//! bit-for-bit.  Child tracks (`comm`, `compute`, ...) subdivide an
+//! interval informationally and carry no bitwise guarantee.
+
+use crate::obj;
+use crate::util::json::Json;
+
+/// One named interval on a track of the virtual clock (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub track: String,
+    pub name: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Span {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// An append-only collection of spans, in emission order.
+#[derive(Debug, Clone, Default)]
+pub struct SpanTimeline {
+    pub spans: Vec<Span>,
+}
+
+impl SpanTimeline {
+    pub fn new() -> SpanTimeline {
+        SpanTimeline::default()
+    }
+
+    pub fn push(&mut self, track: &str, name: &str, start: f64, end: f64) {
+        self.spans.push(Span {
+            track: track.to_string(),
+            name: name.to_string(),
+            start,
+            end,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Spans of one track, emission order.
+    pub fn track<'a>(&'a self, track: &'a str) -> impl Iterator<Item = &'a Span> {
+        self.spans.iter().filter(move |s| s.track == track)
+    }
+
+    /// Track names in order of first appearance (the Chrome `tid`
+    /// assignment order).
+    pub fn tracks(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for s in &self.spans {
+            if !out.iter().any(|t| *t == s.track) {
+                out.push(&s.track);
+            }
+        }
+        out
+    }
+
+    /// Sum of durations on one track.
+    pub fn track_total(&self, track: &str) -> f64 {
+        self.track(track).map(Span::duration).sum()
+    }
+
+    /// Import a `netsim` DAG-simulation timeline: each resource
+    /// becomes a track (named when the timeline carries names), each
+    /// task span a span.
+    pub fn from_netsim(tl: &crate::netsim::Timeline) -> SpanTimeline {
+        let mut out = SpanTimeline::new();
+        for s in &tl.spans {
+            let track = match tl.resources.get(s.resource) {
+                Some(name) => name.clone(),
+                None => format!("resource {}", s.resource),
+            };
+            out.push(&track, &s.name, s.start, s.end);
+        }
+        out
+    }
+
+    /// Export as Chrome trace-event JSON: `{"traceEvents": [...]}`
+    /// with one complete (`"ph":"X"`) event per span (`ts`/`dur` in
+    /// microseconds) plus `thread_name` metadata naming each track.
+    pub fn to_chrome_trace(&self) -> Json {
+        let tracks = self.tracks();
+        let tid_of = |track: &str| tracks.iter().position(|t| *t == track).unwrap();
+        let mut events: Vec<Json> = Vec::with_capacity(tracks.len() + self.spans.len());
+        for (tid, track) in tracks.iter().enumerate() {
+            events.push(obj! {
+                "ph" => "M",
+                "name" => "thread_name",
+                "pid" => 0usize,
+                "tid" => tid,
+                "args" => obj! { "name" => *track },
+            });
+        }
+        for s in &self.spans {
+            events.push(obj! {
+                "ph" => "X",
+                "name" => s.name.as_str(),
+                "pid" => 0usize,
+                "tid" => tid_of(&s.track),
+                "ts" => s.start * 1e6,
+                "dur" => s.duration() * 1e6,
+            });
+        }
+        obj! { "traceEvents" => Json::Arr(events) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_in_first_appearance_order() {
+        let mut tl = SpanTimeline::new();
+        tl.push("iter", "iter 0", 0.0, 1.0);
+        tl.push("migration.exposed", "stall", 0.5, 0.75);
+        tl.push("iter", "iter 1", 1.0, 2.5);
+        assert_eq!(tl.tracks(), vec!["iter", "migration.exposed"]);
+        assert_eq!(tl.track("iter").count(), 2);
+        assert!((tl.track_total("iter") - 2.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chrome_export_names_tracks_and_scales_to_micros() {
+        let mut tl = SpanTimeline::new();
+        tl.push("iter", "iter 0", 0.0, 0.002);
+        tl.push("comm", "a2a", 0.0, 0.001);
+        let trace = tl.to_chrome_trace();
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 thread_name metadata + 2 spans
+        assert_eq!(events.len(), 4);
+        let metas: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(
+            metas[0].at(&["args", "name"]).and_then(Json::as_str),
+            Some("iter")
+        );
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(xs[0].get("ts").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(xs[0].get("dur").and_then(Json::as_f64), Some(2000.0));
+        assert_eq!(xs[0].get("tid").and_then(Json::as_usize), Some(0));
+        assert_eq!(xs[1].get("tid").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn netsim_import_uses_resource_names_as_tracks() {
+        let mut sim = crate::netsim::DagSim::new();
+        let gpu = sim.resource("gpu");
+        let nic = sim.resource("nic");
+        let a = sim.task("comm", nic, 5.0, &[]);
+        sim.task("compute", gpu, 3.0, &[]);
+        sim.task("combine", gpu, 1.0, &[a]);
+        let tl = SpanTimeline::from_netsim(&sim.run());
+        assert_eq!(tl.len(), 3);
+        assert_eq!(tl.track("gpu").count(), 2);
+        assert_eq!(tl.track("nic").count(), 1);
+        assert!((tl.track_total("nic") - 5.0).abs() < 1e-12);
+    }
+}

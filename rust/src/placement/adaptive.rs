@@ -35,6 +35,8 @@ use super::rebalance::{count_migrated, plan_placement, RebalanceDecision, Rebala
 use super::solver::{price_placement, PlacementMap};
 use super::stats::{LoadForecaster, LoadTracker};
 use crate::netsim::topology::ClusterSpec;
+use crate::obj;
+use crate::util::json::Json;
 
 /// Knobs of the adaptive policy (see ROADMAP.md `## adaptive`).
 #[derive(Debug, Clone)]
@@ -101,6 +103,13 @@ pub struct AdaptivePolicy {
     /// Armed consults so far (drives the exploration bonus).
     consults: usize,
     pending: Option<PendingReward>,
+    /// Decision-audit mode (`PlacementPolicy::set_audit`): when on,
+    /// every consult's gate decision, arm scores, and settled bandit
+    /// reward buffer into `audit_buf` for the pipeline to emit.
+    /// Payloads are copies of already-computed values — auditing never
+    /// changes the priced float sequence.
+    audit: bool,
+    audit_buf: Vec<(&'static str, Json)>,
 }
 
 impl AdaptivePolicy {
@@ -128,6 +137,8 @@ impl AdaptivePolicy {
             arm_mean: [0.0; NUM_ARMS],
             consults: 0,
             pending: None,
+            audit: false,
+            audit_buf: Vec::new(),
         }
     }
 
@@ -159,6 +170,17 @@ impl AdaptivePolicy {
         let reward = (before - after) * self.knobs.hops_per_step * elapsed - p.migration_secs;
         self.arm_plays[p.arm] += 1;
         self.arm_mean[p.arm] += (reward - self.arm_mean[p.arm]) / self.arm_plays[p.arm] as f64;
+        if self.audit {
+            self.audit_buf.push((
+                "bandit.reward",
+                obj! {
+                    "arm" => p.arm,
+                    "reward" => reward,
+                    "elapsed" => elapsed,
+                    "migration_secs" => p.migration_secs,
+                },
+            ));
+        }
     }
 }
 
@@ -176,11 +198,29 @@ impl PlacementPolicy for AdaptivePolicy {
         self.last_consult_step = step;
         self.settle(step);
         let base = self.tracker.fractions();
-        let fhat = self.forecaster.forecast(&base, self.cfg.horizon)?;
+        let fhat = match self.forecaster.forecast(&base, self.cfg.horizon) {
+            Some(f) => f,
+            None => {
+                if self.audit {
+                    self.audit_buf.push(("rebalance.rejected", obj! {"gate" => "forecast"}));
+                }
+                return None;
+            }
+        };
         // trigger: only arm when the forecast says the current
         // placement is (or is becoming) node-imbalanced
         let node_imb = crate::util::stats::imbalance(&self.current.node_loads(&fhat));
         if node_imb < self.knobs.trigger_imbalance {
+            if self.audit {
+                self.audit_buf.push((
+                    "rebalance.rejected",
+                    obj! {
+                        "gate" => "trigger",
+                        "node_imbalance" => node_imb,
+                        "trigger_imbalance" => self.knobs.trigger_imbalance,
+                    },
+                ));
+            }
             self.arm_plays[ARM_STAY] += 1;
             return None;
         }
@@ -211,20 +251,56 @@ impl PlacementPolicy for AdaptivePolicy {
         let root = (self.consults as f64).sqrt();
         let mut arm = ARM_STAY;
         let mut best = f64::NEG_INFINITY;
+        // side copy of each arm's UCB value for the audit record —
+        // plain stores of the already-computed v, no arithmetic change
+        let mut ucb = [0.0f64; NUM_ARMS];
         for a in 0..NUM_ARMS {
             let v = gains[a]
                 + self.arm_mean[a]
                 + self.cfg.ucb_c * scale * root / (1 + self.arm_plays[a]) as f64;
+            ucb[a] = v;
             if v > best {
                 arm = a;
                 best = v;
             }
+        }
+        if self.audit {
+            self.audit_buf.push((
+                "rebalance.armed",
+                obj! {
+                    "node_imbalance" => node_imb,
+                    "cost_stay" => cost_stay,
+                    "gains" => gains.to_vec(),
+                    "costs" => costs.to_vec(),
+                    "migrated" => migs.iter().map(|m| m.0).collect::<Vec<usize>>(),
+                    "migration_secs" => migs.iter().map(|m| m.1).collect::<Vec<f64>>(),
+                    "arm_plays" => self.arm_plays.to_vec(),
+                    "arm_mean" => self.arm_mean.to_vec(),
+                    "ucb" => ucb.to_vec(),
+                    "scale" => scale,
+                    "root" => root,
+                    "arm" => arm,
+                },
+            ));
         }
         let commit = arm != ARM_STAY
             && gains[arm] > 0.0
             && cost_stay > costs[arm] * self.cfg.min_improvement
             && cands[arm - 1] != self.current;
         if !commit {
+            if self.audit {
+                let gate = if arm == ARM_STAY {
+                    "arm_stay"
+                } else if !(gains[arm] > 0.0) {
+                    "gain"
+                } else if !(cost_stay > costs[arm] * self.cfg.min_improvement) {
+                    "min_improvement"
+                } else {
+                    "no_change"
+                };
+                self.audit_buf
+                    .push(("rebalance.rejected", obj! {"gate" => gate, "arm" => arm}));
+            }
             self.arm_plays[ARM_STAY] += 1;
             return None;
         }
@@ -239,6 +315,18 @@ impl PlacementPolicy for AdaptivePolicy {
         let comm_before = price_placement(&prev, &frac, &self.spec, self.payload).comm_total();
         let comm_after =
             price_placement(&self.current, &frac, &self.spec, self.payload).comm_total();
+        if self.audit {
+            self.audit_buf.push((
+                "rebalance.committed",
+                obj! {
+                    "arm" => arm,
+                    "migrated_replicas" => migrated,
+                    "comm_before" => comm_before,
+                    "comm_after" => comm_after,
+                    "migration_secs" => migration_secs,
+                },
+            ));
+        }
         Some(RebalanceDecision {
             step,
             placement: candidate,
@@ -282,6 +370,14 @@ impl PlacementPolicy for AdaptivePolicy {
             self.cfg.ucb_c,
             self.cfg.min_improvement
         )
+    }
+
+    fn set_audit(&mut self, enabled: bool) {
+        self.audit = enabled;
+    }
+
+    fn take_audit(&mut self) -> Vec<(&'static str, Json)> {
+        std::mem::take(&mut self.audit_buf)
     }
 }
 

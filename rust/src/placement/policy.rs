@@ -26,6 +26,9 @@ use super::rebalance::{RebalanceDecision, RebalancePolicy, Rebalancer};
 use super::solver::{price_placement, PlacementCost, PlacementMap};
 use super::stats::LoadTracker;
 use crate::netsim::topology::ClusterSpec;
+use crate::obj;
+use crate::obs::SharedSink;
+use crate::util::json::Json;
 
 /// A routing/placement strategy the [`RoutingPipeline`] consults.
 ///
@@ -56,6 +59,17 @@ pub trait PlacementPolicy: std::fmt::Debug {
     fn name(&self) -> &'static str;
     /// Human-readable label with the live knobs.
     fn describe(&self) -> String;
+    /// Turn decision-audit recording on/off.  Auditing policies buffer
+    /// one `(kind, payload)` entry per gate decision inside `consult`;
+    /// the default is a no-op so policies stay audit-free unless they
+    /// opt in (auditing must never change the priced float sequence —
+    /// payloads are copies of already-computed values).
+    fn set_audit(&mut self, _enabled: bool) {}
+    /// Drain the audit entries buffered since the last call (empty for
+    /// non-auditing policies).
+    fn take_audit(&mut self) -> Vec<(&'static str, Json)> {
+        Vec::new()
+    }
 }
 
 impl PlacementPolicy for Rebalancer {
@@ -96,6 +110,14 @@ impl PlacementPolicy for Rebalancer {
             "threshold(check_every={}, trigger_imbalance={}, hysteresis={})",
             self.policy.check_every, self.policy.trigger_imbalance, self.policy.hysteresis
         )
+    }
+
+    fn set_audit(&mut self, enabled: bool) {
+        self.audit = enabled;
+    }
+
+    fn take_audit(&mut self) -> Vec<(&'static str, Json)> {
+        std::mem::take(&mut self.audit_buf)
     }
 }
 
@@ -332,6 +354,13 @@ pub struct RoutingPipeline {
     /// Reusable f32 -> f64 widening buffer for [`RoutingPipeline::step_f32`]
     /// (the trainer calls it every optimizer step; no per-step allocation).
     widen_buf: Vec<f64>,
+    /// Attached event sink ([`RoutingPipeline::attach_obs`]); `None`
+    /// keeps the pipeline on the zero-cost path (no audit buffering,
+    /// no emission).
+    obs: Option<SharedSink>,
+    /// Step of the most recent [`RoutingPipeline::step`], so
+    /// [`RoutingPipeline::drain`] can stamp migration-drain events.
+    last_step: usize,
 }
 
 impl RoutingPipeline {
@@ -354,18 +383,65 @@ impl RoutingPipeline {
         migration: MigrationConfig,
     ) -> RoutingPipeline {
         let migration = MigrationScheduler::new(spec.inter_bw, migration);
-        RoutingPipeline { spec, payload, migration, policy, widen_buf: Vec::new() }
+        RoutingPipeline {
+            spec,
+            payload,
+            migration,
+            policy,
+            widen_buf: Vec::new(),
+            obs: None,
+            last_step: 0,
+        }
+    }
+
+    /// Attach an event sink and switch the policy into audit mode:
+    /// every gate decision inside `consult` (trigger / hysteresis /
+    /// amortization rejects, armed candidates with bandit arm scores,
+    /// commits) plus migration enqueue/drain traffic is emitted as
+    /// [`Event`](crate::obs::Event)s.
+    pub fn attach_obs(&mut self, sink: SharedSink) {
+        self.policy.set_audit(true);
+        self.obs = Some(sink);
+    }
+
+    /// Advance the attached sink's virtual clock (no-op without a
+    /// sink).  Drivers call this with their own clock before
+    /// [`RoutingPipeline::step`] so events carry the right `t`.
+    pub fn set_obs_now(&mut self, now: f64) {
+        if let Some(obs) = &self.obs {
+            obs.borrow_mut().set_now(now);
+        }
     }
 
     /// One step of the shared sequence: observe the histogram, consult
     /// the policy, enqueue any committed migration.
     pub fn step(&mut self, step: usize, loads: &[f64]) -> PipelineStepReport {
+        self.last_step = step;
         self.policy.observe(loads);
         let decision = self.policy.consult(step);
         let mut commit_stall_secs = 0.0;
+        let mut enqueue_bytes = 0.0;
         if let Some(d) = &decision {
             let bytes = d.migrated_replicas as f64 * self.policy.expert_bytes();
             commit_stall_secs = self.migration.enqueue(bytes, d.migration_secs);
+            enqueue_bytes = bytes;
+        }
+        if let Some(obs) = &self.obs {
+            let mut sink = obs.borrow_mut();
+            for (kind, data) in self.policy.take_audit() {
+                sink.emit(kind, step, data);
+            }
+            if let Some(d) = &decision {
+                sink.emit(
+                    "migration.enqueue",
+                    step,
+                    obj! {
+                        "bytes" => enqueue_bytes,
+                        "lump_secs" => d.migration_secs,
+                        "stall_secs" => commit_stall_secs,
+                    },
+                );
+            }
         }
         PipelineStepReport { decision, commit_stall_secs }
     }
@@ -385,7 +461,21 @@ impl RoutingPipeline {
     /// `window_secs` (a wall-clock step for the trainer, the priced
     /// step time for the simulators).
     pub fn drain(&mut self, window_secs: f64) -> MigrationTick {
-        self.migration.drain(window_secs)
+        let tick = self.migration.drain(window_secs);
+        if tick.drained_bytes > 0.0 {
+            if let Some(obs) = &self.obs {
+                obs.borrow_mut().emit(
+                    "migration.drain",
+                    self.last_step,
+                    obj! {
+                        "drained_bytes" => tick.drained_bytes,
+                        "overlapped_secs" => tick.overlapped_secs,
+                        "pending_bytes" => self.migration.pending_bytes(),
+                    },
+                );
+            }
+        }
+        tick
     }
 
     pub fn policy(&self) -> &dyn PlacementPolicy {

@@ -17,6 +17,8 @@ use super::replicate::{refit_weights, replicate_hottest};
 use super::solver::{price_placement, refine, solve_lpt, PlacementMap};
 use super::stats::LoadTracker;
 use crate::netsim::topology::ClusterSpec;
+use crate::obj;
+use crate::util::json::Json;
 
 /// Knobs of the rebalancing policy (see ROADMAP.md `## placement`).
 #[derive(Debug, Clone)]
@@ -153,6 +155,13 @@ pub struct Rebalancer {
     pub last_rebalance_step: Option<usize>,
     pub last_decision: Option<RebalanceDecision>,
     pub rebalances: usize,
+    /// Decision-audit mode (`PlacementPolicy::set_audit`): when on,
+    /// every gate decision in [`Rebalancer::maybe_rebalance`] buffers
+    /// one `(kind, payload)` entry into `audit_buf` for the pipeline
+    /// to emit.  Payloads are copies of already-computed values, so
+    /// auditing never changes the priced float sequence.
+    pub audit: bool,
+    pub audit_buf: Vec<(&'static str, Json)>,
 }
 
 impl Rebalancer {
@@ -175,6 +184,8 @@ impl Rebalancer {
             last_rebalance_step: None,
             last_decision: None,
             rebalances: 0,
+            audit: false,
+            audit_buf: Vec::new(),
         }
     }
 
@@ -210,11 +221,24 @@ impl Rebalancer {
         {
             return None;
         }
+        // scalar copies so audit pushes below can borrow self mutably
+        let (check_every, trigger_imbalance, hysteresis, hops_per_step) =
+            (p.check_every, p.trigger_imbalance, p.hysteresis, p.hops_per_step);
         self.last_consult_step = step;
         let frac = self.tracker.fractions();
         let node_imbalance =
             crate::util::stats::imbalance(&self.current.node_loads(&frac));
-        if node_imbalance < p.trigger_imbalance {
+        if node_imbalance < trigger_imbalance {
+            if self.audit {
+                self.audit_buf.push((
+                    "rebalance.rejected",
+                    obj! {
+                        "gate" => "trigger",
+                        "node_imbalance" => node_imbalance,
+                        "trigger_imbalance" => trigger_imbalance,
+                    },
+                ));
+            }
             return None;
         }
         let before =
@@ -222,18 +246,65 @@ impl Rebalancer {
         let candidate = self.build_candidate();
         let after =
             price_placement(&candidate, &frac, &self.spec, self.payload_per_gpu);
-        if before.comm_total() < after.comm_total() * p.hysteresis {
+        if before.comm_total() < after.comm_total() * hysteresis {
+            if self.audit {
+                self.audit_buf.push((
+                    "rebalance.rejected",
+                    obj! {
+                        "gate" => "hysteresis",
+                        "comm_before" => before.comm_total(),
+                        "comm_after" => after.comm_total(),
+                        "hysteresis" => hysteresis,
+                    },
+                ));
+            }
             return None;
         }
-        let (_, migration_secs) = self.migration_price(&candidate);
+        let (migrated, migration_secs) = self.migration_price(&candidate);
         // comm_total prices ONE dispatch hop; a step executes
         // hops_per_step of them, and the gain accrues until the next
         // policy consult
-        let gain_per_step = (before.comm_total() - after.comm_total()) * p.hops_per_step;
-        if gain_per_step * p.check_every as f64 <= migration_secs {
+        let gain_per_step = (before.comm_total() - after.comm_total()) * hops_per_step;
+        if gain_per_step * check_every as f64 <= migration_secs {
+            if self.audit {
+                self.audit_buf.push((
+                    "rebalance.rejected",
+                    obj! {
+                        "gate" => "amortization",
+                        "gain_per_step" => gain_per_step,
+                        "check_every" => check_every,
+                        "migration_secs" => migration_secs,
+                    },
+                ));
+            }
             return None;
         }
-        Some(self.commit(step, before.comm_total(), candidate, after.comm_total()))
+        if self.audit {
+            self.audit_buf.push((
+                "rebalance.armed",
+                obj! {
+                    "node_imbalance" => node_imbalance,
+                    "comm_before" => before.comm_total(),
+                    "comm_after" => after.comm_total(),
+                    "migrated_replicas" => migrated,
+                    "migration_secs" => migration_secs,
+                    "gain_per_step" => gain_per_step,
+                },
+            ));
+        }
+        let decision = self.commit(step, before.comm_total(), candidate, after.comm_total());
+        if self.audit {
+            self.audit_buf.push((
+                "rebalance.committed",
+                obj! {
+                    "migrated_replicas" => decision.migrated_replicas,
+                    "comm_before" => decision.comm_before,
+                    "comm_after" => decision.comm_after,
+                    "migration_secs" => decision.migration_secs,
+                },
+            ));
+        }
+        Some(decision)
     }
 
     /// Replica moves `candidate` requires plus their one-off transfer

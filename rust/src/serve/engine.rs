@@ -38,6 +38,8 @@ use super::metrics::{
 use super::workload::WorkloadConfig;
 use crate::moe::dispatch::{demand_histogram, PlacedPlan, Top1};
 use crate::netsim::topology::ClusterSpec;
+use crate::obj;
+use crate::obs::{SharedSink, SpanTimeline};
 use crate::placement::{
     price_placement, AdaptiveConfig, MigrationConfig, PolicyKind, RebalancePolicy,
     RoutingPipeline,
@@ -173,6 +175,34 @@ pub fn serve_with(
     adaptive: AdaptiveConfig,
     migration: MigrationConfig,
 ) -> ServeReport {
+    serve_with_obs(cfg, kind, knobs, adaptive, migration, None, None)
+}
+
+/// [`serve_with`] plus observability: an optional event sink
+/// (admissions/rejections, per-iteration queue depth, the pipeline's
+/// decision audits and migration traffic) and an optional span
+/// timeline on the virtual clock.
+///
+/// Span exactness contract (golden-tested in `tests/obs_golden.rs`):
+/// the `iter` track tiles `[0, virtual_secs]` — iteration spans store
+/// the exact clock values the loop advanced through, `idle` spans
+/// cover the arrival-gap hops — so consecutive spans are bitwise
+/// contiguous and the final `end` equals the summary's `virtual_secs`
+/// bit-for-bit.  `comm`/`compute` subdivide iterations
+/// informationally; migration exposed/overlapped are distinct tracks.
+///
+/// With both `obs` and `spans` `None` this IS `serve_with`: the priced
+/// float sequence is byte-identical (observability reads copies of
+/// already-computed values and never feeds back into the loop).
+pub fn serve_with_obs(
+    cfg: &ServeConfig,
+    kind: PolicyKind,
+    knobs: RebalancePolicy,
+    adaptive: AdaptiveConfig,
+    migration: MigrationConfig,
+    obs: Option<SharedSink>,
+    mut spans: Option<&mut SpanTimeline>,
+) -> ServeReport {
     assert!(cfg.observe_every > 0, "observe_every must be >= 1");
     let spec = cfg.spec();
     let num_experts = spec.num_gpus(); // one expert per GPU (paper shape)
@@ -184,6 +214,10 @@ pub fn serve_with(
     let policy = kind.build_with(knobs, adaptive, spec.clone(), num_experts, nominal_payload);
     let mut pipeline =
         RoutingPipeline::from_policy(policy, spec.clone(), nominal_payload, migration);
+    if let Some(o) = &obs {
+        o.borrow_mut().meta("serve", pipeline.policy().name());
+        pipeline.attach_obs(o.clone());
+    }
 
     // roofline constants (simtrain::compute): dense work is
     // data-parallel over all GPUs; expert FFN work rides the hottest
@@ -237,15 +271,37 @@ pub fn serve_with(
                 tokens_admitted += requests[rid].total_tokens();
             }
         }
+        if let Some(o) = &obs {
+            let newly_rejected = batcher.rejected.len() - before_rejected;
+            if newly_admitted > 0 || newly_rejected > 0 {
+                let mut sink = o.borrow_mut();
+                sink.set_now(now);
+                if newly_admitted > 0 {
+                    sink.emit("requests.admitted", iters, obj! {"count" => newly_admitted});
+                }
+                if newly_rejected > 0 {
+                    sink.emit("requests.rejected", iters, obj! {"count" => newly_rejected});
+                }
+            }
+        }
         if batcher.is_idle() {
             if batcher.next_arrival_index() < requests.len() {
                 // idle hop: jump the clock to the next arrival
                 let t = requests[batcher.next_arrival_index()].arrival_secs;
+                let prev = now;
                 now = if now > t { now } else { t };
+                if now > prev {
+                    if let Some(sp) = spans.as_deref_mut() {
+                        // the iter track tiles [0, virtual_secs]: idle
+                        // gaps are spans too
+                        sp.push("iter", "idle", prev, now);
+                    }
+                }
                 continue;
             }
             break;
         }
+        let iter_start = now;
 
         // 2. continuous batch under the token/size budgets
         let b_tokens = batcher.form_batch(&requests);
@@ -255,6 +311,13 @@ pub fn serve_with(
         c.queue_depth_sum += queue_depth;
         if queue_depth > c.peak_queue_depth {
             c.peak_queue_depth = queue_depth;
+        }
+        if let Some(o) = &obs {
+            let mut sink = o.borrow_mut();
+            // stamps the shared sink's clock for this iteration: the
+            // pipeline's decision/migration events below reuse it
+            sink.set_now(now);
+            sink.emit("queue.depth", iters, obj! {"depth" => queue_depth});
         }
 
         // 3. top-1 routing of every batch token over the workload mix
@@ -313,6 +376,25 @@ pub fn serve_with(
         c.total_compute_secs += compute;
         now += iter_secs;
         iters += 1;
+        if let Some(sp) = spans.as_deref_mut() {
+            // exact clock endpoints: start/end are the values `now`
+            // actually held, so the iter track is bitwise contiguous
+            sp.push("iter", &format!("iter {}", iters - 1), iter_start, now);
+            let comm_end = iter_start + comm;
+            sp.push("comm", "a2a", iter_start, comm_end);
+            sp.push("compute", "roofline", comm_end, comm_end + compute);
+            if stall > 0.0 {
+                sp.push("migration.exposed", "stall", iter_start, iter_start + stall);
+            }
+            if tick.overlapped_secs > 0.0 {
+                sp.push(
+                    "migration.overlapped",
+                    "copy",
+                    iter_start,
+                    iter_start + tick.overlapped_secs,
+                );
+            }
+        }
         let progress = batcher.apply();
         for &rid in &progress.first_tokens {
             records[rid].first_token_secs = Some(now);

@@ -37,6 +37,6 @@ pub mod metrics;
 pub mod workload;
 
 pub use batcher::{ActiveReq, BatchProgress, Batcher, BatcherConfig};
-pub use engine::{serve, serve_with, ServeConfig, ServeReport, ROUTE_SEED_XOR};
+pub use engine::{serve, serve_with, serve_with_obs, ServeConfig, ServeReport, ROUTE_SEED_XOR};
 pub use metrics::{summarize, IterStats, RequestRecord, RunCounters, ServeSummary};
 pub use workload::{Request, WorkloadConfig, WorkloadKind};

@@ -23,6 +23,7 @@
 use super::format::RoutingTrace;
 use crate::netsim::topology::ClusterSpec;
 use crate::obj;
+use crate::obs::{SharedSink, SpanTimeline};
 use crate::placement::{
     price_placement, MigrationConfig, PlacementMap, PlacementPolicy, PolicyKind, RebalancePolicy,
     RoutingPipeline,
@@ -140,6 +141,8 @@ pub struct TraceReplayer {
     total_comm_secs: f64,
     static_comm_secs: f64,
     dropped_sum: f64,
+    /// Span recording (`--spans`); `None` skips all span bookkeeping.
+    spans: Option<SpanTimeline>,
 }
 
 impl TraceReplayer {
@@ -194,12 +197,37 @@ impl TraceReplayer {
             total_comm_secs: 0.0,
             static_comm_secs: 0.0,
             dropped_sum: 0.0,
+            spans: None,
         }
+    }
+
+    /// Attach an event sink: emits the `meta` header and switches the
+    /// pipeline (and its policy) into audit mode.  Replay's virtual
+    /// clock is the accumulated priced comm time, so every event's `t`
+    /// is the clock *before* the step it belongs to.
+    pub fn attach_obs(&mut self, sink: SharedSink) {
+        sink.borrow_mut().meta("replay", self.pipeline.policy().name());
+        self.pipeline.attach_obs(sink);
+    }
+
+    /// Record spans (`step` track plus migration exposed/overlapped
+    /// tracks) on the replay virtual clock.
+    pub fn enable_spans(&mut self) {
+        self.spans = Some(SpanTimeline::new());
+    }
+
+    /// Take the recorded span timeline (empty if spans were never
+    /// enabled).
+    pub fn take_spans(&mut self) -> SpanTimeline {
+        self.spans.take().unwrap_or_default()
     }
 
     /// Replay one recorded step (the trainer's exact sequence:
     /// observe, consult, price, drain).
     pub fn step(&mut self, rec: &super::format::TraceStep) -> ReplayStepOutcome {
+        // replay's virtual clock: accumulated priced comm before this step
+        let t0 = self.total_comm_secs;
+        self.pipeline.set_obs_now(t0);
         let report = self.pipeline.step(rec.step, &rec.experts);
         let (rebalanced, migrated) = match &report.decision {
             Some(d) => {
@@ -220,6 +248,20 @@ impl TraceReplayer {
         // window (a conservative stand-in for the step's wall time,
         // which replay does not otherwise model)
         let tick = self.pipeline.drain(cost.comm_total() * hops);
+        if let Some(spans) = &mut self.spans {
+            spans.push("step", &format!("step {}", rec.step), t0, self.total_comm_secs);
+            if report.commit_stall_secs > 0.0 {
+                spans.push(
+                    "migration.exposed",
+                    "stall",
+                    t0,
+                    t0 + report.commit_stall_secs,
+                );
+            }
+            if tick.overlapped_secs > 0.0 {
+                spans.push("migration.overlapped", "copy", t0, t0 + tick.overlapped_secs);
+            }
+        }
         let out = ReplayStepOutcome {
             step: rec.step,
             expert_imbalance: self.pipeline.tracker().imbalance(),

@@ -92,6 +92,9 @@ pub struct Trainer {
     /// every optimizer step's expert/node routing fractions and drop
     /// rate land in the trace, plus any rebalance the policy commits
     pub trace_recorder: Option<TraceRecorder>,
+    /// accumulated train_call wall time — the clock `attach_obs`
+    /// stamps policy events with (the trainer's only monotone clock)
+    obs_clock: f64,
     metric_names: Vec<String>,
 }
 
@@ -124,7 +127,21 @@ impl Trainer {
             last_node_frac: Vec::new(),
             pipeline: None,
             trace_recorder: None,
+            obs_clock: 0.0,
         })
+    }
+
+    /// Attach an event sink to the policy pipeline (`smile train
+    /// --events out.jsonl`): rebalance decision audits, bandit
+    /// rewards, and migration traffic stream out stamped with the
+    /// accumulated train_call wall clock.  Call after `enable_policy`;
+    /// a no-op (sink sees only the header) when no pipeline is up.
+    pub fn attach_obs(&mut self, sink: crate::obs::SharedSink) {
+        let policy = self.pipeline.as_ref().map(|p| p.policy().name()).unwrap_or("none");
+        sink.borrow_mut().meta("train", policy);
+        if let Some(pipe) = self.pipeline.as_mut() {
+            pipe.attach_obs(sink);
+        }
     }
 
     /// Track per-expert routing fractions and consult the default
@@ -315,6 +332,7 @@ impl Trainer {
         let mut disable_pipeline = false;
         if let Some(pipe) = self.pipeline.as_mut() {
             if self.last_expert_frac.len() == pipe.tracker().num_experts() {
+                pipe.set_obs_now(self.obs_clock);
                 let report = pipe.step_f32(self.step, &self.last_expert_frac);
                 if let Some(d) = &report.decision {
                     if let Some(rec) = self.trace_recorder.as_mut() {
@@ -360,6 +378,7 @@ impl Trainer {
         if disable_pipeline {
             self.pipeline = None;
         }
+        self.obs_clock += elapsed;
         Ok(logs)
     }
 

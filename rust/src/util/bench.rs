@@ -126,9 +126,9 @@ impl Bencher {
             let _ = std::fs::create_dir_all(dir);
         }
         if let Err(e) = std::fs::write(path, arr.to_string_pretty()) {
-            eprintln!("warning: could not write {path}: {e}");
+            crate::log_warn!("could not write {path}: {e}");
         } else {
-            println!("report: {path}");
+            crate::log_info!("report: {path}");
         }
     }
 }
@@ -183,9 +183,9 @@ impl Table {
             let _ = std::fs::create_dir_all(dir);
         }
         if let Err(e) = std::fs::write(path, s) {
-            eprintln!("warning: could not write {path}: {e}");
+            crate::log_warn!("could not write {path}: {e}");
         } else {
-            println!("csv: {path}");
+            crate::log_info!("csv: {path}");
         }
     }
 }

@@ -62,6 +62,40 @@ pub fn quantile_exact(samples: &[f64], q: f64) -> f64 {
     quantile_exact_sorted(&sorted, q)
 }
 
+/// Exact-order-statistic digest over a sample series — the
+/// obs-report shape for gauges and histograms: count / mean / min /
+/// max plus p50/p99 via [`quantile_exact_sorted`], so every reported
+/// quantile is a value that actually occurred and two mirrors agree
+/// bit-for-bit.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExactStats {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+impl ExactStats {
+    pub fn of(samples: &[f64]) -> ExactStats {
+        if samples.is_empty() {
+            return ExactStats::default();
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let n = sorted.len();
+        ExactStats {
+            count: n,
+            mean: samples.iter().sum::<f64>() / n as f64,
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: quantile_exact_sorted(&sorted, 0.50),
+            p99: quantile_exact_sorted(&sorted, 0.99),
+        }
+    }
+}
+
 /// Linear-interpolated percentile over a pre-sorted slice.
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
@@ -204,6 +238,18 @@ mod tests {
         for q in [0.0, 0.3, 0.77, 1.0] {
             assert_eq!(quantile_exact_sorted(&flat, q), 5.0);
         }
+    }
+
+    #[test]
+    fn exact_stats_digest() {
+        let s = ExactStats::of(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.count, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.p50, 2.0, "p50 must be an observed order statistic");
+        assert_eq!(s.p99, 4.0);
+        assert_eq!(ExactStats::of(&[]), ExactStats::default());
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Observability golden/property tests: the event stream of the burst
+//! trace replayed under the adaptive policy is an exact byte fixture
+//! (`tests/data/trace_burst.adaptive.events.jsonl`, reproduced
+//! bit-for-bit by `scripts/gen_golden_traces.py` and gated by
+//! `scripts/ci.sh obs-golden`), and the core invariant of the whole
+//! layer is property-tested here: attaching an event sink or a span
+//! timeline never changes a single byte of any replay or serve
+//! summary.
+//!
+//! Span exactness is checked bitwise, not with tolerances: drivers
+//! record the exact virtual-clock values they advanced through, so on
+//! the primary track consecutive spans share endpoint bits and the
+//! final `end` equals the run's clock total bit-for-bit (f64 sums do
+//! not telescope, which is exactly why the contract is "store the
+//! clock", not "store durations").
+//!
+//! Re-blessing the event fixture after a deliberate emitter change:
+//!   python3 scripts/gen_golden_traces.py
+//! then review the diff (the mirror regenerates summaries too).
+
+use smile::obs::{EventSink, ObsReport, SpanTimeline};
+use smile::placement::{MigrationConfig, PolicyKind, RebalancePolicy};
+use smile::serve::{serve_with, serve_with_obs, ServeConfig, WorkloadKind};
+use smile::trace::{RoutingTrace, TraceReplayer};
+use smile::util::json::Json;
+
+fn data_path(name: &str) -> String {
+    format!("{}/tests/data/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load_trace(name: &str) -> RoutingTrace {
+    RoutingTrace::read_jsonl(data_path(&format!("{name}.jsonl"))).expect("golden trace parses")
+}
+
+/// Replay a golden trace with an attached sink (and spans), returning
+/// (sink, spans, summary).
+fn replay_instrumented(
+    name: &str,
+    kind: PolicyKind,
+) -> (EventSink, SpanTimeline, smile::trace::ReplaySummary) {
+    let trace = load_trace(name);
+    let mut replayer = TraceReplayer::with_policy(
+        &trace,
+        kind,
+        RebalancePolicy::default(),
+        MigrationConfig::default(),
+    );
+    let sink = EventSink::shared();
+    replayer.attach_obs(sink.clone());
+    replayer.enable_spans();
+    for s in &trace.steps {
+        replayer.step(s);
+    }
+    let spans = replayer.take_spans();
+    let result = replayer.finish();
+    let sink = std::rc::Rc::try_unwrap(sink).expect("sole owner").into_inner();
+    (sink, spans, result.summary)
+}
+
+fn serve_cfg(kind: WorkloadKind) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.workload.kind = kind;
+    cfg
+}
+
+#[test]
+fn golden_burst_adaptive_event_stream_is_an_exact_fixture() {
+    // the decision-audit acceptance criterion, pinned byte-for-byte:
+    // replaying the burst trace under the adaptive policy with
+    // `--events` reproduces the checked-in JSONL exactly (the Python
+    // mirror generates the same bytes independently)
+    let (sink, _, _) = replay_instrumented("trace_burst", PolicyKind::Adaptive);
+    let golden = std::fs::read_to_string(data_path("trace_burst.adaptive.events.jsonl"))
+        .expect("event fixture exists");
+    assert_eq!(
+        sink.to_jsonl(),
+        golden,
+        "burst/adaptive event stream drifted from its golden fixture.\n\
+         If this change is deliberate, re-bless with:\n  \
+         python3 scripts/gen_golden_traces.py\n\
+         and review the diff."
+    );
+    // determinism: a second instrumented replay is byte-identical
+    let (again, _, _) = replay_instrumented("trace_burst", PolicyKind::Adaptive);
+    assert_eq!(
+        again.to_jsonl(),
+        sink.to_jsonl(),
+        "two instrumented replays emit different event bytes"
+    );
+    // and every line parses back into the event it came from
+    let events = smile::obs::parse_jsonl(&golden).expect("fixture lines parse");
+    assert_eq!(events.len(), sink.len());
+    assert_eq!(events[0].kind, "meta");
+    assert_eq!(events[0].data.get("source").and_then(Json::as_str), Some("replay"));
+    assert_eq!(events[0].data.get("policy").and_then(Json::as_str), Some("adaptive"));
+}
+
+#[test]
+fn events_never_change_a_replay_summary_byte() {
+    // the zero-perturbation invariant across every golden trace and
+    // both auditing policies: summaries with and without a sink (and
+    // spans) are byte-identical
+    for name in ["trace_uniform", "trace_zipf12", "trace_burst"] {
+        for kind in [PolicyKind::Threshold, PolicyKind::Adaptive] {
+            let trace = load_trace(name);
+            let plain = TraceReplayer::replay_with(
+                &trace,
+                kind,
+                RebalancePolicy::default(),
+                MigrationConfig::default(),
+            );
+            let (_, _, instrumented) = replay_instrumented(name, kind);
+            assert_eq!(
+                instrumented.to_json().to_string_pretty(),
+                plain.summary.to_json().to_string_pretty(),
+                "{name}/{}: attaching observability changed the summary",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn events_never_change_a_serve_summary_byte() {
+    for wk in [WorkloadKind::flash_default(), WorkloadKind::Poisson] {
+        let cfg = serve_cfg(wk);
+        let plain = serve_with(
+            &cfg,
+            PolicyKind::Adaptive,
+            cfg.policy_knobs(),
+            cfg.adaptive_knobs(),
+            MigrationConfig::default(),
+        );
+        let sink = EventSink::shared();
+        let mut spans = SpanTimeline::new();
+        let instrumented = serve_with_obs(
+            &cfg,
+            PolicyKind::Adaptive,
+            cfg.policy_knobs(),
+            cfg.adaptive_knobs(),
+            MigrationConfig::default(),
+            Some(sink.clone()),
+            Some(&mut spans),
+        );
+        assert_eq!(
+            instrumented.summary.to_json().to_string_pretty(),
+            plain.summary.to_json().to_string_pretty(),
+            "{}: attaching observability changed the serve summary",
+            plain.summary.workload
+        );
+        assert!(sink.borrow().len() > 0, "instrumented serve emitted nothing");
+        assert!(!spans.is_empty(), "instrumented serve recorded no spans");
+    }
+}
+
+#[test]
+fn every_rebalance_decision_is_audited_with_its_gate_and_arm() {
+    let (sink, _, summary) = replay_instrumented("trace_burst", PolicyKind::Adaptive);
+    assert!(summary.rebalances >= 1, "fixture must rebalance");
+    let armed_steps: Vec<usize> = sink.of_kind("rebalance.armed").map(|e| e.step).collect();
+    let committed: Vec<&smile::obs::Event> = sink.of_kind("rebalance.committed").collect();
+    // every commit in the summary has a matching armed + committed
+    // event at the same step, and the committed event names its arm
+    assert_eq!(
+        committed.iter().map(|e| e.step).collect::<Vec<_>>(),
+        summary.rebalance_steps,
+        "committed events do not match the summary's rebalance steps"
+    );
+    for e in &committed {
+        assert!(
+            armed_steps.contains(&e.step),
+            "commit at step {} has no armed event",
+            e.step
+        );
+        assert!(e.data.get("arm").is_some(), "committed event names no bandit arm");
+        assert!(e.data.get("migration_secs").is_some());
+    }
+    // armed events carry the full bandit audit: per-arm gains and UCB
+    // scores (the "naming the deciding gate and arm scores" criterion)
+    for e in sink.of_kind("rebalance.armed") {
+        for key in ["arm", "gains", "ucb", "arm_plays", "arm_mean", "cost_stay"] {
+            assert!(e.data.get(key).is_some(), "armed event missing '{key}'");
+        }
+    }
+    // every rejection names a known gate
+    let gates = ["trigger", "forecast", "arm_stay", "gain", "min_improvement", "no_change"];
+    let mut rejected = 0usize;
+    for e in sink.of_kind("rebalance.rejected") {
+        let gate = e.data.get("gate").and_then(Json::as_str).expect("rejected without gate");
+        assert!(gates.contains(&gate), "unknown gate '{gate}'");
+        rejected += 1;
+    }
+    assert!(rejected >= 1, "the burst trace must also reject some consults");
+    // settled bandit rewards follow each commit (one per resolved probe)
+    assert!(
+        sink.of_kind("bandit.reward").count() >= 1,
+        "no realized bandit reward was settled"
+    );
+    // and each commit enqueued its migration bytes
+    assert_eq!(sink.of_kind("migration.enqueue").count(), summary.rebalances);
+}
+
+#[test]
+fn threshold_rejections_name_their_gates_too() {
+    let (sink, _, summary) = replay_instrumented("trace_zipf12", PolicyKind::Threshold);
+    assert!(summary.rebalances >= 1);
+    assert_eq!(
+        sink.of_kind("rebalance.committed").map(|e| e.step).collect::<Vec<_>>(),
+        summary.rebalance_steps
+    );
+    let gates = ["trigger", "hysteresis", "amortization"];
+    for e in sink.of_kind("rebalance.rejected") {
+        let gate = e.data.get("gate").and_then(Json::as_str).expect("rejected without gate");
+        assert!(gates.contains(&gate), "unknown threshold gate '{gate}'");
+    }
+}
+
+#[test]
+fn replay_spans_tile_the_comm_clock_bitwise() {
+    let (_, spans, summary) = replay_instrumented("trace_burst", PolicyKind::Adaptive);
+    let steps: Vec<&smile::obs::Span> = spans.track("step").collect();
+    assert_eq!(steps.len(), summary.steps);
+    assert_eq!(steps[0].start.to_bits(), 0.0f64.to_bits());
+    for w in steps.windows(2) {
+        assert_eq!(
+            w[0].end.to_bits(),
+            w[1].start.to_bits(),
+            "step track not bitwise contiguous at '{}'",
+            w[1].name
+        );
+    }
+    assert_eq!(
+        steps.last().unwrap().end.to_bits(),
+        summary.total_comm_secs.to_bits(),
+        "final span end != total_comm_secs bit-for-bit"
+    );
+    // commits expose migration stalls as their own track
+    assert_eq!(spans.track("migration.exposed").count(), summary.rebalances);
+}
+
+#[test]
+fn serve_spans_tile_the_virtual_clock_bitwise() {
+    // the serve acceptance criterion: per-iteration span durations
+    // account (exact f64) for the run's virtual-clock total, with
+    // migration exposed/overlapped as distinct tracks
+    let cfg = serve_cfg(WorkloadKind::flash_default());
+    let check = |migration: MigrationConfig, expect_overlap: bool| {
+        let mut spans = SpanTimeline::new();
+        let report = serve_with_obs(
+            &cfg,
+            PolicyKind::Adaptive,
+            cfg.policy_knobs(),
+            cfg.adaptive_knobs(),
+            migration,
+            None,
+            Some(&mut spans),
+        );
+        let iters: Vec<&smile::obs::Span> = spans.track("iter").collect();
+        assert!(!iters.is_empty());
+        assert_eq!(iters[0].start.to_bits(), 0.0f64.to_bits());
+        for w in iters.windows(2) {
+            assert_eq!(
+                w[0].end.to_bits(),
+                w[1].start.to_bits(),
+                "iter track not bitwise contiguous at '{}'",
+                w[1].name
+            );
+        }
+        assert_eq!(
+            iters.last().unwrap().end.to_bits(),
+            report.summary.virtual_secs.to_bits(),
+            "final iter end != virtual_secs bit-for-bit"
+        );
+        // one non-idle span per priced iteration
+        let priced = iters.iter().filter(|s| s.name != "idle").count();
+        assert_eq!(priced, report.summary.iterations);
+        let tracks = spans.tracks();
+        for t in ["iter", "comm", "compute"] {
+            assert!(tracks.contains(&t), "missing track '{t}'");
+        }
+        assert!(report.summary.rebalances >= 1, "flash fixture must rebalance");
+        if expect_overlap {
+            assert!(report.summary.migration_overlapped_secs > 0.0);
+            assert!(tracks.contains(&"migration.overlapped"), "overlap track missing");
+        } else {
+            assert!(tracks.contains(&"migration.exposed"), "exposed track missing");
+            assert!(!tracks.contains(&"migration.overlapped"));
+        }
+    };
+    check(MigrationConfig::default(), false);
+    check(MigrationConfig::overlapped(0.25), true);
+}
+
+#[test]
+fn chrome_trace_export_is_loadable_structure() {
+    let (_, spans, _) = replay_instrumented("trace_burst", PolicyKind::Adaptive);
+    let trace = spans.to_chrome_trace();
+    let events = trace.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    let metas = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+        .count();
+    let xs = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .count();
+    assert_eq!(metas, spans.tracks().len(), "one thread_name metadata per track");
+    assert_eq!(xs, spans.len(), "one complete event per span");
+    // the export round-trips through the parser (it is what --spans
+    // writes to disk)
+    let text = trace.to_string_pretty();
+    assert_eq!(Json::parse(&text).unwrap(), trace);
+}
+
+#[test]
+fn obs_report_digests_the_serve_queue_depth_series() {
+    // satellite fix: queue depth is a gauge series, not just an
+    // end-of-run peak — mean/peak/p99 come out of the report
+    let cfg = serve_cfg(WorkloadKind::flash_default());
+    let sink = EventSink::shared();
+    let report = serve_with_obs(
+        &cfg,
+        PolicyKind::Adaptive,
+        cfg.policy_knobs(),
+        cfg.adaptive_knobs(),
+        MigrationConfig::default(),
+        Some(sink.clone()),
+        None,
+    );
+    let obs = ObsReport::from_events(sink.borrow().events());
+    assert_eq!(obs.source, "serve");
+    assert_eq!(obs.policy, "adaptive");
+    let depth = obs.gauges.get("queue.depth").expect("queue.depth gauge");
+    assert_eq!(depth.count, report.summary.iterations, "one sample per priced iteration");
+    assert_eq!(
+        depth.max, report.summary.peak_queue_depth as f64,
+        "gauge peak != summary peak"
+    );
+    assert!(
+        (depth.mean - report.summary.mean_queue_depth).abs()
+            <= 1e-9 * depth.mean.abs().max(1.0),
+        "gauge mean {} far from summary mean {}",
+        depth.mean,
+        report.summary.mean_queue_depth
+    );
+    assert_eq!(obs.counters["rebalance.committed"], report.summary.rebalances);
+    let mig = obs.histograms.get("migration.enqueue").expect("migration bytes histogram");
+    assert_eq!(mig.count, report.summary.rebalances);
+    assert!(mig.min > 0.0, "a commit always moves bytes");
+    // the JSONL round trip feeds `smile obs report --in run.events.jsonl`
+    let parsed = ObsReport::from_jsonl(&sink.borrow().to_jsonl()).unwrap();
+    assert_eq!(parsed, obs);
+}

@@ -14,8 +14,14 @@
 #                              mirror (scripts/gen_golden_traces.py) and fail
 #                              on any byte drift — no Rust toolchain needed;
 #                              covers every policy fixture, including the
-#                              forecaster/bandit trace_burst.adaptive one and
-#                              the four serve_* serving summaries
+#                              forecaster/bandit trace_burst.adaptive one,
+#                              the four serve_* serving summaries, and the
+#                              obs decision-audit event stream
+#   scripts/ci.sh obs-golden   observability gate only: exact-compare the
+#                              pinned decision-audit event fixture
+#                              (trace_burst.adaptive.events.jsonl) against the
+#                              Python mirror, then (with a toolchain) run the
+#                              rust obs_golden suite
 #   scripts/ci.sh bench-json   run the placement bench and write
 #                              BENCH_placement.json at the repo root for
 #                              the perf trajectory
@@ -43,6 +49,7 @@ case "$cmd" in
     # drift in the fixtures must fail loudly with its own banner
     cargo test -q --test trace_golden
     cargo test -q --test serve_golden
+    cargo test -q --test obs_golden
     cargo fmt --check
     python3 "$repo_root/scripts/gen_golden_traces.py" --check
     ;;
@@ -59,6 +66,13 @@ case "$cmd" in
   mirror-check)
     python3 "$repo_root/scripts/gen_golden_traces.py" --check
     ;;
+  obs-golden)
+    python3 "$repo_root/scripts/gen_golden_traces.py" --check-obs
+    if [ -f "$repo_root/rust/Cargo.toml" ]; then
+      cd "$repo_root/rust"
+      cargo test -q --test obs_golden
+    fi
+    ;;
   bench-json)
     require_manifest
     cd "$repo_root/rust"
@@ -67,7 +81,7 @@ case "$cmd" in
     echo "wrote $repo_root/BENCH_placement.json"
     ;;
   *)
-    echo "usage: scripts/ci.sh [gate|trace-golden|serve-golden|mirror-check|bench-json]" >&2
+    echo "usage: scripts/ci.sh [gate|trace-golden|serve-golden|mirror-check|obs-golden|bench-json]" >&2
     exit 2
     ;;
 esac

@@ -561,6 +561,11 @@ class Rebalancer:
         self.current = PMap.block(spec, e_total)
         self.last_consult_step = 0
         self.rebalances = 0
+        # decision-audit mirror (PlacementPolicy::set_audit): buffered
+        # (kind, payload) entries the replay event stream drains —
+        # copies of already-computed values, never new arithmetic
+        self.audit = False
+        self.audit_buf = []
 
     def observe(self, loads):
         self.tracker.observe(loads)
@@ -586,18 +591,70 @@ class Rebalancer:
         frac = self.tracker.fractions()
         node_imb = imbalance(self.current.node_loads(frac))
         if node_imb < p["trigger_imbalance"]:
+            if self.audit:
+                self.audit_buf.append((
+                    "rebalance.rejected",
+                    dict(
+                        gate="trigger",
+                        node_imbalance=node_imb,
+                        trigger_imbalance=p["trigger_imbalance"],
+                    ),
+                ))
             return None
         before = price_placement(self.current, frac, self.spec, self.payload)
         candidate = plan_placement(frac, self.spec, self.payload, p)
         after = price_placement(candidate, frac, self.spec, self.payload)
         if before.comm_total() < after.comm_total() * p["hysteresis"]:
+            if self.audit:
+                self.audit_buf.append((
+                    "rebalance.rejected",
+                    dict(
+                        gate="hysteresis",
+                        comm_before=before.comm_total(),
+                        comm_after=after.comm_total(),
+                        hysteresis=p["hysteresis"],
+                    ),
+                ))
             return None
         migrated = count_migrated(self.current, candidate)
         migration_secs = float(migrated) * p["expert_bytes"] / self.spec.inter_bw
         gain_per_step = (before.comm_total() - after.comm_total()) * p["hops_per_step"]
         if gain_per_step * float(ce) <= migration_secs:
+            if self.audit:
+                self.audit_buf.append((
+                    "rebalance.rejected",
+                    dict(
+                        gate="amortization",
+                        gain_per_step=gain_per_step,
+                        check_every=ce,
+                        migration_secs=migration_secs,
+                    ),
+                ))
             return None
-        return self._commit(step, before, candidate, after, migrated, migration_secs)
+        if self.audit:
+            self.audit_buf.append((
+                "rebalance.armed",
+                dict(
+                    node_imbalance=node_imb,
+                    comm_before=before.comm_total(),
+                    comm_after=after.comm_total(),
+                    migrated_replicas=migrated,
+                    migration_secs=migration_secs,
+                    gain_per_step=gain_per_step,
+                ),
+            ))
+        d = self._commit(step, before, candidate, after, migrated, migration_secs)
+        if self.audit:
+            self.audit_buf.append((
+                "rebalance.committed",
+                dict(
+                    migrated_replicas=d["migrated_replicas"],
+                    comm_before=d["comm_before"],
+                    comm_after=d["comm_after"],
+                    migration_secs=d["migration_secs"],
+                ),
+            ))
+        return d
 
 
 class StaticBlock(Rebalancer):
@@ -710,6 +767,8 @@ class AdaptivePolicy:
         self.arm_mean = [0.0, 0.0, 0.0]
         self.consults = 0
         self.pending = None  # (arm, prev_pmap, step, migration_secs)
+        self.audit = False
+        self.audit_buf = []
 
     def observe(self, loads):
         self.tracker.observe(loads)
@@ -729,6 +788,11 @@ class AdaptivePolicy:
         reward = (before - after) * self.policy["hops_per_step"] * elapsed - mig
         self.arm_plays[arm] += 1
         self.arm_mean[arm] += (reward - self.arm_mean[arm]) / float(self.arm_plays[arm])
+        if self.audit:
+            self.audit_buf.append((
+                "bandit.reward",
+                dict(arm=arm, reward=reward, elapsed=elapsed, migration_secs=mig),
+            ))
 
     def consult(self, step):
         pe = self.cfg["probe_every"]
@@ -739,9 +803,20 @@ class AdaptivePolicy:
         base = self.tracker.fractions()
         fhat = self.fc.forecast(base, self.cfg["horizon"])
         if fhat is None:
+            if self.audit:
+                self.audit_buf.append(("rebalance.rejected", dict(gate="forecast")))
             return None
         node_imb = imbalance(self.current.node_loads(fhat))
         if node_imb < self.policy["trigger_imbalance"]:
+            if self.audit:
+                self.audit_buf.append((
+                    "rebalance.rejected",
+                    dict(
+                        gate="trigger",
+                        node_imbalance=node_imb,
+                        trigger_imbalance=self.policy["trigger_imbalance"],
+                    ),
+                ))
             self.arm_plays[0] += 1
             return None
         self.consults += 1
@@ -768,15 +843,37 @@ class AdaptivePolicy:
         root = math.sqrt(float(self.consults))
         arm = 0
         best = None
+        # side copy of each arm's UCB value for the audit record —
+        # plain stores of the already-computed v, no arithmetic change
+        ucb = [0.0, 0.0, 0.0]
         for a in range(3):
             v = (
                 gains[a]
                 + self.arm_mean[a]
                 + self.cfg["ucb_c"] * scale * root / float(1 + self.arm_plays[a])
             )
+            ucb[a] = v
             if best is None or v > best:
                 arm = a
                 best = v
+        if self.audit:
+            self.audit_buf.append((
+                "rebalance.armed",
+                dict(
+                    node_imbalance=node_imb,
+                    cost_stay=cost_stay,
+                    gains=list(gains),
+                    costs=list(costs),
+                    migrated=[m[0] for m in migs],
+                    migration_secs=[m[1] for m in migs],
+                    arm_plays=list(self.arm_plays),
+                    arm_mean=list(self.arm_mean),
+                    ucb=list(ucb),
+                    scale=scale,
+                    root=root,
+                    arm=arm,
+                ),
+            ))
         commit = (
             arm != 0
             and gains[arm] > 0.0
@@ -784,6 +881,18 @@ class AdaptivePolicy:
             and not cands[arm - 1].eq(self.current)
         )
         if not commit:
+            if self.audit:
+                if arm == 0:
+                    gate = "arm_stay"
+                elif not (gains[arm] > 0.0):
+                    gate = "gain"
+                elif not (cost_stay > costs[arm] * self.cfg["min_improvement"]):
+                    gate = "min_improvement"
+                else:
+                    gate = "no_change"
+                self.audit_buf.append(
+                    ("rebalance.rejected", dict(gate=gate, arm=arm))
+                )
             self.arm_plays[0] += 1
             return None
         migrated, migration_secs = migs[arm]
@@ -794,6 +903,17 @@ class AdaptivePolicy:
         frac = self.tracker.fractions()
         before = price_placement(prev, frac, self.spec, self.payload).comm_total()
         after = price_placement(self.current, frac, self.spec, self.payload).comm_total()
+        if self.audit:
+            self.audit_buf.append((
+                "rebalance.committed",
+                dict(
+                    arm=arm,
+                    migrated_replicas=migrated,
+                    comm_before=before,
+                    comm_after=after,
+                    migration_secs=migration_secs,
+                ),
+            ))
         return dict(
             step=step,
             migrated_replicas=migrated,
@@ -839,14 +959,15 @@ class MigrationScheduler:
         return stall
 
     def drain(self, window_secs):
+        """Returns (drained_bytes, overlapped_secs) for this window."""
         if not self.enabled() or not (self.pending_bytes > 0.0) or not (window_secs > 0.0):
-            return 0.0
+            return 0.0, 0.0
         capacity = self.overlap_frac * self.inter_bw * window_secs
         drained = min(self.pending_bytes, capacity)
         self.pending_bytes -= drained
         overlapped = drained / self.inter_bw
         self.overlapped_secs += overlapped
-        return overlapped
+        return drained, overlapped
 
 
 # ---------------------------------------------------------------------------
@@ -932,15 +1053,28 @@ def trace_jsonl(name, seed, n_nodes, gpus, steps, tokens, capacity, payload, tra
 # ---------------------------------------------------------------------------
 
 
-def replay(trace_steps, n_nodes, gpus, payload, policy, kind="threshold", overlap_frac=0.0):
+def event_line(kind, step, t, data):
+    """obs::Event::to_json().to_string() — one compact JSONL line (no
+    trailing newline); key order data/kind/step/t via sorted emission."""
+    return emit(dict(data=data, kind=kind, step=step, t=t))
+
+
+def replay(trace_steps, n_nodes, gpus, payload, policy, kind="threshold", overlap_frac=0.0, events=None):
     """trace::replay::TraceReplayer::replay_with — the RoutingPipeline
     sequence: observe -> consult -> migration-enqueue -> price ->
-    drain, per recorded step."""
+    drain, per recorded step.  When `events` is a list, mirrors the
+    obs::EventSink stream (attach_obs: meta line + per-step audit /
+    migration events stamped at the pre-step comm clock t0)."""
     spec = Spec(n_nodes, gpus)
     e_total = n_nodes * gpus
     rb = POLICY_KINDS[kind](policy, spec, e_total, payload)
     scheduler = MigrationScheduler(spec.inter_bw, overlap_frac)
     block = PMap.block(spec, e_total)
+    if events is not None:
+        rb.audit = True
+        events.append(
+            event_line("meta", 0, 0.0, dict(policy=rb.name, schema_version=1, source="replay"))
+        )
     rebalance_steps = []
     migrated_replicas = 0
     total_comm = 0.0
@@ -949,20 +1083,47 @@ def replay(trace_steps, n_nodes, gpus, payload, policy, kind="threshold", overla
     final_comm = 0.0
     timeline = []
     for rec in trace_steps:
+        t0 = total_comm
         rb.observe(rec["experts"])
         d = rb.consult(rec["step"])
         if d is not None:
             bytes_ = float(d["migrated_replicas"]) * policy["expert_bytes"]
-            scheduler.enqueue(bytes_, d["migration_secs"])
+            stall = scheduler.enqueue(bytes_, d["migration_secs"])
             rebalance_steps.append(d["step"])
             migrated_replicas += d["migrated_replicas"]
+        if events is not None:
+            for kind_, data in rb.audit_buf:
+                events.append(event_line(kind_, rec["step"], t0, data))
+            rb.audit_buf = []
+            if d is not None:
+                events.append(
+                    event_line(
+                        "migration.enqueue",
+                        rec["step"],
+                        t0,
+                        dict(bytes=bytes_, lump_secs=d["migration_secs"], stall_secs=stall),
+                    )
+                )
         cost = price_placement(rb.current, rec["experts"], spec, payload)
         static_cost = price_placement(block, rec["experts"], spec, payload)
         hops = policy["hops_per_step"]
         total_comm += cost.comm_total() * hops
         static_comm += static_cost.comm_total() * hops
         dropped_sum += rec["dropped_frac"]
-        scheduler.drain(cost.comm_total() * hops)
+        drained, overlapped = scheduler.drain(cost.comm_total() * hops)
+        if events is not None and drained > 0.0:
+            events.append(
+                event_line(
+                    "migration.drain",
+                    rec["step"],
+                    t0,
+                    dict(
+                        drained_bytes=drained,
+                        overlapped_secs=overlapped,
+                        pending_bytes=scheduler.pending_bytes,
+                    ),
+                )
+            )
         final_comm = cost.comm_total()
         timeline.append((rec["step"], cost.comm_total(), d is not None))
     frac = rb.tracker.fractions()
@@ -1483,15 +1644,54 @@ def fixture_files():
                 trace_steps, n_nodes, gpus, payload, POLICY, kind="greedy_every_check"
             )
             summaries.append((".greedy.summary.json", greedy))
+        raws = []
         if fname == "trace_burst":
             # the adaptive acceptance fixture: forecast + bandit on the
             # hot-expert burst, pinning the whole forecaster/bandit path
+            # -- with the obs event stream captured alongside (the
+            # decision-audit golden for rust/tests/obs_golden.rs)
+            events = []
             adaptive, _ = replay(
-                trace_steps, n_nodes, gpus, payload, POLICY, kind="adaptive"
+                trace_steps, n_nodes, gpus, payload, POLICY, kind="adaptive",
+                events=events,
             )
             summaries.append((".adaptive.summary.json", adaptive))
-        out.append((fname, label, text, summaries, timeline))
+            raws.append((".adaptive.events.jsonl", "\n".join(events) + "\n"))
+        out.append((fname, label, text, summaries, raws, timeline))
     return out
+
+
+def burst_adaptive_events_text():
+    """Just the obs event fixture (trace_burst under adaptive), for the
+    fast `--check-obs` CI target."""
+    n_nodes, gpus, steps, tokens, cap_factor, payload, seed = 4, 8, 200, 1024, 2.0, 1e6, 7
+    trace_steps, _ = record_scenario(
+        "burst", dict(s=0.0, hot=3, boost=8.0, start=80, end=140),
+        n_nodes, gpus, steps, tokens, cap_factor, payload, seed,
+    )
+    events = []
+    replay(trace_steps, n_nodes, gpus, payload, POLICY, kind="adaptive", events=events)
+    return "\n".join(events) + "\n"
+
+
+def check_obs(data_dir):
+    """scripts/ci.sh obs-golden: regenerate only the decision-audit
+    event stream and exact-compare the pinned fixture."""
+    fname = "trace_burst.adaptive.events.jsonl"
+    want = burst_adaptive_events_text()
+    path = os.path.join(data_dir, fname)
+    try:
+        with open(path, "r") as f:
+            got = f.read()
+    except OSError:
+        got = None
+    if got != want:
+        print(f"obs-golden FAILED — rust/tests/data/{fname} drifted from the mirror")
+        print("regenerate with: python3 scripts/gen_golden_traces.py")
+        return 1
+    n_events = want.count("\n")
+    print(f"obs-golden ok: {fname} matches the mirror ({n_events} events)")
+    return 0
 
 
 def check(data_dir):
@@ -1499,9 +1699,10 @@ def check(data_dir):
     mirror and fail on any byte drift against the checked-in files."""
     drifted = []
     checked = 0
-    for fname, label, text, summaries, _ in fixture_files():
+    for fname, label, text, summaries, raws, _ in fixture_files():
         files = [(".jsonl", text)]
         files += [(suffix, summary_pretty(s)) for suffix, s in summaries]
+        files += raws
         for suffix, want in files:
             checked += 1
             path = os.path.join(data_dir, fname + suffix)
@@ -1539,13 +1740,18 @@ def main():
     data_dir = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "data")
     if "--check" in sys.argv[1:]:
         sys.exit(check(data_dir))
+    if "--check-obs" in sys.argv[1:]:
+        sys.exit(check_obs(data_dir))
     os.makedirs(data_dir, exist_ok=True)
-    for fname, label, text, summaries, timeline in fixture_files():
+    for fname, label, text, summaries, raws, timeline in fixture_files():
         with open(os.path.join(data_dir, fname + ".jsonl"), "w") as f:
             f.write(text)
         for suffix, summary in summaries:
             with open(os.path.join(data_dir, fname + suffix), "w") as f:
                 f.write(summary_pretty(summary))
+        for suffix, raw in raws:
+            with open(os.path.join(data_dir, fname + suffix), "w") as f:
+                f.write(raw)
         print(f"== {fname} ({label}) ==")
         summary = summaries[0][1]
         for k in sorted(summary):
