@@ -20,6 +20,7 @@ fn main() {
         capacity_factor: 2.0,
         payload_per_gpu: 1e6,
         seed: 7,
+        top_k: 1,
     };
 
     println!("=== trace record / serialize / replay: 32 experts, 200 steps, Zipf(1.2) ===");

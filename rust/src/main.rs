@@ -109,9 +109,9 @@ const COMMANDS: &[CommandSpec] = &[
         run: cmd_trace,
         usage: "record --scenario uniform|zipf|burst --out p.jsonl [--nodes N] [--gpus M] [--steps S]\n\
                        [--tokens T] [--seed X] [--skew S] [--hot E] [--boost B] [--burst-start A] [--burst-end Z]\n\
-                       [--cap-factor F] [--rebalance] [--policy <POLICIES>]\n\
+                       [--cap-factor F] [--top-k K] [--rebalance] [--policy <POLICIES>]\n\
                 replay --in p.jsonl [--policy <POLICIES>] [--migration-overlap F]\n\
-                       [--check-every N] [--trigger-imbalance I] [--hysteresis H]\n\
+                       [--check-every N] [--trigger-imbalance I] [--hysteresis H] [--coact-weight W]\n\
                        [adaptive knobs: --window W --horizon H --probe-every N --ucb-c C --min-improvement R]\n\
                        [--timeline p.csv] [--summary p.json] [--events p.events.jsonl] [--spans p.spans.json]\n\
                 summarize --in p.jsonl [same policy overrides as replay] [--out p.summary.json] [--bless]",
@@ -135,7 +135,7 @@ const COMMANDS: &[CommandSpec] = &[
                 [--bytes-per-token F] [--iter-overhead F] [--hysteresis H]\n\
                 [--spike-mult F --spike-start F --spike-end F --hot E --boost F] [--amp F --period F]\n\
                 [--check-every N] [--trigger-imbalance I] [--min-improvement R] [--observe-every N]\n\
-                [--min-observe-tokens N] [--migration-overlap F] [adaptive knobs as in trace replay]\n\
+                [--min-observe-tokens N] [--top-k K] [--migration-overlap F] [adaptive knobs as in trace replay]\n\
                 [--timeline p.csv] [--summary p.json] [--bless]\n\
                 [--events p.events.jsonl] [--spans p.spans.json]\n\
                 request-driven serving simulation: continuous batching over a seeded workload with\n\
@@ -562,6 +562,8 @@ fn trace_policy_of(args: &Args) -> RebalancePolicy {
     p.trigger_imbalance =
         args.f64("trigger-imbalance", args.f64("trigger", p.trigger_imbalance));
     p.hysteresis = args.f64("hysteresis", p.hysteresis);
+    // 0 disables the co-location term (affinity-blind decision pricing)
+    p.coact_weight = args.f64("coact-weight", p.coact_weight);
     p
 }
 
@@ -689,6 +691,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
                 capacity_factor: args.f64("cap-factor", 2.0),
                 payload_per_gpu: args.f64("payload", 1e6),
                 seed: args.u64("seed", 7),
+                top_k: args.usize("top-k", 1),
             };
             // `--rebalance` runs the default threshold policy live;
             // `--policy <kind>` picks any registered policy (and
@@ -1019,7 +1022,12 @@ fn serve_config_of(args: &Args) -> Result<ServeConfig> {
     cfg.min_improvement = args.f64("min-improvement", cfg.min_improvement);
     cfg.observe_every = args.usize("observe-every", cfg.observe_every);
     cfg.min_observe_tokens = args.usize("min-observe-tokens", cfg.min_observe_tokens);
+    cfg.top_k = args.usize("top-k", cfg.top_k);
     anyhow::ensure!(cfg.observe_every >= 1, "--observe-every must be >= 1");
+    anyhow::ensure!(
+        cfg.top_k.max(1) <= cfg.n_nodes.max(1) * cfg.gpus_per_node.max(1),
+        "--top-k must not exceed the expert count"
+    );
     anyhow::ensure!(
         cfg.workload.prompt_max > cfg.workload.prompt_min
             && cfg.workload.output_max > cfg.workload.output_min,

@@ -65,6 +65,8 @@ pub struct DispatchPlan {
     pub assignment: Vec<Assignment>,
     /// tokens_of[e][slot] = token index
     pub tokens_of: Vec<Vec<usize>>,
+    /// Pre-capacity demand per expert (chosen counts, drops included).
+    pub demand: Vec<usize>,
 }
 
 impl DispatchPlan {
@@ -72,11 +74,13 @@ impl DispatchPlan {
     /// L2 cumsum builds exactly this).
     pub fn build(choices: &[Top1], num_experts: usize, capacity: usize) -> DispatchPlan {
         let mut tokens_of: Vec<Vec<usize>> = vec![Vec::new(); num_experts];
+        let mut demand = vec![0usize; num_experts];
         let assignment = choices
             .iter()
             .enumerate()
             .map(|(t, c)| {
                 debug_assert!(c.expert < num_experts);
+                demand[c.expert] += 1;
                 if tokens_of[c.expert].len() < capacity {
                     tokens_of[c.expert].push(t);
                     Assignment::Slot(c.expert, tokens_of[c.expert].len() - 1)
@@ -85,7 +89,7 @@ impl DispatchPlan {
                 }
             })
             .collect();
-        DispatchPlan { num_experts, capacity, assignment, tokens_of }
+        DispatchPlan { num_experts, capacity, assignment, tokens_of, demand }
     }
 
     pub fn num_tokens(&self) -> usize {
@@ -105,17 +109,14 @@ impl DispatchPlan {
     }
 
     /// Fraction of tokens dispatched to each expert (the f_i of Eq. 4).
+    ///
+    /// Fractions count *chosen* experts (argmax), drops included —
+    /// matching the L2 lb_loss definition.  Counting kept slots
+    /// instead would under-report exactly the over-capacity experts
+    /// that most need rebalancing (regression-tested below).
     pub fn dispatch_fractions(&self) -> Vec<f64> {
         let t = self.num_tokens().max(1) as f64;
-        // fractions count *chosen* experts (argmax), drops included —
-        // matching the L2 lb_loss definition.
-        let mut f = vec![0.0; self.num_experts];
-        for a in &self.assignment {
-            if let Assignment::Slot(e, _) = a {
-                f[*e] += 1.0 / t;
-            }
-        }
-        f
+        self.demand.iter().map(|&d| d as f64 / t).collect()
     }
 
     /// Invert the plan: for each expert slot, the destination token.
@@ -130,6 +131,199 @@ impl DispatchPlan {
         }
         out
     }
+}
+
+/// Per-token top-k routing choices, stored flat with stride `k` (row
+/// `t` occupies `choices[t*k .. (t+1)*k]`), picks in descending gate
+/// order with distinct experts per row.  `k == 1` is exactly the
+/// [`top1_rows`] output shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopKRows {
+    pub k: usize,
+    pub choices: Vec<Top1>,
+}
+
+impl TopKRows {
+    /// Wrap pre-sampled choices (the scenario recorder / serve engine
+    /// path, where picks come from an RNG instead of a gate matrix).
+    pub fn from_choices(k: usize, choices: Vec<Top1>) -> TopKRows {
+        assert!(k >= 1, "top-k needs k >= 1");
+        assert!(choices.len() % k == 0, "choices not [T,{k}]");
+        TopKRows { k, choices }
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.choices.len() / self.k
+    }
+
+    /// Token `t`'s `k` picks, descending gate.
+    pub fn row(&self, t: usize) -> &[Top1] {
+        &self.choices[t * self.k..(t + 1) * self.k]
+    }
+}
+
+/// Top-k argmax over each row of a [T, E] probability matrix: `k`
+/// distinct experts per row in descending gate order.
+///
+/// Same contract as [`top1_rows`], extended per pick: ties break to
+/// the FIRST maximal index (strict `>` never displaces an earlier
+/// winner), NaN gates are skipped entirely, and a pick with only NaN
+/// candidates left falls back to the first not-yet-picked expert with
+/// gate 0.0 — rows always hold `k` distinct experts, so downstream
+/// plans stay well-formed.  `topk_rows(probs, e, 1)` agrees with
+/// [`top1_rows`] bit-for-bit.
+pub fn topk_rows(probs: &[f32], e: usize, k: usize) -> TopKRows {
+    assert!(k >= 1 && k <= e, "top-k needs 1 <= k <= num_experts, got k={k}, e={e}");
+    assert!(probs.len() % e == 0, "probs not [T,{e}]");
+    let mut choices = Vec::with_capacity(probs.len() / e * k);
+    let mut taken = vec![false; e];
+    for row in probs.chunks_exact(e) {
+        for t in taken.iter_mut() {
+            *t = false;
+        }
+        for _ in 0..k {
+            let mut best: Option<(usize, f32)> = None;
+            for (i, &p) in row.iter().enumerate() {
+                if taken[i] || p.is_nan() {
+                    continue;
+                }
+                match best {
+                    Some((_, gate)) if p <= gate => {}
+                    _ => best = Some((i, p)),
+                }
+            }
+            let (expert, gate) = best.unwrap_or_else(|| {
+                // every remaining gate is NaN: first untaken expert,
+                // gate 0.0 (cf. the top1_rows all-NaN fallback)
+                (taken.iter().position(|&t| !t).expect("k <= e"), 0.0)
+            });
+            taken[expert] = true;
+            choices.push(Top1 { expert, gate });
+        }
+    }
+    TopKRows { k, choices }
+}
+
+/// A top-k dispatch plan: per-expert capacity shared across choices (a
+/// capacity slot is a slot no matter which choice rank filled it),
+/// slot assignment deterministic in token order then choice order
+/// within a token.  `k == 1` degenerates to [`DispatchPlan`]'s
+/// policy exactly.
+#[derive(Debug, Clone)]
+pub struct TopKPlan {
+    pub k: usize,
+    pub num_experts: usize,
+    pub capacity: usize,
+    /// assignment[t*k + c] — token `t`'s choice `c`.
+    pub assignment: Vec<Assignment>,
+    /// gates[t*k + c] — the routing gate of (token, choice); dropped
+    /// choices keep their gate (the residual path needs it).
+    pub gates: Vec<f32>,
+    /// tokens_of[e][slot] = (token, choice)
+    pub tokens_of: Vec<Vec<(usize, usize)>>,
+    /// Pre-capacity demand per expert (each choice counts).
+    pub demand: Vec<usize>,
+}
+
+impl TopKPlan {
+    pub fn build(rows: &TopKRows, num_experts: usize, capacity: usize) -> TopKPlan {
+        let k = rows.k;
+        let mut tokens_of: Vec<Vec<(usize, usize)>> = vec![Vec::new(); num_experts];
+        let mut demand = vec![0usize; num_experts];
+        let mut gates = Vec::with_capacity(rows.choices.len());
+        let assignment = rows
+            .choices
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                debug_assert!(c.expert < num_experts);
+                let (t, choice) = (i / k, i % k);
+                demand[c.expert] += 1;
+                gates.push(c.gate);
+                if tokens_of[c.expert].len() < capacity {
+                    tokens_of[c.expert].push((t, choice));
+                    Assignment::Slot(c.expert, tokens_of[c.expert].len() - 1)
+                } else {
+                    Assignment::Dropped
+                }
+            })
+            .collect();
+        TopKPlan { k, num_experts, capacity, assignment, gates, tokens_of, demand }
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.assignment.len() / self.k
+    }
+
+    /// Dropped (token, choice) pairs — a token survives as long as any
+    /// of its choices kept a slot.
+    pub fn dropped(&self) -> usize {
+        self.assignment.iter().filter(|a| matches!(a, Assignment::Dropped)).count()
+    }
+
+    pub fn loads(&self) -> Vec<usize> {
+        self.tokens_of.iter().map(Vec::len).collect()
+    }
+
+    /// Fraction of (token, choice) dispatches per expert — chosen
+    /// counts, drops included, normalized by `T * k` so the fractions
+    /// sum to 1 (the f_i of Eq. 4 extended to k > 1).
+    pub fn dispatch_fractions(&self) -> Vec<f64> {
+        let t = (self.num_tokens() * self.k).max(1) as f64;
+        self.demand.iter().map(|&d| d as f64 / t).collect()
+    }
+
+    /// Gate-weighted combine order: `(expert, slot, token, choice,
+    /// gate)` for every kept (token, choice).  Conservation contract
+    /// (property-tested): each kept (token, choice) is combined
+    /// exactly once, and a token's output is the gate-weighted sum
+    /// over its kept choices.
+    pub fn combine_order(&self) -> Vec<(usize, usize, usize, usize, f32)> {
+        let mut out = Vec::new();
+        for (e, toks) in self.tokens_of.iter().enumerate() {
+            for (slot, &(t, c)) in toks.iter().enumerate() {
+                out.push((e, slot, t, c, self.gates[t * self.k + c]));
+            }
+        }
+        out
+    }
+}
+
+/// Same-token expert co-activation counts from top-k rows: one count
+/// per unordered expert pair (`i < j`) appearing within one token's
+/// choice set, summed over tokens.  Sorted by `(i, j)`; empty for
+/// `k == 1`.  This is the trace schema's `pairs` payload and the
+/// signal `placement::LoadTracker::observe_pairs` folds.
+pub fn same_token_pairs(rows: &TopKRows, num_experts: usize) -> Vec<(usize, usize, f64)> {
+    if rows.k < 2 {
+        return Vec::new();
+    }
+    let e = num_experts;
+    let mut m = vec![0.0f64; e * e];
+    for t in 0..rows.num_tokens() {
+        let row = rows.row(t);
+        for a in 0..rows.k {
+            for b in (a + 1)..rows.k {
+                let (i, j) = (row[a].expert, row[b].expert);
+                debug_assert!(i < e && j < e);
+                if i == j {
+                    continue;
+                }
+                let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+                m[lo * e + hi] += 1.0;
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for i in 0..e {
+        for j in (i + 1)..e {
+            let c = m[i * e + j];
+            if c > 0.0 {
+                out.push((i, j, c));
+            }
+        }
+    }
+    out
 }
 
 /// A bi-level (SMILE) dispatch plan: token -> node i (inter router, n
@@ -210,13 +404,33 @@ impl PlacedPlan {
             (0..map.num_experts()).map(|e| vec![0usize; map.gpus_of(e).len()]).collect();
         let mut gpu_counts = vec![0usize; spec.num_gpus()];
         let mut node_counts = vec![0usize; spec.n_nodes];
+        let mut warned_empty = false;
+        let mut warned_zero = false;
         let gpu_of_token = flat
             .assignment
             .iter()
             .map(|a| match a {
                 Assignment::Slot(e, _) => {
+                    // Degenerate maps (validate() would reject them)
+                    // must not panic or route silently: no replicas
+                    // falls back to the expert's block-home GPU, and
+                    // all-non-positive weights fall back to replica 0
+                    // — deterministic either way, warned once.
+                    let gpus = map.gpus_of(*e);
+                    if gpus.is_empty() {
+                        if !warned_empty {
+                            warned_empty = true;
+                            crate::log_warn!(
+                                "PlacedPlan: expert {e} has no replicas; routing to its block-home GPU"
+                            );
+                        }
+                        let g = *e % spec.num_gpus();
+                        gpu_counts[g] += 1;
+                        node_counts[spec.node_of(g)] += 1;
+                        return Some(g);
+                    }
                     let ws = map.weights_of(*e);
-                    let mut best = 0usize;
+                    let mut best: Option<usize> = None;
                     let mut best_score = f64::INFINITY;
                     for (r, &w) in ws.iter().enumerate() {
                         if w <= 0.0 {
@@ -225,11 +439,20 @@ impl PlacedPlan {
                         let score = (sent[*e][r] + 1) as f64 / w;
                         if score < best_score {
                             best_score = score;
-                            best = r;
+                            best = Some(r);
                         }
                     }
+                    let best = best.unwrap_or_else(|| {
+                        if !warned_zero {
+                            warned_zero = true;
+                            crate::log_warn!(
+                                "PlacedPlan: expert {e} has no positive replica weight; using replica 0"
+                            );
+                        }
+                        0
+                    });
                     sent[*e][best] += 1;
-                    let g = map.gpus_of(*e)[best];
+                    let g = gpus[best];
                     gpu_counts[g] += 1;
                     node_counts[spec.node_of(g)] += 1;
                     Some(g)
@@ -491,5 +714,141 @@ mod tests {
             let (i, j) = expert_coords(&spec, e);
             assert_eq!(i * 8 + j, e);
         }
+    }
+
+    #[test]
+    fn dispatch_fractions_count_chosen_experts_drops_included() {
+        // expert 0 is chosen 3 times but capacity clips it to 2: the
+        // lb_loss f_i must still be 0.75 (demand), not 0.5 (kept) —
+        // the kept-slot definition under-reports exactly the
+        // over-capacity expert that most needs rebalancing
+        let choices: Vec<Top1> =
+            [0, 0, 0, 1].iter().map(|&e| Top1 { expert: e, gate: 1.0 }).collect();
+        let plan = DispatchPlan::build(&choices, 2, 2);
+        assert_eq!(plan.dropped(), 1);
+        assert_eq!(plan.kept_histogram(), vec![2.0, 1.0]);
+        assert_eq!(plan.dispatch_fractions(), vec![0.75, 0.25]);
+        assert!((plan.dispatch_fractions().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn placed_plan_survives_expert_with_no_replicas() {
+        let spec = ClusterSpec::test(2, 2);
+        let mut map = crate::placement::PlacementMap::block(&spec, 4);
+        map.replicas[2].clear();
+        map.weights[2].clear();
+        assert!(map.validate(&spec).is_err(), "degenerate map should not validate");
+        let choices: Vec<Top1> =
+            (0..8).map(|t| Top1 { expert: t % 4, gate: 1.0 }).collect();
+        let plan = PlacedPlan::build(&choices, &map, &spec, 8);
+        // expert 2's tokens land on its block-home GPU instead of panicking
+        for (t, g) in plan.gpu_of_token.iter().enumerate() {
+            if let Assignment::Slot(2, _) = plan.flat.assignment[t] {
+                assert_eq!(*g, Some(2));
+            }
+        }
+        assert_eq!(plan.gpu_counts.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn placed_plan_zero_weight_replicas_fall_back_to_replica_zero() {
+        let spec = ClusterSpec::test(2, 1);
+        let mut map = crate::placement::PlacementMap::block(&spec, 2);
+        map.replicas[0] = vec![0, 1];
+        map.weights[0] = vec![0.0, 0.0];
+        let choices: Vec<Top1> =
+            (0..10).map(|_| Top1 { expert: 0, gate: 1.0 }).collect();
+        let plan = PlacedPlan::build(&choices, &map, &spec, 10);
+        // all-zero weights: deterministic replica 0, never a crash or
+        // an arbitrary pick
+        assert_eq!(plan.gpu_counts, vec![10, 0]);
+    }
+
+    #[test]
+    fn topk_rows_k1_matches_top1_rows() {
+        let nan = f32::NAN;
+        let probs = [0.1f32, 0.7, 0.2, 0.4, 0.4, 0.2, nan, nan, nan, nan, 0.2, 0.6];
+        let rows = topk_rows(&probs, 3, 1);
+        assert_eq!(rows.choices, top1_rows(&probs, 3));
+    }
+
+    #[test]
+    fn topk_rows_picks_distinct_experts_in_gate_order() {
+        let probs = [0.1f32, 0.7, 0.2, 0.4, 0.4, 0.3];
+        let rows = topk_rows(&probs, 3, 2);
+        assert_eq!(rows.row(0), &[Top1 { expert: 1, gate: 0.7 }, Top1 { expert: 2, gate: 0.2 }]);
+        // ties break to the first index for BOTH picks
+        assert_eq!(rows.row(1), &[Top1 { expert: 0, gate: 0.4 }, Top1 { expert: 1, gate: 0.4 }]);
+    }
+
+    #[test]
+    fn topk_rows_nan_handling_keeps_rows_distinct() {
+        let nan = f32::NAN;
+        // second pick must skip the NaN and take the real runner-up
+        let rows = topk_rows(&[nan, 0.9, 0.5], 3, 2);
+        assert_eq!(rows.row(0), &[Top1 { expert: 1, gate: 0.9 }, Top1 { expert: 2, gate: 0.5 }]);
+        // all-NaN row: fallback picks remain distinct (experts 0, 1)
+        let rows = topk_rows(&[nan, nan, nan], 3, 2);
+        assert_eq!(rows.row(0), &[Top1 { expert: 0, gate: 0.0 }, Top1 { expert: 1, gate: 0.0 }]);
+    }
+
+    #[test]
+    fn topk_plan_capacity_demand_and_fractions() {
+        // tokens: (0,1) (0,2) (0,1) — expert 0 demanded 3x, capacity 2
+        let rows = TopKRows::from_choices(
+            2,
+            [(0, 0.6), (1, 0.4), (0, 0.7), (2, 0.3), (0, 0.8), (1, 0.2)]
+                .iter()
+                .map(|&(e, g)| Top1 { expert: e, gate: g })
+                .collect(),
+        );
+        let plan = TopKPlan::build(&rows, 3, 2);
+        assert_eq!(plan.num_tokens(), 3);
+        assert_eq!(plan.demand, vec![3, 2, 1]);
+        assert_eq!(plan.loads(), vec![2, 2, 1]);
+        assert_eq!(plan.dropped(), 1);
+        assert_eq!(plan.assignment[4], Assignment::Dropped, "token 2's first choice clipped");
+        // fractions are demand / (T*k), drops included, summing to 1
+        assert_eq!(plan.dispatch_fractions(), vec![0.5, 2.0 / 6.0, 1.0 / 6.0]);
+    }
+
+    #[test]
+    fn topk_combine_is_gate_weighted_and_conserving() {
+        let mut rng = Rng::new(17);
+        let mut choices = Vec::new();
+        for _ in 0..100 {
+            let a = (rng.f64() * 8.0) as usize % 8;
+            let b = (a + 1 + (rng.f64() * 7.0) as usize % 7) % 8;
+            choices.push(Top1 { expert: a, gate: 0.6 });
+            choices.push(Top1 { expert: b, gate: 0.4 });
+        }
+        let rows = TopKRows::from_choices(2, choices);
+        let plan = TopKPlan::build(&rows, 8, 20);
+        let mut seen = vec![false; 100 * 2];
+        for (e, slot, t, c, gate) in plan.combine_order() {
+            assert_eq!(plan.tokens_of[e][slot], (t, c));
+            assert_eq!(gate, plan.gates[t * 2 + c]);
+            assert!(!seen[t * 2 + c], "(token {t}, choice {c}) combined twice");
+            seen[t * 2 + c] = true;
+        }
+        let kept = seen.iter().filter(|&&s| s).count();
+        assert_eq!(kept, 200 - plan.dropped());
+    }
+
+    #[test]
+    fn same_token_pairs_counts_unordered_within_token() {
+        // tokens: (0,2) (2,0) (1,3) — pair (0,2) twice regardless of order
+        let rows = TopKRows::from_choices(
+            2,
+            [0, 2, 2, 0, 1, 3].iter().map(|&e| Top1 { expert: e, gate: 0.5 }).collect(),
+        );
+        let pairs = same_token_pairs(&rows, 4);
+        assert_eq!(pairs, vec![(0, 2, 2.0), (1, 3, 1.0)]);
+        // k == 1 has no same-token pairs by construction
+        let solo = TopKRows::from_choices(
+            1,
+            [0, 2, 1].iter().map(|&e| Top1 { expert: e, gate: 1.0 }).collect(),
+        );
+        assert!(same_token_pairs(&solo, 4).is_empty());
     }
 }

@@ -4,6 +4,6 @@
 pub mod dispatch;
 
 pub use dispatch::{
-    a2a_payload_bytes, routing_stats, top1_rows, Assignment, BiLevelPlan, DispatchPlan,
-    PlacedPlan, RoutingStats, Top1,
+    a2a_payload_bytes, routing_stats, same_token_pairs, top1_rows, topk_rows, Assignment,
+    BiLevelPlan, DispatchPlan, PlacedPlan, RoutingStats, Top1, TopKPlan, TopKRows,
 };

@@ -31,8 +31,10 @@
 //! line-for-line by `scripts/gen_golden_traces.py`.
 
 use super::policy::PlacementPolicy;
-use super::rebalance::{count_migrated, plan_placement, RebalanceDecision, RebalancePolicy};
-use super::solver::{price_placement, PlacementMap};
+use super::rebalance::{
+    count_migrated, plan_placement_coact, RebalanceDecision, RebalancePolicy,
+};
+use super::solver::{price_placement_coact, PlacementMap};
 use super::stats::{LoadForecaster, LoadTracker};
 use crate::netsim::topology::ClusterSpec;
 use crate::obj;
@@ -165,8 +167,13 @@ impl AdaptivePolicy {
             return;
         }
         let frac = self.tracker.fractions();
-        let before = price_placement(&p.prev, &frac, &self.spec, self.payload).comm_total();
-        let after = price_placement(&self.current, &frac, &self.spec, self.payload).comm_total();
+        let (coact, w) = (self.tracker.coactivation(), self.knobs.coact_weight);
+        let before =
+            price_placement_coact(&p.prev, &frac, &self.spec, self.payload, coact, w)
+                .comm_total();
+        let after =
+            price_placement_coact(&self.current, &frac, &self.spec, self.payload, coact, w)
+                .comm_total();
         let reward = (before - after) * self.knobs.hops_per_step * elapsed - p.migration_secs;
         self.arm_plays[p.arm] += 1;
         self.arm_mean[p.arm] += (reward - self.arm_mean[p.arm]) / self.arm_plays[p.arm] as f64;
@@ -188,6 +195,12 @@ impl PlacementPolicy for AdaptivePolicy {
     fn observe(&mut self, loads: &[f64]) {
         self.tracker.observe(loads);
         self.forecaster.observe(loads);
+    }
+
+    fn observe_pairs(&mut self, pairs: &[(usize, usize, f64)]) {
+        // affinity is an EWMA concern only: the forecaster's trend
+        // window stays per-expert (pairs have no per-step trend model)
+        self.tracker.observe_pairs(pairs);
     }
 
     fn consult(&mut self, step: usize) -> Option<RebalanceDecision> {
@@ -225,12 +238,14 @@ impl PlacementPolicy for AdaptivePolicy {
             return None;
         }
         self.consults += 1;
+        let (coact, cw) = (self.tracker.coactivation(), self.knobs.coact_weight);
         let cost_stay =
-            price_placement(&self.current, &fhat, &self.spec, self.payload).comm_total();
+            price_placement_coact(&self.current, &fhat, &self.spec, self.payload, coact, cw)
+                .comm_total();
         let noreps = RebalancePolicy { top_k_replicate: 0, ..self.knobs.clone() };
         let cands = [
-            plan_placement(&fhat, &self.spec, self.payload, &noreps),
-            plan_placement(&fhat, &self.spec, self.payload, &self.knobs),
+            plan_placement_coact(&fhat, &self.spec, self.payload, &noreps, coact),
+            plan_placement_coact(&fhat, &self.spec, self.payload, &self.knobs, coact),
         ];
         // score: forecast comm gain over the horizon, net of migration
         let mut gains = [0.0f64; NUM_ARMS];
@@ -238,7 +253,8 @@ impl PlacementPolicy for AdaptivePolicy {
         let mut migs = [(0usize, 0.0f64); NUM_ARMS];
         for (i, cand) in cands.iter().enumerate() {
             let arm = i + 1;
-            let c = price_placement(cand, &fhat, &self.spec, self.payload).comm_total();
+            let c = price_placement_coact(cand, &fhat, &self.spec, self.payload, coact, cw)
+                .comm_total();
             let migrated = count_migrated(&self.current, cand);
             let mig_secs = migrated as f64 * self.knobs.expert_bytes / self.spec.inter_bw;
             gains[arm] =
@@ -312,9 +328,13 @@ impl PlacementPolicy for AdaptivePolicy {
         // decision pricing is under the *tracked* loads, like every
         // other policy's decision record
         let frac = self.tracker.fractions();
-        let comm_before = price_placement(&prev, &frac, &self.spec, self.payload).comm_total();
+        let (coact, cw) = (self.tracker.coactivation(), self.knobs.coact_weight);
+        let comm_before =
+            price_placement_coact(&prev, &frac, &self.spec, self.payload, coact, cw)
+                .comm_total();
         let comm_after =
-            price_placement(&self.current, &frac, &self.spec, self.payload).comm_total();
+            price_placement_coact(&self.current, &frac, &self.spec, self.payload, coact, cw)
+                .comm_total();
         if self.audit {
             self.audit_buf.push((
                 "rebalance.committed",

@@ -45,8 +45,12 @@ pub use policy::{
     StaticBlock,
 };
 pub use rebalance::{
-    count_migrated, plan_placement, RebalanceDecision, RebalancePolicy, Rebalancer,
+    count_migrated, plan_placement, plan_placement_coact, RebalanceDecision,
+    RebalancePolicy, Rebalancer,
 };
 pub use replicate::{refit_weights, replicate_hottest, water_fill};
-pub use solver::{price_placement, refine, solve_lpt, PlacementCost, PlacementMap};
+pub use solver::{
+    price_placement, price_placement_coact, refine, refine_coact, solve_lpt,
+    PlacementCost, PlacementMap,
+};
 pub use stats::{zipf_fractions, ForecastFeatures, LoadForecaster, LoadTracker};

@@ -23,7 +23,7 @@
 use super::adaptive::{AdaptiveConfig, AdaptivePolicy};
 use super::migration::{MigrationConfig, MigrationScheduler, MigrationTick};
 use super::rebalance::{RebalanceDecision, RebalancePolicy, Rebalancer};
-use super::solver::{price_placement, PlacementCost, PlacementMap};
+use super::solver::{price_placement_coact, PlacementCost, PlacementMap};
 use super::stats::LoadTracker;
 use crate::netsim::topology::ClusterSpec;
 use crate::obj;
@@ -42,6 +42,12 @@ use crate::util::json::Json;
 pub trait PlacementPolicy: std::fmt::Debug {
     /// Fold one step's per-expert load histogram.
     fn observe(&mut self, loads: &[f64]);
+    /// Fold one step's same-token expert co-activation counts
+    /// (`moe::dispatch::same_token_pairs` output) into the policy's
+    /// affinity picture.  Default: no-op, so pure top-1 drivers and
+    /// policies that ignore pairwise structure need no changes — the
+    /// trait surface every driver consults stays unchanged.
+    fn observe_pairs(&mut self, _pairs: &[(usize, usize, f64)]) {}
     /// Consult at `step`; commit and return a decision when the
     /// policy's gates pass.
     fn consult(&mut self, step: usize) -> Option<RebalanceDecision>;
@@ -75,6 +81,10 @@ pub trait PlacementPolicy: std::fmt::Debug {
 impl PlacementPolicy for Rebalancer {
     fn observe(&mut self, loads: &[f64]) {
         self.tracker.observe(loads);
+    }
+
+    fn observe_pairs(&mut self, pairs: &[(usize, usize, f64)]) {
+        self.tracker.observe_pairs(pairs);
     }
 
     fn consult(&mut self, step: usize) -> Option<RebalanceDecision> {
@@ -144,6 +154,12 @@ impl PlacementPolicy for StaticBlock {
         self.tracker.observe(loads);
     }
 
+    fn observe_pairs(&mut self, pairs: &[(usize, usize, f64)]) {
+        // the frozen baseline never acts on affinity, but tracking it
+        // keeps its physical pricing comparable to live policies
+        self.tracker.observe_pairs(pairs);
+    }
+
     fn consult(&mut self, _step: usize) -> Option<RebalanceDecision> {
         None
     }
@@ -201,6 +217,10 @@ impl PlacementPolicy for GreedyEveryCheck {
         self.inner.tracker.observe(loads);
     }
 
+    fn observe_pairs(&mut self, pairs: &[(usize, usize, f64)]) {
+        self.inner.tracker.observe_pairs(pairs);
+    }
+
     fn consult(&mut self, step: usize) -> Option<RebalanceDecision> {
         let rb = &mut self.inner;
         let p = &rb.policy;
@@ -208,11 +228,26 @@ impl PlacementPolicy for GreedyEveryCheck {
         if p.check_every == 0 || step / p.check_every == rb.last_consult_step / p.check_every {
             return None;
         }
+        let coact_weight = p.coact_weight;
         rb.last_consult_step = step;
         let frac = rb.tracker.fractions();
-        let before = price_placement(&rb.current, &frac, &rb.spec, rb.payload_per_gpu);
+        let before = price_placement_coact(
+            &rb.current,
+            &frac,
+            &rb.spec,
+            rb.payload_per_gpu,
+            rb.tracker.coactivation(),
+            coact_weight,
+        );
         let candidate = rb.build_candidate();
-        let after = price_placement(&candidate, &frac, &rb.spec, rb.payload_per_gpu);
+        let after = price_placement_coact(
+            &candidate,
+            &frac,
+            &rb.spec,
+            rb.payload_per_gpu,
+            rb.tracker.coactivation(),
+            coact_weight,
+        );
         // the only gate: a strict priced improvement
         if !(after.comm_total() < before.comm_total()) {
             return None;
@@ -446,6 +481,21 @@ impl RoutingPipeline {
         PipelineStepReport { decision, commit_stall_secs }
     }
 
+    /// [`RoutingPipeline::step`] preceded by folding the step's
+    /// same-token co-activation pairs into the policy — the top-k
+    /// driver entry point.  An empty `pairs` slice (all top-1 traffic)
+    /// is a strict no-op before the plain step, so the two entry
+    /// points agree bit-for-bit on k = 1.
+    pub fn step_with_pairs(
+        &mut self,
+        step: usize,
+        loads: &[f64],
+        pairs: &[(usize, usize, f64)],
+    ) -> PipelineStepReport {
+        self.policy.observe_pairs(pairs);
+        self.step(step, loads)
+    }
+
     /// The trainer's f32 routing metrics, widened losslessly into a
     /// reused buffer (this runs every optimizer step).
     pub fn step_f32(&mut self, step: usize, loads: &[f32]) -> PipelineStepReport {
@@ -502,9 +552,23 @@ impl RoutingPipeline {
         self.policy.expert_bytes()
     }
 
-    /// Price one dispatch hop of the live placement under `experts`.
+    /// Price one dispatch hop of the live placement under `experts` —
+    /// the *physical* accounting every driver bills against.  Once
+    /// top-k traffic has populated the tracked co-activation matrix,
+    /// split pairs are always priced at full weight here regardless of
+    /// the policy's `coact_weight` knob: an affinity-blind policy pays
+    /// the same physical cost for splitting a hot pair as an aware one
+    /// — it just doesn't *optimize* for it.  With an empty matrix
+    /// (top-1) this is exactly `price_placement`.
     pub fn price(&self, experts: &[f64]) -> PlacementCost {
-        price_placement(self.policy.placement(), experts, &self.spec, self.payload)
+        price_placement_coact(
+            self.policy.placement(),
+            experts,
+            &self.spec,
+            self.payload,
+            self.policy.tracker().coactivation(),
+            1.0,
+        )
     }
 
     /// Node-level imbalance of the live placement under the tracked
@@ -682,6 +746,41 @@ mod tests {
         let lump: f64 =
             legacy.last_decision.as_ref().map(|d| d.migration_secs).unwrap_or(0.0);
         assert!(pipe.migration.exposed_secs() >= lump);
+    }
+
+    #[test]
+    fn step_with_pairs_empty_is_step_and_real_pairs_reach_the_tracker() {
+        let spec = ClusterSpec::p4d(2);
+        let e = spec.num_gpus();
+        let mk = || {
+            RoutingPipeline::new(
+                PolicyKind::Threshold,
+                RebalancePolicy::default(),
+                spec.clone(),
+                e,
+                1e6,
+                MigrationConfig::default(),
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let frac = zipf_fractions(e, 1.2);
+        for step in 0..120 {
+            let ra = a.step_with_pairs(step, &frac, &[]);
+            let rb = b.step(step, &frac);
+            assert_eq!(ra.decision.is_some(), rb.decision.is_some(), "step {step}");
+        }
+        assert_eq!(a.placement(), b.placement());
+        assert_eq!(a.rebalances(), b.rebalances());
+        assert!(
+            a.tracker().coactivation().is_empty(),
+            "empty pairs must never allocate the matrix"
+        );
+        // and the priced hop agrees bitwise while the matrix is empty
+        let (ca, cb) = (a.price(&frac), b.price(&frac));
+        assert_eq!(ca.inter_time.to_bits(), cb.inter_time.to_bits());
+        // real pairs land in the policy's tracker
+        a.step_with_pairs(121, &frac, &[(0, 1, 4.0)]);
+        assert!(!a.tracker().coactivation().is_empty());
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //!      weights over the inter-node fabric.
 
 use super::replicate::{refit_weights, replicate_hottest};
-use super::solver::{price_placement, refine, solve_lpt, PlacementMap};
+use super::solver::{price_placement_coact, refine_coact, solve_lpt, PlacementMap};
 use super::stats::LoadTracker;
 use crate::netsim::topology::ClusterSpec;
 use crate::obj;
@@ -49,6 +49,12 @@ pub struct RebalancePolicy {
     pub hops_per_step: f64,
     /// EWMA coefficient of the load tracker.
     pub ewma_alpha: f64,
+    /// Weight of the co-location term when pricing candidates under a
+    /// tracked co-activation matrix (`price_placement_coact`); 0
+    /// makes every decision affinity-blind.  Inert under pure top-1
+    /// traffic — the matrix stays empty and pricing is bit-identical
+    /// to `price_placement` regardless of this knob.
+    pub coact_weight: f64,
 }
 
 impl Default for RebalancePolicy {
@@ -66,6 +72,7 @@ impl Default for RebalancePolicy {
             // 3.7B paper config: 4 hops x 6 MoE layers x 1 micro-step
             hops_per_step: 24.0,
             ewma_alpha: 0.2,
+            coact_weight: 1.0,
         }
     }
 }
@@ -99,6 +106,24 @@ pub fn plan_placement(
     payload_per_gpu: f64,
     policy: &RebalancePolicy,
 ) -> PlacementMap {
+    plan_placement_coact(expert_frac, spec, payload_per_gpu, policy, &[])
+}
+
+/// [`plan_placement`] under the co-location objective: the refinement
+/// pass and the never-worse-than-block fallback judge candidates with
+/// [`price_placement_coact`], so experts that fire together (the
+/// tracked co-activation matrix from top-k traffic) are pulled onto
+/// one node when the split-pair tax outweighs the balance loss.  An
+/// empty matrix (or `coact_weight == 0`) reproduces [`plan_placement`]
+/// bit-for-bit.
+pub fn plan_placement_coact(
+    expert_frac: &[f64],
+    spec: &ClusterSpec,
+    payload_per_gpu: f64,
+    policy: &RebalancePolicy,
+    coact: &[f64],
+) -> PlacementMap {
+    let w = policy.coact_weight;
     let mut map = solve_lpt(expert_frac, spec);
     replicate_hottest(
         &mut map,
@@ -108,11 +133,21 @@ pub fn plan_placement(
         policy.max_replicas,
         policy.hot_threshold,
     );
-    refine(&mut map, expert_frac, spec, payload_per_gpu, policy.max_refine_swaps);
+    refine_coact(
+        &mut map,
+        expert_frac,
+        spec,
+        payload_per_gpu,
+        policy.max_refine_swaps,
+        coact,
+        w,
+    );
     refit_weights(&mut map, expert_frac);
     let block = PlacementMap::block(spec, expert_frac.len());
-    let planned_cost = price_placement(&map, expert_frac, spec, payload_per_gpu);
-    let block_cost = price_placement(&block, expert_frac, spec, payload_per_gpu);
+    let planned_cost =
+        price_placement_coact(&map, expert_frac, spec, payload_per_gpu, coact, w);
+    let block_cost =
+        price_placement_coact(&block, expert_frac, spec, payload_per_gpu, coact, w);
     if planned_cost.comm_total() > block_cost.comm_total()
         || planned_cost.compute_scale > block_cost.compute_scale
     {
@@ -199,9 +234,17 @@ impl Rebalancer {
         self.tracker.observe_f32(loads);
     }
 
-    /// Candidate placement from the tracked loads (does not commit).
+    /// Candidate placement from the tracked loads — and, once top-k
+    /// traffic has populated it, the tracked co-activation matrix
+    /// (does not commit).
     pub fn build_candidate(&self) -> PlacementMap {
-        plan_placement(&self.tracker.fractions(), &self.spec, self.payload_per_gpu, &self.policy)
+        plan_placement_coact(
+            &self.tracker.fractions(),
+            &self.spec,
+            self.payload_per_gpu,
+            &self.policy,
+            self.tracker.coactivation(),
+        )
     }
 
     /// Consult the policy at `step`; commit and return the decision if
@@ -222,8 +265,13 @@ impl Rebalancer {
             return None;
         }
         // scalar copies so audit pushes below can borrow self mutably
-        let (check_every, trigger_imbalance, hysteresis, hops_per_step) =
-            (p.check_every, p.trigger_imbalance, p.hysteresis, p.hops_per_step);
+        let (check_every, trigger_imbalance, hysteresis, hops_per_step, coact_weight) = (
+            p.check_every,
+            p.trigger_imbalance,
+            p.hysteresis,
+            p.hops_per_step,
+            p.coact_weight,
+        );
         self.last_consult_step = step;
         let frac = self.tracker.fractions();
         let node_imbalance =
@@ -241,11 +289,23 @@ impl Rebalancer {
             }
             return None;
         }
-        let before =
-            price_placement(&self.current, &frac, &self.spec, self.payload_per_gpu);
+        let before = price_placement_coact(
+            &self.current,
+            &frac,
+            &self.spec,
+            self.payload_per_gpu,
+            self.tracker.coactivation(),
+            coact_weight,
+        );
         let candidate = self.build_candidate();
-        let after =
-            price_placement(&candidate, &frac, &self.spec, self.payload_per_gpu);
+        let after = price_placement_coact(
+            &candidate,
+            &frac,
+            &self.spec,
+            self.payload_per_gpu,
+            self.tracker.coactivation(),
+            coact_weight,
+        );
         if before.comm_total() < after.comm_total() * hysteresis {
             if self.audit {
                 self.audit_buf.push((
@@ -344,6 +404,7 @@ impl Rebalancer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::placement::solver::price_placement;
     use crate::placement::stats::zipf_fractions;
 
     fn skewed_rebalancer() -> Rebalancer {
@@ -448,6 +509,19 @@ mod tests {
         rb.policy.expert_bytes = 1e18;
         assert!(rb.maybe_rebalance(50).is_none());
         assert_eq!(rb.rebalances, 0);
+    }
+
+    #[test]
+    fn plan_placement_coact_with_empty_matrix_is_the_plain_plan() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let frac = zipf_fractions(e, 1.2);
+        let policy = RebalancePolicy::default();
+        assert_eq!(
+            plan_placement_coact(&frac, &spec, 1e6, &policy, &[]),
+            plan_placement(&frac, &spec, 1e6, &policy),
+            "empty co-activation matrix must not move the plan"
+        );
     }
 
     #[test]

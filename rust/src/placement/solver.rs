@@ -300,6 +300,52 @@ pub fn price_placement(
     }
 }
 
+/// [`price_placement`] plus a co-location term: every same-token
+/// expert pair `{i, j}` whose *primary* replicas live on different
+/// nodes adds its tracked co-activation fraction (see
+/// `LoadTracker::observe_pairs`) worth of cross-node token traffic to
+/// the inter hop — a top-2 token with split experts crosses the wire
+/// twice where a co-located pair pays once.
+///
+/// `coact` is the E x E row-major matrix (only the `i < j` upper
+/// triangle is read); `coact_weight` scales the term (0 = affinity
+/// blind).  With an empty matrix, a zero weight, or a single node the
+/// result is **bit-identical** to [`price_placement`] — top-1 callers
+/// and goldens never observe this function exists.
+pub fn price_placement_coact(
+    map: &PlacementMap,
+    expert_frac: &[f64],
+    spec: &ClusterSpec,
+    payload_per_gpu: f64,
+    coact: &[f64],
+    coact_weight: f64,
+) -> PlacementCost {
+    let mut cost = price_placement(map, expert_frac, spec, payload_per_gpu);
+    if coact.is_empty() || coact_weight == 0.0 || spec.n_nodes <= 1 {
+        return cost;
+    }
+    let e = expert_frac.len();
+    assert_eq!(coact.len(), e * e, "co-activation matrix arity mismatch");
+    let mut pair_inter = 0.0;
+    for i in 0..e {
+        let node_i = spec.node_of(map.primary(i));
+        for j in (i + 1)..e {
+            let c = coact[i * e + j];
+            if c > 0.0 && spec.node_of(map.primary(j)) != node_i {
+                pair_inter += c;
+            }
+        }
+    }
+    if pair_inter > 0.0 {
+        // priced like the skew term: the split-pair traffic fraction
+        // worth of one node's per-hop bytes on the inter fabric
+        cost.inter_time +=
+            coact_weight * pair_inter * spec.gpus_per_node as f64 * payload_per_gpu
+                / spec.inter_bw;
+    }
+    cost
+}
+
 /// Greedy LPT packer, topology-aware: experts in decreasing load order
 /// each go to the least-loaded *node*, then the least-loaded GPU on it,
 /// subject to the `slots_per_gpu` memory budget.  With one expert per
@@ -354,7 +400,40 @@ pub fn refine(
     payload_per_gpu: f64,
     max_swaps: usize,
 ) -> usize {
-    let mut cur = price_placement(map, expert_frac, spec, payload_per_gpu).comm_total();
+    refine_with(map, expert_frac, max_swaps, |m| {
+        price_placement(m, expert_frac, spec, payload_per_gpu)
+    })
+}
+
+/// [`refine`] under the co-location objective of
+/// [`price_placement_coact`]: swaps are judged by skew cost *plus* the
+/// weighted split-pair term, so a swap that unites a frequently
+/// co-activated pair on one node can win even when per-node loads stay
+/// put.  Delegation keeps the empty-matrix case bit-identical to
+/// [`refine`].
+pub fn refine_coact(
+    map: &mut PlacementMap,
+    expert_frac: &[f64],
+    spec: &ClusterSpec,
+    payload_per_gpu: f64,
+    max_swaps: usize,
+    coact: &[f64],
+    coact_weight: f64,
+) -> usize {
+    refine_with(map, expert_frac, max_swaps, |m| {
+        price_placement_coact(m, expert_frac, spec, payload_per_gpu, coact, coact_weight)
+    })
+}
+
+/// The swap loop shared by [`refine`] and [`refine_coact`], generic
+/// over the pricing objective.
+fn refine_with<F: Fn(&PlacementMap) -> PlacementCost>(
+    map: &mut PlacementMap,
+    expert_frac: &[f64],
+    max_swaps: usize,
+    price: F,
+) -> usize {
+    let mut cur = price(map).comm_total();
     let mut applied = 0;
     for _ in 0..max_swaps {
         let node = map.node_loads(expert_frac);
@@ -385,8 +464,7 @@ pub fn refine(
                 let (ga, gb) = (map.replicas[a][0], map.replicas[b][0]);
                 map.replicas[a][0] = gb;
                 map.replicas[b][0] = ga;
-                let cost =
-                    price_placement(map, expert_frac, spec, payload_per_gpu).comm_total();
+                let cost = price(map).comm_total();
                 map.replicas[a][0] = ga;
                 map.replicas[b][0] = gb;
                 if cost < cur * (1.0 - 1e-9) && best.map_or(true, |(c, _, _)| cost < c) {
@@ -503,6 +581,94 @@ mod tests {
         assert!(swaps > 0, "refine found nothing to fix");
         assert!(after < before, "{after} >= {before}");
         assert!(bad.validate(&spec).is_ok());
+    }
+
+    #[test]
+    fn coact_price_delegates_bit_identically_when_inert() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let map = PlacementMap::block(&spec, e);
+        let frac = zipf_fractions(e, 1.2);
+        let base = price_placement(&map, &frac, &spec, 1e6);
+        let mut coact = vec![0.0; e * e];
+        coact[0 * e + 1] = 0.5;
+        coact[1 * e + 0] = 0.5;
+        for c in [
+            price_placement_coact(&map, &frac, &spec, 1e6, &[], 1.0),
+            price_placement_coact(&map, &frac, &spec, 1e6, &coact, 0.0),
+        ] {
+            assert_eq!(c.inter_time.to_bits(), base.inter_time.to_bits());
+            assert_eq!(c.intra_time.to_bits(), base.intra_time.to_bits());
+            assert_eq!(c.compute_scale.to_bits(), base.compute_scale.to_bits());
+        }
+        // single node: no inter fabric for split pairs to tax
+        let one = ClusterSpec::test(1, 4);
+        let m1 = PlacementMap::block(&one, 4);
+        let f1 = zipf_fractions(4, 1.0);
+        let mut c1 = vec![0.0; 16];
+        c1[0 * 4 + 1] = 1.0;
+        c1[1 * 4 + 0] = 1.0;
+        let a = price_placement(&m1, &f1, &one, 1e6);
+        let b = price_placement_coact(&m1, &f1, &one, 1e6, &c1, 1.0);
+        assert_eq!(a.inter_time.to_bits(), b.inter_time.to_bits());
+    }
+
+    #[test]
+    fn coact_price_taxes_split_pairs_only() {
+        let spec = ClusterSpec::test(2, 2);
+        let frac = zipf_fractions(4, 0.0);
+        let e = 4;
+        let mut coact = vec![0.0; e * e];
+        coact[0 * e + 1] = 0.6;
+        coact[1 * e + 0] = 0.6;
+        // block: experts 0,1 share node 0 -> co-located, no tax
+        let together = PlacementMap::block(&spec, e);
+        let t = price_placement_coact(&together, &frac, &spec, 1e6, &coact, 1.0);
+        let t0 = price_placement(&together, &frac, &spec, 1e6);
+        assert_eq!(t.inter_time.to_bits(), t0.inter_time.to_bits());
+        // swap experts 1 and 2: the pair now straddles nodes
+        let mut apart = PlacementMap::block(&spec, e);
+        apart.replicas[1] = vec![2];
+        apart.replicas[2] = vec![1];
+        let a = price_placement_coact(&apart, &frac, &spec, 1e6, &coact, 1.0);
+        let a0 = price_placement(&apart, &frac, &spec, 1e6);
+        assert!(a.inter_time > a0.inter_time, "split pair was not taxed");
+        // and the tax is exactly the documented term
+        let term = 1.0 * 0.6 * spec.gpus_per_node as f64 * 1e6 / spec.inter_bw;
+        assert!((a.inter_time - a0.inter_time - term).abs() < term * 1e-9);
+    }
+
+    #[test]
+    fn refine_coact_unites_a_hot_pair() {
+        let spec = ClusterSpec::test(2, 2);
+        let e = 4;
+        // near-uniform load (so the skew term is almost inert; a tiny
+        // tilt keeps hot != cold and the swap loop alive) while
+        // experts 0 and 2 fire together constantly but live apart —
+        // the pair tax (0.9 of a hop) dwarfs any balance micro-gain
+        let frac = [0.26, 0.25, 0.25, 0.24];
+        let mut coact = vec![0.0; e * e];
+        coact[0 * e + 2] = 0.9;
+        coact[2 * e + 0] = 0.9;
+        let mut map = PlacementMap::block(&spec, e);
+        let before =
+            price_placement_coact(&map, &frac, &spec, 1e6, &coact, 1.0).comm_total();
+        let swaps = refine_coact(&mut map, &frac, &spec, 1e6, 16, &coact, 1.0);
+        let after =
+            price_placement_coact(&map, &frac, &spec, 1e6, &coact, 1.0).comm_total();
+        assert!(swaps > 0, "refine_coact saw no win in a split hot pair");
+        assert!(after < before);
+        assert_eq!(
+            spec.node_of(map.primary(0)),
+            spec.node_of(map.primary(2)),
+            "hot pair still split: {:?}",
+            map.replicas
+        );
+        assert!(map.validate(&spec).is_ok());
+        // affinity-blind refine on a perfectly uniform load: nothing
+        // to fix (hot == cold), pairs stay invisible
+        let mut blind = PlacementMap::block(&spec, e);
+        assert_eq!(refine(&mut blind, &zipf_fractions(e, 0.0), &spec, 1e6, 16), 0);
     }
 
     #[test]

@@ -16,6 +16,11 @@ pub struct LoadTracker {
     alpha: f64,
     ewma: Vec<f64>,
     steps: usize,
+    /// EWMA co-activation matrix (E x E, row-major), symmetric with an
+    /// all-zero diagonal.  Empty until the first `observe_pairs` —
+    /// top-1 traffic never allocates it, so k = 1 paths stay exactly
+    /// as cheap (and as deterministic) as before top-k existed.
+    coact: Vec<f64>,
 }
 
 impl LoadTracker {
@@ -27,6 +32,7 @@ impl LoadTracker {
             alpha,
             ewma: vec![1.0 / num_experts as f64; num_experts],
             steps: 0,
+            coact: Vec::new(),
         }
     }
 
@@ -70,6 +76,47 @@ impl LoadTracker {
             *e = (1.0 - self.alpha) * *e + self.alpha * (l as f64 / total);
         }
         self.steps += 1;
+    }
+
+    /// Fold one step's same-token expert co-activation counts (the
+    /// `moe::dispatch::same_token_pairs` output: unordered `(i, j,
+    /// count)` with `i < j`) into the EWMA co-activation matrix.
+    ///
+    /// Counts are normalized by their step total first, so the matrix
+    /// tracks *fractions* of same-token pairs: every row sums to at
+    /// most 1 (each pair contributes to two rows, but a row only sees
+    /// the pairs that touch its expert).  An empty or degenerate
+    /// (all-zero / non-finite) step is skipped through the same gate
+    /// as [`LoadTracker::observe`], leaving the matrix untouched.
+    pub fn observe_pairs(&mut self, pairs: &[(usize, usize, f64)]) {
+        let mut total = 0.0;
+        for &(_, _, c) in pairs {
+            total += c;
+        }
+        if !(total > 0.0) || !total.is_finite() {
+            return;
+        }
+        let e = self.num_experts;
+        if self.coact.is_empty() {
+            self.coact = vec![0.0; e * e];
+        }
+        for c in self.coact.iter_mut() {
+            *c *= 1.0 - self.alpha;
+        }
+        for &(i, j, cnt) in pairs {
+            assert!(i < j && j < e, "pair ({i}, {j}) not i < j < {e}");
+            let v = self.alpha * (cnt / total);
+            self.coact[i * e + j] += v;
+            self.coact[j * e + i] += v;
+        }
+    }
+
+    /// The EWMA co-activation matrix (E x E row-major), or an empty
+    /// slice when no pair data has ever been observed (pure top-1
+    /// traffic).  Symmetric by construction; `coact[i*E + j]` is the
+    /// smoothed fraction of same-token pairs that were `{i, j}`.
+    pub fn coactivation(&self) -> &[f64] {
+        &self.coact
     }
 
     /// Observe pre-capacity routing *demand*: every token's chosen
@@ -355,6 +402,64 @@ mod tests {
         c.observe_f32(&[f32::NAN, 1.0]);
         c.observe_f32(&[0.0, 0.0]);
         assert_eq!(c.steps(), 0);
+    }
+
+    #[test]
+    fn coactivation_starts_empty_and_stays_symmetric() {
+        let mut t = LoadTracker::new(4, 0.5);
+        assert!(t.coactivation().is_empty(), "no pairs -> no matrix");
+        t.observe_pairs(&[(0, 2, 3.0), (1, 3, 1.0)]);
+        let m = t.coactivation();
+        assert_eq!(m.len(), 16);
+        for i in 0..4 {
+            assert_eq!(m[i * 4 + i], 0.0, "diagonal must stay zero");
+            for j in 0..4 {
+                assert_eq!(m[i * 4 + j].to_bits(), m[j * 4 + i].to_bits(), "asymmetric at ({i},{j})");
+            }
+        }
+        // alpha 0.5, totals 4: pair (0,2) holds 0.5 * 3/4
+        assert!((m[0 * 4 + 2] - 0.375).abs() < 1e-12);
+        assert!((m[1 * 4 + 3] - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coactivation_rows_stay_bounded_and_decay() {
+        let mut t = LoadTracker::new(3, 0.3);
+        for step in 0..50 {
+            // alternate which pair dominates so rows see churn
+            let pairs = if step % 2 == 0 {
+                vec![(0usize, 1usize, 5.0), (1, 2, 1.0)]
+            } else {
+                vec![(0, 2, 4.0)]
+            };
+            t.observe_pairs(&pairs);
+            let m = t.coactivation();
+            for i in 0..3 {
+                let row: f64 = (0..3).map(|j| m[i * 3 + j]).sum();
+                assert!(row <= 1.0 + 1e-9, "row {i} sum {row} > 1 at step {step}");
+                assert!(row >= 0.0);
+            }
+        }
+        // pairs the traffic stopped feeding decay toward zero
+        let before = t.coactivation()[0 * 3 + 1];
+        for _ in 0..20 {
+            t.observe_pairs(&[(0, 2, 1.0)]);
+        }
+        assert!(t.coactivation()[0 * 3 + 1] < before);
+    }
+
+    #[test]
+    fn coactivation_skips_degenerate_steps() {
+        let mut t = LoadTracker::new(3, 0.5);
+        t.observe_pairs(&[]);
+        t.observe_pairs(&[(0, 1, 0.0)]);
+        t.observe_pairs(&[(0, 1, f64::NAN)]);
+        t.observe_pairs(&[(0, 1, f64::INFINITY)]);
+        assert!(t.coactivation().is_empty(), "degenerate steps must not allocate");
+        t.observe_pairs(&[(0, 1, 2.0)]);
+        let snap = t.coactivation().to_vec();
+        t.observe_pairs(&[(0, 1, f64::NAN)]);
+        assert_eq!(t.coactivation(), &snap[..], "degenerate step moved the matrix");
     }
 
     #[test]

@@ -88,6 +88,11 @@ pub struct ServeConfig {
     /// sparse warm-up/drain windows keep accumulating instead of
     /// feeding the forecaster noise.
     pub min_observe_tokens: usize,
+    /// Experts chosen per batch token (1 = classic top-1 serving; 2+
+    /// draws distinct experts per token and feeds same-token
+    /// co-activation pairs to the placement policy).  Values below 1
+    /// are treated as 1.
+    pub top_k: usize,
 }
 
 impl Default for ServeConfig {
@@ -108,6 +113,7 @@ impl Default for ServeConfig {
             min_improvement: 1.1,
             observe_every: 10,
             min_observe_tokens: 1024,
+            top_k: 1,
         }
     }
 }
@@ -206,6 +212,8 @@ pub fn serve_with_obs(
     assert!(cfg.observe_every > 0, "observe_every must be >= 1");
     let spec = cfg.spec();
     let num_experts = spec.num_gpus(); // one expert per GPU (paper shape)
+    let k = cfg.top_k.max(1);
+    assert!(k <= num_experts, "top_k {k} > {num_experts} experts");
     let g = spec.num_gpus() as f64;
     let requests = cfg.workload.generate();
     let mut route_rng = Rng::new(cfg.workload.seed ^ ROUTE_SEED_XOR);
@@ -247,6 +255,10 @@ pub fn serve_with_obs(
     let mut now = 0.0f64;
     let mut iters = 0usize;
     let mut accum = vec![0.0f64; num_experts];
+    // same-token co-activation counts since the last observation,
+    // dense E x E upper triangle (allocated only under top-k routing)
+    let mut pair_accum: Vec<f64> =
+        if k > 1 { vec![0.0; num_experts * num_experts] } else { Vec::new() };
     let mut accum_tokens = 0usize;
     let mut c = RunCounters::default();
     let mut tokens_admitted = 0usize;
@@ -320,11 +332,36 @@ pub fn serve_with_obs(
             sink.emit("queue.depth", iters, obj! {"depth" => queue_depth});
         }
 
-        // 3. top-1 routing of every batch token over the workload mix
+        // 3. route every batch token over the workload mix: top-1
+        // draws one expert per token (the pre-top-k byte-exact path);
+        // top-k draws k distinct experts without replacement (zeroing
+        // already-chosen weights) with uniform 1/k gates, accumulating
+        // same-token co-activation counts for the policy
         let w = cfg.workload.expert_weights(num_experts, now);
         choices.clear();
-        for _ in 0..b_tokens {
-            choices.push(Top1 { expert: route_rng.weighted(&w), gate: 1.0 });
+        if k == 1 {
+            for _ in 0..b_tokens {
+                choices.push(Top1 { expert: route_rng.weighted(&w), gate: 1.0 });
+            }
+        } else {
+            for _ in 0..b_tokens {
+                let base = choices.len();
+                let mut w_cur = w.clone();
+                for _ in 0..k {
+                    let e = route_rng.weighted(&w_cur);
+                    w_cur[e] = 0.0;
+                    choices.push(Top1 { expert: e, gate: 1.0 / k as f32 });
+                }
+                for a in base..choices.len() {
+                    for b in (a + 1)..choices.len() {
+                        let (ea, eb) = (choices[a].expert, choices[b].expert);
+                        let (lo, hi) = if ea < eb { (ea, eb) } else { (eb, ea) };
+                        if lo != hi {
+                            pair_accum[lo * num_experts + hi] += 1.0;
+                        }
+                    }
+                }
+            }
         }
         let experts = demand_histogram(&choices, num_experts);
         c.routed_tokens += b_tokens;
@@ -337,9 +374,23 @@ pub fn serve_with_obs(
         let mut stall = 0.0f64;
         let mut rebalanced = false;
         if (iters + 1) % cfg.observe_every == 0 && accum_tokens >= cfg.min_observe_tokens {
-            let report = pipeline.step(iters, &accum);
+            // sparse (i < j) extraction of the window's pair counts —
+            // empty under top-1, where step_with_pairs IS step
+            let mut pairs: Vec<(usize, usize, f64)> = Vec::new();
+            for i in 0..num_experts.min(pair_accum.len()) {
+                for j in (i + 1)..num_experts {
+                    let cnt = pair_accum[i * num_experts + j];
+                    if cnt > 0.0 {
+                        pairs.push((i, j, cnt));
+                    }
+                }
+            }
+            let report = pipeline.step_with_pairs(iters, &accum, &pairs);
             for a in &mut accum {
                 *a = 0.0;
+            }
+            for p in &mut pair_accum {
+                *p = 0.0;
             }
             accum_tokens = 0;
             if let Some(d) = &report.decision {
@@ -351,8 +402,10 @@ pub fn serve_with_obs(
         }
 
         // 5. placed dispatch: capacity clip + replica round-robin
+        // (capacity scales with routed choices — k per token — so the
+        // top-1 formula is bit-identical to the pre-top-k one)
         let capacity = {
-            let cap = cfg.capacity_factor * b_tokens as f64 / num_experts as f64;
+            let cap = cfg.capacity_factor * (k * b_tokens) as f64 / num_experts as f64;
             (cap as usize).max(1)
         };
         let plan = PlacedPlan::build(&choices, pipeline.placement(), &spec, capacity);
@@ -360,9 +413,10 @@ pub fn serve_with_obs(
         c.dropped_tokens += dropped;
         let max_gpu = plan.gpu_counts.iter().copied().max().unwrap_or(0);
 
-        // 6. price the iteration
+        // 6. price the iteration (dispatch payload rides routed
+        // choices; dense compute rides physical tokens)
         let b = b_tokens as f64;
-        let payload = cfg.hop_payload(b, g);
+        let payload = cfg.hop_payload((k * b_tokens) as f64, g);
         let cost = price_placement(pipeline.placement(), &experts, &spec, payload);
         let comm = cost.comm_total() * hops;
         let dense = b * dense_fpt / (g * eff);
@@ -546,6 +600,7 @@ mod tests {
                 capacity_factor: 2.0,
                 payload_per_gpu: 1e6,
                 seed: 11,
+                top_k: 1,
             },
             None,
         );
@@ -558,6 +613,22 @@ mod tests {
         assert!(a.summary.requests_completed > 0);
         // the zipf mix skews routing demand toward expert 0's GPU
         assert!(a.summary.dropped_token_frac > 0.0, "skewed mix must clip capacity");
+    }
+
+    #[test]
+    fn top2_serving_is_deterministic_and_routes_two_experts_per_token() {
+        let mut cfg = small(WorkloadKind::Poisson);
+        cfg.top_k = 2;
+        let a = serve(&cfg, PolicyKind::Threshold, MigrationConfig::default());
+        let b = serve(&cfg, PolicyKind::Threshold, MigrationConfig::default());
+        assert_eq!(a.summary, b.summary, "top-2 serving must be deterministic");
+        assert!(a.summary.requests_completed > 0, "{:?}", a.summary);
+        // doubled dispatch payload makes every iteration's comm
+        // strictly pricier than its top-1 twin
+        let mut one = cfg.clone();
+        one.top_k = 1;
+        let t1 = serve(&one, PolicyKind::Threshold, MigrationConfig::default());
+        assert!(a.timeline[0].comm_secs > t1.timeline[0].comm_secs);
     }
 
     #[test]

@@ -390,6 +390,7 @@ mod tests {
                 capacity_factor: 2.0,
                 payload_per_gpu: 1e6,
                 seed: 3,
+                top_k: 1,
             },
             None,
         );

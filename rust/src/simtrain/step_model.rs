@@ -527,6 +527,7 @@ mod tests {
             capacity_factor: 2.0,
             payload_per_gpu: 1e6,
             seed: 1,
+            top_k: 1,
         };
         let trace = record_scenario(&cfg, None);
         let policy = crate::placement::RebalancePolicy::default();
@@ -559,6 +560,7 @@ mod tests {
             capacity_factor: 2.0,
             payload_per_gpu: 1e6,
             seed: 1,
+            top_k: 1,
         };
         let trace = record_scenario(&cfg, None);
         let knobs = crate::placement::RebalancePolicy::default();
@@ -605,6 +607,7 @@ mod tests {
             capacity_factor: 2.0,
             payload_per_gpu: 1e6,
             seed: 1,
+            top_k: 1,
         };
         let trace = record_scenario(&cfg, None);
         let knobs = crate::placement::RebalancePolicy::default();

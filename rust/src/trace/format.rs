@@ -17,8 +17,12 @@ use crate::obj;
 use crate::placement::PlacementMap;
 use crate::util::json::Json;
 
-/// Trace format version; bump on schema changes.
-pub const TRACE_VERSION: usize = 1;
+/// Trace format version; bump on schema changes.  Version 2 adds
+/// top-k routing: a `top_k` meta field and optional per-step sparse
+/// `pairs` (same-token expert co-activation counts).  The parser
+/// accepts `1..=TRACE_VERSION`; the writer emits version-2 fields only
+/// for version-2 traces, so every version-1 trace stays byte-identical.
+pub const TRACE_VERSION: usize = 2;
 
 /// Header line: where the trace came from and what shape it has.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,6 +41,9 @@ pub struct TraceMeta {
     /// Bytes each GPU contributes per dispatch hop — what the replayer
     /// feeds `price_placement`.
     pub payload_per_gpu: f64,
+    /// Experts chosen per token at record time (version >= 2; version-1
+    /// traces parse as 1).
+    pub top_k: usize,
 }
 
 impl TraceMeta {
@@ -53,7 +60,7 @@ impl TraceMeta {
     }
 
     pub fn to_json(&self) -> Json {
-        obj! {
+        let mut j = obj! {
             "kind" => "meta",
             "version" => self.version,
             "scenario" => self.scenario.clone(),
@@ -64,7 +71,14 @@ impl TraceMeta {
             "tokens_per_step" => self.tokens_per_step,
             "capacity" => self.capacity,
             "payload_per_gpu" => self.payload_per_gpu,
+        };
+        // version-gated so version-1 headers stay byte-identical
+        if self.version >= 2 {
+            if let Json::Obj(m) = &mut j {
+                m.insert("top_k".to_string(), Json::from(self.top_k));
+            }
         }
+        j
     }
 
     pub fn from_json(v: &Json) -> Result<TraceMeta, String> {
@@ -88,6 +102,10 @@ impl TraceMeta {
                 .get("payload_per_gpu")
                 .and_then(Json::as_f64)
                 .ok_or("meta: missing payload_per_gpu")?,
+            top_k: match v.get("top_k") {
+                None => 1, // version-1 traces predate the field
+                Some(x) => x.as_usize().ok_or("meta: top_k must be a non-negative integer")?,
+            },
         })
     }
 }
@@ -105,18 +123,36 @@ pub struct TraceStep {
     pub dropped_frac: f64,
     /// Tokens routed this step (0 when unknown).
     pub tokens: f64,
+    /// Sparse same-token expert co-activation counts `(i, j, count)`
+    /// with `i < j`, sorted lexicographically (version >= 2; empty for
+    /// top-1 traffic and version-1 traces).
+    pub pairs: Vec<(usize, usize, f64)>,
 }
 
 impl TraceStep {
     pub fn to_json(&self) -> Json {
-        obj! {
+        let mut j = obj! {
             "kind" => "step",
             "step" => self.step,
             "experts" => self.experts.clone(),
             "nodes" => self.nodes.clone(),
             "dropped_frac" => self.dropped_frac,
             "tokens" => self.tokens,
+        };
+        // omitted when empty so top-1 step lines stay byte-identical
+        if !self.pairs.is_empty() {
+            if let Json::Obj(m) = &mut j {
+                let arr: Vec<Json> = self
+                    .pairs
+                    .iter()
+                    .map(|&(i, jx, c)| {
+                        Json::Arr(vec![Json::from(i), Json::from(jx), Json::from(c)])
+                    })
+                    .collect();
+                m.insert("pairs".to_string(), Json::Arr(arr));
+            }
         }
+        j
     }
 
     pub fn from_json(v: &Json) -> Result<TraceStep, String> {
@@ -137,6 +173,26 @@ impl TraceStep {
                 .and_then(Json::as_f64)
                 .ok_or("step: missing dropped_frac")?,
             tokens: v.get("tokens").and_then(Json::as_f64).ok_or("step: missing tokens")?,
+            pairs: match v.get("pairs") {
+                None => Vec::new(), // top-1 / version-1 step lines
+                Some(p) => p
+                    .as_arr()
+                    .ok_or("step: pairs must be an array")?
+                    .iter()
+                    .map(|t| {
+                        let t = t.as_arr().filter(|t| t.len() == 3).ok_or(
+                            "step: each pair must be a [i, j, count] triple",
+                        )?;
+                        let i = t[0].as_usize().ok_or("step: pair index not an integer")?;
+                        let j = t[1].as_usize().ok_or("step: pair index not an integer")?;
+                        let c = t[2].as_f64().ok_or("step: pair count not a number")?;
+                        if i >= j {
+                            return Err(format!("step: pair ({i}, {j}) violates i < j"));
+                        }
+                        Ok((i, j, c))
+                    })
+                    .collect::<Result<Vec<_>, String>>()?,
+            },
         })
     }
 }
@@ -244,9 +300,9 @@ impl RoutingTrace {
             return Err("line 1: expected a meta header".into());
         }
         let meta = TraceMeta::from_json(&head)?;
-        if meta.version != TRACE_VERSION {
+        if !(1..=TRACE_VERSION).contains(&meta.version) {
             return Err(format!(
-                "trace version {} != supported {TRACE_VERSION}",
+                "trace version {} outside supported 1..={TRACE_VERSION}",
                 meta.version
             ));
         }
@@ -271,6 +327,15 @@ impl RoutingTrace {
                             i + 1,
                             s.nodes.len(),
                             trace.meta.n_nodes
+                        ));
+                    }
+                    if let Some(&(a, b, _)) =
+                        s.pairs.iter().find(|&&(_, b, _)| b >= trace.meta.num_experts)
+                    {
+                        return Err(format!(
+                            "line {}: pair ({a}, {b}) references expert >= meta {}",
+                            i + 1,
+                            trace.meta.num_experts
                         ));
                     }
                     trace.steps.push(s);
@@ -328,6 +393,7 @@ mod tests {
             tokens_per_step: 16,
             capacity: 8,
             payload_per_gpu: 1e6,
+            top_k: 1,
         }
     }
 
@@ -338,6 +404,7 @@ mod tests {
             nodes: vec![7.0, 9.0],
             dropped_frac: 0.0625,
             tokens: 16.0,
+            pairs: Vec::new(),
         }
     }
 
@@ -372,6 +439,7 @@ mod tests {
             nodes: vec![0.4333, 0.5667],
             dropped_frac: 1.0 / 1024.0,
             tokens: 0.0,
+            pairs: Vec::new(),
         });
         let back = RoutingTrace::from_jsonl(&t.to_jsonl()).unwrap();
         for (a, b) in back.steps[0].experts.iter().zip(&t.steps[0].experts) {
@@ -438,6 +506,54 @@ mod tests {
             .collect();
         assert_eq!(kinds, vec!["m", "s", "s", "d", "s"]);
         assert_eq!(RoutingTrace::from_jsonl(&text).unwrap(), t);
+    }
+
+    #[test]
+    fn version1_lines_parse_with_topk_default_and_stay_byte_identical() {
+        // a hand-built version-1 trace: no top_k in the header, no
+        // pairs in the steps
+        let mut m1 = meta();
+        m1.version = 1;
+        let mut t = RoutingTrace::new(m1);
+        t.steps.push(step(0));
+        let text = t.to_jsonl();
+        assert!(!text.contains("top_k"), "v1 header must not emit top_k");
+        assert!(!text.contains("pairs"), "top-1 steps must not emit pairs");
+        let back = RoutingTrace::from_jsonl(&text).unwrap();
+        assert_eq!(back.meta.top_k, 1, "missing top_k parses as 1");
+        assert_eq!(back.to_jsonl(), text, "v1 re-serialization is byte-identical");
+    }
+
+    #[test]
+    fn version2_pairs_roundtrip_and_validate() {
+        let mut m2 = meta();
+        m2.top_k = 2;
+        let mut t = RoutingTrace::new(m2);
+        let mut s = step(0);
+        s.pairs = vec![(0, 2, 3.0), (1, 3, 0.5)];
+        t.steps.push(s);
+        let text = t.to_jsonl();
+        assert!(text.contains("\"top_k\":2"));
+        assert!(text.contains("\"pairs\":[[0,2,3],[1,3,0.5]]"));
+        let back = RoutingTrace::from_jsonl(&text).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_jsonl(), text);
+
+        // i >= j is malformed
+        let bad = text.replace("[0,2,3]", "[2,0,3]");
+        assert!(RoutingTrace::from_jsonl(&bad).unwrap_err().contains("i < j"));
+        // expert index out of the header's range
+        let bad = text.replace("[1,3,0.5]", "[1,9,0.5]");
+        assert!(RoutingTrace::from_jsonl(&bad).unwrap_err().contains(">= meta"));
+    }
+
+    #[test]
+    fn reader_rejects_future_versions() {
+        let mut m = meta();
+        m.version = TRACE_VERSION + 1;
+        let t = RoutingTrace::new(m);
+        let err = RoutingTrace::from_jsonl(&t.to_jsonl()).unwrap_err();
+        assert!(err.contains("outside supported"), "{err}");
     }
 
     #[test]

@@ -50,11 +50,34 @@ impl TraceRecorder {
         dropped_frac: f64,
         tokens: f64,
     ) {
+        self.record_step_with_pairs(step, experts, nodes, dropped_frac, tokens, &[]);
+    }
+
+    /// [`TraceRecorder::record_step`] plus the step's sparse same-token
+    /// co-activation counts (`(i, j, count)` with `i < j`, as
+    /// `moe::same_token_pairs` emits them).  Top-1 callers pass `&[]`
+    /// and the step line is byte-identical to a version-1 recording.
+    pub fn record_step_with_pairs(
+        &mut self,
+        step: usize,
+        experts: &[f64],
+        nodes: &[f64],
+        dropped_frac: f64,
+        tokens: f64,
+        pairs: &[(usize, usize, f64)],
+    ) {
         assert_eq!(experts.len(), self.trace.meta.num_experts, "expert arity mismatch");
         assert_eq!(nodes.len(), self.trace.meta.n_nodes, "node arity mismatch");
+        for &(i, j, _) in pairs {
+            assert!(
+                i < j && j < self.trace.meta.num_experts,
+                "pair ({i}, {j}) arity mismatch"
+            );
+        }
         if !(experts.iter().chain(nodes).all(|v| v.is_finite())
             && dropped_frac.is_finite()
-            && tokens.is_finite())
+            && tokens.is_finite()
+            && pairs.iter().all(|&(_, _, c)| c.is_finite()))
         {
             self.skipped += 1;
             return;
@@ -65,6 +88,7 @@ impl TraceRecorder {
             nodes: nodes.to_vec(),
             dropped_frac,
             tokens,
+            pairs: pairs.to_vec(),
         });
     }
 
@@ -123,6 +147,7 @@ mod tests {
             tokens_per_step: 4,
             capacity: 4,
             payload_per_gpu: 1e6,
+            top_k: 1,
         }
     }
 
@@ -160,5 +185,25 @@ mod tests {
     fn rejects_wrong_arity() {
         let mut r = TraceRecorder::new(meta());
         r.record_step(0, &[1.0], &[1.0, 1.0], 0.0, 1.0);
+    }
+
+    #[test]
+    fn pairs_record_and_nonfinite_counts_skip_the_step() {
+        let mut r = TraceRecorder::new(meta());
+        r.record_step_with_pairs(0, &[3.0, 1.0], &[3.0, 1.0], 0.0, 4.0, &[(0, 1, 2.0)]);
+        assert_eq!(r.trace().steps[0].pairs, vec![(0, 1, 2.0)]);
+        r.record_step_with_pairs(1, &[2.0, 2.0], &[2.0, 2.0], 0.0, 4.0, &[(0, 1, f64::NAN)]);
+        assert_eq!(r.len(), 1, "a non-finite pair count poisons the whole step");
+        assert_eq!(r.skipped(), 1);
+        // plain record_step is the with_pairs path with no pairs
+        r.record_step(2, &[1.0, 1.0], &[1.0, 1.0], 0.0, 2.0);
+        assert!(r.trace().steps[1].pairs.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_out_of_range_pairs() {
+        let mut r = TraceRecorder::new(meta());
+        r.record_step_with_pairs(0, &[1.0, 1.0], &[1.0, 1.0], 0.0, 2.0, &[(0, 2, 1.0)]);
     }
 }

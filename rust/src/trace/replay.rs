@@ -25,8 +25,8 @@ use crate::netsim::topology::ClusterSpec;
 use crate::obj;
 use crate::obs::{SharedSink, SpanTimeline};
 use crate::placement::{
-    price_placement, MigrationConfig, PlacementMap, PlacementPolicy, PolicyKind, RebalancePolicy,
-    RoutingPipeline,
+    price_placement_coact, MigrationConfig, PlacementMap, PlacementPolicy, PolicyKind,
+    RebalancePolicy, RoutingPipeline,
 };
 use crate::util::json::Json;
 
@@ -228,7 +228,7 @@ impl TraceReplayer {
         // replay's virtual clock: accumulated priced comm before this step
         let t0 = self.total_comm_secs;
         self.pipeline.set_obs_now(t0);
-        let report = self.pipeline.step(rec.step, &rec.experts);
+        let report = self.pipeline.step_with_pairs(rec.step, &rec.experts, &rec.pairs);
         let (rebalanced, migrated) = match &report.decision {
             Some(d) => {
                 self.rebalance_steps.push(d.step);
@@ -239,7 +239,18 @@ impl TraceReplayer {
         };
         let node_imbalance = self.pipeline.node_imbalance();
         let cost = self.pipeline.price(&rec.experts);
-        let static_cost = price_placement(&self.block, &rec.experts, &self.spec, self.payload);
+        // the static baseline pays the same physical co-location tax
+        // the live placement does (weight 1.0, the tracker's matrix) —
+        // empty under top-1 traffic, where this is exactly the old
+        // price_placement call
+        let static_cost = price_placement_coact(
+            &self.block,
+            &rec.experts,
+            &self.spec,
+            self.payload,
+            self.pipeline.tracker().coactivation(),
+            1.0,
+        );
         let hops = self.pipeline.hops_per_step();
         self.total_comm_secs += cost.comm_total() * hops;
         self.static_comm_secs += static_cost.comm_total() * hops;
@@ -353,7 +364,7 @@ impl TraceReplayer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::placement::{LoadTracker, Rebalancer};
+    use crate::placement::{price_placement, LoadTracker, Rebalancer};
     use crate::trace::scenario::{record_scenario, Scenario, ScenarioConfig};
 
     fn cfg(scenario: Scenario, steps: usize) -> ScenarioConfig {
@@ -366,6 +377,7 @@ mod tests {
             capacity_factor: 2.0,
             payload_per_gpu: 1e6,
             seed: 3,
+            top_k: 1,
         }
     }
 
@@ -606,6 +618,39 @@ mod tests {
         let boxed =
             TraceReplayer::replay_boxed(&trace, Box::new(policy), MigrationConfig::default());
         assert_eq!(by_kind, boxed);
+    }
+
+    #[test]
+    fn top2_replay_is_deterministic_and_feeds_the_tracker_pairs() {
+        let mut c = cfg(Scenario::Zipf { s: 1.4 }, 120);
+        c.top_k = 2;
+        let trace = record_scenario(&c, None);
+        assert!(trace.steps.iter().any(|s| !s.pairs.is_empty()));
+        let a = TraceReplayer::replay(&trace, RebalancePolicy::default());
+        let b = TraceReplayer::replay(&trace, RebalancePolicy::default());
+        assert_eq!(a, b);
+        let back = RoutingTrace::from_jsonl(&trace.to_jsonl()).unwrap();
+        assert_eq!(TraceReplayer::replay(&back, RebalancePolicy::default()), a);
+        // the recorded pairs must land in the replayer's tracker
+        let mut r = TraceReplayer::new(&trace, RebalancePolicy::default());
+        for s in &trace.steps {
+            r.step(s);
+        }
+        let coact = r.pipeline.tracker().coactivation();
+        assert!(!coact.is_empty() && coact.iter().any(|&c| c > 0.0));
+        // and the static baseline pays the physical co-location tax,
+        // so it is strictly above its affinity-blind pricing
+        let last = trace.steps.last().unwrap();
+        let blind = price_placement(&r.block, &last.experts, &r.spec, r.payload);
+        let taxed = price_placement_coact(
+            &r.block,
+            &last.experts,
+            &r.spec,
+            r.payload,
+            coact,
+            1.0,
+        );
+        assert!(taxed.comm_total() > blind.comm_total());
     }
 
     #[test]

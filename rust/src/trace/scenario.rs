@@ -9,7 +9,9 @@
 
 use super::format::{RoutingTrace, TraceMeta, TRACE_VERSION};
 use super::record::TraceRecorder;
-use crate::moe::dispatch::{demand_histogram, DispatchPlan, Top1};
+use crate::moe::dispatch::{
+    demand_histogram, same_token_pairs, DispatchPlan, Top1, TopKPlan, TopKRows,
+};
 use crate::placement::{
     zipf_fractions, AdaptiveConfig, MigrationConfig, PolicyKind, RebalancePolicy,
     RoutingPipeline,
@@ -71,6 +73,10 @@ pub struct ScenarioConfig {
     pub capacity_factor: f64,
     pub payload_per_gpu: f64,
     pub seed: u64,
+    /// Experts chosen per token (1 = classic top-1 sampling; 2+ draws
+    /// distinct experts per token and records same-token co-activation
+    /// pairs).  Values below 1 are treated as 1.
+    pub top_k: usize,
 }
 
 impl ScenarioConfig {
@@ -78,15 +84,23 @@ impl ScenarioConfig {
         self.n_nodes * self.gpus_per_node
     }
 
+    pub fn top_k(&self) -> usize {
+        self.top_k.max(1)
+    }
+
     pub fn capacity(&self) -> usize {
-        let cap = self.capacity_factor * self.tokens_per_step as f64
+        // capacity scales with routed choices (k per token), so top-1
+        // capacity is bit-identical to the pre-top-k formula
+        let cap = self.capacity_factor * (self.top_k() * self.tokens_per_step) as f64
             / self.num_experts() as f64;
         (cap as usize).max(1)
     }
 
     pub fn meta(&self) -> TraceMeta {
         TraceMeta {
-            version: TRACE_VERSION,
+            // top-1 scenarios keep emitting version-1 headers so the
+            // pre-top-k golden traces stay byte-identical
+            version: if self.top_k() > 1 { TRACE_VERSION } else { 1 },
             scenario: self.scenario.name(),
             seed: self.seed,
             n_nodes: self.n_nodes,
@@ -95,6 +109,7 @@ impl ScenarioConfig {
             tokens_per_step: self.tokens_per_step,
             capacity: self.capacity(),
             payload_per_gpu: self.payload_per_gpu,
+            top_k: self.top_k(),
         }
     }
 }
@@ -132,22 +147,64 @@ pub fn record_scenario_tuned(
         let boxed = kind.build_with(knobs, adaptive, spec.clone(), e_total, cfg.payload_per_gpu);
         RoutingPipeline::from_policy(boxed, spec, cfg.payload_per_gpu, MigrationConfig::default())
     });
+    let k = cfg.top_k();
     let mut rng = Rng::new(cfg.seed);
     for step in 0..cfg.steps {
         let w = cfg.scenario.step_weights(e_total, step);
-        let choices: Vec<Top1> = (0..cfg.tokens_per_step)
-            .map(|_| Top1 { expert: rng.weighted(&w), gate: 1.0 })
-            .collect();
+        if k == 1 {
+            // the pre-top-k path, untouched: existing (scenario, seed)
+            // pairs reproduce their traces byte-for-byte
+            let choices: Vec<Top1> = (0..cfg.tokens_per_step)
+                .map(|_| Top1 { expert: rng.weighted(&w), gate: 1.0 })
+                .collect();
+            let experts = demand_histogram(&choices, e_total);
+            let plan = DispatchPlan::build(&choices, e_total, capacity);
+            let dropped_frac = plan.dropped() as f64 / cfg.tokens_per_step.max(1) as f64;
+            let mut nodes = vec![0.0f64; cfg.n_nodes];
+            for (e, &c) in experts.iter().enumerate() {
+                nodes[e / cfg.gpus_per_node] += c;
+            }
+            rec.record_step(step, &experts, &nodes, dropped_frac, cfg.tokens_per_step as f64);
+            if let Some(pipe) = pipe.as_mut() {
+                if let Some(d) = pipe.step(step, &experts).decision {
+                    rec.record_decision(&d);
+                }
+            }
+            continue;
+        }
+        // top-k sampling: k distinct experts per token, drawn without
+        // replacement by zeroing already-chosen weights before the
+        // next draw.  Uniform 1/k gates model a post-softmax router
+        // over near-tied logits.
+        let mut choices: Vec<Top1> = Vec::with_capacity(k * cfg.tokens_per_step);
+        for _ in 0..cfg.tokens_per_step {
+            let mut w_cur = w.clone();
+            for _ in 0..k {
+                let e = rng.weighted(&w_cur);
+                w_cur[e] = 0.0;
+                choices.push(Top1 { expert: e, gate: 1.0 / k as f32 });
+            }
+        }
         let experts = demand_histogram(&choices, e_total);
-        let plan = DispatchPlan::build(&choices, e_total, capacity);
-        let dropped_frac = plan.dropped() as f64 / cfg.tokens_per_step.max(1) as f64;
+        let rows = TopKRows::from_choices(k, choices);
+        let plan = TopKPlan::build(&rows, e_total, capacity);
+        let dropped_frac =
+            plan.dropped() as f64 / (k * cfg.tokens_per_step).max(1) as f64;
+        let pairs = same_token_pairs(&rows, e_total);
         let mut nodes = vec![0.0f64; cfg.n_nodes];
         for (e, &c) in experts.iter().enumerate() {
             nodes[e / cfg.gpus_per_node] += c;
         }
-        rec.record_step(step, &experts, &nodes, dropped_frac, cfg.tokens_per_step as f64);
+        rec.record_step_with_pairs(
+            step,
+            &experts,
+            &nodes,
+            dropped_frac,
+            cfg.tokens_per_step as f64,
+            &pairs,
+        );
         if let Some(pipe) = pipe.as_mut() {
-            if let Some(d) = pipe.step(step, &experts).decision {
+            if let Some(d) = pipe.step_with_pairs(step, &experts, &pairs).decision {
                 rec.record_decision(&d);
             }
         }
@@ -169,6 +226,7 @@ mod tests {
             capacity_factor: 2.0,
             payload_per_gpu: 1e6,
             seed: 9,
+            top_k: 1,
         }
     }
 
@@ -254,6 +312,55 @@ mod tests {
         let via_with =
             record_scenario_with(&c, Some((PolicyKind::Adaptive, knobs)));
         assert_eq!(via_with, dflt);
+    }
+
+    #[test]
+    fn top1_meta_stays_version1_and_top2_upgrades() {
+        let c1 = cfg(Scenario::Uniform);
+        assert_eq!(c1.meta().version, 1);
+        assert_eq!(c1.meta().top_k, 1);
+        assert_eq!(c1.capacity(), 64); // 2.0 * 256 / 8
+        let mut c2 = c1.clone();
+        c2.top_k = 2;
+        assert_eq!(c2.meta().version, TRACE_VERSION);
+        assert_eq!(c2.meta().top_k, 2);
+        assert_eq!(c2.capacity(), 128, "capacity scales with routed choices");
+    }
+
+    #[test]
+    fn top2_recording_routes_two_distinct_experts_per_token() {
+        let mut c = cfg(Scenario::Zipf { s: 1.2 });
+        c.top_k = 2;
+        let t = record_scenario(&c, None);
+        assert_eq!(t.meta.top_k, 2);
+        for s in &t.steps {
+            // every token contributes two choices to the histograms
+            assert_eq!(s.experts.iter().sum::<f64>(), 512.0);
+            assert_eq!(s.nodes.iter().sum::<f64>(), 512.0);
+            assert_eq!(s.tokens, 256.0, "tokens stay physical, not choice-scaled");
+            // pairs cover every token exactly once (distinct choices,
+            // so each token yields one unordered pair)
+            assert!(!s.pairs.is_empty());
+            assert_eq!(s.pairs.iter().map(|&(_, _, c)| c).sum::<f64>(), 256.0);
+            for &(i, j, c) in &s.pairs {
+                assert!(i < j && j < 8 && c > 0.0);
+            }
+        }
+        // deterministic and round-trip exact, like top-1
+        assert_eq!(record_scenario(&c, None), t);
+        assert_eq!(RoutingTrace::from_jsonl(&t.to_jsonl()).unwrap(), t);
+    }
+
+    #[test]
+    fn top2_live_policy_sees_pairs() {
+        let mut c = cfg(Scenario::Burst { s: 1.2, hot_expert: 3, boost: 8.0, start: 3, end: 8 });
+        c.top_k = 2;
+        c.steps = 60;
+        let mut policy = RebalancePolicy::default();
+        policy.check_every = 10;
+        let t = record_scenario(&c, Some(&policy));
+        assert!(!t.decisions.is_empty(), "skewed top-2 burst never rebalanced");
+        assert_eq!(RoutingTrace::from_jsonl(&t.to_jsonl()).unwrap(), t);
     }
 
     #[test]

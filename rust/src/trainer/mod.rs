@@ -19,7 +19,7 @@ use crate::placement::{
     AdaptiveConfig, MigrationConfig, PolicyKind, RebalancePolicy, RoutingPipeline,
 };
 use crate::runtime::{ArtifactConfig, Loaded, Runtime, Tensor};
-use crate::trace::{TraceMeta, TraceRecorder, TRACE_VERSION};
+use crate::trace::{TraceMeta, TraceRecorder};
 
 /// Cluster shape the trainer prices on: the artifact's node/GPU counts
 /// with the calibrated P4d bandwidth/congestion constants — the same
@@ -61,7 +61,9 @@ pub fn config_capacity(cfg: &ArtifactConfig) -> usize {
 /// real seed, real capacity, shared hop payload.
 pub fn config_trace_meta(cfg: &ArtifactConfig, seed: u64) -> TraceMeta {
     TraceMeta {
-        version: TRACE_VERSION,
+        // the trainer routes top-1, so its headers stay on version 1
+        // (byte-stable against pre-top-k traces)
+        version: 1,
         scenario: format!("train {}", cfg.name),
         seed,
         n_nodes: cfg.n_nodes.max(1),
@@ -70,6 +72,7 @@ pub fn config_trace_meta(cfg: &ArtifactConfig, seed: u64) -> TraceMeta {
         tokens_per_step: cfg.accum_steps * cfg.micro_batch * cfg.seq_len,
         capacity: config_capacity(cfg),
         payload_per_gpu: config_hop_payload(cfg),
+        top_k: 1,
     }
 }
 

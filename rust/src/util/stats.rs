@@ -21,8 +21,10 @@ impl Summary {
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
         let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        // total_cmp (like quantile_exact): NaN samples sort after
+        // every real value instead of panicking the sort
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,
@@ -194,6 +196,18 @@ mod tests {
     fn summary_empty() {
         let s = Summary::of(&[]);
         assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        // pinned behavior: a NaN sample must not panic the sort
+        // (total_cmp order); positive NaN sorts after every real
+        // value, so min stays the real minimum and max is NaN
+        let s = Summary::of(&[3.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert!(s.mean.is_nan(), "a NaN sample poisons the mean, by definition");
     }
 
     #[test]

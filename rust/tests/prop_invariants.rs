@@ -70,6 +70,129 @@ fn prop_dispatch_conservation() {
 }
 
 #[test]
+fn prop_topk_dispatch_conservation_and_gated_combine() {
+    // the top-k extension of prop_dispatch_conservation: rows route k
+    // DISTINCT experts, demand counts every choice capacity-blind,
+    // per-choice capacity holds, and the gate-weighted combine visits
+    // each kept (token, choice) slot exactly once
+    check(
+        "topk: distinct rows, per-choice capacity, conserving combine",
+        &cfg(),
+        |rng| {
+            let t = 1 + rng.below(300) as usize;
+            let e = 2 + rng.below(31) as usize;
+            let k = 1 + rng.below(e.min(4) as u64) as usize;
+            let cap = 1 + rng.below(64) as usize;
+            // router probabilities with occasional NaN poisoning
+            let probs: Vec<f32> = (0..t * e)
+                .map(|_| if rng.below(50) == 0 { f32::NAN } else { rng.f64() as f32 })
+                .collect();
+            (probs, e, k, cap)
+        },
+        |(probs, e, k, cap)| {
+            let rows = moe::topk_rows(probs, *e, *k);
+            let plan = moe::TopKPlan::build(&rows, *e, *cap);
+            let t = rows.num_tokens();
+            for ti in 0..t {
+                let row = rows.row(ti);
+                for a in 0..*k {
+                    for b in (a + 1)..*k {
+                        prop_assert!(
+                            row[a].expert != row[b].expert,
+                            "row {ti} routed expert {} twice",
+                            row[a].expert
+                        );
+                    }
+                }
+            }
+            let kept: usize = plan.loads().iter().sum();
+            prop_assert!(
+                kept + plan.dropped() == t * k,
+                "kept {kept} + dropped {} != {} choices",
+                plan.dropped(),
+                t * k
+            );
+            prop_assert!(
+                plan.loads().iter().all(|&l| l <= *cap),
+                "per-choice capacity exceeded: {:?} > {cap}",
+                plan.loads()
+            );
+            // demand is capacity-blind, so fractions sum to one
+            let frac_sum: f64 = plan.dispatch_fractions().iter().sum();
+            prop_assert!((frac_sum - 1.0).abs() < 1e-9, "fractions sum {frac_sum}");
+            // gate-weighted combine: every kept slot exactly once,
+            // carrying that slot's recorded gate
+            let mut seen = vec![0u8; t * k];
+            for (_, _, tok, c, gate) in plan.combine_order() {
+                prop_assert!(
+                    gate.to_bits() == rows.row(tok)[c].gate.to_bits(),
+                    "combine gate != routed gate at token {tok} choice {c}"
+                );
+                seen[tok * k + c] += 1;
+            }
+            prop_assert!(seen.iter().all(|&x| x <= 1), "slot combined twice");
+            prop_assert!(
+                seen.iter().filter(|&&x| x == 1).count() == kept,
+                "combine count != kept"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coactivation_matrix_symmetric_zero_diagonal_bounded() {
+    // the EWMA co-activation matrix: bitwise symmetric, zero diagonal,
+    // and every row sums to at most 1 (it is a decayed average of
+    // per-step pair distributions)
+    check(
+        "coact: symmetric, zero-diagonal, row sums <= 1",
+        &cfg(),
+        |rng| {
+            let e = 2 + rng.below(15) as usize;
+            let alpha = 0.05 + rng.f64() * 0.9;
+            let steps = 1 + rng.below(30) as usize;
+            let mut all: Vec<Vec<(usize, usize, f64)>> = Vec::new();
+            for _ in 0..steps {
+                let mut m = std::collections::BTreeMap::new();
+                for _ in 0..rng.below(8) {
+                    let i = rng.below(e as u64) as usize;
+                    let j = rng.below(e as u64) as usize;
+                    if i != j {
+                        *m.entry((i.min(j), i.max(j))).or_insert(0.0) +=
+                            1.0 + rng.f64() * 9.0;
+                    }
+                }
+                all.push(m.into_iter().map(|((i, j), c)| (i, j, c)).collect());
+            }
+            (e, alpha, all)
+        },
+        |(e, alpha, all)| {
+            let mut tr = placement::LoadTracker::new(*e, *alpha);
+            for pairs in all {
+                tr.observe_pairs(pairs);
+            }
+            let m = tr.coactivation();
+            if m.is_empty() {
+                return Ok(()); // every sampled step was degenerate
+            }
+            for i in 0..*e {
+                prop_assert!(m[i * e + i] == 0.0, "diagonal {i} nonzero");
+                let row: f64 = (0..*e).map(|j| m[i * e + j]).sum();
+                prop_assert!(row <= 1.0 + 1e-9, "row {i} sums to {row}");
+                for j in 0..*e {
+                    prop_assert!(
+                        m[i * e + j].to_bits() == m[j * e + i].to_bits(),
+                        "asymmetry at ({i}, {j})"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_bilevel_flat_equivalence() {
     // a bi-level plan's flat ids must equal i*m + j and its per-node
     // counts must equal the sum over that node's experts
@@ -492,15 +615,19 @@ fn random_scenario(rng: &mut Rng) -> ScenarioConfig {
             }
         }
     };
+    let n_nodes = 1 + rng.below(4) as usize;
+    let gpus_per_node = 1 + rng.below(8) as usize;
     ScenarioConfig {
         scenario,
-        n_nodes: 1 + rng.below(4) as usize,
-        gpus_per_node: 1 + rng.below(8) as usize,
+        n_nodes,
+        gpus_per_node,
         steps,
         tokens_per_step: 16 + rng.below(400) as usize,
         capacity_factor: 0.5 + rng.f64() * 2.0,
         payload_per_gpu: 1e5 + rng.f64() * 1e7,
         seed: rng.next_u64() >> 12,
+        // top-2 requires two experts to draw from
+        top_k: (1 + rng.below(2) as usize).min(n_nodes * gpus_per_node),
     }
 }
 
@@ -535,6 +662,13 @@ fn prop_trace_jsonl_roundtrip_bitwise() {
                     a.dropped_frac.to_bits() == b.dropped_frac.to_bits(),
                     "drop rate changed"
                 );
+                prop_assert!(a.pairs.len() == b.pairs.len(), "pair count changed");
+                for (x, y) in a.pairs.iter().zip(&b.pairs) {
+                    prop_assert!(
+                        x.0 == y.0 && x.1 == y.1 && x.2.to_bits() == y.2.to_bits(),
+                        "pair {x:?} != {y:?}"
+                    );
+                }
             }
             // serialization is a fixed point (idempotent)
             prop_assert!(back.to_jsonl() == text, "re-serialization drifted");

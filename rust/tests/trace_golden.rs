@@ -1,7 +1,9 @@
-//! Golden-trace regression tests: three recorded routing traces
-//! (uniform, Zipf(1.2), mid-trace hot-expert burst) live under
-//! `tests/data/`, and their replay summaries under the default
-//! `RebalancePolicy` are exact fixtures.  Any change to the rebalance
+//! Golden-trace regression tests: five recorded routing traces live
+//! under `tests/data/` — three top-1 (uniform, Zipf(1.2), mid-trace
+//! hot-expert burst) and two top-2 schema-v2 traces carrying per-step
+//! co-activation pairs (`trace_zipf12.top2`, `trace_burst.top2`) —
+//! and their replay summaries under the default `RebalancePolicy` are
+//! exact fixtures.  Any change to the rebalance
 //! gates, the congestion pricing, the EWMA semantics, or the placement
 //! pipeline shifts a summary value and fails here — instead of
 //! silently moving bench numbers.
@@ -239,8 +241,95 @@ fn golden_traces_parse_and_validate() {
         assert_eq!(trace.steps.len(), 200, "{name}: unexpected length");
         assert_eq!(trace.meta.num_experts, 32);
         assert_eq!(trace.meta.n_nodes, 4);
+        // the pre-top-k fixtures stay version-1 / pair-free forever
+        assert_eq!(trace.meta.version, 1, "{name}: top-1 fixture must stay version 1");
+        assert_eq!(trace.meta.top_k, 1, "{name}: top-1 fixture grew a top_k header");
+        assert!(
+            trace.steps.iter().all(|s| s.pairs.is_empty()),
+            "{name}: top-1 fixture must not carry co-activation pairs"
+        );
         // serialization is a fixed point of the checked-in bytes
         let text = std::fs::read_to_string(data_path(&format!("{name}.jsonl"))).unwrap();
         assert_eq!(trace.to_jsonl(), text, "{name}: canonical form drifted");
     }
+}
+
+#[test]
+fn golden_top2_traces_parse_and_validate() {
+    for name in ["trace_zipf12.top2", "trace_burst.top2"] {
+        let trace = RoutingTrace::read_jsonl(data_path(&format!("{name}.jsonl"))).unwrap();
+        assert_eq!(trace.steps.len(), 200, "{name}: unexpected length");
+        assert_eq!(trace.meta.num_experts, 32);
+        assert_eq!(trace.meta.n_nodes, 4);
+        assert_eq!(trace.meta.version, 2, "{name}: top-2 fixture must be schema v2");
+        assert_eq!(trace.meta.top_k, 2);
+        // capacity scales with routed choices: 2.0 * (2 * 1024) / 32
+        assert_eq!(trace.meta.capacity, 128, "{name}: top-2 capacity formula drifted");
+        for (i, s) in trace.steps.iter().enumerate() {
+            assert!(!s.pairs.is_empty(), "{name}: step {i} recorded no co-activation pairs");
+            // canonical pair order: i < j, ascending, positive counts
+            for w in s.pairs.windows(2) {
+                assert!(w[0].0 < w[1].0 || (w[0].0 == w[1].0 && w[0].1 < w[1].1));
+            }
+            for &(a, b, c) in &s.pairs {
+                assert!(a < b && b < 32, "{name}: step {i} pair ({a},{b}) out of canon");
+                assert!(c > 0.0, "{name}: step {i} pair ({a},{b}) has count {c}");
+            }
+        }
+        // serialization is a fixed point of the checked-in bytes
+        let text = std::fs::read_to_string(data_path(&format!("{name}.jsonl"))).unwrap();
+        assert_eq!(trace.to_jsonl(), text, "{name}: canonical form drifted");
+    }
+}
+
+#[test]
+fn golden_zipf_top2_rebalances_and_beats_static() {
+    let r = assert_matches_golden("trace_zipf12.top2");
+    assert!(r.summary.rebalances >= 1, "top-2 Zipf(1.2) skew must trigger a rebalance");
+    assert!(
+        r.summary.total_comm_secs < r.summary.static_comm_secs,
+        "top-2 rebalanced comm {} >= static {}",
+        r.summary.total_comm_secs,
+        r.summary.static_comm_secs
+    );
+}
+
+#[test]
+fn golden_burst_top2_coactivation_beats_blind_placement() {
+    // the co-location acceptance criterion, pinned as an exact fixture
+    // pair: on the top-2 burst trace, pricing the co-activation matrix
+    // into the solver (coact_weight = 1, the default) yields strictly
+    // lower total_comm_secs + migration_exposed_secs than the
+    // affinity-blind solver (coact_weight = 0) under the same policy.
+    // Both replays pay the same *physical* co-activation tax — the
+    // blind one just doesn't optimize for it.
+    let aware = assert_matches_golden("trace_burst.top2");
+    let trace = RoutingTrace::read_jsonl(data_path("trace_burst.top2.jsonl")).unwrap();
+    let blind_policy = RebalancePolicy { coact_weight: 0.0, ..RebalancePolicy::default() };
+    let blind = TraceReplayer::replay_with(
+        &trace,
+        PolicyKind::Threshold,
+        blind_policy,
+        MigrationConfig::default(),
+    );
+    let golden_text = std::fs::read_to_string(data_path("trace_burst.top2.blind.summary.json"))
+        .expect("blind golden summary exists");
+    let golden = Json::parse(&golden_text).expect("blind golden summary parses");
+    assert_eq!(
+        blind.summary.to_json(),
+        golden,
+        "affinity-blind replay of trace_burst.top2 drifted from its golden fixture.\ngot:\n{}",
+        blind.summary.to_json().to_string_pretty()
+    );
+    let cost = |s: &smile::trace::ReplaySummary| s.total_comm_secs + s.migration_exposed_secs;
+    assert!(
+        cost(&aware.summary) < cost(&blind.summary),
+        "co-activation-aware cost {} not strictly below affinity-blind {}",
+        cost(&aware.summary),
+        cost(&blind.summary)
+    );
+    // both react to the burst; awareness changes where experts land,
+    // not whether the gates fire
+    assert_eq!(aware.summary.rebalance_steps, blind.summary.rebalance_steps);
+    assert!(aware.summary.rebalances >= 1);
 }

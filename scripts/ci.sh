@@ -6,7 +6,11 @@
 #                              mirror-check)
 #   scripts/ci.sh trace-golden golden-trace regression gate only: replay the
 #                              checked-in traces under rust/tests/data/ and
-#                              fail on any summary drift
+#                              fail on any summary drift — covers the three
+#                              top-1 traces plus the schema-v2 top-2 pair
+#                              (trace_zipf12.top2, trace_burst.top2 with its
+#                              co-activation-aware vs affinity-blind
+#                              .blind.summary.json acceptance fixture)
 #   scripts/ci.sh serve-golden serving golden gate only: rerun the flash /
 #                              poisson serving fixtures under rust/tests/data/
 #                              (serve_*.summary.json) and fail on any drift
@@ -15,8 +19,10 @@
 #                              on any byte drift — no Rust toolchain needed;
 #                              covers every policy fixture, including the
 #                              forecaster/bandit trace_burst.adaptive one,
-#                              the four serve_* serving summaries, and the
-#                              obs decision-audit event stream
+#                              the top-2 co-activation traces and their
+#                              aware/blind summary pair, the four serve_*
+#                              serving summaries, and the obs decision-audit
+#                              event stream
 #   scripts/ci.sh obs-golden   observability gate only: exact-compare the
 #                              pinned decision-audit event fixture
 #                              (trace_burst.adaptive.events.jsonl) against the

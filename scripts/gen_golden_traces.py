@@ -234,6 +234,15 @@ class PMap:
             [list(w) for w in self.weights],
         )
 
+    def primary(self, e):
+        # PlacementMap::primary — highest-weight replica, first wins ties
+        ws = self.weights[e]
+        best = 0
+        for r in range(1, len(ws)):
+            if ws[r] > ws[best]:
+                best = r
+        return self.replicas[e][best]
+
     def num_experts(self):
         return len(self.replicas)
 
@@ -344,6 +353,29 @@ def price_placement(pmap, frac, spec, payload):
     return Cost(inter_time, intra_time, scale)
 
 
+def price_placement_coact(pmap, frac, spec, payload, coact, coact_weight):
+    """placement::solver::price_placement_coact — price_placement plus
+    the co-location term: split same-token pairs (primaries on
+    different nodes) tax the inter hop.  Empty matrix / zero weight /
+    one node delegates bit-identically to price_placement."""
+    cost = price_placement(pmap, frac, spec, payload)
+    if not coact or coact_weight == 0.0 or spec.n <= 1:
+        return cost
+    e = len(frac)
+    pair_inter = 0.0
+    for i in range(e):
+        node_i = spec.node_of(pmap.primary(i))
+        for j in range(i + 1, e):
+            c = coact[i * e + j]
+            if c > 0.0 and spec.node_of(pmap.primary(j)) != node_i:
+                pair_inter += c
+    if pair_inter > 0.0:
+        cost.inter_time += (
+            coact_weight * pair_inter * float(spec.m) * payload / spec.inter_bw
+        )
+    return cost
+
+
 def solve_lpt(frac, spec):
     g_total = spec.num_gpus()
     e_total = len(frac)
@@ -433,8 +465,9 @@ def replicate_hottest(pmap, frac, spec, top_k, max_replicas, hot_threshold):
     refit_weights(pmap, frac)
 
 
-def refine(pmap, frac, spec, payload, max_swaps):
-    cur = price_placement(pmap, frac, spec, payload).comm_total()
+def refine_with(pmap, frac, max_swaps, price_fn):
+    # solver::refine_with — the swap loop, generic over the pricer
+    cur = price_fn(pmap).comm_total()
     applied = 0
     for _ in range(max_swaps):
         node = pmap.node_loads(frac)
@@ -462,7 +495,7 @@ def refine(pmap, frac, spec, payload, max_swaps):
                 ga, gb = pmap.replicas[a][0], pmap.replicas[b][0]
                 pmap.replicas[a][0] = gb
                 pmap.replicas[b][0] = ga
-                cost = price_placement(pmap, frac, spec, payload).comm_total()
+                cost = price_fn(pmap).comm_total()
                 pmap.replicas[a][0] = ga
                 pmap.replicas[b][0] = gb
                 if cost < cur * (1.0 - 1e-9) and (best is None or cost < best[0]):
@@ -478,6 +511,21 @@ def refine(pmap, frac, spec, payload, max_swaps):
     return applied
 
 
+def refine(pmap, frac, spec, payload, max_swaps):
+    return refine_with(
+        pmap, frac, max_swaps, lambda m: price_placement(m, frac, spec, payload)
+    )
+
+
+def refine_coact(pmap, frac, spec, payload, max_swaps, coact, coact_weight):
+    return refine_with(
+        pmap,
+        frac,
+        max_swaps,
+        lambda m: price_placement_coact(m, frac, spec, payload, coact, coact_weight),
+    )
+
+
 POLICY = dict(
     check_every=50,
     trigger_imbalance=1.25,
@@ -489,10 +537,15 @@ POLICY = dict(
     expert_bytes=9.4e6,
     hops_per_step=24.0,
     ewma_alpha=0.2,
+    coact_weight=1.0,
 )
 
 
-def plan_placement(frac, spec, payload, policy):
+def plan_placement(frac, spec, payload, policy, coact=()):
+    # rebalance::plan_placement_coact — refine and the block fallback
+    # price under the co-location objective; an empty matrix reproduces
+    # the pre-top-k plan bit-for-bit
+    w = policy["coact_weight"]
     pmap = solve_lpt(frac, spec)
     replicate_hottest(
         pmap,
@@ -502,11 +555,11 @@ def plan_placement(frac, spec, payload, policy):
         policy["max_replicas"],
         policy["hot_threshold"],
     )
-    refine(pmap, frac, spec, payload, policy["max_refine_swaps"])
+    refine_coact(pmap, frac, spec, payload, policy["max_refine_swaps"], coact, w)
     refit_weights(pmap, frac)
     block = PMap.block(spec, len(frac))
-    planned = price_placement(pmap, frac, spec, payload)
-    blockc = price_placement(block, frac, spec, payload)
+    planned = price_placement_coact(pmap, frac, spec, payload, coact, w)
+    blockc = price_placement_coact(block, frac, spec, payload, coact, w)
     if planned.comm_total() > blockc.comm_total() or planned.compute_scale > blockc.compute_scale:
         return block
     return pmap
@@ -517,6 +570,26 @@ class Tracker:
         self.alpha = alpha
         self.ewma = [1.0 / float(e_total)] * e_total
         self.steps = 0
+        # E x E row-major EWMA co-activation matrix; stays empty under
+        # pure top-1 traffic (LoadTracker::observe_pairs lazy-init)
+        self.coact = []
+
+    def observe_pairs(self, pairs):
+        total = 0.0
+        for _, _, c in pairs:
+            total += c
+        if not (total > 0.0) or math.isinf(total) or math.isnan(total):
+            return
+        e = len(self.ewma)
+        if not self.coact:
+            self.coact = [0.0] * (e * e)
+        a = self.alpha
+        for idx in range(len(self.coact)):
+            self.coact[idx] *= 1.0 - a
+        for i, j, cnt in pairs:
+            v = a * (cnt / total)
+            self.coact[i * e + j] += v
+            self.coact[j * e + i] += v
 
     def observe(self, loads):
         total = 0.0
@@ -570,6 +643,9 @@ class Rebalancer:
     def observe(self, loads):
         self.tracker.observe(loads)
 
+    def observe_pairs(self, pairs):
+        self.tracker.observe_pairs(pairs)
+
     def _commit(self, step, before, candidate, after, migrated, migration_secs):
         decision = dict(
             step=step,
@@ -601,9 +677,10 @@ class Rebalancer:
                     ),
                 ))
             return None
-        before = price_placement(self.current, frac, self.spec, self.payload)
-        candidate = plan_placement(frac, self.spec, self.payload, p)
-        after = price_placement(candidate, frac, self.spec, self.payload)
+        coact, cw = self.tracker.coact, p["coact_weight"]
+        before = price_placement_coact(self.current, frac, self.spec, self.payload, coact, cw)
+        candidate = plan_placement(frac, self.spec, self.payload, p, coact)
+        after = price_placement_coact(candidate, frac, self.spec, self.payload, coact, cw)
         if before.comm_total() < after.comm_total() * p["hysteresis"]:
             if self.audit:
                 self.audit_buf.append((
@@ -678,9 +755,10 @@ class GreedyEveryCheck(Rebalancer):
             return None
         self.last_consult_step = step
         frac = self.tracker.fractions()
-        before = price_placement(self.current, frac, self.spec, self.payload)
-        candidate = plan_placement(frac, self.spec, self.payload, p)
-        after = price_placement(candidate, frac, self.spec, self.payload)
+        coact, cw = self.tracker.coact, p["coact_weight"]
+        before = price_placement_coact(self.current, frac, self.spec, self.payload, coact, cw)
+        candidate = plan_placement(frac, self.spec, self.payload, p, coact)
+        after = price_placement_coact(candidate, frac, self.spec, self.payload, coact, cw)
         if not (after.comm_total() < before.comm_total()):
             return None
         migrated = count_migrated(self.current, candidate)
@@ -774,6 +852,11 @@ class AdaptivePolicy:
         self.tracker.observe(loads)
         self.fc.observe(loads)
 
+    def observe_pairs(self, pairs):
+        # affinity is an EWMA concern only; the forecaster stays
+        # per-expert (AdaptivePolicy::observe_pairs)
+        self.tracker.observe_pairs(pairs)
+
     def _settle(self, step):
         if self.pending is None:
             return
@@ -783,8 +866,13 @@ class AdaptivePolicy:
         if not (elapsed > 0.0):
             return
         frac = self.tracker.fractions()
-        before = price_placement(prev, frac, self.spec, self.payload).comm_total()
-        after = price_placement(self.current, frac, self.spec, self.payload).comm_total()
+        coact, cw = self.tracker.coact, self.policy["coact_weight"]
+        before = price_placement_coact(
+            prev, frac, self.spec, self.payload, coact, cw
+        ).comm_total()
+        after = price_placement_coact(
+            self.current, frac, self.spec, self.payload, coact, cw
+        ).comm_total()
         reward = (before - after) * self.policy["hops_per_step"] * elapsed - mig
         self.arm_plays[arm] += 1
         self.arm_mean[arm] += (reward - self.arm_mean[arm]) / float(self.arm_plays[arm])
@@ -821,19 +909,24 @@ class AdaptivePolicy:
             return None
         self.consults += 1
         p = self.policy
-        cost_stay = price_placement(self.current, fhat, self.spec, self.payload).comm_total()
+        coact, cw = self.tracker.coact, p["coact_weight"]
+        cost_stay = price_placement_coact(
+            self.current, fhat, self.spec, self.payload, coact, cw
+        ).comm_total()
         noreps = dict(p)
         noreps["top_k_replicate"] = 0
         cands = [
-            plan_placement(fhat, self.spec, self.payload, noreps),
-            plan_placement(fhat, self.spec, self.payload, p),
+            plan_placement(fhat, self.spec, self.payload, noreps, coact),
+            plan_placement(fhat, self.spec, self.payload, p, coact),
         ]
         gains = [0.0, 0.0, 0.0]
         costs = [cost_stay, cost_stay, cost_stay]
         migs = [(0, 0.0), (0, 0.0), (0, 0.0)]
         for i, cand in enumerate(cands):
             arm = i + 1
-            c = price_placement(cand, fhat, self.spec, self.payload).comm_total()
+            c = price_placement_coact(
+                cand, fhat, self.spec, self.payload, coact, cw
+            ).comm_total()
             migrated = count_migrated(self.current, cand)
             mig_secs = float(migrated) * p["expert_bytes"] / self.spec.inter_bw
             gains[arm] = (cost_stay - c) * p["hops_per_step"] * self.cfg["horizon"] - mig_secs
@@ -901,8 +994,12 @@ class AdaptivePolicy:
         self.rebalances += 1
         self.pending = (arm, prev, step, migration_secs)
         frac = self.tracker.fractions()
-        before = price_placement(prev, frac, self.spec, self.payload).comm_total()
-        after = price_placement(self.current, frac, self.spec, self.payload).comm_total()
+        before = price_placement_coact(
+            prev, frac, self.spec, self.payload, coact, cw
+        ).comm_total()
+        after = price_placement_coact(
+            self.current, frac, self.spec, self.payload, coact, cw
+        ).comm_total()
         if self.audit:
             self.audit_buf.append((
                 "rebalance.committed",
@@ -988,18 +1085,55 @@ def scenario_weights(kind, e_total, step, params):
     raise ValueError(kind)
 
 
-def record_scenario(kind, params, n_nodes, gpus, steps, tokens, cap_factor, payload, seed):
+def record_scenario(
+    kind, params, n_nodes, gpus, steps, tokens, cap_factor, payload, seed, top_k=1
+):
     e_total = n_nodes * gpus
-    capacity = max(int(cap_factor * float(tokens) / float(e_total)), 1)
+    k = top_k if top_k > 1 else 1
+    # capacity scales with routed choices (k per token); k = 1 is the
+    # pre-top-k formula bit-for-bit
+    capacity = max(int(cap_factor * float(k * tokens) / float(e_total)), 1)
     rng = Rng(seed)
     trace_steps = []
     for step in range(steps):
         w = scenario_weights(kind, e_total, step, params)
         counts = [0] * e_total
-        for _ in range(tokens):
-            counts[rng.weighted(w)] += 1
-        dropped = sum(max(0, c - capacity) for c in counts)
-        dropped_frac = float(dropped) / float(max(tokens, 1))
+        pairs = []
+        if k == 1:
+            for _ in range(tokens):
+                counts[rng.weighted(w)] += 1
+            dropped = sum(max(0, c - capacity) for c in counts)
+            dropped_frac = float(dropped) / float(max(tokens, 1))
+        else:
+            # k distinct experts per token, drawn without replacement by
+            # zeroing chosen weights (trace::scenario top-k sampling);
+            # same-token pairs tallied into an E x E buffer and
+            # extracted in (i asc, j asc) order (moe::same_token_pairs)
+            pair_m = [0.0] * (e_total * e_total)
+            for _ in range(tokens):
+                w_cur = list(w)
+                row = []
+                for _ in range(k):
+                    e = rng.weighted(w_cur)
+                    w_cur[e] = 0.0
+                    counts[e] += 1
+                    row.append(e)
+                for a in range(k):
+                    for b in range(a + 1, k):
+                        i, j = row[a], row[b]
+                        if i == j:
+                            continue
+                        lo, hi = (i, j) if i < j else (j, i)
+                        pair_m[lo * e_total + hi] += 1.0
+            # arrival-order capacity accounting: per-expert kept =
+            # min(demand, capacity), so dropped = sum of the overflow
+            dropped = sum(max(0, c - capacity) for c in counts)
+            dropped_frac = float(dropped) / float(max(k * tokens, 1))
+            for i in range(e_total):
+                for j in range(i + 1, e_total):
+                    c = pair_m[i * e_total + j]
+                    if c > 0.0:
+                        pairs.append((i, j, c))
         nodes = [0.0] * n_nodes
         for e, c in enumerate(counts):
             nodes[e // gpus] += float(c)
@@ -1010,41 +1144,45 @@ def record_scenario(kind, params, n_nodes, gpus, steps, tokens, cap_factor, payl
                 nodes=nodes,
                 dropped_frac=dropped_frac,
                 tokens=float(tokens),
+                pairs=pairs,
             )
         )
     return trace_steps, capacity
 
 
-def trace_jsonl(name, seed, n_nodes, gpus, steps, tokens, capacity, payload, trace_steps):
-    lines = [
-        emit(
-            dict(
-                kind="meta",
-                version=1,
-                scenario=name,
-                seed=seed,
-                n_nodes=n_nodes,
-                gpus_per_node=gpus,
-                num_experts=n_nodes * gpus,
-                tokens_per_step=tokens,
-                capacity=capacity,
-                payload_per_gpu=payload,
-            )
-        )
-    ]
+def trace_jsonl(
+    name, seed, n_nodes, gpus, steps, tokens, capacity, payload, trace_steps, top_k=1
+):
+    # trace schema v2: top-k recordings carry version 2 with a top_k
+    # meta key; top-1 headers stay byte-identical version-1 lines
+    meta = dict(
+        kind="meta",
+        version=2 if top_k > 1 else 1,
+        scenario=name,
+        seed=seed,
+        n_nodes=n_nodes,
+        gpus_per_node=gpus,
+        num_experts=n_nodes * gpus,
+        tokens_per_step=tokens,
+        capacity=capacity,
+        payload_per_gpu=payload,
+    )
+    if top_k > 1:
+        meta["top_k"] = top_k
+    lines = [emit(meta)]
     for s in trace_steps:
-        lines.append(
-            emit(
-                dict(
-                    kind="step",
-                    step=s["step"],
-                    experts=s["experts"],
-                    nodes=s["nodes"],
-                    dropped_frac=s["dropped_frac"],
-                    tokens=s["tokens"],
-                )
-            )
+        step = dict(
+            kind="step",
+            step=s["step"],
+            experts=s["experts"],
+            nodes=s["nodes"],
+            dropped_frac=s["dropped_frac"],
+            tokens=s["tokens"],
         )
+        # "pairs" is emitted only when non-empty (TraceStep::to_json)
+        if s.get("pairs"):
+            step["pairs"] = [[i, j, c] for i, j, c in s["pairs"]]
+        lines.append(emit(step))
     return "\n".join(lines) + "\n"
 
 
@@ -1084,6 +1222,9 @@ def replay(trace_steps, n_nodes, gpus, payload, policy, kind="threshold", overla
     timeline = []
     for rec in trace_steps:
         t0 = total_comm
+        # RoutingPipeline::step_with_pairs: pairs fold in first (a
+        # no-op on empty/top-1 steps), then observe -> consult
+        rb.observe_pairs(rec.get("pairs") or [])
         rb.observe(rec["experts"])
         d = rb.consult(rec["step"])
         if d is not None:
@@ -1104,8 +1245,15 @@ def replay(trace_steps, n_nodes, gpus, payload, policy, kind="threshold", overla
                         dict(bytes=bytes_, lump_secs=d["migration_secs"], stall_secs=stall),
                     )
                 )
-        cost = price_placement(rb.current, rec["experts"], spec, payload)
-        static_cost = price_placement(block, rec["experts"], spec, payload)
+        # physical accounting always pays the full co-location tax
+        # (weight 1.0, the tracker's matrix) regardless of the policy's
+        # coact_weight knob; empty matrix (top-1) = plain pricing
+        cost = price_placement_coact(
+            rb.current, rec["experts"], spec, payload, rb.tracker.coact, 1.0
+        )
+        static_cost = price_placement_coact(
+            block, rec["experts"], spec, payload, rb.tracker.coact, 1.0
+        )
         hops = policy["hops_per_step"]
         total_comm += cost.comm_total() * hops
         static_comm += static_cost.comm_total() * hops
@@ -1616,22 +1764,37 @@ def fixture_files():
     """(filename, bytes) for every golden fixture, fully in memory."""
     n_nodes, gpus, steps, tokens, cap_factor, payload, seed = 4, 8, 200, 1024, 2.0, 1e6, 7
     cases = [
-        ("trace_uniform", "uniform", dict(), "uniform"),
-        ("trace_zipf12", "zipf", dict(s=1.2), "zipf(1.2)"),
+        ("trace_uniform", "uniform", dict(), "uniform", 1),
+        ("trace_zipf12", "zipf", dict(s=1.2), "zipf(1.2)", 1),
         (
             "trace_burst",
             "burst",
             dict(s=0.0, hot=3, boost=8.0, start=80, end=140),
             "burst(s=0,hot=3,boost=8,steps=80..140)",
+            1,
+        ),
+        # top-2 fixtures: trace schema v2 (top_k meta + per-step pairs)
+        ("trace_zipf12.top2", "zipf", dict(s=1.2), "zipf(1.2)", 2),
+        # the co-location acceptance trace: a skewed base (s=1.2) keeps
+        # hot != cold so refine can act on the pair structure the burst
+        # concentrates on expert 3
+        (
+            "trace_burst.top2",
+            "burst",
+            dict(s=1.2, hot=3, boost=8.0, start=80, end=140),
+            "burst(s=1.2,hot=3,boost=8,steps=80..140)",
+            2,
         ),
     ]
     out = []
-    for fname, kind, params, label in cases:
+    for fname, kind, params, label, top_k in cases:
         trace_steps, capacity = record_scenario(
-            kind, params, n_nodes, gpus, steps, tokens, cap_factor, payload, seed
+            kind, params, n_nodes, gpus, steps, tokens, cap_factor, payload, seed,
+            top_k=top_k,
         )
         text = trace_jsonl(
-            label, seed, n_nodes, gpus, steps, tokens, capacity, payload, trace_steps
+            label, seed, n_nodes, gpus, steps, tokens, capacity, payload, trace_steps,
+            top_k=top_k,
         )
         # goldens are blessed under the default stack: threshold
         # policy, migration overlap disabled
@@ -1644,6 +1807,15 @@ def fixture_files():
                 trace_steps, n_nodes, gpus, payload, POLICY, kind="greedy_every_check"
             )
             summaries.append((".greedy.summary.json", greedy))
+        if fname == "trace_burst.top2":
+            # the affinity-blind counterpart (coact_weight = 0: decision
+            # pricing ignores the pair matrix; physical pricing still
+            # pays it) — the acceptance fixture pair: aware must beat
+            # blind on total_comm_secs + migration_exposed_secs
+            blind_policy = dict(POLICY)
+            blind_policy["coact_weight"] = 0.0
+            blind, _ = replay(trace_steps, n_nodes, gpus, payload, blind_policy)
+            summaries.append((".blind.summary.json", blind))
         raws = []
         if fname == "trace_burst":
             # the adaptive acceptance fixture: forecast + bandit on the
