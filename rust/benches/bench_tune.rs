@@ -1,0 +1,140 @@
+//! Bench: the parallel fork-from-prefix sweep engine — serial
+//! from-scratch tune grids vs shared-prefix forks vs the threadpooled
+//! driver, plus the threaded placement scaling sweep.  The headline
+//! BENCH entries are the serial and 8-thread wall clocks of the full
+//! `smile tune` grid (36 points) and their ratio; the determinism
+//! shape-check asserts every byte is identical before anything is
+//! timed.  Writes reports/bench_tune.json.
+
+use smile::placement::{AdaptiveConfig, AdaptivePolicy, MigrationConfig, RebalancePolicy};
+use smile::simtrain::{placed_scaling_sweep, placed_scaling_sweep_threaded, ModelDims, Scaling};
+use smile::trace::{record_scenario, tune_grid, Scenario, ScenarioConfig, TraceReplayer};
+use smile::util::bench::Bencher;
+
+/// The exact grid `smile tune` sweeps (probe cadence x forecast
+/// horizon x bandit exploration), in the same nested order.
+fn full_grid() -> Vec<AdaptiveConfig> {
+    let mut grid = Vec::new();
+    for &probe_every in &[5usize, 10, 25, 50] {
+        for &horizon in &[10.0f64, 25.0, 50.0] {
+            for &ucb_c in &[0.0f64, 0.5, 2.0] {
+                grid.push(AdaptiveConfig {
+                    probe_every,
+                    horizon,
+                    ucb_c,
+                    ..AdaptiveConfig::default()
+                });
+            }
+        }
+    }
+    grid
+}
+
+fn main() {
+    let cfg = ScenarioConfig {
+        scenario: Scenario::Zipf { s: 1.2 },
+        n_nodes: 4,
+        gpus_per_node: 8,
+        steps: 200,
+        tokens_per_step: 1024,
+        capacity_factor: 2.0,
+        payload_per_gpu: 1e6,
+        seed: 7,
+        top_k: 1,
+    };
+    let trace = record_scenario(&cfg, None);
+    let grid = full_grid();
+    let knobs = RebalancePolicy::default();
+    let migration = MigrationConfig::default();
+
+    println!(
+        "=== tune sweep: {} grid points x {} steps, 32 experts, Zipf(1.2) ===\n",
+        grid.len(),
+        trace.steps.len()
+    );
+
+    // determinism shape-check before timing anything: fork-from-prefix
+    // at any thread count == from-scratch, byte for byte
+    let serial = tune_grid(&trace, knobs.clone(), migration, &grid, 1);
+    let threaded = tune_grid(&trace, knobs.clone(), migration, &grid, 8);
+    assert_eq!(serial.len(), threaded.len());
+    for (i, (s, t)) in serial.iter().zip(&threaded).enumerate() {
+        assert_eq!(s.result, t.result, "grid point {i} drifted across thread counts");
+        let scratch = TraceReplayer::replay_boxed(
+            &trace,
+            Box::new(AdaptivePolicy::new(
+                knobs.clone(),
+                s.cfg.clone(),
+                trace.meta.cluster_spec(),
+                trace.meta.num_experts.max(1),
+                trace.meta.payload_per_gpu,
+            )),
+            migration,
+        );
+        assert_eq!(
+            s.result.summary.to_json().to_string_pretty(),
+            scratch.summary.to_json().to_string_pretty(),
+            "grid point {i}: fork-from-prefix drifted from the from-scratch replay"
+        );
+    }
+    println!("shape check: {} points byte-identical (1T, 8T, from-scratch) ✓\n", grid.len());
+
+    let mut bench = Bencher::default();
+
+    // the pre-engine baseline: every grid point replays from step 0
+    let scratch_ns = bench.bench("tune::from_scratch(36 pts, serial)", || {
+        grid.iter()
+            .map(|cfg| {
+                TraceReplayer::replay_boxed(
+                    &trace,
+                    Box::new(AdaptivePolicy::new(
+                        knobs.clone(),
+                        cfg.clone(),
+                        trace.meta.cluster_spec(),
+                        trace.meta.num_experts.max(1),
+                        trace.meta.payload_per_gpu,
+                    )),
+                    migration,
+                )
+            })
+            .collect::<Vec<_>>()
+    });
+    let fork_ns = bench.bench("tune::tune_grid(36 pts, fork, 1 thread)", || {
+        tune_grid(&trace, knobs.clone(), migration, &grid, 1)
+    });
+    let par_ns = bench.bench("tune::tune_grid(36 pts, fork, 8 threads)", || {
+        tune_grid(&trace, knobs.clone(), migration, &grid, 8)
+    });
+
+    // the ISSUE's headline ratios, recorded as report entries so the
+    // perf trajectory keeps them (values are ratios, not nanoseconds)
+    let fork_speedup = scratch_ns / fork_ns;
+    let total_speedup = scratch_ns / par_ns;
+    bench.record("tune::speedup.fork_over_scratch (ratio)", &[fork_speedup]);
+    bench.record("tune::speedup.8T_over_scratch (ratio)", &[total_speedup]);
+    println!(
+        "\ntune sweep wall clock: scratch {:.1} ms -> fork {:.1} ms -> 8T {:.1} ms \
+         (fork {fork_speedup:.2}x, total {total_speedup:.2}x)\n",
+        scratch_ns / 1e6,
+        fork_ns / 1e6,
+        par_ns / 1e6
+    );
+
+    // the threaded placement scaling sweep rides the same pool
+    let dims = ModelDims::bert_3_7b();
+    let policy = RebalancePolicy::default();
+    let nodes = [2usize, 4, 8, 16, 32];
+    let scaling = Scaling::Weak { per_gpu_batch: dims.micro_batch };
+    let a = placed_scaling_sweep(&dims, &nodes, 1.2, &policy, |_| scaling);
+    let b = placed_scaling_sweep_threaded(&dims, &nodes, 1.2, &policy, |_| scaling, 8);
+    assert_eq!(a, b, "threaded placed sweep drifted from serial");
+    let sweep_serial = bench.bench("simtrain::placed_scaling_sweep(5 pts, serial)", || {
+        placed_scaling_sweep(&dims, &nodes, 1.2, &policy, |_| scaling)
+    });
+    let sweep_par = bench.bench("simtrain::placed_scaling_sweep(5 pts, 8 threads)", || {
+        placed_scaling_sweep_threaded(&dims, &nodes, 1.2, &policy, |_| scaling, 8)
+    });
+    bench.record("simtrain::placed_sweep.speedup_8T (ratio)", &[sweep_serial / sweep_par]);
+
+    bench.write_report("reports/bench_tune.json");
+}

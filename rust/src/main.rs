@@ -119,10 +119,12 @@ const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "tune",
         run: cmd_tune,
-        usage: "--in p.jsonl [--window W] [--min-improvement R] [--migration-overlap F]\n\
+        usage: "--in p.jsonl [--threads N] [--window W] [--min-improvement R] [--migration-overlap F]\n\
                 [--policy <baseline: POLICIES>] [--out p.csv]\n\
                 grid-sweeps the adaptive policy's probe_every x horizon x ucb_c over a\n\
-                recorded trace via replay and prints the Pareto set of\n\
+                recorded trace via fork-from-prefix replay (--threads N fans the grid out\n\
+                over a worker pool; results are byte-identical at any thread count) and\n\
+                prints the Pareto set of\n\
                 (total_comm_secs + migration_exposed_secs) vs rebalance count",
     },
     CommandSpec {
@@ -615,7 +617,7 @@ fn obs_sink_of(args: &Args) -> Result<Option<(SharedSink, String)>> {
 fn finish_events(events: &Option<(SharedSink, String)>) {
     if let Some((sink, path)) = events {
         let emitted = {
-            let mut s = sink.borrow_mut();
+            let mut s = sink.lock().unwrap();
             s.flush();
             s.emitted()
         };
@@ -837,9 +839,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let trace = RoutingTrace::read_jsonl(&path).map_err(anyhow::Error::msg)?;
     let knobs = trace_policy_of(args);
     let migration = migration_of(args);
-    let spec = trace.meta.cluster_spec();
     let num_experts = trace.meta.num_experts.max(1);
-    let payload = trace.meta.payload_per_gpu;
     // --window / --min-improvement come from the shared flag set (and
     // are validated there); the grid sweeps the other three knobs
     let base_cfg = adaptive_config_of(args)?;
@@ -871,29 +871,28 @@ fn cmd_tune(args: &Args) -> Result<()> {
         migrated: usize,
         pareto: bool,
     }
-    let mut rows: Vec<Row> = Vec::new();
+    // the swept grid, in fixed index order (results are collected by
+    // this index, so --threads never reorders or changes a byte)
+    let mut grid: Vec<AdaptiveConfig> = Vec::new();
     for &probe_every in &[5usize, 10, 25, 50] {
         for &horizon in &[10.0f64, 25.0, 50.0] {
             for &ucb_c in &[0.0f64, 0.5, 2.0] {
-                let cfg = AdaptiveConfig { window, horizon, probe_every, ucb_c, min_improvement };
-                let policy = AdaptivePolicy::new(
-                    knobs.clone(),
-                    cfg.clone(),
-                    spec.clone(),
-                    num_experts,
-                    payload,
-                );
-                let r = TraceReplayer::replay_boxed(&trace, Box::new(policy), migration);
-                rows.push(Row {
-                    cfg,
-                    cost: cost_of(&r.summary),
-                    rebalances: r.summary.rebalances,
-                    migrated: r.summary.migrated_replicas,
-                    pareto: false,
-                });
+                grid.push(AdaptiveConfig { window, horizon, probe_every, ucb_c, min_improvement });
             }
         }
     }
+    let threads = args.usize("threads", 1);
+    let outcomes = smile::trace::tune_grid(&trace, knobs.clone(), migration, &grid, threads);
+    let mut rows: Vec<Row> = outcomes
+        .into_iter()
+        .map(|o| Row {
+            cost: cost_of(&o.result.summary),
+            rebalances: o.result.summary.rebalances,
+            migrated: o.result.summary.migrated_replicas,
+            pareto: false,
+            cfg: o.cfg,
+        })
+        .collect();
     // Pareto front: minimize (cost, rebalance count)
     let pareto: Vec<bool> = (0..rows.len())
         .map(|i| {

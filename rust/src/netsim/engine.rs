@@ -10,6 +10,23 @@
 //! dependencies have finished AND its resource is free (FIFO among
 //! ready tasks, ties broken by insertion order), and occupies the
 //! resource for its whole duration.
+//!
+//! Two entry points share one engine:
+//!
+//! - [`DagSim`] — the declarative façade: describe the whole DAG, call
+//!   [`DagSim::run`], get a [`Timeline`].  Unchanged API; `run` now
+//!   instantiates a [`TimelineSim`] internally and is bit-identical to
+//!   the pre-refactor single-shot loop.
+//! - [`TimelineSim`] — the persistent event engine: a `BinaryHeap` of
+//!   end events advancing a virtual clock, with *incremental* task
+//!   admission.  Drivers that extend a timeline step by step (replay
+//!   spans, serve iterations, sweep workloads) admit each step's tasks
+//!   and [`TimelineSim::drain`] only the new events — O(active spans)
+//!   per extension instead of O(full recompute).  Tasks are admitted
+//!   *at the current virtual clock*: a task whose dependencies already
+//!   finished starts no earlier than `now`, which is exactly the
+//!   step-stream contract (step i+1's work never predates step i's
+//!   completion).
 
 use std::collections::BinaryHeap;
 
@@ -36,7 +53,7 @@ struct Task {
     name: String,
     resource: ResourceId,
     duration: f64,
-    n_unmet: usize,
+    deps: Vec<TaskId>,
 }
 
 #[derive(Debug, Clone)]
@@ -78,7 +95,7 @@ impl Timeline {
 }
 
 /// Min-heap event: (time, seq, kind).
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 struct Ev {
     time: f64,
     seq: usize,
@@ -102,11 +119,166 @@ impl PartialOrd for Ev {
     }
 }
 
-#[derive(Default)]
+/// Persistent heap-scheduled event engine with incremental task
+/// admission (see the module docs for the admission-clock contract).
+/// Cheaply cloneable, so a partially-advanced timeline can be forked.
+#[derive(Debug, Clone, Default)]
+pub struct TimelineSim {
+    resources: Vec<String>,
+    tasks: Vec<Task>,
+    /// Unfinished-task dependents (finished deps never re-fire, so
+    /// they are not registered).
+    dependents: Vec<Vec<TaskId>>,
+    unmet: Vec<usize>,
+    done: Vec<bool>,
+    res_free: Vec<f64>,
+    spans: Vec<Option<Span>>,
+    heap: BinaryHeap<Ev>,
+    /// Admitted dep-free tasks not yet started, insertion order.
+    pending: Vec<TaskId>,
+    seq: usize,
+    finished: usize,
+    now: f64,
+}
+
+impl TimelineSim {
+    pub fn new() -> TimelineSim {
+        TimelineSim::default()
+    }
+
+    pub fn resource(&mut self, name: &str) -> ResourceId {
+        self.resources.push(name.to_string());
+        self.res_free.push(0.0);
+        self.resources.len() - 1
+    }
+
+    /// Admit a task at the current virtual clock.  Dependencies must
+    /// already be admitted; a task whose dependencies have all
+    /// finished becomes pending and starts at the next
+    /// [`TimelineSim::drain`], no earlier than `now`.
+    pub fn task(
+        &mut self,
+        name: &str,
+        resource: ResourceId,
+        duration: f64,
+        deps: &[TaskId],
+    ) -> TaskId {
+        assert!(resource < self.resources.len(), "unknown resource");
+        assert!(duration >= 0.0, "negative duration");
+        for &d in deps {
+            assert!(d < self.tasks.len(), "dep on future task");
+        }
+        let id = self.tasks.len();
+        let unmet = deps.iter().filter(|&&d| !self.done[d]).count();
+        self.tasks.push(Task {
+            name: name.to_string(),
+            resource,
+            duration,
+            deps: deps.to_vec(),
+        });
+        self.dependents.push(Vec::new());
+        self.unmet.push(unmet);
+        self.done.push(false);
+        self.spans.push(None);
+        for &d in deps {
+            if !self.done[d] {
+                self.dependents[d].push(id);
+            }
+        }
+        if unmet == 0 {
+            self.pending.push(id);
+        }
+        id
+    }
+
+    fn start_task(&mut self, t: TaskId) {
+        let task = &self.tasks[t];
+        let start = self.now.max(self.res_free[task.resource]);
+        let end = start + task.duration;
+        let resource = task.resource;
+        self.res_free[resource] = end;
+        self.spans[t] = Some(Span {
+            task: t,
+            name: task.name.clone(),
+            resource,
+            start,
+            end,
+        });
+        self.heap.push(Ev { time: end, seq: self.seq, task: t });
+        self.seq += 1;
+    }
+
+    /// Run all admitted work to completion, advancing the virtual
+    /// clock.  Pending tasks start grouped by resource in insertion
+    /// order (FIFO per resource — the same seeding order the one-shot
+    /// loop used, so a batch admission reproduces [`DagSim::run`]
+    /// bit-for-bit).  Cost is O(events since the last drain), not
+    /// O(total tasks).
+    pub fn drain(&mut self) {
+        let pending = std::mem::take(&mut self.pending);
+        let mut by_res: Vec<Vec<TaskId>> = vec![Vec::new(); self.resources.len()];
+        for t in pending {
+            by_res[self.tasks[t].resource].push(t);
+        }
+        for q in by_res {
+            for t in q {
+                self.start_task(t);
+            }
+        }
+        while let Some(ev) = self.heap.pop() {
+            debug_assert!(ev.time >= self.now - 1e-12, "causality violated");
+            self.now = ev.time;
+            self.finished += 1;
+            self.done[ev.task] = true;
+            for i in 0..self.dependents[ev.task].len() {
+                let dep = self.dependents[ev.task][i];
+                self.unmet[dep] -= 1;
+                if self.unmet[dep] == 0 {
+                    self.start_task(dep);
+                }
+            }
+        }
+    }
+
+    /// The virtual clock: the end time of the last drained event.
+    pub fn clock(&self) -> f64 {
+        self.now
+    }
+
+    /// Tasks admitted so far.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Snapshot the completed timeline.  Requires a prior
+    /// [`TimelineSim::drain`] with every admitted task finished.
+    pub fn timeline(&self) -> Timeline {
+        assert!(
+            self.pending.is_empty() && self.heap.is_empty(),
+            "drain before taking the timeline"
+        );
+        assert_eq!(self.finished, self.tasks.len(), "cycle in task DAG");
+        let spans: Vec<Span> =
+            self.spans.iter().map(|s| s.clone().expect("finished span")).collect();
+        let makespan = spans.iter().map(|s| s.end).fold(0.0, f64::max);
+        let mut busy = vec![0.0; self.resources.len()];
+        for s in &spans {
+            busy[s.resource] += s.duration();
+        }
+        Timeline { makespan, spans, busy, resources: self.resources.clone() }
+    }
+}
+
+/// Declarative DAG description; [`DagSim::run`] replays it through a
+/// fresh [`TimelineSim`].
+#[derive(Debug, Clone, Default)]
 pub struct DagSim {
     tasks: Vec<Task>,
     resources: Vec<String>,
-    dependents: Vec<Vec<TaskId>>,
 }
 
 impl DagSim {
@@ -136,81 +308,22 @@ impl DagSim {
             name: name.to_string(),
             resource,
             duration,
-            n_unmet: deps.len(),
+            deps: deps.to_vec(),
         });
-        self.dependents.push(Vec::new());
-        for &d in deps {
-            self.dependents[d].push(id);
-        }
         id
     }
 
     /// Run to completion, returning the full timeline.
     pub fn run(&self) -> Timeline {
-        let n = self.tasks.len();
-        let mut unmet: Vec<usize> = self.tasks.iter().map(|t| t.n_unmet).collect();
-        let mut res_free = vec![0.0f64; self.resources.len()];
-        let mut res_queue: Vec<Vec<TaskId>> = vec![Vec::new(); self.resources.len()];
-        let mut spans: Vec<Option<Span>> = vec![None; n];
-        let mut heap = BinaryHeap::new();
-        let mut seq = 0usize;
-        let mut finished = 0usize;
-        let mut now = 0.0f64;
-
-        let start_task = |t: TaskId,
-                              now: f64,
-                              res_free: &mut Vec<f64>,
-                              spans: &mut Vec<Option<Span>>,
-                              heap: &mut BinaryHeap<Ev>,
-                              seq: &mut usize| {
-            let task = &self.tasks[t];
-            let start = now.max(res_free[task.resource]);
-            let end = start + task.duration;
-            res_free[task.resource] = end;
-            spans[t] = Some(Span {
-                task: t,
-                name: task.name.clone(),
-                resource: task.resource,
-                start,
-                end,
-            });
-            heap.push(Ev { time: end, seq: *seq, task: t });
-            *seq += 1;
-        };
-
-        // seed: all tasks with no deps, in insertion order (FIFO per resource)
-        for t in 0..n {
-            if unmet[t] == 0 {
-                res_queue[self.tasks[t].resource].push(t);
-            }
+        let mut sim = TimelineSim::new();
+        for name in &self.resources {
+            sim.resource(name);
         }
-        for q in &mut res_queue {
-            let ready = std::mem::take(q);
-            for t in ready {
-                start_task(t, now, &mut res_free, &mut spans, &mut heap, &mut seq);
-            }
+        for t in &self.tasks {
+            sim.task(&t.name, t.resource, t.duration, &t.deps);
         }
-
-        while let Some(ev) = heap.pop() {
-            debug_assert!(ev.time >= now - 1e-12, "causality violated");
-            now = ev.time;
-            finished += 1;
-            for &dep in &self.dependents[ev.task] {
-                unmet[dep] -= 1;
-                if unmet[dep] == 0 {
-                    start_task(dep, now, &mut res_free, &mut spans, &mut heap, &mut seq);
-                }
-            }
-        }
-        assert_eq!(finished, n, "cycle in task DAG");
-
-        let spans: Vec<Span> = spans.into_iter().map(|s| s.unwrap()).collect();
-        let makespan = spans.iter().map(|s| s.end).fold(0.0, f64::max);
-        let mut busy = vec![0.0; self.resources.len()];
-        for s in &spans {
-            busy[s.resource] += s.duration();
-        }
-        Timeline { makespan, spans, busy, resources: self.resources.clone() }
+        sim.drain();
+        sim.timeline()
     }
 }
 
@@ -331,5 +444,158 @@ mod tests {
         let r = sim.resource("r");
         sim.task("a", r, 1.0, &[]);
         sim.run().span_of_expect(7);
+    }
+
+    // --- TimelineSim: the persistent, incrementally-fed engine ---
+
+    /// Bit-compare two timelines: same spans, same float bits.
+    fn assert_bitwise_eq(a: &Timeline, b: &Timeline) {
+        assert_eq!(a.spans.len(), b.spans.len());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        for (x, y) in a.spans.iter().zip(&b.spans) {
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.resource, y.resource);
+            assert_eq!(x.start.to_bits(), y.start.to_bits(), "{}", x.name);
+            assert_eq!(x.end.to_bits(), y.end.to_bits(), "{}", x.name);
+        }
+        for (x, y) in a.busy.iter().zip(&b.busy) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// Build one layer-forward-shaped DAG into either engine facade.
+    fn layer_dag(mut task: impl FnMut(&str, ResourceId, f64, &[TaskId]) -> TaskId) {
+        let (gpu, nic, sw) = (0, 1, 2);
+        let r = task("router", gpu, 0.013, &[]);
+        let d = task("dispatch", gpu, 0.004, &[r]);
+        let h1 = task("a2a.inter.d", nic, 0.077, &[d]);
+        let h2 = task("a2a.intra.d", sw, 0.009, &[h1]);
+        let f = task("ffn", gpu, 0.041, &[h2]);
+        let h3 = task("a2a.intra.c", sw, 0.009, &[f]);
+        let h4 = task("a2a.inter.c", nic, 0.077, &[h3]);
+        task("combine", gpu, 0.001, &[h4]);
+    }
+
+    #[test]
+    fn batch_admission_matches_dagsim_bitwise() {
+        // the façade contract: DagSim::run over a TimelineSim with all
+        // tasks admitted before one drain must be the pre-refactor
+        // float sequence, bit for bit
+        let mut dag = DagSim::new();
+        for r in ["gpu", "nic", "nvswitch"] {
+            dag.resource(r);
+        }
+        layer_dag(|n, r, d, deps| dag.task(n, r, d, deps));
+        let mut sim = TimelineSim::new();
+        for r in ["gpu", "nic", "nvswitch"] {
+            sim.resource(r);
+        }
+        layer_dag(|n, r, d, deps| sim.task(n, r, d, deps));
+        sim.drain();
+        assert_bitwise_eq(&dag.run(), &sim.timeline());
+    }
+
+    #[test]
+    fn incremental_step_stream_matches_batch_bitwise() {
+        // the replay/serve shape: every step's tasks hang off the
+        // previous step's barrier task, so per-step admit + drain must
+        // reproduce the all-at-once run exactly
+        let build = |sim: &mut TimelineSim, step: usize, barrier: Option<TaskId>| {
+            let deps: Vec<TaskId> = barrier.into_iter().collect();
+            let comm = sim.task(&format!("comm.{step}"), 1, 0.1 + step as f64 * 0.01, &deps);
+            let compute = sim.task(&format!("compute.{step}"), 0, 0.07, &deps);
+            sim.task(&format!("barrier.{step}"), 0, 0.001, &[comm, compute])
+        };
+        let mut inc = TimelineSim::new();
+        inc.resource("gpu");
+        inc.resource("nic");
+        let mut barrier = None;
+        for step in 0..50 {
+            barrier = Some(build(&mut inc, step, barrier));
+            inc.drain(); // event-driven: only this step's 3 events
+        }
+        let mut batch = TimelineSim::new();
+        batch.resource("gpu");
+        batch.resource("nic");
+        let mut b2 = None;
+        for step in 0..50 {
+            b2 = Some(build(&mut batch, step, b2));
+        }
+        batch.drain();
+        assert_bitwise_eq(&inc.timeline(), &batch.timeline());
+        assert!(inc.clock() > 0.0);
+        assert_eq!(inc.clock().to_bits(), batch.clock().to_bits());
+    }
+
+    #[test]
+    fn drain_without_new_work_is_a_noop() {
+        let mut sim = TimelineSim::new();
+        let r = sim.resource("r");
+        sim.task("a", r, 1.5, &[]);
+        sim.drain();
+        let t1 = sim.timeline();
+        sim.drain();
+        sim.drain();
+        assert_bitwise_eq(&t1, &sim.timeline());
+        assert_eq!(sim.clock().to_bits(), 1.5f64.to_bits());
+    }
+
+    #[test]
+    fn late_task_starts_no_earlier_than_the_clock() {
+        // admission-clock contract: a dep-free task admitted after the
+        // clock advanced starts at `now`, even if its resource idled
+        let mut sim = TimelineSim::new();
+        let gpu = sim.resource("gpu");
+        let nic = sim.resource("nic");
+        sim.task("comm", nic, 5.0, &[]);
+        sim.drain();
+        let late = sim.task("late", gpu, 1.0, &[]);
+        sim.drain();
+        let t = sim.timeline();
+        assert_eq!(t.span_of_expect(late).start.to_bits(), 5.0f64.to_bits());
+        assert_eq!(t.makespan.to_bits(), 6.0f64.to_bits());
+    }
+
+    #[test]
+    fn fork_diverges_without_corrupting_the_parent() {
+        // cheap cloneability: fork a half-advanced timeline, extend
+        // the branches differently, and the shared prefix stays bit-
+        // identical in both
+        let mut sim = TimelineSim::new();
+        let r = sim.resource("r");
+        let a = sim.task("a", r, 2.0, &[]);
+        sim.drain();
+        let mut fork = sim.clone();
+        sim.task("b", r, 1.0, &[a]);
+        fork.task("b'", r, 3.0, &[a]);
+        sim.drain();
+        fork.drain();
+        let (t1, t2) = (sim.timeline(), fork.timeline());
+        assert_eq!(t1.span_of_expect(a).end.to_bits(), t2.span_of_expect(a).end.to_bits());
+        assert_eq!(t1.makespan.to_bits(), 3.0f64.to_bits());
+        assert_eq!(t2.makespan.to_bits(), 5.0f64.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "drain before taking the timeline")]
+    fn timeline_requires_a_drain() {
+        let mut sim = TimelineSim::new();
+        let r = sim.resource("r");
+        sim.task("a", r, 1.0, &[]);
+        sim.timeline();
+    }
+
+    #[test]
+    fn task_depending_on_finished_work_is_immediately_ready() {
+        let mut sim = TimelineSim::new();
+        let r = sim.resource("r");
+        let a = sim.task("a", r, 1.0, &[]);
+        sim.drain();
+        // `a` is done; a dependent admitted now must not deadlock
+        let b = sim.task("b", r, 1.0, &[a]);
+        sim.drain();
+        let t = sim.timeline();
+        assert_eq!(t.span_of_expect(b).start.to_bits(), 1.0f64.to_bits());
     }
 }

@@ -6,13 +6,14 @@
 //! - `collectives`: analytic cost models (flat vs bi-level All2All,
 //!   AllReduce, broadcast) including the paper's launch-count and
 //!   congestion arguments.
-//! - `engine`: discrete-event DAG simulation for step pipelines,
-//!   overlap (Fig 12), and timelines (Figs 9-11).
+//! - `engine`: event-driven DAG simulation (heap-scheduled virtual
+//!   clock, incremental admission) for step pipelines, overlap
+//!   (Fig 12), and timelines (Figs 9-11).
 
 pub mod collectives;
 pub mod engine;
 pub mod topology;
 
 pub use collectives::CollectiveCost;
-pub use engine::{DagSim, Timeline};
+pub use engine::{DagSim, Timeline, TimelineSim};
 pub use topology::{ClusterSpec, GpuId};

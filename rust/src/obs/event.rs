@@ -83,7 +83,7 @@ impl Event {
 pub struct EventSink {
     ring: VecDeque<Event>,
     cap: usize,
-    writer: Option<Box<dyn Write>>,
+    writer: Option<Box<dyn Write + Send>>,
     now: f64,
     emitted: usize,
 }
@@ -100,9 +100,13 @@ impl std::fmt::Debug for EventSink {
     }
 }
 
-/// The handle emitters hold: single-threaded shared ownership so the
-/// driver, the pipeline, and the CLI can all reach one sink.
-pub type SharedSink = std::rc::Rc<std::cell::RefCell<EventSink>>;
+/// The handle emitters hold: shared ownership so the driver, the
+/// pipeline, and the CLI can all reach one sink.  `Arc<Mutex<..>>`
+/// (not `Rc<RefCell<..>>`) so pipelines stay `Send` for the parallel
+/// sweep driver; contention is nil in practice because sweep forks
+/// run with no sink attached and single-driver runs are the only
+/// emitters.
+pub type SharedSink = std::sync::Arc<std::sync::Mutex<EventSink>>;
 
 /// Default ring capacity: enough for every golden run with headroom.
 pub const DEFAULT_RING_CAP: usize = 1 << 16;
@@ -112,18 +116,18 @@ impl EventSink {
         EventSink { ring: VecDeque::new(), cap: cap.max(1), writer: None, now: 0.0, emitted: 0 }
     }
 
-    pub fn with_writer(cap: usize, writer: Box<dyn Write>) -> EventSink {
+    pub fn with_writer(cap: usize, writer: Box<dyn Write + Send>) -> EventSink {
         EventSink { writer: Some(writer), ..EventSink::new(cap) }
     }
 
     /// A [`SharedSink`] with the default ring capacity.
     pub fn shared() -> SharedSink {
-        std::rc::Rc::new(std::cell::RefCell::new(EventSink::new(DEFAULT_RING_CAP)))
+        std::sync::Arc::new(std::sync::Mutex::new(EventSink::new(DEFAULT_RING_CAP)))
     }
 
     /// A [`SharedSink`] streaming every event to `writer` as JSONL.
-    pub fn shared_with_writer(writer: Box<dyn Write>) -> SharedSink {
-        std::rc::Rc::new(std::cell::RefCell::new(EventSink::with_writer(
+    pub fn shared_with_writer(writer: Box<dyn Write + Send>) -> SharedSink {
+        std::sync::Arc::new(std::sync::Mutex::new(EventSink::with_writer(
             DEFAULT_RING_CAP,
             writer,
         )))
@@ -284,25 +288,24 @@ mod tests {
 
     #[test]
     fn writer_sees_every_event_past_the_ring() {
-        use std::cell::RefCell;
-        use std::rc::Rc;
+        use std::sync::{Arc, Mutex};
 
-        struct Shared(Rc<RefCell<Vec<u8>>>);
+        struct Shared(Arc<Mutex<Vec<u8>>>);
         impl Write for Shared {
             fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
-                self.0.borrow_mut().extend_from_slice(buf);
+                self.0.lock().unwrap().extend_from_slice(buf);
                 Ok(buf.len())
             }
             fn flush(&mut self) -> std::io::Result<()> {
                 Ok(())
             }
         }
-        let buf = Rc::new(RefCell::new(Vec::new()));
+        let buf = Arc::new(Mutex::new(Vec::new()));
         let mut sink = EventSink::with_writer(2, Box::new(Shared(buf.clone())));
         for i in 0..4 {
             sink.emit("tick", i, Json::Null);
         }
-        let text = String::from_utf8(buf.borrow().clone()).unwrap();
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
         assert_eq!(text.lines().count(), 4, "writer must not be truncated by the ring");
         assert_eq!(sink.len(), 2);
     }

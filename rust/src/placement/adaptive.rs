@@ -144,6 +144,32 @@ impl AdaptivePolicy {
         }
     }
 
+    /// Swap in the knob-dependent config after a neutral replayed
+    /// prefix — the fork half of the `ReplayCursor` contract.
+    ///
+    /// A prefix replayed with `probe_every = 0` never consults:
+    /// [`AdaptivePolicy::consult`] early-returns before touching any
+    /// state, while `observe`/`observe_pairs` fold load evidence that
+    /// depends only on `window` and the EWMA alpha — not on `horizon`
+    /// / `probe_every` / `ucb_c` / `min_improvement`.  Retuning such a
+    /// policy and replaying the remaining steps is therefore
+    /// byte-identical to a from-scratch replay under `cfg`, provided
+    /// the prefix ends before `cfg`'s first consult boundary (prefix
+    /// length <= `cfg.probe_every`) and the forecaster window is
+    /// unchanged.  Both preconditions are asserted.
+    pub fn retune(&mut self, cfg: AdaptiveConfig) {
+        assert_eq!(cfg.window, self.cfg.window, "retune cannot resize the forecaster ring");
+        assert!(
+            self.consults == 0
+                && self.last_consult_step == 0
+                && self.pending.is_none()
+                && self.rebalances == 0
+                && self.arm_plays == [0; NUM_ARMS],
+            "retune requires a consult-free prefix (replay it with probe_every = 0)"
+        );
+        self.cfg = cfg;
+    }
+
     /// Realized rewards settled per arm so far — (plays, mean reward).
     pub fn arm_stats(&self) -> [(usize, f64); NUM_ARMS] {
         [
@@ -399,6 +425,14 @@ impl PlacementPolicy for AdaptivePolicy {
     fn take_audit(&mut self) -> Vec<(&'static str, Json)> {
         std::mem::take(&mut self.audit_buf)
     }
+
+    fn clone_box(&self) -> Box<dyn PlacementPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
 }
 
 #[cfg(test)]
@@ -551,6 +585,68 @@ mod tests {
         }
         assert_eq!(pol.tracker().steps(), 0);
         assert_eq!(pol.placement(), &PlacementMap::block(&spec, e));
+    }
+
+    #[test]
+    fn retune_after_a_neutral_prefix_matches_from_scratch_bitwise() {
+        // the fork contract at policy level: observe a prefix under a
+        // consult-free neutral config, retune to the target knobs, and
+        // the continued decision stream must be bit-identical to a
+        // from-scratch policy under those knobs
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let target = AdaptiveConfig { probe_every: 10, ..AdaptiveConfig::default() };
+        let neutral = AdaptiveConfig { probe_every: 0, ..target.clone() };
+        let mut forked =
+            AdaptivePolicy::new(RebalancePolicy::default(), neutral, spec.clone(), e, 1e6);
+        let mut scratch =
+            AdaptivePolicy::new(RebalancePolicy::default(), target.clone(), spec, e, 1e6);
+        let frac = zipf_fractions(e, 1.3);
+        // prefix of length 9 < probe_every = 10: scratch never
+        // consults here either (step / 10 == 0 == last_consult / 10)
+        for step in 0..9 {
+            forked.observe(&frac);
+            scratch.observe(&frac);
+            assert!(forked.consult(step).is_none());
+            assert!(scratch.consult(step).is_none());
+        }
+        forked.retune(target);
+        for step in 9..60 {
+            forked.observe(&frac);
+            scratch.observe(&frac);
+            let (a, b) = (forked.consult(step), scratch.consult(step));
+            match (&a, &b) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.placement, y.placement);
+                    assert_eq!(x.comm_after.to_bits(), y.comm_after.to_bits());
+                    assert_eq!(x.migration_secs.to_bits(), y.migration_secs.to_bits());
+                }
+                (None, None) => {}
+                other => panic!("step {step}: fork vs scratch diverged: {other:?}"),
+            }
+        }
+        assert_eq!(forked.rebalances(), scratch.rebalances());
+        assert!(forked.rebalances() > 0, "the skew must commit at least once");
+        assert_eq!(forked.placement(), scratch.placement());
+        let (fa, sa) = (forked.arm_stats(), scratch.arm_stats());
+        for (x, y) in fa.iter().zip(&sa) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "consult-free prefix")]
+    fn retune_rejects_a_consulted_policy() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut pol = adaptive(spec, e);
+        let frac = zipf_fractions(e, 1.3);
+        for _ in 0..16 {
+            pol.observe(&frac);
+        }
+        pol.consult(10).expect("skew must commit");
+        pol.retune(AdaptiveConfig::default());
     }
 
     #[test]

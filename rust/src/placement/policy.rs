@@ -39,7 +39,11 @@ use crate::util::json::Json;
 /// policy decides to move experts, after which [`placement`] must
 /// reflect the new layout; `describe` names the policy and its live
 /// knobs for reports.
-pub trait PlacementPolicy: std::fmt::Debug {
+///
+/// `Send + Sync` because the parallel sweep driver moves forked
+/// pipelines onto pool workers (and shares the fork source behind an
+/// `Arc`); every shipped policy is plain owned data.
+pub trait PlacementPolicy: std::fmt::Debug + Send + Sync {
     /// Fold one step's per-expert load histogram.
     fn observe(&mut self, loads: &[f64]);
     /// Fold one step's same-token expert co-activation counts
@@ -75,6 +79,20 @@ pub trait PlacementPolicy: std::fmt::Debug {
     /// non-auditing policies).
     fn take_audit(&mut self) -> Vec<(&'static str, Json)> {
         Vec::new()
+    }
+    /// Deep-copy the policy behind the trait object — the fork half of
+    /// the `ReplayCursor` contract (every shipped policy is plain data,
+    /// so this is a straight `Clone`).
+    fn clone_box(&self) -> Box<dyn PlacementPolicy>;
+    /// Downcast hook so drivers that fork a replayed prefix can reach
+    /// a concrete policy (e.g. `AdaptivePolicy::retune`) behind the
+    /// trait object.
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}
+
+impl Clone for Box<dyn PlacementPolicy> {
+    fn clone(&self) -> Box<dyn PlacementPolicy> {
+        self.clone_box()
     }
 }
 
@@ -128,6 +146,14 @@ impl PlacementPolicy for Rebalancer {
 
     fn take_audit(&mut self) -> Vec<(&'static str, Json)> {
         std::mem::take(&mut self.audit_buf)
+    }
+
+    fn clone_box(&self) -> Box<dyn PlacementPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 }
 
@@ -190,6 +216,14 @@ impl PlacementPolicy for StaticBlock {
 
     fn describe(&self) -> String {
         "static_block".into()
+    }
+
+    fn clone_box(&self) -> Box<dyn PlacementPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 }
 
@@ -281,6 +315,14 @@ impl PlacementPolicy for GreedyEveryCheck {
 
     fn describe(&self) -> String {
         format!("greedy_every_check(check_every={})", self.inner.policy.check_every)
+    }
+
+    fn clone_box(&self) -> Box<dyn PlacementPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 }
 
@@ -379,7 +421,11 @@ pub struct PipelineStepReport {
 /// background drain.  Replaces the four hand-rolled copies that used
 /// to live in `trainer/mod.rs`, `trace/replay.rs`,
 /// `trace/scenario.rs`, and `simtrain/step_model.rs`.
-#[derive(Debug)]
+///
+/// `Clone` deep-copies the policy and migration state (the fork half
+/// of the `ReplayCursor` contract); an attached obs sink is *shared*
+/// between the clones, so sweep forks run with no sink attached.
+#[derive(Debug, Clone)]
 pub struct RoutingPipeline {
     pub spec: ClusterSpec,
     /// Bytes each GPU contributes per dispatch hop (for pricing).
@@ -444,7 +490,7 @@ impl RoutingPipeline {
     /// [`RoutingPipeline::step`] so events carry the right `t`.
     pub fn set_obs_now(&mut self, now: f64) {
         if let Some(obs) = &self.obs {
-            obs.borrow_mut().set_now(now);
+            obs.lock().unwrap().set_now(now);
         }
     }
 
@@ -462,7 +508,7 @@ impl RoutingPipeline {
             enqueue_bytes = bytes;
         }
         if let Some(obs) = &self.obs {
-            let mut sink = obs.borrow_mut();
+            let mut sink = obs.lock().unwrap();
             for (kind, data) in self.policy.take_audit() {
                 sink.emit(kind, step, data);
             }
@@ -514,7 +560,7 @@ impl RoutingPipeline {
         let tick = self.migration.drain(window_secs);
         if tick.drained_bytes > 0.0 {
             if let Some(obs) = &self.obs {
-                obs.borrow_mut().emit(
+                obs.lock().unwrap().emit(
                     "migration.drain",
                     self.last_step,
                     obj! {
@@ -530,6 +576,13 @@ impl RoutingPipeline {
 
     pub fn policy(&self) -> &dyn PlacementPolicy {
         self.policy.as_ref()
+    }
+
+    /// Mutable access to the policy behind the pipeline — the
+    /// downcast point (`as_any_mut`) fork-from-prefix drivers use to
+    /// retune a cloned policy.
+    pub fn policy_mut(&mut self) -> &mut dyn PlacementPolicy {
+        self.policy.as_mut()
     }
 
     pub fn placement(&self) -> &PlacementMap {

@@ -223,7 +223,7 @@ pub fn serve_with_obs(
     let mut pipeline =
         RoutingPipeline::from_policy(policy, spec.clone(), nominal_payload, migration);
     if let Some(o) = &obs {
-        o.borrow_mut().meta("serve", pipeline.policy().name());
+        o.lock().unwrap().meta("serve", pipeline.policy().name());
         pipeline.attach_obs(o.clone());
     }
 
@@ -286,7 +286,7 @@ pub fn serve_with_obs(
         if let Some(o) = &obs {
             let newly_rejected = batcher.rejected.len() - before_rejected;
             if newly_admitted > 0 || newly_rejected > 0 {
-                let mut sink = o.borrow_mut();
+                let mut sink = o.lock().unwrap();
                 sink.set_now(now);
                 if newly_admitted > 0 {
                     sink.emit("requests.admitted", iters, obj! {"count" => newly_admitted});
@@ -325,7 +325,7 @@ pub fn serve_with_obs(
             c.peak_queue_depth = queue_depth;
         }
         if let Some(o) = &obs {
-            let mut sink = o.borrow_mut();
+            let mut sink = o.lock().unwrap();
             // stamps the shared sink's clock for this iteration: the
             // pipeline's decision/migration events below reuse it
             sink.set_now(now);

@@ -10,6 +10,7 @@ pub mod step_model;
 pub use layer_model::{moe_layer_forward, moe_layer_forward_chunked, LayerBreakdown};
 pub use models::{ModelDims, Variant};
 pub use step_model::{
-    placed_scaling_sweep, placed_step_time, placed_throughput, scaling_sweep, step_time,
-    throughput, traced_step_times, traced_step_times_with, Scaling, StepBreakdown,
+    placed_scaling_sweep, placed_scaling_sweep_threaded, placed_step_time, placed_throughput,
+    scaling_sweep, step_time, throughput, traced_step_times, traced_step_times_with, Scaling,
+    StepBreakdown,
 };

@@ -298,21 +298,56 @@ pub fn placed_scaling_sweep(
 ) -> Vec<(usize, f64, f64)> {
     node_counts
         .iter()
-        .map(|&n| {
-            let spec = ClusterSpec::p4d(n);
-            let e = spec.num_gpus();
-            let frac = crate::placement::zipf_fractions(e, skew);
-            let payload = super::layer_model::hop_payload(dims);
-            let block = PlacementMap::block(&spec, e);
-            let planned = plan_placement(&frac, &spec, payload, policy);
-            let scaling = scaling_of(n);
-            (
-                n,
-                placed_throughput(dims, &spec, &block, &frac, scaling),
-                placed_throughput(dims, &spec, &planned, &frac, scaling),
-            )
-        })
+        .map(|&n| placed_scaling_point(dims, n, skew, policy, scaling_of(n)))
         .collect()
+}
+
+/// One node count of [`placed_scaling_sweep`] — shared by the serial
+/// and threaded forms so they compute the identical float sequence.
+fn placed_scaling_point(
+    dims: &ModelDims,
+    n: usize,
+    skew: f64,
+    policy: &RebalancePolicy,
+    scaling: Scaling,
+) -> (usize, f64, f64) {
+    let spec = ClusterSpec::p4d(n);
+    let e = spec.num_gpus();
+    let frac = crate::placement::zipf_fractions(e, skew);
+    let payload = super::layer_model::hop_payload(dims);
+    let block = PlacementMap::block(&spec, e);
+    let planned = plan_placement(&frac, &spec, payload, policy);
+    (
+        n,
+        placed_throughput(dims, &spec, &block, &frac, scaling),
+        placed_throughput(dims, &spec, &planned, &frac, scaling),
+    )
+}
+
+/// [`placed_scaling_sweep`] fanned out over the in-tree thread pool:
+/// one job per node count, results collected by sweep index, so the
+/// output is byte-identical to the serial form at any thread count
+/// (`threads <= 1` runs inline on the caller's thread).  Each node
+/// count is an independent closed-form evaluation, so no state is
+/// shared across jobs.
+pub fn placed_scaling_sweep_threaded(
+    dims: &ModelDims,
+    node_counts: &[usize],
+    skew: f64,
+    policy: &RebalancePolicy,
+    scaling_of: impl Fn(usize) -> Scaling,
+    threads: usize,
+) -> Vec<(usize, f64, f64)> {
+    if threads <= 1 {
+        return placed_scaling_sweep(dims, node_counts, skew, policy, scaling_of);
+    }
+    // resolve the scaling policy on the caller's thread so the
+    // closure needs no Send bound, then ship plain data to the pool
+    let points: Vec<(usize, Scaling)> =
+        node_counts.iter().map(|&n| (n, scaling_of(n))).collect();
+    let (dims, policy) = (dims.clone(), policy.clone());
+    crate::util::threadpool::ThreadPool::new(threads)
+        .map(points, move |(n, scaling)| placed_scaling_point(&dims, n, skew, &policy, scaling))
 }
 
 /// Scaling sweep over node counts; returns (nodes, samples/s) pairs.
@@ -342,6 +377,30 @@ mod tests {
     fn paper_scaling() -> Scaling {
         // paper §4.1: total batch 16384, micro batch 128
         Scaling::Strong { global_batch: 16384 }
+    }
+
+    #[test]
+    fn threaded_placed_sweep_matches_serial_bitwise() {
+        let d = dims();
+        let policy = crate::placement::RebalancePolicy::default();
+        let nodes = [2usize, 4, 8, 16];
+        let serial = placed_scaling_sweep(&d, &nodes, 1.2, &policy, |_| paper_scaling());
+        for threads in [2, 8] {
+            let par = placed_scaling_sweep_threaded(
+                &d,
+                &nodes,
+                1.2,
+                &policy,
+                |_| paper_scaling(),
+                threads,
+            );
+            assert_eq!(par.len(), serial.len());
+            for ((n1, b1, r1), (n2, b2, r2)) in par.iter().zip(&serial) {
+                assert_eq!(n1, n2, "threads={threads}");
+                assert_eq!(b1.to_bits(), b2.to_bits(), "threads={threads} nodes={n1}");
+                assert_eq!(r1.to_bits(), r2.to_bits(), "threads={threads} nodes={n1}");
+            }
+        }
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //!   migration overlap) over a recorded trace and emits a per-step
 //!   timeline plus an end-of-trace `ReplaySummary` with the
 //!   exposed/overlapped migration split.
+//! - [`sweep`]: the parallel fork-from-prefix grid driver behind
+//!   `smile tune --threads` — a `ReplayCursor` replays the
+//!   knob-independent prefix once, each grid point forks from it, and
+//!   the forks fan out over `util::threadpool` with byte-identical
+//!   results at any thread count.
 //!
 //! Golden traces live under `rust/tests/data/`; their replay summaries
 //! are exact fixtures (see `rust/tests/trace_golden.rs` and the
@@ -25,10 +30,13 @@ pub mod format;
 pub mod record;
 pub mod replay;
 pub mod scenario;
+pub mod sweep;
 
 pub use format::{RoutingTrace, TraceDecision, TraceMeta, TraceStep, TRACE_VERSION};
 pub use record::TraceRecorder;
 pub use replay::{ReplayResult, ReplayStepOutcome, ReplaySummary, TraceReplayer};
 pub use scenario::{
-    record_scenario, record_scenario_tuned, record_scenario_with, Scenario, ScenarioConfig,
+    record_scenario, record_scenario_tuned, record_scenario_with, sample_topk_row, Scenario,
+    ScenarioConfig,
 };
+pub use sweep::{shared_prefix_len, tune_grid, ReplayCursor, TuneOutcome};

@@ -129,7 +129,14 @@ pub struct ReplayResult {
 
 /// Stateful replayer; use [`TraceReplayer::replay`] for the one-shot
 /// whole-trace form.
-#[derive(Debug)]
+///
+/// `Clone` deep-copies the whole replay state (pipeline, policy,
+/// migration ledger, accumulated timeline), so a partially-replayed
+/// prefix can fork into divergent continuations — the
+/// [`ReplayCursor`](crate::trace::sweep::ReplayCursor) mechanism tune
+/// sweeps use to share everything before the first knob-dependent
+/// decision.
+#[derive(Debug, Clone)]
 pub struct TraceReplayer {
     pub spec: ClusterSpec,
     pub payload: f64,
@@ -206,7 +213,7 @@ impl TraceReplayer {
     /// clock is the accumulated priced comm time, so every event's `t`
     /// is the clock *before* the step it belongs to.
     pub fn attach_obs(&mut self, sink: SharedSink) {
-        sink.borrow_mut().meta("replay", self.pipeline.policy().name());
+        sink.lock().unwrap().meta("replay", self.pipeline.policy().name());
         self.pipeline.attach_obs(sink);
     }
 

@@ -1,0 +1,310 @@
+//! Parallel, fork-from-prefix sweep engine for `smile tune` grids.
+//!
+//! A tune grid replays the same recorded trace once per knob
+//! combination.  Two structural facts make that embarrassingly cheap
+//! to share and parallelize:
+//!
+//! 1. **Fork-from-prefix.**  The adaptive policy's `consult` is a
+//!    strict no-op (no state mutation at all) until the step counter
+//!    crosses its first `probe_every` boundary, and everything else a
+//!    replay step does — EWMA/forecaster observation, co-activation
+//!    folding, pricing, migration drain on an empty ledger — depends
+//!    only on the shared `window`/`ewma_alpha` knobs, not on the
+//!    swept ones.  So the leading trace records below the grid's
+//!    smallest consult boundary are byte-identical across every grid
+//!    point, and a [`ReplayCursor`] replays them exactly once under a
+//!    neutral (`probe_every = 0`, never-consulting) policy.  Each grid
+//!    point then *forks*: clone the cursor's replayer (policies are
+//!    `clone_box`-able plain data), [`AdaptivePolicy::retune`] the
+//!    clone to its knobs, and replay only the remaining records.
+//!    `retune` asserts the preconditions (consult-free prefix, same
+//!    forecaster window), so a contract violation is a loud panic,
+//!    never a silent byte drift.
+//! 2. **Independent grid points.**  After the fork, points share
+//!    nothing mutable, so they run on the in-tree
+//!    [`ThreadPool`](crate::util::threadpool::ThreadPool) and results
+//!    are collected *by grid index* — output order (and every byte of
+//!    every summary) is identical at any thread count, pinned by the
+//!    determinism property tests.
+
+use std::sync::Arc;
+
+use super::format::RoutingTrace;
+use super::replay::{ReplayResult, TraceReplayer};
+use crate::placement::{
+    AdaptiveConfig, AdaptivePolicy, MigrationConfig, RebalancePolicy,
+};
+use crate::util::threadpool::ThreadPool;
+
+/// A replayed shared prefix that grid points fork from instead of
+/// restarting at step 0.  Holds the trace (shared, refcounted — pool
+/// jobs need `'static`) and a [`TraceReplayer`] advanced through the
+/// first `prefix` records under a neutral, never-consulting adaptive
+/// policy.
+#[derive(Debug, Clone)]
+pub struct ReplayCursor {
+    trace: Arc<RoutingTrace>,
+    replayer: TraceReplayer,
+    prefix: usize,
+}
+
+impl ReplayCursor {
+    /// Replay the first `prefix` records of `trace` under a neutral
+    /// adaptive policy (`probe_every = 0`: observes, never consults).
+    /// `window` must match the grid's shared forecaster window;
+    /// `prefix` is clamped to the trace length.
+    pub fn adaptive_prefix(
+        trace: Arc<RoutingTrace>,
+        knobs: RebalancePolicy,
+        window: usize,
+        migration: MigrationConfig,
+        prefix: usize,
+    ) -> ReplayCursor {
+        let prefix = prefix.min(trace.steps.len());
+        let neutral = AdaptiveConfig { window, probe_every: 0, ..AdaptiveConfig::default() };
+        let policy = AdaptivePolicy::new(
+            knobs,
+            neutral,
+            trace.meta.cluster_spec(),
+            trace.meta.num_experts.max(1),
+            trace.meta.payload_per_gpu,
+        );
+        let mut replayer =
+            TraceReplayer::with_boxed_policy(&trace, Box::new(policy), migration);
+        for rec in &trace.steps[..prefix] {
+            replayer.step(rec);
+        }
+        ReplayCursor { trace, replayer, prefix }
+    }
+
+    /// Records already replayed (shared across every fork).
+    pub fn prefix_len(&self) -> usize {
+        self.prefix
+    }
+
+    /// Fork the prefix into a replayer retuned to `cfg`.  Panics (via
+    /// [`AdaptivePolicy::retune`]'s precondition asserts) if the
+    /// prefix consulted or the window differs.
+    pub fn fork(&self, cfg: AdaptiveConfig) -> TraceReplayer {
+        let mut replayer = self.replayer.clone();
+        replayer
+            .pipeline
+            .policy_mut()
+            .as_any_mut()
+            .downcast_mut::<AdaptivePolicy>()
+            .expect("cursor policies are adaptive")
+            .retune(cfg);
+        replayer
+    }
+
+    /// Fork and replay the remaining records to completion — one grid
+    /// point's full result, byte-identical to a from-scratch replay
+    /// under `cfg`.
+    pub fn run(&self, cfg: AdaptiveConfig) -> ReplayResult {
+        let mut replayer = self.fork(cfg);
+        for rec in &self.trace.steps[self.prefix..] {
+            replayer.step(rec);
+        }
+        replayer.finish()
+    }
+}
+
+/// The longest prefix of `trace` that is knob-independent for every
+/// point of `grid`: leading records whose step number is below the
+/// grid's smallest non-zero `probe_every` (a `probe_every = 0` point
+/// never consults and constrains nothing).  Zero when the grid mixes
+/// forecaster windows — a window resize changes the observation
+/// sequence itself, so nothing can be shared.
+pub fn shared_prefix_len(trace: &RoutingTrace, grid: &[AdaptiveConfig]) -> usize {
+    let Some(first) = grid.first() else {
+        return 0;
+    };
+    if grid.iter().any(|c| c.window != first.window) {
+        return 0;
+    }
+    let min_pe = grid
+        .iter()
+        .map(|c| if c.probe_every == 0 { usize::MAX } else { c.probe_every })
+        .min()
+        .unwrap_or(0);
+    trace.steps.iter().take_while(|s| s.step < min_pe).count()
+}
+
+/// One grid point's outcome, in grid order.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    pub cfg: AdaptiveConfig,
+    pub result: ReplayResult,
+}
+
+/// Replay `trace` under every [`AdaptiveConfig`] in `grid`, sharing
+/// the knob-independent prefix and fanning the forks out over
+/// `threads` pool workers (`<= 1` runs inline on the caller's
+/// thread).  Results are collected by grid index, so output bytes are
+/// identical at any thread count.
+pub fn tune_grid(
+    trace: &RoutingTrace,
+    knobs: RebalancePolicy,
+    migration: MigrationConfig,
+    grid: &[AdaptiveConfig],
+    threads: usize,
+) -> Vec<TuneOutcome> {
+    let Some(first) = grid.first() else {
+        return Vec::new();
+    };
+    let prefix = shared_prefix_len(trace, grid);
+    // one trace copy into the refcount, amortized over the whole grid
+    let trace = Arc::new(trace.clone());
+    let cursor = Arc::new(ReplayCursor::adaptive_prefix(
+        Arc::clone(&trace),
+        knobs,
+        first.window,
+        migration,
+        prefix,
+    ));
+    let run = move |cfg: AdaptiveConfig| {
+        let result = cursor.run(cfg.clone());
+        TuneOutcome { cfg, result }
+    };
+    if threads <= 1 {
+        return grid.iter().cloned().map(run).collect();
+    }
+    ThreadPool::new(threads).map(grid.to_vec(), run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::scenario::{record_scenario, Scenario, ScenarioConfig};
+
+    fn zipf_trace(steps: usize) -> RoutingTrace {
+        record_scenario(
+            &ScenarioConfig {
+                scenario: Scenario::Zipf { s: 1.4 },
+                n_nodes: 2,
+                gpus_per_node: 4,
+                steps,
+                tokens_per_step: 512,
+                capacity_factor: 2.0,
+                payload_per_gpu: 1e6,
+                seed: 3,
+                top_k: 1,
+            },
+            None,
+        )
+    }
+
+    fn small_grid() -> Vec<AdaptiveConfig> {
+        let mut grid = Vec::new();
+        for &probe_every in &[5usize, 10, 25] {
+            for &ucb_c in &[0.0f64, 0.5] {
+                grid.push(AdaptiveConfig { probe_every, ucb_c, ..AdaptiveConfig::default() });
+            }
+        }
+        grid
+    }
+
+    fn from_scratch(trace: &RoutingTrace, cfg: AdaptiveConfig) -> ReplayResult {
+        let policy = AdaptivePolicy::new(
+            RebalancePolicy::default(),
+            cfg,
+            trace.meta.cluster_spec(),
+            trace.meta.num_experts.max(1),
+            trace.meta.payload_per_gpu,
+        );
+        TraceReplayer::replay_boxed(trace, Box::new(policy), MigrationConfig::default())
+    }
+
+    #[test]
+    fn shared_prefix_is_the_smallest_consult_boundary() {
+        let trace = zipf_trace(60);
+        assert_eq!(shared_prefix_len(&trace, &small_grid()), 5);
+        // probe_every = 0 points constrain nothing
+        let free = vec![AdaptiveConfig { probe_every: 0, ..AdaptiveConfig::default() }];
+        assert_eq!(shared_prefix_len(&trace, &free), 60);
+        // mixed windows share nothing
+        let mixed = vec![
+            AdaptiveConfig::default(),
+            AdaptiveConfig { window: 8, ..AdaptiveConfig::default() },
+        ];
+        assert_eq!(shared_prefix_len(&trace, &mixed), 0);
+        assert_eq!(shared_prefix_len(&trace, &[]), 0);
+    }
+
+    #[test]
+    fn fork_from_prefix_matches_from_scratch_bytewise() {
+        // the tentpole correctness claim at module level: every grid
+        // point's forked result equals its from-scratch replay exactly
+        let trace = zipf_trace(120);
+        let grid = small_grid();
+        let out = tune_grid(
+            &trace,
+            RebalancePolicy::default(),
+            MigrationConfig::default(),
+            &grid,
+            1,
+        );
+        assert_eq!(out.len(), grid.len());
+        let mut some_rebalanced = false;
+        for (o, cfg) in out.iter().zip(&grid) {
+            assert_eq!(o.cfg.probe_every, cfg.probe_every);
+            let scratch = from_scratch(&trace, cfg.clone());
+            assert_eq!(o.result, scratch, "probe_every={}", cfg.probe_every);
+            assert_eq!(
+                o.result.summary.to_json().to_string_pretty(),
+                scratch.summary.to_json().to_string_pretty()
+            );
+            some_rebalanced |= o.result.summary.rebalances > 0;
+        }
+        assert!(some_rebalanced, "the skewed fixture must commit somewhere in the grid");
+    }
+
+    #[test]
+    fn thread_count_never_changes_a_byte() {
+        let trace = zipf_trace(120);
+        let grid = small_grid();
+        let knobs = RebalancePolicy::default();
+        let serial = tune_grid(&trace, knobs.clone(), MigrationConfig::default(), &grid, 1);
+        for threads in [2, 8] {
+            let parallel =
+                tune_grid(&trace, knobs.clone(), MigrationConfig::default(), &grid, threads);
+            assert_eq!(parallel.len(), serial.len());
+            for (p, s) in parallel.iter().zip(&serial) {
+                assert_eq!(p.result, s.result, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn cursor_fork_is_independent_of_siblings() {
+        let trace = zipf_trace(80);
+        let cursor = ReplayCursor::adaptive_prefix(
+            Arc::new(trace),
+            RebalancePolicy::default(),
+            AdaptiveConfig::default().window,
+            MigrationConfig::default(),
+            5,
+        );
+        assert_eq!(cursor.prefix_len(), 5);
+        let eager = AdaptiveConfig { probe_every: 5, ..AdaptiveConfig::default() };
+        let lazy = AdaptiveConfig { probe_every: 50, ..AdaptiveConfig::default() };
+        let a1 = cursor.run(eager.clone());
+        let _b = cursor.run(lazy);
+        let a2 = cursor.run(eager);
+        // running a sibling in between must not perturb a fork
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn empty_grid_is_empty_output() {
+        let trace = zipf_trace(10);
+        let out = tune_grid(
+            &trace,
+            RebalancePolicy::default(),
+            MigrationConfig::default(),
+            &[],
+            4,
+        );
+        assert!(out.is_empty());
+    }
+}

@@ -141,7 +141,7 @@ impl Trainer {
     /// a no-op (sink sees only the header) when no pipeline is up.
     pub fn attach_obs(&mut self, sink: crate::obs::SharedSink) {
         let policy = self.pipeline.as_ref().map(|p| p.policy().name()).unwrap_or("none");
-        sink.borrow_mut().meta("train", policy);
+        sink.lock().unwrap().meta("train", policy);
         if let Some(pipe) = self.pipeline.as_mut() {
             pipe.attach_obs(sink);
         }

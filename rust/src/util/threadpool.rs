@@ -27,7 +27,14 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let job = rx.lock().unwrap().recv();
                         match job {
-                            Ok(job) => job(),
+                            // contain unwinds: a panicking job must not
+                            // take the worker down with it (map reports
+                            // the lost job by index instead)
+                            Ok(job) => {
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                            }
                             Err(_) => break, // sender dropped: shut down
                         }
                     })
@@ -64,7 +71,10 @@ impl ThreadPool {
         for (i, r) in rrx {
             out[i] = Some(r);
         }
-        out.into_iter().map(|o| o.expect("worker completed")).collect()
+        out.into_iter()
+            .enumerate()
+            .map(|(i, o)| o.unwrap_or_else(|| panic!("parallel job {i} panicked")))
+            .collect()
     }
 }
 
@@ -108,5 +118,44 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn map_matches_serial_iteration_exactly() {
+        // the ordered-collection contract the sweep driver leans on:
+        // results land by item index, never by completion order
+        let pool = ThreadPool::new(8);
+        let items: Vec<usize> = (0..200).collect();
+        let serial: Vec<String> = items.iter().map(|x| format!("r{x}")).collect();
+        let parallel = pool.map(items, |x| format!("r{x}"));
+        assert_eq!(parallel, serial);
+    }
+
+    #[test]
+    fn panic_in_job_does_not_kill_the_pool() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.execute(|| panic!("job blew up"));
+        // the pool must keep serving after the contained unwind
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel job 1 panicked")]
+    fn map_names_the_panicked_job() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.map(vec![0usize, 1, 2], |x| {
+            if x == 1 {
+                panic!("boom");
+            }
+            x
+        });
     }
 }

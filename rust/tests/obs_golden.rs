@@ -53,7 +53,8 @@ fn replay_instrumented(
     }
     let spans = replayer.take_spans();
     let result = replayer.finish();
-    let sink = std::rc::Rc::try_unwrap(sink).expect("sole owner").into_inner();
+    let sink =
+        std::sync::Arc::try_unwrap(sink).expect("sole owner").into_inner().expect("unpoisoned");
     (sink, spans, result.summary)
 }
 
@@ -148,7 +149,7 @@ fn events_never_change_a_serve_summary_byte() {
             "{}: attaching observability changed the serve summary",
             plain.summary.workload
         );
-        assert!(sink.borrow().len() > 0, "instrumented serve emitted nothing");
+        assert!(sink.lock().unwrap().len() > 0, "instrumented serve emitted nothing");
         assert!(!spans.is_empty(), "instrumented serve recorded no spans");
     }
 }
@@ -327,7 +328,7 @@ fn obs_report_digests_the_serve_queue_depth_series() {
         Some(sink.clone()),
         None,
     );
-    let obs = ObsReport::from_events(sink.borrow().events());
+    let obs = ObsReport::from_events(sink.lock().unwrap().events());
     assert_eq!(obs.source, "serve");
     assert_eq!(obs.policy, "adaptive");
     let depth = obs.gauges.get("queue.depth").expect("queue.depth gauge");
@@ -348,6 +349,6 @@ fn obs_report_digests_the_serve_queue_depth_series() {
     assert_eq!(mig.count, report.summary.rebalances);
     assert!(mig.min > 0.0, "a commit always moves bytes");
     // the JSONL round trip feeds `smile obs report --in run.events.jsonl`
-    let parsed = ObsReport::from_jsonl(&sink.borrow().to_jsonl()).unwrap();
+    let parsed = ObsReport::from_jsonl(&sink.lock().unwrap().to_jsonl()).unwrap();
     assert_eq!(parsed, obs);
 }

@@ -6,11 +6,14 @@ use smile::moe::{self, BiLevelPlan, DispatchPlan, PlacedPlan};
 use smile::netsim::collectives::{all2all_flat, all2all_inter, all2all_intra, allreduce};
 use smile::netsim::{ClusterSpec, DagSim};
 use smile::placement::{
-    self, MigrationConfig, MigrationScheduler, PlacementMap, PolicyKind, RebalancePolicy,
+    self, AdaptiveConfig, AdaptivePolicy, MigrationConfig, MigrationScheduler, PlacementMap,
+    PolicyKind, RebalancePolicy,
 };
 use smile::prop_assert;
 use smile::serve::{serve, ServeConfig, WorkloadKind};
-use smile::trace::{record_scenario, RoutingTrace, Scenario, ScenarioConfig, TraceReplayer};
+use smile::trace::{
+    record_scenario, tune_grid, RoutingTrace, Scenario, ScenarioConfig, TraceReplayer,
+};
 use smile::util::json::Json;
 use smile::util::proptest::{check, Config};
 use smile::util::rng::Rng;
@@ -776,6 +779,75 @@ fn prop_replay_deterministic_across_serialization() {
                 a.summary.observed_steps <= a.summary.steps,
                 "observed > steps"
             );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sweep_fork_and_thread_count_invisible() {
+    // the parallel sweep engine's whole-stack determinism claim:
+    // for a random trace and a random adaptive grid, (a) fork-from-
+    // prefix equals a from-scratch replay of every point bit-for-bit,
+    // and (b) running the grid at 1, 2, or 8 threads produces
+    // byte-identical summaries in identical (grid) order
+    let cfg_prop = Config { cases: 24, ..Config::default() };
+    check(
+        "sweep: fork == scratch; thread count invisible in the bytes",
+        &cfg_prop,
+        |rng| {
+            let mut sc = random_scenario(rng);
+            sc.steps = 20 + rng.below(80) as usize; // enough room to consult
+            let n_points = 2 + rng.below(3) as usize;
+            let grid: Vec<AdaptiveConfig> = (0..n_points)
+                .map(|_| AdaptiveConfig {
+                    probe_every: rng.below(30) as usize, // 0 = never consult
+                    horizon: 1.0 + rng.f64() * 50.0,
+                    ucb_c: rng.f64() * 2.0,
+                    ..AdaptiveConfig::default()
+                })
+                .collect();
+            let overlap = if rng.below(2) == 0 { 0.0 } else { rng.f64() * 0.9 };
+            (sc, grid, overlap)
+        },
+        |(sc, grid, overlap)| {
+            let trace = record_scenario(sc, None);
+            let knobs = RebalancePolicy::default();
+            let migration = MigrationConfig::overlapped(*overlap);
+            let serial = tune_grid(&trace, knobs.clone(), migration, grid, 1);
+            prop_assert!(serial.len() == grid.len(), "grid arity changed");
+            for (o, cfg) in serial.iter().zip(grid.iter()) {
+                let policy = AdaptivePolicy::new(
+                    knobs.clone(),
+                    cfg.clone(),
+                    trace.meta.cluster_spec(),
+                    trace.meta.num_experts.max(1),
+                    trace.meta.payload_per_gpu,
+                );
+                let scratch =
+                    TraceReplayer::replay_boxed(&trace, Box::new(policy), migration);
+                prop_assert!(
+                    o.result == scratch,
+                    "fork != scratch at probe_every={}",
+                    cfg.probe_every
+                );
+                prop_assert!(
+                    o.result.summary.to_json().to_string_pretty()
+                        == scratch.summary.to_json().to_string_pretty(),
+                    "summary bytes drifted at probe_every={}",
+                    cfg.probe_every
+                );
+            }
+            for threads in [2usize, 8] {
+                let parallel = tune_grid(&trace, knobs.clone(), migration, grid, threads);
+                prop_assert!(parallel.len() == serial.len(), "arity at {threads} threads");
+                for (p, s) in parallel.iter().zip(&serial) {
+                    prop_assert!(
+                        p.cfg.probe_every == s.cfg.probe_every && p.result == s.result,
+                        "threads={threads} changed a result"
+                    );
+                }
+            }
             Ok(())
         },
     );

@@ -31,6 +31,10 @@
 #   scripts/ci.sh bench-json   run the placement bench and write
 #                              BENCH_placement.json at the repo root for
 #                              the perf trajectory
+#   scripts/ci.sh bench-tune   run the sweep-engine bench (serial vs
+#                              fork-from-prefix vs 8-thread tune grids,
+#                              with a byte-identity shape check) and write
+#                              BENCH_tune.json at the repo root
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -58,6 +62,9 @@ case "$cmd" in
     cargo test -q --test obs_golden
     cargo fmt --check
     python3 "$repo_root/scripts/gen_golden_traces.py" --check
+    # the sweep-engine bench doubles as the parallel-determinism gate:
+    # it asserts 1T / 8T / from-scratch byte-identity before timing
+    "$repo_root/scripts/ci.sh" bench-tune
     ;;
   trace-golden)
     require_manifest
@@ -86,8 +93,15 @@ case "$cmd" in
     cp reports/bench_placement.json "$repo_root/BENCH_placement.json"
     echo "wrote $repo_root/BENCH_placement.json"
     ;;
+  bench-tune)
+    require_manifest
+    cd "$repo_root/rust"
+    cargo bench --bench bench_tune
+    cp reports/bench_tune.json "$repo_root/BENCH_tune.json"
+    echo "wrote $repo_root/BENCH_tune.json"
+    ;;
   *)
-    echo "usage: scripts/ci.sh [gate|trace-golden|serve-golden|mirror-check|obs-golden|bench-json]" >&2
+    echo "usage: scripts/ci.sh [gate|trace-golden|serve-golden|mirror-check|obs-golden|bench-json|bench-tune]" >&2
     exit 2
     ;;
 esac

@@ -1300,6 +1300,82 @@ def replay(trace_steps, n_nodes, gpus, payload, policy, kind="threshold", overla
     return summary, timeline
 
 
+def replay_adaptive_forked(trace_steps, n_nodes, gpus, payload, policy, cfg, prefix):
+    """trace::sweep::ReplayCursor mirror — the fork-from-prefix path:
+    replay the first `prefix` records under a neutral (probe_every = 0,
+    never-consulting) adaptive policy, `retune` to `cfg` (asserting the
+    Rust preconditions: equal window, consult-free prefix), then replay
+    the rest.  The summary must equal `replay(kind="adaptive")` with
+    the same `cfg` byte-for-byte — the executable in-container proof of
+    the PR-8 fork contract."""
+    spec = Spec(n_nodes, gpus)
+    e_total = n_nodes * gpus
+    neutral = dict(cfg)
+    neutral["probe_every"] = 0
+    rb = AdaptivePolicy(policy, spec, e_total, payload, neutral)
+    scheduler = MigrationScheduler(spec.inter_bw, 0.0)
+    block = PMap.block(spec, e_total)
+    rebalance_steps = []
+    migrated_replicas = 0
+    total_comm = 0.0
+    static_comm = 0.0
+    dropped_sum = 0.0
+    final_comm = 0.0
+    for i, rec in enumerate(trace_steps):
+        if i == prefix:
+            # AdaptivePolicy::retune — swap the swept knobs in on the
+            # forked clone; the asserts are the Rust preconditions
+            assert cfg["window"] == rb.cfg["window"], \
+                "retune cannot resize the forecaster ring"
+            assert (rb.consults == 0 and rb.last_consult_step == 0
+                    and rb.pending is None and rb.rebalances == 0
+                    and rb.arm_plays == [0, 0, 0]), \
+                "retune requires a consult-free prefix"
+            rb.cfg = cfg
+        rb.observe_pairs(rec.get("pairs") or [])
+        rb.observe(rec["experts"])
+        d = rb.consult(rec["step"])
+        if d is not None:
+            bytes_ = float(d["migrated_replicas"]) * policy["expert_bytes"]
+            scheduler.enqueue(bytes_, d["migration_secs"])
+            rebalance_steps.append(d["step"])
+            migrated_replicas += d["migrated_replicas"]
+        cost = price_placement_coact(
+            rb.current, rec["experts"], spec, payload, rb.tracker.coact, 1.0
+        )
+        static_cost = price_placement_coact(
+            block, rec["experts"], spec, payload, rb.tracker.coact, 1.0
+        )
+        hops = policy["hops_per_step"]
+        total_comm += cost.comm_total() * hops
+        static_comm += static_cost.comm_total() * hops
+        dropped_sum += rec["dropped_frac"]
+        scheduler.drain(cost.comm_total() * hops)
+        final_comm = cost.comm_total()
+    frac = rb.tracker.fractions()
+    steps = len(trace_steps)
+    replicated = sum(1 for e in range(e_total) if len(rb.current.replicas[e]) > 1)
+    return dict(
+        policy=rb.name,
+        steps=steps,
+        observed_steps=rb.tracker.steps,
+        rebalances=len(rebalance_steps),
+        rebalance_steps=rebalance_steps,
+        migrated_replicas=migrated_replicas,
+        migration_exposed_secs=scheduler.exposed_secs,
+        migration_overlapped_secs=scheduler.overlapped_secs,
+        migration_bytes=float(migrated_replicas) * policy["expert_bytes"],
+        migration_pending_bytes=scheduler.pending_bytes,
+        total_comm_secs=total_comm,
+        static_comm_secs=static_comm,
+        final_comm_time=final_comm if steps > 0 else 0.0,
+        final_expert_imbalance=rb.tracker.imbalance(),
+        final_node_imbalance=imbalance(rb.current.node_loads(frac)),
+        mean_dropped_frac=dropped_sum / float(max(steps, 1)),
+        replicated_experts=replicated,
+    )
+
+
 def summary_pretty(summary):
     # Json::to_string_pretty mirror (sorted keys, 1-space indent steps)
     def write(v, indent):
@@ -1866,6 +1942,36 @@ def check_obs(data_dir):
     return 0
 
 
+def check_fork():
+    """The PR-8 fork contract, executable without a Rust toolchain:
+    fork-from-prefix adaptive replay must be byte-identical to the
+    from-scratch replay, and the check must not be vacuous (the trace
+    must actually rebalance after the fork point)."""
+    n_nodes, gpus, payload = 4, 8, 1e6
+    trace_steps, _ = record_scenario(
+        "burst", dict(s=0.0, hot=3, boost=8.0, start=30, end=70),
+        n_nodes, gpus, 100, 512, 2.0, payload, 11,
+    )
+    scratch, _ = replay(trace_steps, n_nodes, gpus, payload, POLICY, kind="adaptive")
+    # the knob-independent prefix: records below the first probe_every
+    # boundary (trace::sweep::shared_prefix_len with a 1-point grid)
+    prefix = sum(1 for r in trace_steps if r["step"] < ADAPTIVE["probe_every"])
+    forked = replay_adaptive_forked(
+        trace_steps, n_nodes, gpus, payload, POLICY, ADAPTIVE, prefix
+    )
+    if summary_pretty(scratch) != summary_pretty(forked):
+        print("fork-check FAILED — fork-from-prefix replay drifted from from-scratch")
+        return 1
+    if scratch["rebalances"] < 1:
+        print("fork-check FAILED — vacuous: the burst trace never rebalanced")
+        return 1
+    print(
+        f"fork-check ok: prefix {prefix} records, {scratch['rebalances']} "
+        "rebalances, fork == scratch byte-for-byte"
+    )
+    return 0
+
+
 def check(data_dir):
     """scripts/ci.sh mirror-check: regenerate every fixture from this
     mirror and fail on any byte drift against the checked-in files."""
@@ -1896,6 +2002,8 @@ def check(data_dir):
             got = None
         if got != want:
             drifted.append(fname)
+    if check_fork() != 0:
+        drifted.append("(fork-from-prefix equivalence)")
     if drifted:
         print("mirror-check FAILED — fixtures drifted from the Python mirror:")
         for name in drifted:
