@@ -138,8 +138,8 @@ impl Corpus {
         let mut hdr = [0u8; 12];
         f.read_exact(&mut hdr)?;
         anyhow::ensure!(&hdr[0..4] == b"SMC1", "bad shard magic");
-        let n_seqs = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
-        let seq_len = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+        let n_seqs = u32::from_le_bytes(hdr[4..8].try_into().expect("4-byte header")) as usize;
+        let seq_len = u32::from_le_bytes(hdr[8..12].try_into().expect("4-byte header")) as usize;
         let mut buf = vec![0u8; n_seqs * seq_len * 2];
         f.read_exact(&mut buf)?;
         Ok(buf

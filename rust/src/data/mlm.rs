@@ -67,7 +67,7 @@ impl MlmBatcher {
             self.buffer.reverse(); // pop from the back in order
             self.shard_id += 1;
         }
-        self.buffer.pop().unwrap()
+        self.buffer.pop().expect("refill left the buffer non-empty")
     }
 
     /// Apply MLM masking to one sequence in place; returns (labels, weights).

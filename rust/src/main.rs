@@ -261,6 +261,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut first_loss = None;
     let mut last: Option<StepLog> = None;
     let mut total_secs = 0.0;
+    // audit:allow(D3): CLI progress timing for the human at the terminal — never enters simulated time
     let t0 = std::time::Instant::now();
     while tr.step < steps {
         let batch = batcher.batch(k, a, b, s);
@@ -617,7 +618,7 @@ fn obs_sink_of(args: &Args) -> Result<Option<(SharedSink, String)>> {
 fn finish_events(events: &Option<(SharedSink, String)>) {
     if let Some((sink, path)) = events {
         let emitted = {
-            let mut s = sink.lock().unwrap();
+            let mut s = sink.lock().expect("obs sink lock poisoned");
             s.flush();
             s.emitted()
         };

@@ -248,7 +248,10 @@ impl TopKPlan {
                 }
             })
             .collect();
-        TopKPlan { k, num_experts, capacity, assignment, gates, tokens_of, demand }
+        let plan = TopKPlan { k, num_experts, capacity, assignment, gates, tokens_of, demand };
+        #[cfg(any(test, feature = "strict-invariants"))]
+        crate::util::invariants::check_topk_capacity(&plan);
+        plan
     }
 
     pub fn num_tokens(&self) -> usize {
@@ -530,6 +533,7 @@ pub fn synthetic_choices(
     skew: f64,
 ) -> Vec<Top1> {
     // weights ~ exp(skew * normal): skew=0 -> uniform experts
+    // audit:allow(D2): synthetic workload generator — feeds tests/benches only, never a priced timeline; the mirror draws its own workloads
     let weights: Vec<f64> = (0..experts).map(|_| (skew * rng.normal()).exp()).collect();
     (0..tokens)
         .map(|_| {

@@ -203,6 +203,7 @@ pub fn broadcast(spec: &ClusterSpec, bytes: f64) -> CollectiveCost {
     let mut wire = 0.0;
     let mut latency = 0.0;
     if n > 1 {
+        // audit:allow(D2): log2 of a small integer node count — exact in f64 up to the ceil, mirrored by math.log2 and pinned by every golden fixture
         let depth = (n as f64).log2().ceil();
         wire += depth * bytes / spec.inter_bw;
         latency += depth * spec.inter_latency;

@@ -109,7 +109,7 @@ impl Ord for Ev {
         other
             .time
             .partial_cmp(&self.time)
-            .unwrap()
+            .expect("event times are never NaN")
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -269,7 +269,10 @@ impl TimelineSim {
         for s in &spans {
             busy[s.resource] += s.duration();
         }
-        Timeline { makespan, spans, busy, resources: self.resources.clone() }
+        let tl = Timeline { makespan, spans, busy, resources: self.resources.clone() };
+        #[cfg(any(test, feature = "strict-invariants"))]
+        crate::util::invariants::check_timeline(&tl);
+        tl
     }
 }
 

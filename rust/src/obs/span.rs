@@ -103,7 +103,7 @@ impl SpanTimeline {
     /// microseconds) plus `thread_name` metadata naming each track.
     pub fn to_chrome_trace(&self) -> Json {
         let tracks = self.tracks();
-        let tid_of = |track: &str| tracks.iter().position(|t| *t == track).unwrap();
+        let tid_of = |track: &str| tracks.iter().position(|t| *t == track).expect("known track");
         let mut events: Vec<Json> = Vec::with_capacity(tracks.len() + self.spans.len());
         for (tid, track) in tracks.iter().enumerate() {
             events.push(obj! {

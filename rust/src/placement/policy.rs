@@ -490,7 +490,7 @@ impl RoutingPipeline {
     /// [`RoutingPipeline::step`] so events carry the right `t`.
     pub fn set_obs_now(&mut self, now: f64) {
         if let Some(obs) = &self.obs {
-            obs.lock().unwrap().set_now(now);
+            obs.lock().expect("obs sink lock poisoned").set_now(now);
         }
     }
 
@@ -508,7 +508,7 @@ impl RoutingPipeline {
             enqueue_bytes = bytes;
         }
         if let Some(obs) = &self.obs {
-            let mut sink = obs.lock().unwrap();
+            let mut sink = obs.lock().expect("obs sink lock poisoned");
             for (kind, data) in self.policy.take_audit() {
                 sink.emit(kind, step, data);
             }
@@ -522,6 +522,18 @@ impl RoutingPipeline {
                         "stall_secs" => commit_stall_secs,
                     },
                 );
+            }
+        }
+        #[cfg(any(test, feature = "strict-invariants"))]
+        {
+            use crate::util::invariants::{check_migration_ledger, check_placement_valid};
+            check_migration_ledger(
+                self.migration.enqueued_bytes(),
+                self.migration.drained_bytes(),
+                self.migration.pending_bytes(),
+            );
+            if decision.is_some() {
+                check_placement_valid(self.policy.placement(), &self.spec);
             }
         }
         PipelineStepReport { decision, commit_stall_secs }
@@ -544,6 +556,7 @@ impl RoutingPipeline {
 
     /// The trainer's f32 routing metrics, widened losslessly into a
     /// reused buffer (this runs every optimizer step).
+    // audit:allow(D4): the documented f32 widening point — widened losslessly to f64 before the shared step
     pub fn step_f32(&mut self, step: usize, loads: &[f32]) -> PipelineStepReport {
         let mut wide = std::mem::take(&mut self.widen_buf);
         wide.clear();
@@ -560,7 +573,7 @@ impl RoutingPipeline {
         let tick = self.migration.drain(window_secs);
         if tick.drained_bytes > 0.0 {
             if let Some(obs) = &self.obs {
-                obs.lock().unwrap().emit(
+                obs.lock().expect("obs sink lock poisoned").emit(
                     "migration.drain",
                     self.last_step,
                     obj! {
@@ -571,6 +584,12 @@ impl RoutingPipeline {
                 );
             }
         }
+        #[cfg(any(test, feature = "strict-invariants"))]
+        crate::util::invariants::check_migration_ledger(
+            self.migration.enqueued_bytes(),
+            self.migration.drained_bytes(),
+            self.migration.pending_bytes(),
+        );
         tick
     }
 

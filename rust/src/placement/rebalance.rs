@@ -230,6 +230,7 @@ impl Rebalancer {
     }
 
     /// Observe the trainer's f32 routing-fraction metric.
+    // audit:allow(D4): the documented f32 widening point — delegates straight to the tracker's lossless widening
     pub fn observe_f32(&mut self, loads: &[f32]) {
         self.tracker.observe_f32(loads);
     }

@@ -66,6 +66,7 @@ impl LoadTracker {
     /// `Vec<f64>` — the arithmetic (widen, sum in order, divide by the
     /// total) is exactly what observing the widened values would do,
     /// so the EWMA state stays bit-identical to [`LoadTracker::observe`].
+    // audit:allow(D4): the documented f32 widening point — every value is widened losslessly to f64 before any arithmetic
     pub fn observe_f32(&mut self, loads: &[f32]) {
         assert_eq!(loads.len(), self.num_experts, "histogram arity mismatch");
         let total: f64 = loads.iter().map(|&l| l as f64).sum();
@@ -306,6 +307,7 @@ impl LoadForecaster {
 /// the result with a seeded `Rng`.
 pub fn zipf_fractions(num_experts: usize, s: f64) -> Vec<f64> {
     assert!(num_experts > 0);
+    // audit:allow(D2): zipf skew shaping for synthetic workloads — mirrored by Python's ** on the same libm and pinned by the trace goldens
     let w: Vec<f64> = (0..num_experts).map(|e| ((e + 1) as f64).powf(-s)).collect();
     let total: f64 = w.iter().sum();
     w.into_iter().map(|x| x / total).collect()

@@ -223,7 +223,7 @@ pub fn serve_with_obs(
     let mut pipeline =
         RoutingPipeline::from_policy(policy, spec.clone(), nominal_payload, migration);
     if let Some(o) = &obs {
-        o.lock().unwrap().meta("serve", pipeline.policy().name());
+        o.lock().expect("obs sink lock poisoned").meta("serve", pipeline.policy().name());
         pipeline.attach_obs(o.clone());
     }
 
@@ -286,7 +286,7 @@ pub fn serve_with_obs(
         if let Some(o) = &obs {
             let newly_rejected = batcher.rejected.len() - before_rejected;
             if newly_admitted > 0 || newly_rejected > 0 {
-                let mut sink = o.lock().unwrap();
+                let mut sink = o.lock().expect("obs sink lock poisoned");
                 sink.set_now(now);
                 if newly_admitted > 0 {
                     sink.emit("requests.admitted", iters, obj! {"count" => newly_admitted});
@@ -325,7 +325,7 @@ pub fn serve_with_obs(
             c.peak_queue_depth = queue_depth;
         }
         if let Some(o) = &obs {
-            let mut sink = o.lock().unwrap();
+            let mut sink = o.lock().expect("obs sink lock poisoned");
             // stamps the shared sink's clock for this iteration: the
             // pipeline's decision/migration events below reuse it
             sink.set_now(now);
@@ -350,6 +350,7 @@ pub fn serve_with_obs(
                 for _ in 0..k {
                     let e = route_rng.weighted(&w_cur);
                     w_cur[e] = 0.0;
+                    // audit:allow(D4): Top1.gate is an f32 field by dispatch-plan contract — the uniform 1/k gate is constructed, never accumulated, and pricing widens to f64
                     choices.push(Top1 { expert: e, gate: 1.0 / k as f32 });
                 }
                 for a in base..choices.len() {
@@ -481,6 +482,17 @@ pub fn serve_with_obs(
             tokens_queued: batcher.queued_tokens(&requests),
             tokens_inflight: batcher.inflight_tokens(&requests),
         });
+        #[cfg(any(test, feature = "strict-invariants"))]
+        {
+            let it = timeline.last().expect("just pushed");
+            crate::util::invariants::check_batcher_conservation(
+                it.tokens_admitted,
+                it.tokens_completed,
+                it.tokens_queued,
+                it.tokens_inflight,
+            );
+            crate::util::invariants::check_admission_clock(iter_start, now);
+        }
     }
 
     c.iterations = iters;

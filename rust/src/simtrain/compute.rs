@@ -46,6 +46,7 @@ pub fn router_flops_per_token(dims: &ModelDims, variant: Variant, n: usize, m: u
 /// the concrete form of the paper's routing-complexity reduction
 /// O(mnTd) -> O(max(m,n)Td) (§3.2.1).
 pub fn dispatch_overhead(tokens: usize, fanout: usize, spec: &ClusterSpec) -> f64 {
+    // audit:allow(D2): fitted §3.2.1 overhead exponent — mirrored by Python's ** on the same libm and pinned by the serve/trace goldens
     let per_token = 25.0e-9 * (fanout as f64).powf(0.7);
     tokens as f64 * per_token * (312e12 / spec.gpu_flops) // scale with GPU speed
 }

@@ -213,7 +213,7 @@ impl TraceReplayer {
     /// clock is the accumulated priced comm time, so every event's `t`
     /// is the clock *before* the step it belongs to.
     pub fn attach_obs(&mut self, sink: SharedSink) {
-        sink.lock().unwrap().meta("replay", self.pipeline.policy().name());
+        sink.lock().expect("obs sink lock poisoned").meta("replay", self.pipeline.policy().name());
         self.pipeline.attach_obs(sink);
     }
 

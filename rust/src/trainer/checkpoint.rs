@@ -85,11 +85,11 @@ pub fn load(path: impl AsRef<Path>, specs: &[TensorSpec]) -> Result<Vec<Tensor>>
     if &hdr[0..4] != b"SMCK" {
         bail!("bad checkpoint magic");
     }
-    let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    let version = u32::from_le_bytes(hdr[4..8].try_into().expect("4-byte header field"));
     if version != CHECKPOINT_VERSION {
         bail!("unsupported checkpoint version {version} (this build reads {CHECKPOINT_VERSION})");
     }
-    let count = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+    let count = u32::from_le_bytes(hdr[8..12].try_into().expect("4-byte header field")) as usize;
     if count != specs.len() {
         bail!("checkpoint has {count} tensors, manifest expects {}", specs.len());
     }
@@ -135,11 +135,15 @@ pub fn load(path: impl AsRef<Path>, specs: &[TensorSpec]) -> Result<Vec<Tensor>>
             .with_context(|| format!("reading {n} elements of '{name}' (truncated checkpoint?)"))?;
         let tensor = match b1[0] {
             0 => Tensor::F32(
-                data.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                data.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                    .collect(),
                 dims,
             ),
             1 | 2 => Tensor::I32(
-                data.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                data.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                    .collect(),
                 dims,
             ),
             other => bail!("bad dtype tag {other}"),

@@ -110,6 +110,7 @@ impl Trainer {
         let eval_art = rt.load(&format!("eval_{config_name}")).ok();
         let cfg = train_art.spec.config.clone();
 
+        // audit:allow(D3): init wall time for the training log — real-hardware timing, not simulated
         let t0 = Instant::now();
         let state = init_art.run(&[Tensor::scalar_i32(seed).to_literal()?])?;
         log::info!(
@@ -141,7 +142,7 @@ impl Trainer {
     /// a no-op (sink sees only the header) when no pipeline is up.
     pub fn attach_obs(&mut self, sink: crate::obs::SharedSink) {
         let policy = self.pipeline.as_ref().map(|p| p.policy().name()).unwrap_or("none");
-        sink.lock().unwrap().meta("train", policy);
+        sink.lock().expect("obs sink lock poisoned").meta("train", policy);
         if let Some(pipe) = self.pipeline.as_mut() {
             pipe.attach_obs(sink);
         }
@@ -254,6 +255,7 @@ impl Trainer {
             Tensor::f32(batch.weights.clone(), &shape).to_literal()?,
             Tensor::scalar_i32(self.step as i32).to_literal()?,
         ];
+        // audit:allow(D3): optimizer-step wall time for the training log — real-hardware timing, not simulated
         let t0 = Instant::now();
         let args: Vec<&xla::Literal> = self.state.iter().chain(t_lits.iter()).collect();
         let mut outputs = self.train_art.run(&args)?;

@@ -30,7 +30,7 @@ impl Args {
                 } else if it.peek().map_or(true, |n| n.starts_with("--")) {
                     flags.insert(rest.to_string(), "true".to_string());
                 } else {
-                    flags.insert(rest.to_string(), it.next().unwrap());
+                    flags.insert(rest.to_string(), it.next().expect("checked: a value follows"));
                 }
             } else {
                 positional.push(a);

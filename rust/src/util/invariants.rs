@@ -1,0 +1,324 @@
+//! Runtime contract checks — the dynamic half of smile-audit.
+//!
+//! The static half (`scripts/audit.py`) proves the sources *can't*
+//! break the determinism contract; this module asserts the ledgers the
+//! docs promise actually hold while the simulation runs: migration
+//! byte conservation, batcher token conservation, top-k capacity
+//! accounting, timeline monotonicity/tiling, and placement validity.
+//!
+//! The checks are pure readers — they never mutate, allocate into, or
+//! reorder anything they inspect, so enabling them is zero-perturbation
+//! on priced timelines (same guarantee the obs layer makes).  The
+//! functions are always compiled (integration tests link the non-test
+//! lib build); *call sites* in the library are gated behind
+//! `#[cfg(any(test, feature = "strict-invariants"))]` so release
+//! binaries pay nothing unless the feature is on.
+//!
+//! Float comparisons: ledgers that accumulate the same quantity in
+//! different orders (migration bytes, per-resource busy time) are
+//! compared with a relative tolerance; counters and clocks are exact.
+
+use crate::moe::dispatch::{Assignment, TopKPlan};
+use crate::netsim::engine::Timeline;
+use crate::netsim::topology::ClusterSpec;
+use crate::placement::solver::PlacementMap;
+
+/// `|a - b| <= rel * max(|a|,|b|) + abs` — the two sides accumulate in
+/// different orders, so bit-equality is not the contract; conservation
+/// to rounding is.
+fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    (a - b).abs() <= rel * a.abs().max(b.abs()) + abs
+}
+
+/// Migration byte ledger: every byte enqueued is either drained or
+/// still pending — `enqueued == drained + pending` (to rounding), all
+/// three non-negative and finite.
+pub fn check_migration_ledger(enqueued: f64, drained: f64, pending: f64) {
+    assert!(
+        enqueued.is_finite() && drained.is_finite() && pending.is_finite(),
+        "invariant: migration ledger non-finite (enqueued={enqueued}, drained={drained}, pending={pending})"
+    );
+    assert!(
+        enqueued >= 0.0 && drained >= 0.0 && pending >= 0.0,
+        "invariant: migration ledger negative (enqueued={enqueued}, drained={drained}, pending={pending})"
+    );
+    assert!(
+        close(enqueued, drained + pending, 1e-9, 1e-6),
+        "invariant: migration bytes not conserved — enqueued={enqueued} != drained={drained} + pending={pending} (diff={})",
+        enqueued - (drained + pending)
+    );
+}
+
+/// Batcher token ledger: every admitted token is completed, queued, or
+/// in flight — exact, these are integer counters.
+pub fn check_batcher_conservation(
+    admitted: usize,
+    completed: usize,
+    queued: usize,
+    inflight: usize,
+) {
+    assert!(
+        admitted == completed + queued + inflight,
+        "invariant: batcher tokens not conserved — admitted={admitted} != completed={completed} + queued={queued} + inflight={inflight}"
+    );
+}
+
+/// Top-k capacity accounting: kept + dropped covers every (token,
+/// choice); no expert holds more than `capacity` slots; each kept slot
+/// points back at the (token, choice) that filled it; demand counts
+/// every choice whether kept or dropped.
+pub fn check_topk_capacity(plan: &TopKPlan) {
+    let kept: usize = plan.tokens_of.iter().map(Vec::len).sum();
+    assert!(
+        kept + plan.dropped() == plan.assignment.len(),
+        "invariant: top-k slots don't tile the choices — kept={kept} + dropped={} != {} choices",
+        plan.dropped(),
+        plan.assignment.len()
+    );
+    assert!(
+        plan.demand.iter().sum::<usize>() == plan.assignment.len(),
+        "invariant: top-k demand doesn't sum to the choice count"
+    );
+    for (e, slots) in plan.tokens_of.iter().enumerate() {
+        assert!(
+            slots.len() <= plan.capacity,
+            "invariant: expert {e} holds {} slots over capacity {}",
+            slots.len(),
+            plan.capacity
+        );
+        assert!(
+            slots.len() <= plan.demand[e],
+            "invariant: expert {e} kept {} slots but only {} choices demanded it",
+            slots.len(),
+            plan.demand[e]
+        );
+    }
+    for (i, a) in plan.assignment.iter().enumerate() {
+        if let Assignment::Slot(e, s) = a {
+            let back = plan.tokens_of.get(*e).and_then(|v| v.get(*s));
+            assert!(
+                back == Some(&(i / plan.k, i % plan.k)),
+                "invariant: top-k slot ({e},{s}) doesn't point back at (token {}, choice {})",
+                i / plan.k,
+                i % plan.k
+            );
+        }
+    }
+}
+
+/// Timeline tiling: spans reference real resources, run forward in
+/// time, never overlap on an exclusive resource, the makespan is the
+/// latest span end, and per-resource busy time matches the spans.
+pub fn check_timeline(tl: &Timeline) {
+    assert!(
+        tl.busy.len() == tl.resources.len(),
+        "invariant: timeline busy/resource arity mismatch"
+    );
+    let mut per_res: Vec<Vec<(f64, f64)>> = vec![Vec::new(); tl.resources.len()];
+    let mut max_end = 0.0f64;
+    for s in &tl.spans {
+        assert!(
+            s.resource < tl.resources.len(),
+            "invariant: span `{}` on unknown resource {}",
+            s.name,
+            s.resource
+        );
+        assert!(
+            s.start.is_finite() && s.end.is_finite() && s.end >= s.start && s.start >= 0.0,
+            "invariant: span `{}` runs backward ({}..{})",
+            s.name,
+            s.start,
+            s.end
+        );
+        per_res[s.resource].push((s.start, s.end));
+        max_end = max_end.max(s.end);
+    }
+    assert!(
+        tl.makespan == max_end,
+        "invariant: makespan {} != latest span end {}",
+        tl.makespan,
+        max_end
+    );
+    for (r, spans) in per_res.iter_mut().enumerate() {
+        spans.sort_by(|a, b| a.partial_cmp(b).expect("finite span bounds"));
+        let mut sum = 0.0;
+        for w in spans.windows(2) {
+            assert!(
+                w[1].0 >= w[0].1 - 1e-12,
+                "invariant: overlapping spans on exclusive resource `{}` ({:?} then {:?})",
+                tl.resources[r],
+                w[0],
+                w[1]
+            );
+        }
+        for (s, e) in spans.iter() {
+            sum += e - s;
+        }
+        assert!(
+            close(tl.busy[r], sum, 1e-9, 1e-9),
+            "invariant: busy[{}]={} != span-duration sum {} on `{}`",
+            r,
+            tl.busy[r],
+            sum,
+            tl.resources[r]
+        );
+    }
+}
+
+/// Admission-clock monotonicity: the serve/replay virtual clock never
+/// runs backward across an iteration.
+pub fn check_admission_clock(before: f64, after: f64) {
+    assert!(
+        before.is_finite() && after.is_finite() && after >= before,
+        "invariant: virtual clock ran backward ({before} -> {after})"
+    );
+}
+
+/// Placement validity: delegates the full structural check (shape
+/// match, replicas on distinct in-range nodes, weights sum to 1) and
+/// re-asserts the routing prerequisite — every expert has at least one
+/// replica, every replica GPU exists.
+pub fn check_placement_valid(map: &PlacementMap, spec: &ClusterSpec) {
+    if let Err(e) = map.validate(spec) {
+        panic!("invariant: invalid placement — {e}");
+    }
+    let g = map.num_gpus();
+    for (e, reps) in map.replicas.iter().enumerate() {
+        assert!(!reps.is_empty(), "invariant: expert {e} has no replica");
+        for &gpu in reps {
+            assert!(gpu < g, "invariant: expert {e} replica on out-of-range GPU {gpu}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::dispatch::{topk_rows, TopKPlan};
+    use crate::netsim::engine::Span;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec {
+            n_nodes: 2,
+            gpus_per_node: 2,
+            inter_bw: 50e9,
+            intra_bw: 600e9,
+            inter_latency: 5e-6,
+            intra_latency: 1e-6,
+        }
+    }
+
+    #[test]
+    fn migration_ledger_accepts_conserved() {
+        check_migration_ledger(10.0e9, 7.5e9, 2.5e9);
+        check_migration_ledger(0.0, 0.0, 0.0);
+        // accumulated-in-different-order rounding must pass
+        check_migration_ledger(1.0e12, 1.0e12 - 0.5, 0.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "not conserved")]
+    fn migration_ledger_rejects_leak() {
+        check_migration_ledger(10.0e9, 6.0e9, 2.5e9);
+    }
+
+    #[test]
+    fn batcher_accepts_conserved() {
+        check_batcher_conservation(100, 60, 30, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "not conserved")]
+    fn batcher_rejects_lost_tokens() {
+        check_batcher_conservation(100, 60, 30, 9);
+    }
+
+    #[test]
+    fn topk_plan_from_build_passes() {
+        let probs: Vec<f32> = (0..8 * 4).map(|i| ((i * 37 % 11) as f32) / 11.0).collect();
+        let rows = topk_rows(&probs, 4, 2);
+        let plan = TopKPlan::build(&rows, 4, 3);
+        check_topk_capacity(&plan);
+    }
+
+    #[test]
+    #[should_panic(expected = "over capacity")]
+    fn topk_rejects_overfull_expert() {
+        let probs: Vec<f32> = (0..8 * 4).map(|i| ((i * 37 % 11) as f32) / 11.0).collect();
+        let rows = topk_rows(&probs, 4, 2);
+        let mut plan = TopKPlan::build(&rows, 4, 3);
+        plan.capacity = 1; // pretend the limit was tighter than what was packed
+        check_topk_capacity(&plan);
+    }
+
+    #[test]
+    fn timeline_tiling_passes() {
+        let tl = Timeline {
+            makespan: 3.0,
+            spans: vec![
+                Span { task: 0, name: "a".into(), resource: 0, start: 0.0, end: 1.0 },
+                Span { task: 1, name: "b".into(), resource: 0, start: 1.0, end: 3.0 },
+                Span { task: 2, name: "c".into(), resource: 1, start: 0.5, end: 2.0 },
+            ],
+            busy: vec![3.0, 1.5],
+            resources: vec!["gpu0".into(), "nic0".into()],
+        };
+        check_timeline(&tl);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping spans")]
+    fn timeline_rejects_double_booked_resource() {
+        let tl = Timeline {
+            makespan: 2.0,
+            spans: vec![
+                Span { task: 0, name: "a".into(), resource: 0, start: 0.0, end: 1.5 },
+                Span { task: 1, name: "b".into(), resource: 0, start: 1.0, end: 2.0 },
+            ],
+            busy: vec![2.5],
+            resources: vec!["gpu0".into()],
+        };
+        check_timeline(&tl);
+    }
+
+    #[test]
+    #[should_panic(expected = "makespan")]
+    fn timeline_rejects_stale_makespan() {
+        let tl = Timeline {
+            makespan: 1.0,
+            spans: vec![Span { task: 0, name: "a".into(), resource: 0, start: 0.0, end: 2.0 }],
+            busy: vec![2.0],
+            resources: vec!["gpu0".into()],
+        };
+        check_timeline(&tl);
+    }
+
+    #[test]
+    fn clock_accepts_forward() {
+        check_admission_clock(1.0, 1.0);
+        check_admission_clock(1.0, 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "ran backward")]
+    fn clock_rejects_backward() {
+        check_admission_clock(2.0, 1.0);
+    }
+
+    #[test]
+    fn placement_block_is_valid() {
+        let spec = spec();
+        let map = PlacementMap::block(&spec, 8);
+        check_placement_valid(&map, &spec);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid placement")]
+    fn placement_rejects_empty_expert() {
+        let spec = spec();
+        let mut map = PlacementMap::block(&spec, 8);
+        map.replicas[3].clear();
+        map.weights[3].clear();
+        check_placement_valid(&map, &spec);
+    }
+}

@@ -119,7 +119,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity; `{}` would emit them as
+                    // bare words no parser (ours included) accepts.
+                    // Canonical encoding: null, like serde_json.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{}", n);
@@ -403,7 +408,7 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.pos]).expect("number chars are ASCII");
         text.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 }
@@ -466,5 +471,60 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn non_finite_canonicalizes_to_null() {
+        // JSON has no NaN/Infinity — the writer must never emit the
+        // bare words `{}` would produce (they'd poison a fixture with
+        // text our own parser rejects)
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let v = obj! {"x" => f64::NAN};
+        assert_eq!(v.to_string(), r#"{"x":null}"#);
+        assert!(Json::parse(&v.to_string()).is_ok());
+    }
+
+    #[test]
+    fn non_finite_parse_rejected() {
+        // the grammar side of the same contract: NaN/Infinity are not
+        // valid JSON input either
+        assert!(Json::parse("NaN").is_err());
+        assert!(Json::parse("Infinity").is_err());
+        assert!(Json::parse("-Infinity").is_err());
+        assert!(Json::parse(r#"{"x": NaN}"#).is_err());
+    }
+
+    #[test]
+    fn deep_nesting_roundtrips() {
+        // 256 levels of [[[…1…]]] — byte-identity through parse+write
+        // must not depend on nesting depth (fixtures nest spans/objects
+        // arbitrarily deep)
+        let depth = 256;
+        let src =
+            format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+        let v = Json::parse(&src).unwrap();
+        assert_eq!(v.to_string(), src);
+        let mut obj_src = String::from("1");
+        for _ in 0..depth {
+            obj_src = format!(r#"{{"k":{obj_src}}}"#);
+        }
+        let v = Json::parse(&obj_src).unwrap();
+        assert_eq!(v.to_string(), obj_src);
+    }
+
+    #[test]
+    fn key_sort_is_insertion_order_independent() {
+        // sorted-key emission is the byte-identity backbone: the same
+        // logical object must serialize identically no matter how it
+        // was built
+        let a = obj! {"z" => 1.0, "a" => 2.0, "m" => 3.0};
+        let b = obj! {"a" => 2.0, "m" => 3.0, "z" => 1.0};
+        assert_eq!(a.to_string(), b.to_string());
+        assert_eq!(a.to_string(), r#"{"a":2,"m":3,"z":1}"#);
+        // keys that differ only by case / prefix order bytewise
+        let c = obj! {"key" => 1.0, "Key" => 2.0, "key2" => 3.0};
+        assert_eq!(c.to_string(), r#"{"Key":2,"key":1,"key2":3}"#);
     }
 }

@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod invariants;
 pub mod json;
 pub mod proptest;
 pub mod rng;

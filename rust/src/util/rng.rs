@@ -83,6 +83,7 @@ impl Rng {
     pub fn normal(&mut self) -> f64 {
         let u1 = self.f64().max(1e-300);
         let u2 = self.f64();
+        // audit:allow(D2): Box-Muller needs ln/cos — mirrored call-for-call by math.log/math.cos on the same libm and pinned by every golden that draws normals
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
@@ -120,6 +121,7 @@ impl Zipf {
         let mut cdf = Vec::with_capacity(n);
         let mut acc = 0.0;
         for k in 1..=n {
+            // audit:allow(D2): Zipf CDF weights — mirrored by Python's ** on the same libm and pinned by the trace goldens
             acc += 1.0 / (k as f64).powf(s);
             cdf.push(acc);
         }
@@ -132,7 +134,7 @@ impl Zipf {
 
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
-        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).expect("CDF entries are never NaN")) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }

@@ -143,6 +143,7 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn record(&mut self, v: f64) {
+        // audit:allow(D2): power-of-two bucket index — the floor absorbs any ulp wobble except exactly at bucket edges, and histogram buckets never feed priced math
         let b = if v <= 1.0 { 0 } else { (v.log2().floor() as usize).min(63) };
         self.buckets[b] += 1;
         self.count += 1;

@@ -25,7 +25,7 @@ impl ThreadPool {
                 thread::Builder::new()
                     .name(format!("smile-worker-{i}"))
                     .spawn(move || loop {
-                        let job = rx.lock().unwrap().recv();
+                        let job = rx.lock().expect("job queue lock poisoned").recv();
                         match job {
                             // contain unwinds: a panicking job must not
                             // take the worker down with it (map reports
@@ -45,7 +45,7 @@ impl ThreadPool {
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool alive");
+        self.tx.as_ref().expect("pool not shut down").send(Box::new(f)).expect("pool alive");
     }
 
     /// Map `f` over `items` in parallel, preserving order.

@@ -14,6 +14,7 @@ use smile::serve::{serve, ServeConfig, WorkloadKind};
 use smile::trace::{
     record_scenario, tune_grid, RoutingTrace, Scenario, ScenarioConfig, TraceReplayer,
 };
+use smile::util::invariants;
 use smile::util::json::Json;
 use smile::util::proptest::{check, Config};
 use smile::util::rng::Rng;
@@ -95,6 +96,7 @@ fn prop_topk_dispatch_conservation_and_gated_combine() {
         |(probs, e, k, cap)| {
             let rows = moe::topk_rows(probs, *e, *k);
             let plan = moe::TopKPlan::build(&rows, *e, *cap);
+            invariants::check_topk_capacity(&plan);
             let t = rows.num_tokens();
             for ti in 0..t {
                 let row = rows.row(ti);
@@ -362,6 +364,7 @@ fn prop_dag_sim_causality() {
                 ids.push(sim.task(&format!("t{t}"), res[resources[t]], durations[t], &dep_ids));
             }
             let tl = sim.run();
+            invariants::check_timeline(&tl);
             // dependency causality (span_of returns None only for
             // ids the simulation never saw — ours are all real)
             for (t, deps) in edges.iter().enumerate() {
@@ -429,6 +432,7 @@ fn prop_placement_invariants() {
             if let Err(msg) = map.validate(spec) {
                 prop_assert!(false, "validate failed: {msg}");
             }
+            invariants::check_placement_valid(&map, spec);
             for e in 0..map.num_experts() {
                 let gpus = map.gpus_of(e);
                 prop_assert!(!gpus.is_empty(), "expert {e} has no replica");
@@ -584,6 +588,11 @@ fn prop_migration_scheduler_conserves_bytes() {
                     s.enqueued_bytes()
                 );
                 prop_assert!(s.pending_bytes() >= 0.0, "negative pending");
+                invariants::check_migration_ledger(
+                    s.enqueued_bytes(),
+                    s.drained_bytes(),
+                    s.pending_bytes(),
+                );
             }
             // wire-time conservation: exposed + overlapped + pending/bw
             // equals the lump-sum transfer time of everything enqueued
@@ -950,6 +959,12 @@ fn prop_serve_deterministic_and_conserving() {
                     it.tokens_completed,
                     it.tokens_queued,
                     it.tokens_inflight
+                );
+                invariants::check_batcher_conservation(
+                    it.tokens_admitted,
+                    it.tokens_completed,
+                    it.tokens_queued,
+                    it.tokens_inflight,
                 );
                 prop_assert!(
                     it.batch_tokens >= 1 && it.batch_tokens <= cfg.batcher.max_batch_tokens,

@@ -1,0 +1,948 @@
+#!/usr/bin/env python3
+"""smile-audit — the static half of the determinism & invariant pass.
+
+Every number this repo ships is pinned by byte-compared golden fixtures
+and an exact Python f64 mirror (scripts/gen_golden_traces.py).  That
+contract survives only while the Rust sources obey a handful of
+discipline rules; this analyzer enforces them without a toolchain (it
+must run in the same container as the mirror).  It lexes
+rust/src/**/*.rs properly — comments, strings (incl. raw strings),
+char literals and lifetimes are stripped before any rule looks at the
+token stream — so string/comment mentions never false-positive.
+
+Rules (D = deny, W = warn/ratcheted):
+
+  D1  no HashMap/HashSet in simulation modules (netsim, placement,
+      trace, serve, simtrain, obs, moe) — iteration order would leak
+      into serialized output or priced math; use BTreeMap/sorted vecs.
+  D2  no libm transcendentals (exp/ln/log*/sin/cos/tan/powf/…) in the
+      simulation modules or util — sqrt is the only float function the
+      mirror bit-exactness contract admits.  Annotated exceptions must
+      say why (e.g. mirrored by the same libm on the Python side and
+      pinned by goldens, or off the priced path entirely).
+  D3  no Instant::now/SystemTime inside rust/src — wall clocks belong
+      to benches/ (outside src) and to explicitly annotated driver
+      code (trainer, runtime, main.rs, util::bench), never to the
+      virtual-clock simulation.
+  D4  no f32 in priced-path modules (placement, netsim, simtrain,
+      serve) except the documented observe_f32 widening points —
+      single-precision arithmetic would diverge from the f64 mirror.
+  D5  no Rc/RefCell in the simulation modules or util — parallel
+      surfaces (trace::sweep, util::threadpool consumers) capture
+      these types into worker closures; also the obs EventSink must
+      never derive Clone (sinks are shared behind Arc<Mutex>, and a
+      cloned ring would silently fork the event stream).
+  D6  mirror drift — every literal `sink.emit("<kind>", …)` /
+      `audit_buf.push(("<kind>", obj!{…}))` kind string and its
+      payload keys in the Rust emitters must appear in
+      scripts/gen_golden_traces.py (as `event_line("<kind>", …,
+      dict(…))` / `audit_buf.append(("<kind>", dict(…)))`) and vice
+      versa, so the mirror can never silently under-cover an event.
+  W1  bare `.unwrap()` in non-test library code, counted per file into
+      the ratchet baseline: existing debt is frozen, any new unwrap
+      fails.  Prefer `expect` with context or `Result`.
+
+Suppression:
+
+  // audit:allow(D2): reason text
+      on the offending line or the line directly above suppresses that
+      rule there (multiple rules: audit:allow(D2,D3): …).  The reason
+      is mandatory.  D6 findings are cross-file contract breaks and
+      cannot be annotated away — fix the mirror or the emitter.
+
+  scripts/audit_baseline.json
+      the ratchet: per-rule, per-file frozen counts (W1 only on a
+      healthy tree).  `--update-baseline` rewrites it from the current
+      tree; CI fails when any file exceeds its frozen count.
+
+Usage:
+
+  python3 scripts/audit.py                 # audit the tree (CI gate)
+  python3 scripts/audit.py -v              # list every finding incl. baselined
+  python3 scripts/audit.py --update-baseline
+  python3 scripts/audit.py --selftest      # mutation checks: prove the
+                                           # rules + mirror cross-check
+                                           # are non-vacuous
+"""
+
+import ast
+import json
+import os
+import re
+import sys
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+RUST_SRC = os.path.join("rust", "src")
+MIRROR = os.path.join("scripts", "gen_golden_traces.py")
+BASELINE_PATH = os.path.join("scripts", "audit_baseline.json")
+
+SIM_MODULES = {"netsim", "placement", "trace", "serve", "simtrain", "obs", "moe"}
+D2_MODULES = SIM_MODULES | {"util"}
+D4_MODULES = {"placement", "netsim", "simtrain", "serve"}
+D5_MODULES = SIM_MODULES | {"util"}
+
+TRANSCENDENTALS = {
+    "exp", "exp2", "exp_m1", "ln", "ln_1p", "log", "log2", "log10",
+    "sin", "cos", "tan", "sinh", "cosh", "tanh", "asin", "acos", "atan",
+    "atan2", "powf",
+}
+
+ALLOW_RE = re.compile(r"audit:allow\(([A-Za-z0-9, ]+)\)\s*:\s*(.*\S)?")
+RAW_STR_RE = re.compile(r'(?:b?r|rb)(#*)"')
+
+
+# ---------------------------------------------------------------------------
+# Rust lexer: comments/strings stripped, audit:allow annotations captured
+# ---------------------------------------------------------------------------
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line")
+
+    def __init__(self, kind, text, line):
+        self.kind = kind  # ident | num | str | char | life | punct
+        self.text = text
+        self.line = line
+
+    def __repr__(self):
+        return f"{self.kind}:{self.text}@{self.line}"
+
+
+def lex(src):
+    """Token stream + {line: [(rules, reason)]} allow-annotations."""
+    toks = []
+    allows = {}
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        if src.startswith("//", i):
+            j = src.find("\n", i)
+            if j < 0:
+                j = n
+            m = ALLOW_RE.search(src[i:j])
+            if m:
+                rules = {r.strip().upper() for r in m.group(1).split(",") if r.strip()}
+                reason = (m.group(2) or "").strip()
+                allows.setdefault(line, []).append((rules, reason))
+            i = j
+            continue
+        if src.startswith("/*", i):
+            depth, i = 1, i + 2
+            while i < n and depth:
+                if src.startswith("/*", i):
+                    depth += 1
+                    i += 2
+                elif src.startswith("*/", i):
+                    depth -= 1
+                    i += 2
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            continue
+        m = RAW_STR_RE.match(src, i)
+        if m:
+            close = '"' + m.group(1)
+            j = src.find(close, m.end())
+            j = n if j < 0 else j + len(close)
+            start = line
+            line += src.count("\n", i, j)
+            toks.append(Tok("str", src[i:j], start))
+            i = j
+            continue
+        if c == '"' or (c == "b" and i + 1 < n and src[i + 1] == '"'):
+            j = i + (2 if c == "b" else 1)
+            start = line
+            while j < n:
+                if src[j] == "\\":
+                    # escapes can hide a newline (string continuation)
+                    if j + 1 < n and src[j + 1] == "\n":
+                        line += 1
+                    j += 2
+                    continue
+                if src[j] == "\n":
+                    line += 1
+                if src[j] == '"':
+                    j += 1
+                    break
+                j += 1
+            toks.append(Tok("str", src[i:j], start))
+            i = j
+            continue
+        if c == "'":
+            if i + 1 < n and src[i + 1] == "\\":
+                j = i + 2
+                while j < n and src[j] != "'":
+                    j += 1
+                toks.append(Tok("char", src[i : j + 1], line))
+                i = j + 1
+                continue
+            if i + 2 < n and src[i + 2] == "'":
+                toks.append(Tok("char", src[i : i + 3], line))
+                i += 3
+                continue
+            j = i + 1
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            toks.append(Tok("life", src[i:j], line))
+            i = j
+            continue
+        if c.isalpha() or c == "_":
+            j = i
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            toks.append(Tok("ident", src[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            j = i
+            while j < n:
+                ch = src[j]
+                if ch.isalnum() or ch == "_":
+                    j += 1
+                elif ch == "." and j + 1 < n and src[j + 1].isdigit():
+                    j += 2
+                else:
+                    break
+            toks.append(Tok("num", src[i:j], line))
+            i = j
+            continue
+        toks.append(Tok("punct", c, line))
+        i += 1
+    return toks, allows
+
+
+def str_value(text):
+    """Literal text -> key/kind string (plain and raw strings)."""
+    if text.startswith('"'):
+        body = text[1:-1]
+    else:  # r"…", b"…", r#"…"#
+        k = text.find('"')
+        body = text[k + 1 :]
+        body = body[: body.rfind('"')]
+    # audit keys/kinds are plain ASCII; unescape the common cases only
+    return body.replace('\\"', '"').replace("\\\\", "\\")
+
+
+# ---------------------------------------------------------------------------
+# #[cfg(test)] span detection — D/W rules only audit shipping code
+# ---------------------------------------------------------------------------
+
+
+def _match_bracket(toks, i, open_c, close_c):
+    """Index just past the bracket matching toks[i] (which is open_c)."""
+    depth = 0
+    while i < len(toks):
+        t = toks[i]
+        if t.kind == "punct":
+            if t.text == open_c:
+                depth += 1
+            elif t.text == close_c:
+                depth -= 1
+                if depth == 0:
+                    return i + 1
+        i += 1
+    return len(toks)
+
+
+def _skip_item(toks, i):
+    """Index past the item starting at toks[i]: first top-level `{…}`
+    block or terminating `;`, whichever comes first."""
+    depth = 0
+    while i < len(toks):
+        t = toks[i]
+        if t.kind == "punct":
+            if t.text in "([":
+                depth += 1
+            elif t.text in ")]":
+                depth -= 1
+            elif t.text == ";" and depth == 0:
+                return i + 1
+            elif t.text == "{" and depth == 0:
+                return _match_bracket(toks, i, "{", "}")
+        i += 1
+    return len(toks)
+
+
+def test_mask(toks):
+    """mask[i] is True for tokens inside #[cfg(test)]-gated items (and
+    items gated on any cfg predicate mentioning `test`, e.g.
+    cfg(any(test, feature = …)) — those never ship in release)."""
+    mask = [False] * len(toks)
+    i = 0
+    while i < len(toks):
+        t = toks[i]
+        if (
+            t.kind == "punct"
+            and t.text == "#"
+            and i + 2 < len(toks)
+            and toks[i + 1].text == "["
+            and toks[i + 2].text == "cfg"
+        ):
+            end_attr = _match_bracket(toks, i + 1, "[", "]")
+            inner = toks[i + 3 : end_attr - 1]
+            if any(x.kind == "ident" and x.text == "test" for x in inner):
+                j = end_attr
+                # fold in any further attributes on the same item
+                while (
+                    j + 1 < len(toks)
+                    and toks[j].kind == "punct"
+                    and toks[j].text == "#"
+                    and toks[j + 1].text == "["
+                ):
+                    j = _match_bracket(toks, j + 1, "[", "]")
+                end = _skip_item(toks, j)
+                for k in range(i, end):
+                    mask[k] = True
+                i = end
+                continue
+            i = end_attr
+            continue
+        i += 1
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# findings + suppression
+# ---------------------------------------------------------------------------
+
+
+class Finding:
+    def __init__(self, rule, path, line, msg):
+        self.rule = rule
+        self.path = path  # repo-relative
+        self.line = line
+        self.msg = msg
+
+    def __str__(self):
+        return f"{self.rule} {self.path}:{self.line} {self.msg}"
+
+
+def suppressed(finding, allows):
+    """An audit:allow(<rule>): <reason> on the finding's line or the
+    line directly above suppresses it (reason mandatory)."""
+    for ln in (finding.line, finding.line - 1):
+        for rules, reason in allows.get(ln, []):
+            if finding.rule in rules and reason:
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# per-file token rules: D1-D5, W1
+# ---------------------------------------------------------------------------
+
+
+def top_module(relpath):
+    """rust/src-relative path -> top-level module name ('' for lib.rs)."""
+    parts = relpath.replace("\\", "/").split("/")
+    if len(parts) == 1:
+        return parts[0][:-3] if parts[0].endswith(".rs") else parts[0]
+    return parts[0]
+
+
+def scan_file_rules(relpath, toks, mask):
+    """Token-stream rules for one file; returns raw (unsuppressed)
+    findings.  `relpath` is relative to rust/src."""
+    out = []
+    mod = top_module(relpath)
+    path = f"{RUST_SRC}/{relpath}"
+    live = [t for t, m in zip(toks, mask) if not m]
+
+    if mod in SIM_MODULES:
+        for t in live:
+            if t.kind == "ident" and t.text in ("HashMap", "HashSet"):
+                out.append(Finding(
+                    "D1", path, t.line,
+                    f"{t.text} in simulation module `{mod}` — iteration order "
+                    "leaks into output; use BTreeMap or a sorted Vec",
+                ))
+
+    if mod in D2_MODULES:
+        for a, b, c in zip(live, live[1:], live[2:]):
+            if (
+                a.kind == "punct" and a.text == "."
+                and b.kind == "ident" and b.text in TRANSCENDENTALS
+                and c.kind == "punct" and c.text == "("
+            ):
+                out.append(Finding(
+                    "D2", path, b.line,
+                    f".{b.text}() — libm transcendental; the mirror contract "
+                    "allows f64 +-*/ and sqrt only",
+                ))
+
+    # D3 scans every file under rust/src: wall clocks are never part of
+    # the virtual-clock simulation; driver code annotates each use.
+    for a, b, c in zip(live, live[1:], live[2:]):
+        if (
+            a.kind == "ident" and a.text == "Instant"
+            and b.kind == "punct" and b.text == ":"
+            and c.kind == "punct" and c.text == ":"
+        ):
+            out.append(Finding(
+                "D3", path, a.line,
+                "Instant::now — wall clock in library code; simulation time "
+                "must come from the virtual clock",
+            ))
+    for t in live:
+        if t.kind == "ident" and t.text == "SystemTime":
+            out.append(Finding(
+                "D3", path, t.line,
+                "SystemTime — wall clock in library code",
+            ))
+
+    if mod in D4_MODULES:
+        for t in live:
+            if t.kind == "ident" and t.text == "f32":
+                out.append(Finding(
+                    "D4", path, t.line,
+                    "f32 in a priced-path module — single precision diverges "
+                    "from the f64 mirror; widen at a documented observe_f32 "
+                    "boundary",
+                ))
+
+    if mod in D5_MODULES:
+        for t in live:
+            if t.kind == "ident" and t.text in ("Rc", "RefCell"):
+                out.append(Finding(
+                    "D5", path, t.line,
+                    f"{t.text} in `{mod}` — not Send/Sync-safe; parallel sweep "
+                    "surfaces capture these into worker closures",
+                ))
+
+    w1 = []
+    for a, b, c in zip(live, live[1:], live[2:]):
+        if (
+            a.kind == "punct" and a.text == "."
+            and b.kind == "ident" and b.text == "unwrap"
+            and c.kind == "punct" and c.text == "("
+        ):
+            w1.append(Finding(
+                "W1", path, b.line,
+                ".unwrap() in non-test code — prefer expect with context or Result",
+            ))
+    return out, w1
+
+
+def check_eventsink_not_clone(relpath, toks, mask):
+    """D5b: `struct EventSink` must not derive Clone (sinks are shared
+    behind Arc<Mutex>; a cloned ring forks the event stream)."""
+    out = []
+    live = [t for t, m in zip(toks, mask) if not m]
+    for i, t in enumerate(live):
+        if t.kind == "ident" and t.text == "EventSink" and i >= 1:
+            if live[i - 1].kind == "ident" and live[i - 1].text == "struct":
+                # walk back over attributes before `pub struct`
+                j = i - 1
+                while j > 0 and live[j].text not in ("]",):
+                    j -= 1
+                    if live[j].kind == "punct" and live[j].text == "]":
+                        break
+                    if i - j > 40:
+                        break
+                # simpler: scan the 40 tokens before the struct for a
+                # derive(...) attribute containing Clone
+                window = live[max(0, i - 40) : i]
+                in_derive = False
+                for k, w in enumerate(window):
+                    if w.kind == "ident" and w.text == "derive":
+                        in_derive = True
+                    elif in_derive and w.kind == "punct" and w.text == "]":
+                        in_derive = False
+                    elif in_derive and w.kind == "ident" and w.text == "Clone":
+                        out.append(Finding(
+                            "D5", f"{RUST_SRC}/{relpath}", t.line,
+                            "EventSink derives Clone — obs sinks are shared, "
+                            "never cloned",
+                        ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# D6: Rust emitters vs the Python mirror
+# ---------------------------------------------------------------------------
+
+
+def _obj_keys(toks, i):
+    """toks[i] is the `{` of an obj!{…}; return (keys, index past `}`).
+    Keys are the top-level string literals before `=>`."""
+    keys = []
+    depth = 0
+    expect_key = True
+    while i < len(toks):
+        t = toks[i]
+        if t.kind == "punct":
+            if t.text in "{([":
+                depth += 1
+                if depth > 1:
+                    expect_key = False
+            elif t.text in "})]":
+                depth -= 1
+                if depth == 0:
+                    return keys, i + 1
+            elif t.text == "," and depth == 1:
+                expect_key = True
+                i += 1
+                continue
+        if depth == 1 and expect_key and t.kind == "str":
+            keys.append(str_value(t.text))
+            expect_key = False
+        elif depth == 1 and t.kind != "punct":
+            expect_key = False
+        i += 1
+    return keys, i
+
+
+def _call_args(toks, i):
+    """toks[i] is a `(`; split the call's tokens into top-level args.
+    Returns (args, index past `)`), each arg a token list."""
+    args, cur, depth = [], [], 0
+    while i < len(toks):
+        t = toks[i]
+        if t.kind == "punct" and t.text in "([{":
+            depth += 1
+            if depth > 1:
+                cur.append(t)
+        elif t.kind == "punct" and t.text in ")]}":
+            depth -= 1
+            if depth == 0:
+                if cur:
+                    args.append(cur)
+                return args, i + 1
+            cur.append(t)
+        elif t.kind == "punct" and t.text == "," and depth == 1:
+            args.append(cur)
+            cur = []
+        else:
+            if depth >= 1:
+                cur.append(t)
+        i += 1
+    if cur:
+        args.append(cur)
+    return args, i
+
+
+def _payload_keys(arg, var_obj):
+    """Keys of a payload argument: obj!{…}, a let-bound obj! variable,
+    or Json::Null (no keys).  None = unknown (dynamic)."""
+    if not arg:
+        return None
+    if arg[0].kind == "ident" and arg[0].text == "obj":
+        for j, t in enumerate(arg):
+            if t.kind == "punct" and t.text == "{":
+                keys, _ = _obj_keys(arg, j)
+                return keys
+        return None
+    if len(arg) == 1 and arg[0].kind == "ident":
+        return var_obj.get(arg[0].text)
+    texts = [t.text for t in arg]
+    if texts == ["Json", ":", ":", "Null"]:
+        return []
+    return None
+
+
+def rust_emitters(files):
+    """{kind: {'keys': set|None, 'sites': [(path, line)]}} from every
+    literal emit/audit_buf.push in non-test Rust code."""
+    kinds = {}
+
+    def add(kind, keys, path, line):
+        e = kinds.setdefault(kind, {"keys": set(), "known": False, "sites": []})
+        e["sites"].append((path, line))
+        if keys is not None:
+            e["keys"].update(keys)
+            e["known"] = True
+
+    for relpath, toks, mask in files:
+        path = f"{RUST_SRC}/{relpath}"
+        live = [t for t, m in zip(toks, mask) if not m]
+        var_obj = {}
+        i = 0
+        while i < len(live):
+            t = live[i]
+            # track `let <var> = obj! { … };` for ident payloads
+            if (
+                t.kind == "ident" and t.text == "let"
+                and i + 4 < len(live)
+                and live[i + 1].kind == "ident"
+                and live[i + 2].text == "="
+                and live[i + 3].text == "obj"
+            ):
+                name = live[i + 1].text
+                j = i + 4
+                while j < len(live) and live[j].text != "{":
+                    j += 1
+                if j < len(live):
+                    keys, j2 = _obj_keys(live, j)
+                    var_obj[name] = keys
+                    i = j2
+                    continue
+            if t.kind == "ident" and t.text == "fn":
+                var_obj = {}
+            if (
+                t.kind == "ident" and t.text == "emit"
+                and i + 2 < len(live)
+                and live[i + 1].kind == "punct" and live[i + 1].text == "("
+                and live[i + 2].kind == "str"
+            ):
+                args, end = _call_args(live, i + 1)
+                if len(args) >= 3 and len(args[0]) == 1 and args[0][0].kind == "str":
+                    kind = str_value(args[0][0].text)
+                    add(kind, _payload_keys(args[-1], var_obj), path, t.line)
+                i = end
+                continue
+            if (
+                t.kind == "ident" and t.text == "audit_buf"
+                and i + 3 < len(live)
+                and live[i + 1].text == "."
+                and live[i + 2].text == "push"
+                and live[i + 3].text == "("
+            ):
+                args, end = _call_args(live, i + 3)
+                # push((kind, payload)) — unwrap the tuple parens first
+                if (
+                    len(args) == 1
+                    and args[0]
+                    and args[0][0].kind == "punct"
+                    and args[0][0].text == "("
+                ):
+                    args, _ = _call_args(args[0], 0)
+                if args and args[0] and args[0][0].kind == "str":
+                    kind = str_value(args[0][0].text)
+                    add(kind, _payload_keys(args[-1], var_obj), path, t.line)
+                i = end
+                continue
+            i += 1
+    return kinds
+
+
+def python_emitters(mirror_src, mirror_path):
+    """{kind: {'keys': set, 'known': bool, 'sites': [(path, line)]}}
+    from event_line(…) / audit_buf.append((…)) calls in the mirror."""
+    kinds = {}
+
+    def add(kind, keys, line):
+        e = kinds.setdefault(kind, {"keys": set(), "known": False, "sites": []})
+        e["sites"].append((mirror_path, line))
+        if keys is not None:
+            e["keys"].update(keys)
+            e["known"] = True
+
+    def dict_keys(node):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) and node.func.id == "dict":
+            return [kw.arg for kw in node.keywords if kw.arg]
+        if isinstance(node, ast.Dict):
+            return [k.value for k in node.keys if isinstance(k, ast.Constant)]
+        return None
+
+    tree = ast.parse(mirror_src)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name) and f.id == "event_line" and len(node.args) >= 4:
+            a0 = node.args[0]
+            if isinstance(a0, ast.Constant) and isinstance(a0.value, str):
+                add(a0.value, dict_keys(node.args[3]), node.lineno)
+        elif (
+            isinstance(f, ast.Attribute)
+            and f.attr == "append"
+            and isinstance(f.value, ast.Attribute)
+            and f.value.attr == "audit_buf"
+            and node.args
+            and isinstance(node.args[0], ast.Tuple)
+            and len(node.args[0].elts) == 2
+        ):
+            k, payload = node.args[0].elts
+            if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                add(k.value, dict_keys(payload), node.lineno)
+    return kinds
+
+
+def check_d6(rust_kinds, py_kinds, mirror_path):
+    out = []
+    for kind, e in sorted(rust_kinds.items()):
+        path, line = e["sites"][0]
+        if kind not in py_kinds:
+            out.append(Finding(
+                "D6", path, line,
+                f'emit kind "{kind}" has no mirror emitter in {mirror_path} — '
+                "the Python mirror would silently under-cover this event",
+            ))
+            continue
+        p = py_kinds[kind]
+        if e["known"] and p["known"] and e["keys"] != p["keys"]:
+            missing = sorted(e["keys"] - p["keys"])
+            extra = sorted(p["keys"] - e["keys"])
+            detail = []
+            if missing:
+                detail.append(f"missing from mirror: {missing}")
+            if extra:
+                detail.append(f"only in mirror: {extra}")
+            out.append(Finding(
+                "D6", path, line,
+                f'payload keys for "{kind}" drifted ({"; ".join(detail)})',
+            ))
+    for kind, p in sorted(py_kinds.items()):
+        if kind not in rust_kinds:
+            path, line = p["sites"][0]
+            out.append(Finding(
+                "D6", path, line,
+                f'mirror emits kind "{kind}" that no Rust emitter produces',
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def read_file(root, relpath, overrides):
+    if overrides and relpath in overrides:
+        return overrides[relpath]
+    with open(os.path.join(root, relpath), "r") as f:
+        return f.read()
+
+
+def rust_sources(root, overrides):
+    """Sorted rust/src-relative .rs paths (override-only paths included
+    so selftests can inject files)."""
+    found = set()
+    src_root = os.path.join(root, RUST_SRC)
+    for dirpath, _, names in os.walk(src_root):
+        for name in sorted(names):
+            if name.endswith(".rs"):
+                full = os.path.join(dirpath, name)
+                found.add(os.path.relpath(full, src_root).replace(os.sep, "/"))
+    if overrides:
+        for p in overrides:
+            if p.startswith(RUST_SRC + "/") and p.endswith(".rs"):
+                found.add(p[len(RUST_SRC) + 1 :])
+    return sorted(found)
+
+
+def run_audit(root, overrides=None, verbose=False):
+    """Returns (failures, baselined, infos): lists of Finding/str."""
+    baseline = {}
+    try:
+        baseline = json.loads(read_file(root, BASELINE_PATH, overrides))
+    except (OSError, ValueError):
+        pass
+
+    failures = []
+    baselined_notes = []
+    infos = []
+    w1_counts = {}
+    d6_files = []
+
+    for relpath in rust_sources(root, overrides):
+        src = read_file(root, RUST_SRC + "/" + relpath, overrides)
+        toks, allows = lex(src)
+        mask = test_mask(toks)
+        d6_files.append((relpath, toks, mask))
+
+        findings, w1 = scan_file_rules(relpath, toks, mask)
+        if relpath == "obs/event.rs":
+            findings += check_eventsink_not_clone(relpath, toks, mask)
+        for f in findings:
+            if suppressed(f, allows):
+                if verbose:
+                    infos.append(f"allowed   {f}")
+            else:
+                failures.append(f)
+        live_w1 = [f for f in w1 if not suppressed(f, allows)]
+        if live_w1:
+            w1_counts[f"{RUST_SRC}/{relpath}"] = (len(live_w1), live_w1)
+
+    # W1 ratchet
+    frozen = baseline.get("W1", {})
+    for path in sorted(w1_counts):
+        count, sites = w1_counts[path]
+        base = frozen.get(path, 0)
+        if count > base:
+            for f in sites[base:] if base else sites:
+                failures.append(f)
+            failures.append(Finding(
+                "W1", path, 0,
+                f"{count} bare unwrap() calls exceed the ratchet baseline "
+                f"({base}) — convert new ones to expect/Result, or refresh "
+                "the baseline deliberately with --update-baseline",
+            ))
+        elif count < base:
+            infos.append(
+                f"ratchet   W1 {path}: {count} < baseline {base} — baseline "
+                "can be tightened (--update-baseline)"
+            )
+        else:
+            baselined_notes.append(f"W1 {path}: {count} (frozen)")
+    for path in sorted(set(frozen) - set(w1_counts)):
+        infos.append(
+            f"ratchet   W1 {path}: 0 < baseline {frozen[path]} — baseline "
+            "can be tightened (--update-baseline)"
+        )
+
+    # D6 cross-check
+    mirror_src = read_file(root, MIRROR, overrides)
+    rust_kinds = rust_emitters(d6_files)
+    py_kinds = python_emitters(mirror_src, MIRROR)
+    failures += check_d6(rust_kinds, py_kinds, MIRROR)
+
+    return failures, baselined_notes, infos, w1_counts
+
+
+def update_baseline(root):
+    _, _, _, w1_counts = run_audit(root)
+    data = {"W1": {path: count for path, (count, _) in sorted(w1_counts.items())}}
+    path = os.path.join(root, BASELINE_PATH)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    total = sum(data["W1"].values())
+    print(f"wrote {BASELINE_PATH}: W1 frozen at {total} unwraps across "
+          f"{len(data['W1'])} files")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# --selftest: mutation checks proving the rules are non-vacuous
+# ---------------------------------------------------------------------------
+
+
+MUT_D1 = """
+pub fn _audit_selftest_d1() -> usize {
+    let mut m = std::collections::HashMap::new();
+    m.insert(1usize, 2usize);
+    let mut total = 0;
+    for (_, v) in &m {
+        total += v;
+    }
+    total
+}
+"""
+
+MUT_D2 = """
+pub fn _audit_selftest_d2(x: f64) -> f64 {
+    x.exp()
+}
+"""
+
+MUT_D6 = """
+pub fn _audit_selftest_d6(sink: &mut crate::obs::EventSink) {
+    sink.emit("selftest.unmirrored", 0, obj! {"zz" => 1.0});
+}
+"""
+
+MUT_ALLOWED = """
+pub fn _audit_selftest_allowed(x: f64) -> f64 {
+    // audit:allow(D2): selftest fixture — suppression must work
+    x.exp()
+}
+"""
+
+
+def selftest(root):
+    target = RUST_SRC + "/placement/stats.rs"
+    base_src = read_file(root, target, None)
+    mirror_src = read_file(root, MIRROR, None)
+    serve_target = RUST_SRC + "/serve/engine.rs"
+    serve_src = read_file(root, serve_target, None)
+    failures = 0
+
+    def expect(name, overrides, rule, want=True):
+        nonlocal failures
+        found, _, _, _ = run_audit(root, overrides=overrides)
+        hit = any(f.rule == rule for f in found)
+        status = "ok" if hit == want else "FAILED"
+        if hit != want:
+            failures += 1
+        verb = "fires" if want else "stays quiet"
+        print(f"selftest {status}: {name} — {rule} {verb}")
+        if hit != want:
+            for f in found[:8]:
+                print(f"    got: {f}")
+
+    # the unmutated tree must be clean, else every mutation check is moot
+    clean, _, _, _ = run_audit(root)
+    if clean:
+        print("selftest FAILED: tree has unbaselined findings; fix them first")
+        for f in clean:
+            print(f"    {f}")
+        return 1
+    print("selftest ok: unmutated tree is clean")
+
+    expect("HashMap iteration injected into placement",
+           {target: base_src + MUT_D1}, "D1")
+    expect(".exp() injected into placement",
+           {target: base_src + MUT_D2}, "D2")
+    expect("Instant::now injected into placement",
+           {target: base_src + "\npub fn _t() -> std::time::Instant { std::time::Instant::now() }\n"},
+           "D3")
+    expect("f32 arithmetic injected into placement",
+           {target: base_src + "\npub fn _f(x: f32) -> f32 { x * 2.0f32 }\n"},
+           "D4")
+    expect("RefCell injected into placement",
+           {target: base_src + "\npub fn _r() -> std::cell::RefCell<u32> { std::cell::RefCell::new(0) }\n"},
+           "D5")
+    expect("new unwrap beyond the ratchet",
+           {target: base_src + "\npub fn _u(x: Option<u32>) -> u32 { x.unwrap() }\n"},
+           "W1")
+    expect("emit kind absent from the mirror",
+           {serve_target: serve_src.replace(
+               'sink.emit("queue.depth"', 'sink.emit("queue.depth.v2"', 1)},
+           "D6")
+    expect("new Rust-side emitter with no mirror twin",
+           {target: base_src + MUT_D6}, "D6")
+    expect("payload key renamed in the mirror",
+           {MIRROR: mirror_src.replace("dict(depth=", "dict(depth_renamed=", 1)},
+           "D6")
+    expect("mirror event kind dropped",
+           {MIRROR: mirror_src.replace('"queue.depth"', '"queue.depth.gone"')},
+           "D6")
+    expect("annotated violation is suppressed",
+           {target: base_src + MUT_ALLOWED}, "D2", want=False)
+    # test-gated code is exempt from the deny rules
+    expect("violation inside #[cfg(test)] is exempt",
+           {target: base_src + "\n#[cfg(test)]\nmod selftest_gated {\n    pub fn t(x: f64) -> f64 { x.exp() }\n}\n"},
+           "D2", want=False)
+
+    if failures:
+        print(f"selftest: {failures} mutation check(s) FAILED")
+        return 1
+    print("selftest: all mutation checks passed — the audit is non-vacuous")
+    return 0
+
+
+def main():
+    args = sys.argv[1:]
+    if "--selftest" in args:
+        sys.exit(selftest(REPO))
+    if "--update-baseline" in args:
+        sys.exit(update_baseline(REPO))
+    verbose = "-v" in args or "--verbose" in args
+    failures, baselined, infos, _ = run_audit(REPO, verbose=verbose)
+    if verbose:
+        for note in baselined:
+            print(f"baselined {note}")
+        for note in infos:
+            print(note)
+    if failures:
+        print(f"audit FAILED — {len(failures)} finding(s):")
+        for f in failures:
+            print(f"  {f}")
+        print("suppress a justified exception with `// audit:allow(<rule>): "
+              "<reason>` on or above the line; see ROADMAP.md `## audit`")
+        sys.exit(1)
+    print("audit ok: D1-D6 clean, W1 within the ratchet baseline")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

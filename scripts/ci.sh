@@ -35,6 +35,20 @@
 #                              fork-from-prefix vs 8-thread tune grids,
 #                              with a byte-identity shape check) and write
 #                              BENCH_tune.json at the repo root
+#   scripts/ci.sh audit        smile-audit static determinism lint
+#                              (scripts/audit.py, no toolchain needed):
+#                                D1 no HashMap/HashSet in sim modules
+#                                D2 no libm transcendentals (sqrt only)
+#                                D3 no wall clocks in rust/src
+#                                D4 no f32 on priced paths (observe_f32 only)
+#                                D5 no Rc/RefCell near parallel surfaces,
+#                                   obs sinks never cloned
+#                                D6 Rust emitters <-> Python mirror event
+#                                   kinds/payload keys must match exactly
+#                                W1 bare unwrap() ratchet (audit_baseline.json)
+#                              suppressions: // audit:allow(<rule>): <reason>
+#                              (see ROADMAP.md `## audit`); `--selftest` runs
+#                              the mutation checks proving each rule fires
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -61,6 +75,7 @@ case "$cmd" in
     cargo test -q --test serve_golden
     cargo test -q --test obs_golden
     cargo fmt --check
+    "$repo_root/scripts/ci.sh" audit
     python3 "$repo_root/scripts/gen_golden_traces.py" --check
     # the sweep-engine bench doubles as the parallel-determinism gate:
     # it asserts 1T / 8T / from-scratch byte-identity before timing
@@ -78,6 +93,9 @@ case "$cmd" in
     ;;
   mirror-check)
     python3 "$repo_root/scripts/gen_golden_traces.py" --check
+    ;;
+  audit)
+    python3 "$repo_root/scripts/audit.py"
     ;;
   obs-golden)
     python3 "$repo_root/scripts/gen_golden_traces.py" --check-obs
@@ -101,7 +119,7 @@ case "$cmd" in
     echo "wrote $repo_root/BENCH_tune.json"
     ;;
   *)
-    echo "usage: scripts/ci.sh [gate|trace-golden|serve-golden|mirror-check|obs-golden|bench-json|bench-tune]" >&2
+    echo "usage: scripts/ci.sh [gate|trace-golden|serve-golden|mirror-check|obs-golden|audit|bench-json|bench-tune]" >&2
     exit 2
     ;;
 esac

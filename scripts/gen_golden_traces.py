@@ -103,8 +103,11 @@ class Rng:
 
 
 def fmt_num(x):
-    # Json::Num writer: integers below 1e15 print as i64, everything
-    # else via f64 Display (shortest round-trip, no exponent).
+    # Json::Num writer: non-finite canonicalizes to null (JSON has no
+    # NaN/Infinity), integers below 1e15 print as i64, everything else
+    # via f64 Display (shortest round-trip, no exponent).
+    if math.isnan(x) or math.isinf(x):
+        return "null"
     if math.fmod(x, 1.0) == 0.0 and abs(x) < 1e15:
         return str(int(x))
     s = repr(float(x))
@@ -1550,9 +1553,15 @@ def serve_generate_requests(cfg, kind):
     return requests
 
 
-def serve_run(cfg, kind, policy_kind, overlap_frac=0.0):
+def serve_run(cfg, kind, policy_kind, overlap_frac=0.0, events=None):
     """serve::engine::serve — the whole deterministic serving loop.
-    Returns the ServeSummary dict (sorted-key JSON payload)."""
+    Returns the ServeSummary dict (sorted-key JSON payload).  When
+    `events` is a list, mirrors serve_with_obs's EventSink stream:
+    meta (source="serve"), requests.admitted/rejected at admission,
+    queue.depth after batch formation, the pipeline's audit /
+    migration.enqueue at observe boundaries, and migration.drain —
+    all stamped at the iteration-start virtual clock, like the Rust
+    engine's set_now."""
     spec = Spec(cfg["n_nodes"], cfg["gpus_per_node"])
     e_total = spec.num_gpus()  # one expert per GPU, the paper's shape
     g = float(spec.num_gpus())
@@ -1575,6 +1584,12 @@ def serve_run(cfg, kind, policy_kind, overlap_frac=0.0):
     else:
         rb = POLICY_KINDS[policy_kind](knobs, spec, e_total, nominal_payload)
     scheduler = MigrationScheduler(spec.inter_bw, overlap_frac)
+    last_step = 0  # RoutingPipeline::last_step — stamps migration.drain
+    if events is not None:
+        rb.audit = True
+        events.append(
+            event_line("meta", 0, 0.0, dict(policy=rb.name, schema_version=1, source="serve"))
+        )
 
     # batcher state (serve::batcher) — queue/active of request indices
     queue = []
@@ -1602,14 +1617,27 @@ def serve_run(cfg, kind, policy_kind, overlap_frac=0.0):
 
     while True:
         # 1. admit every arrival at or before the current virtual time
+        newly_admitted = 0
+        newly_rejected = 0
         while next_arrival < len(requests) and requests[next_arrival][0] <= now:
             if len(queue) >= cfg["max_queue"]:
                 rejected[next_arrival] = True
                 requests_rejected += 1
+                newly_rejected += 1
             else:
                 queue.append(next_arrival)
                 requests_admitted += 1
+                newly_admitted += 1
             next_arrival += 1
+        if events is not None:
+            if newly_admitted > 0:
+                events.append(
+                    event_line("requests.admitted", iters, now, dict(count=newly_admitted))
+                )
+            if newly_rejected > 0:
+                events.append(
+                    event_line("requests.rejected", iters, now, dict(count=newly_rejected))
+                )
         if not active and not queue:
             if next_arrival < len(requests):
                 # idle hop: jump the clock to the next arrival
@@ -1640,6 +1668,8 @@ def serve_run(cfg, kind, policy_kind, overlap_frac=0.0):
         queue_depth_sum += len(queue)
         if len(queue) > peak_queue_depth:
             peak_queue_depth = len(queue)
+        if events is not None:
+            events.append(event_line("queue.depth", iters, now, dict(depth=len(queue))))
 
         # 3. route the batch's tokens (top-1 over the workload mix)
         w = serve_expert_weights(cfg, kind, e_total, now)
@@ -1663,11 +1693,25 @@ def serve_run(cfg, kind, policy_kind, overlap_frac=0.0):
             accum = [0.0] * e_total
             accum_tokens = 0
             d = rb.consult(iters)
+            last_step = iters
             if d is not None:
                 bytes_ = float(d["migrated_replicas"]) * knobs["expert_bytes"]
                 stall = scheduler.enqueue(bytes_, d["migration_secs"])
                 rebalance_iters.append(iters)
                 migrated_replicas += d["migrated_replicas"]
+            if events is not None:
+                for kind_, data in rb.audit_buf:
+                    events.append(event_line(kind_, iters, now, data))
+                rb.audit_buf = []
+                if d is not None:
+                    events.append(
+                        event_line(
+                            "migration.enqueue",
+                            iters,
+                            now,
+                            dict(bytes=bytes_, lump_secs=d["migration_secs"], stall_secs=stall),
+                        )
+                    )
 
         # 5. placed dispatch: capacity clip + replica round-robin
         #    (moe::dispatch::PlacedPlan under the live placement)
@@ -1712,7 +1756,20 @@ def serve_run(cfg, kind, policy_kind, overlap_frac=0.0):
         expert = float(max_gpu) * SERVE_FFN_FPT * float(SERVE_MOE_LAYERS) / SERVE_EFF_FLOPS
         compute = dense + expert
         iter_secs = compute + comm + cfg["iter_overhead_secs"] + stall
-        scheduler.drain(iter_secs)
+        drained, overlapped = scheduler.drain(iter_secs)
+        if events is not None and drained > 0.0:
+            events.append(
+                event_line(
+                    "migration.drain",
+                    last_step,
+                    now,
+                    dict(
+                        drained_bytes=drained,
+                        overlapped_secs=overlapped,
+                        pending_bytes=scheduler.pending_bytes,
+                    ),
+                )
+            )
         total_comm += comm
         total_compute += compute
         now += iter_secs
@@ -1827,7 +1884,26 @@ def serve_fixture_files():
         ("flash", "threshold", "serve_flash.threshold.summary.json"),
         ("poisson", "adaptive", "serve_poisson.adaptive.summary.json"),
     ]:
-        out.append((fname, serve_run(SERVE, kind, policy)))
+        # exercise the serve event mirror on one config each run: the
+        # stream is structural (no pinned byte fixture yet), but it must
+        # stay non-empty, meta-first, and obs-zero-perturbation — the
+        # summary with events attached is byte-identical to without
+        if kind == "flash" and policy == "threshold":
+            events = []
+            summary = serve_run(SERVE, kind, policy, events=events)
+            assert events and '"kind":"meta"' in events[0], "serve events: meta first"
+            kinds = set()
+            for line in events:
+                kinds.add(line.split('"kind":"', 1)[1].split('"', 1)[0])
+            assert "requests.admitted" in kinds and "queue.depth" in kinds, (
+                "serve events under-cover the loop: %s" % sorted(kinds)
+            )
+            assert summary == serve_run(SERVE, kind, policy), (
+                "serve events perturbed the priced summary"
+            )
+        else:
+            summary = serve_run(SERVE, kind, policy)
+        out.append((fname, summary))
     return out
 
 
