@@ -1,0 +1,192 @@
+//! Bench: the observability analysis layer — raw event-sink emit
+//! throughput, detector observe cost, and the end-to-end overhead of
+//! running a full serve / replay with the event bus + online
+//! detectors + SLO burn tracking attached vs plain.  The headline
+//! entries are the overhead ratios: the zero-perturbation contract
+//! says analyzers never change a byte, and this report keeps them
+//! honest about never costing much wall clock either.  Writes
+//! reports/bench_obs.json.
+
+use smile::obj;
+use smile::obs::{
+    EventSink, ObsAnalyzers, ObsReport, ServeDetectors, SloTracker, ZScoreDetector,
+};
+use smile::placement::{
+    AdaptiveConfig, AdaptivePolicy, MigrationConfig, PolicyKind, RebalancePolicy,
+};
+use smile::serve::{serve, serve_with_obs, ServeConfig, WorkloadKind};
+use smile::trace::{record_scenario, Scenario, ScenarioConfig, TraceReplayer};
+use smile::util::bench::Bencher;
+
+fn flash_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.workload.kind = WorkloadKind::flash_default();
+    cfg
+}
+
+fn zipf_trace(steps: usize) -> smile::trace::RoutingTrace {
+    record_scenario(
+        &ScenarioConfig {
+            scenario: Scenario::Zipf { s: 1.3 },
+            n_nodes: 4,
+            gpus_per_node: 4,
+            steps,
+            tokens_per_step: 1024,
+            capacity_factor: 2.0,
+            payload_per_gpu: 1e6,
+            seed: 11,
+            top_k: 1,
+        },
+        None,
+    )
+}
+
+fn main() {
+    let flash = flash_cfg();
+    let analyzers = ObsAnalyzers { detect: true, slo_burn: true };
+
+    // shape check before timing anything: the zero-perturbation
+    // contract on the bench config itself
+    let plain = serve(&flash, PolicyKind::Adaptive, MigrationConfig::default());
+    let sink = EventSink::shared();
+    let watched = serve_with_obs(
+        &flash,
+        PolicyKind::Adaptive,
+        flash.policy_knobs(),
+        flash.adaptive_knobs(),
+        MigrationConfig::default(),
+        Some(sink.clone()),
+        None,
+        analyzers,
+    );
+    assert_eq!(
+        plain.summary.to_json().to_string_pretty(),
+        watched.summary.to_json().to_string_pretty(),
+        "analyzers perturbed the serve summary"
+    );
+    let alerts = {
+        let s = sink.lock().expect("obs sink lock poisoned");
+        s.of_kind("alert.raised").count() + s.of_kind("alert.cleared").count()
+    };
+    assert!(alerts > 0, "the flash crowd must trip at least one detector");
+    println!(
+        "shape check: analyzers byte-neutral, {alerts} alert edges on the flash crowd ✓\n"
+    );
+
+    let mut bench = Bencher::default();
+
+    // raw bus cost: emit N small events into a ring-only sink
+    const EMITS: usize = 10_000;
+    let emit_ns = bench.bench(&format!("obs::emit({EMITS} events, ring only)"), || {
+        let mut s = EventSink::new(1 << 12);
+        for i in 0..EMITS {
+            s.emit("bench.tick", i, obj! { "v" => i as f64 });
+        }
+        s
+    });
+    println!("emit: {:.0} ns/event", emit_ns / EMITS as f64);
+
+    // detector observe cost over a long synthetic series
+    bench.bench("obs::zscore.observe(10k samples)", || {
+        let mut det = ZScoreDetector::new("bench.z", 32, 3.0, 1.0);
+        let mut edges = 0usize;
+        for i in 0..10_000 {
+            let x = (i % 97) as f64 + if i % 500 == 0 { 400.0 } else { 0.0 };
+            edges += det.observe(x).is_some() as usize;
+        }
+        edges
+    });
+    bench.bench("obs::serve_detectors.observe_iter(10k)", || {
+        let mut det = ServeDetectors::new();
+        let mut s = EventSink::new(1 << 12);
+        for i in 0..10_000 {
+            det.observe_queue(&mut s, i, (i % 23) as f64);
+            det.observe_iter(&mut s, i, 0.01, 0.002 + (i % 7) as f64 * 1e-4);
+        }
+        s
+    });
+    bench.bench("obs::slo.observe_e2e(10k)", || {
+        let mut slo = SloTracker::serve_default(1250.0);
+        for i in 0..10_000 {
+            slo.observe_e2e(0.5 + (i % 13) as f64 * 0.1, i as f64 * 0.01);
+            let _ = slo.take_burns();
+        }
+        slo.report()
+    });
+
+    // end-to-end: full serve, plain vs bus-only vs bus + analyzers
+    let serve_plain_ns = bench.bench("serve(flash, adaptive, plain)", || {
+        serve(&flash, PolicyKind::Adaptive, MigrationConfig::default())
+    });
+    let serve_obs_ns = bench.bench("serve(flash, adaptive, events)", || {
+        serve_with_obs(
+            &flash,
+            PolicyKind::Adaptive,
+            flash.policy_knobs(),
+            flash.adaptive_knobs(),
+            MigrationConfig::default(),
+            Some(EventSink::shared()),
+            None,
+            ObsAnalyzers::default(),
+        )
+    });
+    let serve_full_ns = bench.bench("serve(flash, adaptive, events+detect+slo)", || {
+        serve_with_obs(
+            &flash,
+            PolicyKind::Adaptive,
+            flash.policy_knobs(),
+            flash.adaptive_knobs(),
+            MigrationConfig::default(),
+            Some(EventSink::shared()),
+            None,
+            analyzers,
+        )
+    });
+    bench.record("obs::serve.overhead.events (ratio)", &[serve_obs_ns / serve_plain_ns]);
+    bench.record("obs::serve.overhead.analyzers (ratio)", &[serve_full_ns / serve_plain_ns]);
+
+    // end-to-end: trace replay, plain vs observed + step-time detector
+    let trace = zipf_trace(200);
+    let adaptive_policy = || {
+        Box::new(AdaptivePolicy::new(
+            RebalancePolicy::default(),
+            AdaptiveConfig::default(),
+            trace.meta.cluster_spec(),
+            trace.meta.num_experts.max(1),
+            trace.meta.payload_per_gpu,
+        ))
+    };
+    let replay_plain_ns = bench.bench("replay(zipf 200 steps, plain)", || {
+        let mut r =
+            TraceReplayer::with_boxed_policy(&trace, adaptive_policy(), MigrationConfig::default());
+        for rec in &trace.steps {
+            r.step(rec);
+        }
+        r.finish()
+    });
+    let replay_obs_ns = bench.bench("replay(zipf 200 steps, events+detect)", || {
+        let mut r =
+            TraceReplayer::with_boxed_policy(&trace, adaptive_policy(), MigrationConfig::default());
+        r.attach_obs(EventSink::shared());
+        r.enable_detectors();
+        for rec in &trace.steps {
+            r.step(rec);
+        }
+        r.finish()
+    });
+    bench.record("obs::replay.overhead.analyzers (ratio)", &[replay_obs_ns / replay_plain_ns]);
+    println!(
+        "\noverhead: serve events {:.3}x, serve analyzers {:.3}x, replay analyzers {:.3}x",
+        serve_obs_ns / serve_plain_ns,
+        serve_full_ns / serve_plain_ns,
+        replay_obs_ns / replay_plain_ns
+    );
+
+    // report digestion: stream a recorded run back through ObsReport
+    let jsonl = sink.lock().expect("obs sink lock poisoned").to_jsonl();
+    bench.bench("obs::report.from_jsonl(recorded serve)", || {
+        ObsReport::from_jsonl(&jsonl).expect("recorded stream parses")
+    });
+
+    bench.write_report("reports/bench_obs.json");
+}

@@ -38,7 +38,11 @@ use anyhow::{bail, Result};
 
 use smile::metrics::{CsvLogger, RunSummary, StepLog};
 use smile::netsim::ClusterSpec;
-use smile::obs::{EventSink, ObsReport, SharedSink, SpanTimeline};
+use smile::obj;
+use smile::obs::{
+    attribute, diff_streams, digest_burn_events, parse_jsonl, timeline_from_chrome, EventSink,
+    ObsAnalyzers, ObsReport, SharedSink, SpanTimeline,
+};
 use smile::placement::{
     self, AdaptiveConfig, AdaptivePolicy, MigrationConfig, PlacementMap, PolicyKind,
     RebalancePolicy,
@@ -76,7 +80,7 @@ const COMMANDS: &[CommandSpec] = &[
         run: cmd_train,
         usage: "--config <name> --steps N [--seed S] [--log out.csv] [--ckpt path] [--eval-every N] [--rebalance]\n\
                 [--policy <POLICIES>] [--migration-overlap F] [--trace out.jsonl]\n\
-                [--events out.events.jsonl] [--spans out.spans.json]\n\
+                [--events out.events.jsonl] [--spans out.spans.json] [--detect]\n\
                 (adaptive knobs as in trace replay apply to --policy adaptive here and in trace record)",
     },
     CommandSpec {
@@ -102,7 +106,8 @@ const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "placement",
         run: cmd_placement,
-        usage: "[--nodes N] [--skew S] [--model 3.7B] [--replicate K] [--max-replicas R] [--out path.json]",
+        usage: "[--nodes N] [--skew S] [--model 3.7B] [--replicate K] [--max-replicas R] [--out path.json]\n\
+                [--events p.events.jsonl] [--spans p.spans.json]",
     },
     CommandSpec {
         name: "trace",
@@ -114,6 +119,7 @@ const COMMANDS: &[CommandSpec] = &[
                        [--check-every N] [--trigger-imbalance I] [--hysteresis H] [--coact-weight W]\n\
                        [adaptive knobs: --window W --horizon H --probe-every N --ucb-c C --min-improvement R]\n\
                        [--timeline p.csv] [--summary p.json] [--events p.events.jsonl] [--spans p.spans.json]\n\
+                       [--detect: online step-time + node-imbalance anomaly alerts on the event stream]\n\
                 summarize --in p.jsonl [same policy overrides as replay] [--out p.summary.json] [--bless]",
     },
     CommandSpec {
@@ -121,6 +127,7 @@ const COMMANDS: &[CommandSpec] = &[
         run: cmd_tune,
         usage: "--in p.jsonl [--threads N] [--window W] [--min-improvement R] [--migration-overlap F]\n\
                 [--policy <baseline: POLICIES>] [--out p.csv]\n\
+                [--events p.events.jsonl] [--spans p.spans.json: per-fork streams tagged by grid index]\n\
                 grid-sweeps the adaptive policy's probe_every x horizon x ucb_c over a\n\
                 recorded trace via fork-from-prefix replay (--threads N fans the grid out\n\
                 over a worker pool; results are byte-identical at any thread count) and\n\
@@ -140,6 +147,8 @@ const COMMANDS: &[CommandSpec] = &[
                 [--min-observe-tokens N] [--top-k K] [--migration-overlap F] [adaptive knobs as in trace replay]\n\
                 [--timeline p.csv] [--summary p.json] [--bless]\n\
                 [--events p.events.jsonl] [--spans p.spans.json]\n\
+                [--detect: queue-depth / drop-rate / iteration-time alerts on the event stream]\n\
+                [--slo-burn: multi-window SLO burn-rate tracking against --sla-ms]\n\
                 request-driven serving simulation: continuous batching over a seeded workload with\n\
                 the placement policy rebalancing live; reports TTFT/TPOT/e2e p50/p95/p99 + SLA goodput",
     },
@@ -147,8 +156,14 @@ const COMMANDS: &[CommandSpec] = &[
         name: "obs",
         run: cmd_obs,
         usage: "report --in run.events.jsonl\n\
-                aggregates a --events JSONL stream (from train / trace replay / serve) into\n\
-                counters, gauges, and histograms with exact-order-statistic quantiles",
+                diff --a run1.events.jsonl --b run2.events.jsonl [--tolerance F]\n\
+                attrib --in run.spans.json\n\
+                slo --in run.events.jsonl\n\
+                report aggregates a --events JSONL stream (from train / trace replay / serve)\n\
+                into counters, gauges, and histograms with exact-order-statistic quantiles;\n\
+                diff compares two runs (per-kind counts, first divergence, per-metric deltas)\n\
+                and exits nonzero on regression beyond --tolerance; attrib rolls a --spans\n\
+                Chrome trace into a per-track cost breakdown; slo digests slo.burn events",
     },
     CommandSpec { name: "info", run: cmd_info, usage: "" },
 ];
@@ -246,6 +261,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let events = obs_sink_of(args)?;
     if let Some((sink, _)) = &events {
         tr.attach_obs(sink.clone());
+    }
+    // `--detect`: online node-imbalance anomaly detection on the
+    // pipeline's event stream (pure reader — emits alert.* events
+    // only, never perturbs a training byte)
+    if args.bool("detect", false) {
+        anyhow::ensure!(
+            events.is_some() && tr.pipeline.is_some(),
+            "--detect needs --events and a live policy (--rebalance / --policy)"
+        );
+        if let Some(pipe) = tr.pipeline.as_mut() {
+            pipe.enable_detectors();
+        }
     }
     // `--spans`: per-step spans on the accumulated step-time clock
     let spans_out = args.opt_str("spans");
@@ -534,6 +561,36 @@ fn cmd_placement(args: &Args) -> Result<()> {
     let back = PlacementMap::from_json(&parsed).map_err(anyhow::Error::msg)?;
     anyhow::ensure!(back == planned, "placement JSON round-trip mismatch");
     smile::log_info!("placement map: {out} (JSON round-trip ok)");
+
+    // `--events`: the planning verdict as a one-event stream, so
+    // `smile obs diff` can compare placement runs like any other
+    let events = obs_sink_of(args)?;
+    if let Some((sink, _)) = &events {
+        let loads = &cost_planned.node_loads;
+        let mean = loads.iter().sum::<f64>() / loads.len().max(1) as f64;
+        let peak = loads.iter().cloned().fold(0.0f64, f64::max);
+        let node_imbalance = if mean > 0.0 { peak / mean } else { 1.0 };
+        let mut s = sink.lock().expect("obs sink lock poisoned");
+        s.meta("placement", "planned");
+        s.set_now(0.0);
+        let data = obj! {
+            "comm_secs" => cost_planned.comm_total(),
+            "compute_scale" => cost_planned.compute_scale,
+            "node_imbalance" => node_imbalance,
+            "replicated_experts" => replicated as usize,
+        };
+        s.emit("placement.planned", 0, data);
+    }
+    finish_events(&events);
+    // `--spans`: the predicted step-time breakdown as a minimal
+    // timeline (primary `step` track + comm/compute children)
+    if let Some(path) = args.opt_str("spans") {
+        let mut tl = SpanTimeline::new();
+        tl.push("step", "placed_step", 0.0, bd_planned.total());
+        tl.push("comm", "a2a", 0.0, bd_planned.a2a_inter + bd_planned.a2a_intra);
+        tl.push("compute", "compute", 0.0, bd_planned.compute);
+        write_spans(&path, &tl)?;
+    }
     Ok(())
 }
 
@@ -732,6 +789,12 @@ fn cmd_trace(args: &Args) -> Result<()> {
             if spans_out.is_some() {
                 replayer.enable_spans();
             }
+            // `--detect`: step-time + node-imbalance anomaly alerts
+            // into the same event stream (pure reader)
+            if args.bool("detect", false) {
+                anyhow::ensure!(events.is_some(), "--detect needs --events");
+                replayer.enable_detectors();
+            }
             for s in &trace.steps {
                 replayer.step(s);
             }
@@ -883,7 +946,47 @@ fn cmd_tune(args: &Args) -> Result<()> {
         }
     }
     let threads = args.usize("threads", 1);
-    let outcomes = smile::trace::tune_grid(&trace, knobs.clone(), migration, &grid, threads);
+    let events = obs_sink_of(args)?;
+    let spans_out = args.opt_str("spans");
+    let observe = events.is_some() || spans_out.is_some();
+    let outcomes = if observe {
+        smile::trace::tune_grid_observed(&trace, knobs.clone(), migration, &grid, threads)
+    } else {
+        smile::trace::tune_grid(&trace, knobs.clone(), migration, &grid, threads)
+    };
+    if observe {
+        // merge the per-fork streams in grid order: each fork opens
+        // with a sweep.fork marker carrying its knobs, its events are
+        // forwarded verbatim (fork-local clock preserved), and its
+        // span tracks are prefixed with the grid index
+        let mut merged = SpanTimeline::new();
+        if let Some((sink, _)) = &events {
+            sink.lock().expect("obs sink lock poisoned").meta("tune", "adaptive");
+        }
+        for (i, o) in outcomes.iter().enumerate() {
+            if let Some((sink, _)) = &events {
+                let mut s = sink.lock().expect("obs sink lock poisoned");
+                s.set_now(0.0);
+                let data = obj! {
+                    "grid" => i,
+                    "probe_every" => o.cfg.probe_every,
+                    "horizon" => o.cfg.horizon,
+                    "ucb_c" => o.cfg.ucb_c,
+                };
+                s.emit("sweep.fork", i, data);
+                for ev in &o.events {
+                    s.forward(ev.clone());
+                }
+            }
+            for sp in &o.spans.spans {
+                merged.push(&format!("g{i}/{}", sp.track), &sp.name, sp.start, sp.end);
+            }
+        }
+        if let Some(path) = &spans_out {
+            write_spans(path, &merged)?;
+        }
+        finish_events(&events);
+    }
     let mut rows: Vec<Row> = outcomes
         .into_iter()
         .map(|o| Row {
@@ -1074,8 +1177,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let events = obs_sink_of(args)?;
     let spans_out = args.opt_str("spans");
+    let analyzers = ObsAnalyzers {
+        detect: args.bool("detect", false),
+        slo_burn: args.bool("slo-burn", false),
+    };
+    anyhow::ensure!(
+        !analyzers.detect || events.is_some(),
+        "--detect needs --events (alerts are events)"
+    );
     let mut spans = SpanTimeline::new();
-    let report = if events.is_some() || spans_out.is_some() {
+    let report = if events.is_some() || spans_out.is_some() || analyzers.any() {
         serve::serve_with_obs(
             &cfg,
             kind,
@@ -1084,6 +1195,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             migration,
             events.as_ref().map(|(sink, _)| sink.clone()),
             spans_out.as_ref().map(|_| &mut spans),
+            analyzers,
         )
     } else {
         serve::serve_with(&cfg, kind, knobs, adaptive, migration)
@@ -1139,6 +1251,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.migration_overlapped_secs * 1e3,
         smile::util::fmt_bytes(s.migration_pending_bytes),
     );
+    if let Some(slo) = &report.slo {
+        let windows: Vec<String> = slo
+            .windows
+            .iter()
+            .map(|(w, rate)| format!("last {w}: {rate:.2}x"))
+            .collect();
+        println!(
+            "SLO burn (target {:.2}% within {} ms): attainment {:.2}% over {} completions, \
+             error budget {:.1}% left{}; burn rates [{}]",
+            slo.target * 100.0,
+            slo.sla_ms,
+            slo.attainment * 100.0,
+            slo.completions,
+            slo.budget_remaining * 100.0,
+            match slo.time_to_exhaustion {
+                Some(t) => format!(" (exhausted in {t:.2} s virtual at this rate)"),
+                None => String::new(),
+            },
+            windows.join(", "),
+        );
+    }
     if let Some(csv) = args.opt_str("timeline") {
         let mut full = Table::new(&[
             "iter", "end_secs", "batch_tokens", "batch_requests", "queue_depth",
@@ -1198,8 +1331,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `smile obs report --in run.events.jsonl`: digest a `--events`
-/// stream into the metrics registry and print it as pretty JSON.
+/// `smile obs <report|diff|attrib|slo>`: digest, compare, and
+/// attribute `--events` / `--spans` streams.  `diff` is the CI gate:
+/// it exits nonzero when run B regresses beyond `--tolerance`.
 fn cmd_obs(args: &Args) -> Result<()> {
     let sub = args
         .positional()
@@ -1210,12 +1344,86 @@ fn cmd_obs(args: &Args) -> Result<()> {
     match sub.as_str() {
         "report" => {
             let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
-            let text = std::fs::read_to_string(&path)?;
-            let report = ObsReport::from_jsonl(&text).map_err(anyhow::Error::msg)?;
+            // streamed, tolerant: a torn tail (run killed mid-write)
+            // degrades to a warning, not a dead report
+            let f = std::fs::File::open(&path)?;
+            let report = ObsReport::from_reader(std::io::BufReader::new(f))
+                .map_err(anyhow::Error::msg)?;
+            if report.malformed_lines > 0 {
+                smile::log_warn!(
+                    "{path}: {} malformed line(s) skipped",
+                    report.malformed_lines
+                );
+            }
             println!("{}", report.to_json().to_string_pretty());
             Ok(())
         }
-        other => bail!("unknown obs subcommand {other} (report)"),
+        "diff" => {
+            let a = args.opt_str("a").ok_or_else(|| anyhow::anyhow!("--a required"))?;
+            let b = args.opt_str("b").ok_or_else(|| anyhow::anyhow!("--b required"))?;
+            let tolerance = args.f64("tolerance", 0.0);
+            let report = diff_streams(
+                &std::fs::read_to_string(&a)?,
+                &std::fs::read_to_string(&b)?,
+                tolerance,
+            )
+            .map_err(anyhow::Error::msg)?;
+            println!("{}", report.to_json().to_string_pretty());
+            if report.regressed {
+                let metrics = report.regressions().count();
+                bail!(
+                    "{b} regressed vs {a}: {metrics} metric(s) beyond tolerance {tolerance}{}",
+                    match report.first_divergence {
+                        Some((index, step)) =>
+                            format!(", first divergence at event {index} (step {step})"),
+                        None => String::new(),
+                    }
+                );
+            }
+            println!("no regression ({a} -> {b}, tolerance {tolerance})");
+            Ok(())
+        }
+        "attrib" => {
+            let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
+            let v = Json::parse(&std::fs::read_to_string(&path)?)?;
+            let report = attribute(&timeline_from_chrome(&v).map_err(anyhow::Error::msg)?);
+            let mut table = Table::new(&["track", "secs", "share"]);
+            for (track, secs) in &report.tracks {
+                table.row(&[
+                    track.clone(),
+                    format!("{secs:.6}"),
+                    if report.primary.is_some() {
+                        format!("{:.1}%", report.share(track) * 100.0)
+                    } else {
+                        "-".into()
+                    },
+                ]);
+            }
+            table.print();
+            match &report.primary {
+                Some(p) => println!(
+                    "\nprimary '{}': {:.6} s total, {:.6} s unattributed overhead ({:.1}%)",
+                    p,
+                    report.total_secs,
+                    report.overhead_secs,
+                    if report.total_secs > 0.0 {
+                        report.overhead_secs / report.total_secs * 100.0
+                    } else {
+                        0.0
+                    }
+                ),
+                None => println!("\n(no primary iter/step track — shares unavailable)"),
+            }
+            Ok(())
+        }
+        "slo" => {
+            let path = args.opt_str("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
+            let events = parse_jsonl(&std::fs::read_to_string(&path)?)
+                .map_err(anyhow::Error::msg)?;
+            println!("{}", digest_burn_events(&events).to_string_pretty());
+            Ok(())
+        }
+        other => bail!("unknown obs subcommand {other} (report|diff|attrib|slo)"),
     }
 }
 

@@ -1,0 +1,180 @@
+//! Per-step cost attribution: roll a span timeline up into a
+//! "where did the second go" breakdown — comm / compute / straggler /
+//! migration / overhead shares of the run's primary track
+//! (`smile obs attrib --in run.trace.json`).
+//!
+//! Attribution is informational (child tracks carry no bitwise
+//! contiguity guarantee, see [`SpanTimeline`]); it never feeds back
+//! into any priced computation.
+
+use std::collections::BTreeMap;
+
+use crate::obj;
+use crate::obs::span::SpanTimeline;
+use crate::util::json::Json;
+
+/// Tracks treated as children of the primary interval when computing
+/// the unattributed-overhead remainder.
+const CHILD_TRACKS: &[&str] = &["comm", "compute", "straggler", "migration.exposed"];
+
+/// Primary (wall-covering) track candidates, in precedence order.
+const PRIMARY_TRACKS: &[&str] = &["iter", "step"];
+
+/// The rolled-up breakdown of one run's span timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttribReport {
+    /// Total span seconds per track, first-appearance order lost —
+    /// sorted by track name for deterministic output.
+    pub tracks: BTreeMap<String, f64>,
+    /// The primary track the totals are normalized against, when one
+    /// of the known drivers produced the timeline.
+    pub primary: Option<String>,
+    /// Total seconds on the primary track (0.0 when none).
+    pub total_secs: f64,
+    /// Primary total minus the known child tracks: scheduling gaps,
+    /// per-iteration overhead, and anything not separately tracked.
+    pub overhead_secs: f64,
+}
+
+/// Roll a span timeline into an [`AttribReport`].
+pub fn attribute(tl: &SpanTimeline) -> AttribReport {
+    let mut tracks: BTreeMap<String, f64> = BTreeMap::new();
+    for name in tl.tracks() {
+        tracks.insert(name.to_string(), tl.track_total(name));
+    }
+    let primary = PRIMARY_TRACKS
+        .iter()
+        .find(|t| tracks.contains_key(**t))
+        .map(|t| t.to_string());
+    let total_secs = primary.as_deref().map(|t| tracks[t]).unwrap_or(0.0);
+    let child_sum: f64 = CHILD_TRACKS.iter().filter_map(|t| tracks.get(*t)).sum();
+    let overhead_secs = if primary.is_some() { total_secs - child_sum } else { 0.0 };
+    AttribReport { tracks, primary, total_secs, overhead_secs }
+}
+
+/// Rebuild a [`SpanTimeline`] from an exported Chrome trace
+/// (`{"traceEvents": [...]}` as written by `--spans`).
+pub fn timeline_from_chrome(v: &Json) -> Result<SpanTimeline, String> {
+    let events = v
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'traceEvents' array")?;
+    let mut names: BTreeMap<usize, String> = BTreeMap::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) == Some("M")
+            && e.get("name").and_then(Json::as_str) == Some("thread_name")
+        {
+            let tid = e.get("tid").and_then(Json::as_usize).ok_or("meta missing 'tid'")?;
+            let name = e
+                .at(&["args", "name"])
+                .and_then(Json::as_str)
+                .ok_or("thread_name meta missing args.name")?;
+            names.insert(tid, name.to_string());
+        }
+    }
+    let mut tl = SpanTimeline::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let tid = e.get("tid").and_then(Json::as_usize).ok_or("span missing 'tid'")?;
+        let track = match names.get(&tid) {
+            Some(n) => n.clone(),
+            None => format!("tid {tid}"),
+        };
+        let name = e.get("name").and_then(Json::as_str).ok_or("span missing 'name'")?;
+        let ts = e.get("ts").and_then(Json::as_f64).ok_or("span missing 'ts'")?;
+        let dur = e.get("dur").and_then(Json::as_f64).ok_or("span missing 'dur'")?;
+        tl.push(&track, name, ts / 1e6, (ts + dur) / 1e6);
+    }
+    Ok(tl)
+}
+
+impl AttribReport {
+    pub fn to_json(&self) -> Json {
+        let tracks: BTreeMap<String, Json> =
+            self.tracks.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        obj! {
+            "tracks" => Json::Obj(tracks),
+            "primary" => match &self.primary {
+                Some(p) => Json::Str(p.clone()),
+                None => Json::Null,
+            },
+            "total_secs" => self.total_secs,
+            "overhead_secs" => self.overhead_secs,
+        }
+    }
+
+    /// Share of the primary total for one track (0.0 with no primary
+    /// or an empty primary).
+    pub fn share(&self, track: &str) -> f64 {
+        if !(self.total_secs > 0.0) {
+            return 0.0;
+        }
+        self.tracks.get(track).copied().unwrap_or(0.0) / self.total_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serve_like_timeline() -> SpanTimeline {
+        let mut tl = SpanTimeline::new();
+        // Two iterations of 1.0s: 0.3 comm, 0.5 compute, 0.1
+        // exposed migration stall, rest overhead.
+        for i in 0..2 {
+            let t0 = i as f64;
+            tl.push("iter", &format!("iter {i}"), t0, t0 + 1.0);
+            tl.push("comm", "a2a", t0, t0 + 0.3);
+            tl.push("compute", "experts", t0 + 0.3, t0 + 0.8);
+            tl.push("migration.exposed", "stall", t0 + 0.8, t0 + 0.9);
+        }
+        tl
+    }
+
+    #[test]
+    fn attribution_sums_tracks_and_computes_overhead() {
+        let r = attribute(&serve_like_timeline());
+        assert_eq!(r.primary.as_deref(), Some("iter"));
+        assert!((r.total_secs - 2.0).abs() < 1e-12);
+        assert!((r.tracks["comm"] - 0.6).abs() < 1e-12);
+        assert!((r.tracks["compute"] - 1.0).abs() < 1e-12);
+        assert!((r.overhead_secs - 0.2).abs() < 1e-12);
+        assert!((r.share("compute") - 0.5).abs() < 1e-12);
+        assert_eq!(r.share("nonexistent"), 0.0);
+    }
+
+    #[test]
+    fn replay_primary_track_is_step() {
+        let mut tl = SpanTimeline::new();
+        tl.push("step", "step 0", 0.0, 2.0);
+        tl.push("migration.exposed", "stall", 1.0, 1.5);
+        let r = attribute(&tl);
+        assert_eq!(r.primary.as_deref(), Some("step"));
+        assert!((r.overhead_secs - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_timeline_attributes_to_nothing() {
+        let r = attribute(&SpanTimeline::new());
+        assert!(r.tracks.is_empty());
+        assert_eq!(r.primary, None);
+        assert_eq!(r.total_secs, 0.0);
+        assert_eq!(r.overhead_secs, 0.0);
+        assert_eq!(r.share("iter"), 0.0);
+        assert!(matches!(r.to_json().get("primary"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn chrome_round_trip_preserves_attribution() {
+        let tl = serve_like_timeline();
+        let direct = attribute(&tl);
+        let back = timeline_from_chrome(&tl.to_chrome_trace()).unwrap();
+        let via_chrome = attribute(&back);
+        assert_eq!(direct.primary, via_chrome.primary);
+        assert!((direct.total_secs - via_chrome.total_secs).abs() < 1e-9);
+        assert!((direct.overhead_secs - via_chrome.overhead_secs).abs() < 1e-9);
+        assert!(timeline_from_chrome(&Json::Null).is_err());
+    }
+}

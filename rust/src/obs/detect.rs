@@ -1,0 +1,433 @@
+//! Streaming online anomaly detectors over the obs event bus.
+//!
+//! Detectors are *pure readers*: they observe values the pipeline has
+//! already computed (node imbalance, step time, queue depth, drop
+//! fraction), keep their state outside every priced computation, and
+//! their only output is appended `alert.raised` / `alert.cleared`
+//! events on the shared [`EventSink`](crate::obs::EventSink).  Golden
+//! summaries are byte-identical with detectors on or off (pinned by
+//! `obs_golden.rs` and `prop_invariants.rs`).
+//!
+//! Determinism contract: f64 arithmetic with `sqrt` as the only
+//! non-rational operation, fixed evaluation order, no wall clocks.
+//! Alerts strictly alternate raised/cleared per detector by
+//! construction (hysteresis with an explicit `active` latch).
+
+use crate::obj;
+use crate::obs::event::EventSink;
+use crate::util::json::Json;
+use std::collections::VecDeque;
+
+/// Version stamped into every `alert.raised` / `alert.cleared`
+/// payload (`"v"` key) so downstream consumers can evolve.
+pub const ALERTS_VERSION: usize = 1;
+
+/// One raised/cleared transition produced by a detector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertEdge {
+    pub detector: &'static str,
+    /// `true` for `alert.raised`, `false` for `alert.cleared`.
+    pub raised: bool,
+    /// The deciding statistic at the transition (z-score, queue
+    /// depth, EWMA drop fraction, ...).
+    pub value: f64,
+    /// The threshold the statistic crossed.
+    pub threshold: f64,
+}
+
+/// Emit an [`AlertEdge`] into the sink as a versioned event.
+pub fn emit_edge(sink: &mut EventSink, step: usize, edge: &AlertEdge) {
+    let data = obj! {
+        "detector" => edge.detector,
+        "value" => edge.value,
+        "threshold" => edge.threshold,
+        "v" => ALERTS_VERSION,
+    };
+    if edge.raised {
+        sink.emit("alert.raised", step, data);
+    } else {
+        sink.emit("alert.cleared", step, data);
+    }
+}
+
+/// EWMA-residual style z-score detector over a sliding window.
+///
+/// Each observation is scored against the mean/stddev of the *prior*
+/// window (the current sample is excluded so a level shift scores
+/// high on arrival); raise when `z >= z_raise`, clear when
+/// `z <= z_clear`.  Requires at least 4 prior samples before scoring.
+#[derive(Debug, Clone)]
+pub struct ZScoreDetector {
+    pub name: &'static str,
+    window: usize,
+    hist: VecDeque<f64>,
+    z_raise: f64,
+    z_clear: f64,
+    active: bool,
+}
+
+impl ZScoreDetector {
+    pub fn new(name: &'static str, window: usize, z_raise: f64, z_clear: f64) -> ZScoreDetector {
+        ZScoreDetector {
+            name,
+            window: window.max(4),
+            hist: VecDeque::new(),
+            z_raise,
+            z_clear,
+            active: false,
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    /// Observe one sample; returns a transition edge when the alert
+    /// state flips.
+    pub fn observe(&mut self, x: f64) -> Option<AlertEdge> {
+        let mut out = None;
+        let n = self.hist.len();
+        if n >= 4 {
+            let mean = self.hist.iter().sum::<f64>() / n as f64;
+            let var = self.hist.iter().map(|h| (h - mean) * (h - mean)).sum::<f64>() / n as f64;
+            let sd = var.sqrt();
+            let z = if sd > 0.0 { (x - mean) / sd } else { 0.0 };
+            if !self.active && z >= self.z_raise {
+                self.active = true;
+                out = Some(AlertEdge {
+                    detector: self.name,
+                    raised: true,
+                    value: z,
+                    threshold: self.z_raise,
+                });
+            } else if self.active && z <= self.z_clear {
+                self.active = false;
+                out = Some(AlertEdge {
+                    detector: self.name,
+                    raised: false,
+                    value: z,
+                    threshold: self.z_clear,
+                });
+            }
+        }
+        if self.hist.len() == self.window {
+            self.hist.pop_front();
+        }
+        self.hist.push_back(x);
+        out
+    }
+}
+
+/// Absolute threshold with hysteresis: raise at `x >= raise`, clear
+/// at `x <= clear`.
+#[derive(Debug, Clone)]
+pub struct ThresholdDetector {
+    pub name: &'static str,
+    raise: f64,
+    clear: f64,
+    active: bool,
+}
+
+impl ThresholdDetector {
+    pub fn new(name: &'static str, raise: f64, clear: f64) -> ThresholdDetector {
+        ThresholdDetector {
+            name,
+            raise,
+            clear,
+            active: false,
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    pub fn observe(&mut self, x: f64) -> Option<AlertEdge> {
+        if !self.active && x >= self.raise {
+            self.active = true;
+            return Some(AlertEdge {
+                detector: self.name,
+                raised: true,
+                value: x,
+                threshold: self.raise,
+            });
+        }
+        if self.active && x <= self.clear {
+            self.active = false;
+            return Some(AlertEdge {
+                detector: self.name,
+                raised: false,
+                value: x,
+                threshold: self.clear,
+            });
+        }
+        None
+    }
+}
+
+/// Drop-rate spike detector: EWMA-smoothed drop fraction fed through
+/// a hysteresis threshold, so one noisy warmup iteration cannot flap
+/// the alert.
+#[derive(Debug, Clone)]
+pub struct DropSpikeDetector {
+    alpha: f64,
+    ewma: f64,
+    inner: ThresholdDetector,
+}
+
+impl DropSpikeDetector {
+    pub fn new(name: &'static str, alpha: f64, raise: f64, clear: f64) -> DropSpikeDetector {
+        DropSpikeDetector {
+            alpha,
+            ewma: 0.0,
+            inner: ThresholdDetector::new(name, raise, clear),
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.inner.active()
+    }
+
+    pub fn observe(&mut self, frac: f64) -> Option<AlertEdge> {
+        self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * frac;
+        self.inner.observe(self.ewma)
+    }
+}
+
+/// Which analyzers a driver should run; plumbed through CLI flags
+/// (`--detect`, `--slo-burn`).  All off by default so pinned event
+/// streams stay unchanged.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ObsAnalyzers {
+    pub detect: bool,
+    pub slo_burn: bool,
+}
+
+impl ObsAnalyzers {
+    pub fn any(&self) -> bool {
+        self.detect || self.slo_burn
+    }
+}
+
+/// Default detector for replay/train node imbalance.
+pub fn node_imbalance_detector() -> ZScoreDetector {
+    ZScoreDetector::new("node.imbalance", 32, 3.0, 1.0)
+}
+
+/// Default detector for replay step time (comm seconds per step).
+pub fn step_time_detector() -> ZScoreDetector {
+    ZScoreDetector::new("step.time", 32, 3.0, 1.0)
+}
+
+/// The serve-loop detector set: queue depth (hysteresis threshold),
+/// drop-rate spike (EWMA), iteration-time z-score.
+#[derive(Debug, Clone)]
+pub struct ServeDetectors {
+    queue: ThresholdDetector,
+    drop: DropSpikeDetector,
+    iter_time: ZScoreDetector,
+}
+
+impl ServeDetectors {
+    pub fn new() -> ServeDetectors {
+        ServeDetectors {
+            queue: ThresholdDetector::new("queue.depth", 16.0, 8.0),
+            drop: DropSpikeDetector::new("drop.rate", 0.2, 0.2, 0.05),
+            iter_time: ZScoreDetector::new("iter.time", 32, 3.0, 1.0),
+        }
+    }
+
+    /// Observe the queue depth sampled at the top of an iteration.
+    pub fn observe_queue(&mut self, sink: &mut EventSink, step: usize, depth: f64) {
+        if let Some(edge) = self.queue.observe(depth) {
+            emit_edge(sink, step, &edge);
+        }
+    }
+
+    /// Observe the iteration's drop fraction and priced duration.
+    pub fn observe_iter(&mut self, sink: &mut EventSink, step: usize, drop_frac: f64, iter_secs: f64) {
+        if let Some(edge) = self.drop.observe(drop_frac) {
+            emit_edge(sink, step, &edge);
+        }
+        if let Some(edge) = self.iter_time.observe(iter_secs) {
+            emit_edge(sink, step, &edge);
+        }
+    }
+}
+
+impl Default for ServeDetectors {
+    fn default() -> ServeDetectors {
+        ServeDetectors::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_hysteresis_raises_and_clears_once() {
+        let mut d = ThresholdDetector::new("queue.depth", 16.0, 8.0);
+        assert!(d.observe(3.0).is_none());
+        assert!(d.observe(15.9).is_none());
+        let e = d.observe(16.0).expect("raise at threshold");
+        assert!(e.raised);
+        assert_eq!(e.value, 16.0);
+        assert_eq!(e.threshold, 16.0);
+        // Inside the hysteresis band: no transition either way.
+        assert!(d.observe(12.0).is_none());
+        assert!(d.observe(40.0).is_none());
+        let e = d.observe(7.0).expect("clear below clear threshold");
+        assert!(!e.raised);
+        assert_eq!(e.threshold, 8.0);
+        assert!(!d.active());
+    }
+
+    #[test]
+    fn zscore_flags_a_level_shift_and_clears_on_return() {
+        let mut d = ZScoreDetector::new("node.imbalance", 32, 3.0, 1.0);
+        let mut edges = Vec::new();
+        // Stable baseline with mild jitter, then a big level shift.
+        for i in 0..20 {
+            let x = 1.0 + if i % 2 == 0 { 0.01 } else { -0.01 };
+            if let Some(e) = d.observe(x) {
+                edges.push(e);
+            }
+        }
+        assert!(edges.is_empty(), "no alert on a stable series");
+        let e = d.observe(2.0).expect("level shift raises");
+        assert!(e.raised);
+        assert!(e.value >= 3.0);
+        // Returning to baseline clears (z falls back under z_clear).
+        let mut cleared = false;
+        for i in 0..40 {
+            let x = 1.0 + if i % 2 == 0 { 0.01 } else { -0.01 };
+            if let Some(e) = d.observe(x) {
+                assert!(!e.raised);
+                cleared = true;
+                break;
+            }
+        }
+        assert!(cleared, "detector clears after the series settles");
+    }
+
+    #[test]
+    fn zscore_is_silent_with_too_little_history() {
+        let mut d = ZScoreDetector::new("step.time", 32, 3.0, 1.0);
+        assert!(d.observe(0.0).is_none());
+        assert!(d.observe(100.0).is_none());
+        assert!(d.observe(-100.0).is_none());
+        assert!(d.observe(5.0).is_none());
+    }
+
+    #[test]
+    fn zscore_constant_series_never_alerts() {
+        let mut d = ZScoreDetector::new("step.time", 8, 3.0, 1.0);
+        for _ in 0..50 {
+            assert!(d.observe(2.5).is_none());
+        }
+    }
+
+    #[test]
+    fn drop_spike_smooths_single_outliers() {
+        let mut d = DropSpikeDetector::new("drop.rate", 0.2, 0.2, 0.05);
+        // A lone 0.43 spike in an otherwise clean stream: EWMA stays
+        // below the raise threshold.
+        for i in 0..30 {
+            let frac = if i == 5 { 0.43 } else { 0.0 };
+            assert!(d.observe(frac).is_none(), "no alert at i={i}");
+        }
+        // Sustained drops do raise, then clear once the stream dries.
+        let mut raised_at = None;
+        for i in 0..20 {
+            if let Some(e) = d.observe(0.33) {
+                assert!(e.raised);
+                raised_at = Some(i);
+                break;
+            }
+        }
+        assert!(raised_at.is_some(), "sustained drops raise");
+        let mut cleared = false;
+        for _ in 0..40 {
+            if let Some(e) = d.observe(0.0) {
+                assert!(!e.raised);
+                cleared = true;
+                break;
+            }
+        }
+        assert!(cleared);
+    }
+
+    #[test]
+    fn edges_strictly_alternate_per_detector() {
+        let mut d = ThresholdDetector::new("queue.depth", 10.0, 5.0);
+        let series = [0.0, 12.0, 20.0, 4.0, 2.0, 11.0, 3.0, 30.0, 1.0];
+        let mut last_raised = None;
+        for x in series {
+            if let Some(e) = d.observe(x) {
+                if let Some(prev) = last_raised {
+                    assert_ne!(prev, e.raised, "edges must alternate");
+                }
+                last_raised = Some(e.raised);
+            }
+        }
+        assert_eq!(last_raised, Some(false));
+    }
+
+    #[test]
+    fn emit_edge_produces_versioned_events() {
+        let mut sink = EventSink::new(8);
+        emit_edge(
+            &mut sink,
+            7,
+            &AlertEdge {
+                detector: "queue.depth",
+                raised: true,
+                value: 17.0,
+                threshold: 16.0,
+            },
+        );
+        emit_edge(
+            &mut sink,
+            9,
+            &AlertEdge {
+                detector: "queue.depth",
+                raised: false,
+                value: 7.0,
+                threshold: 8.0,
+            },
+        );
+        let evs: Vec<_> = sink.events().collect();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, "alert.raised");
+        assert_eq!(evs[0].step, 7);
+        assert_eq!(evs[0].data.get("detector").and_then(Json::as_str), Some("queue.depth"));
+        assert_eq!(evs[0].data.get("value").and_then(Json::as_f64), Some(17.0));
+        assert_eq!(evs[0].data.get("v").and_then(Json::as_usize), Some(ALERTS_VERSION));
+        assert_eq!(evs[1].kind, "alert.cleared");
+        assert_eq!(evs[1].data.get("threshold").and_then(Json::as_f64), Some(8.0));
+    }
+
+    #[test]
+    fn serve_detectors_route_to_the_right_streams() {
+        let mut det = ServeDetectors::new();
+        let mut sink = EventSink::new(8);
+        for step in 0..5 {
+            det.observe_queue(&mut sink, step, 0.0);
+        }
+        det.observe_queue(&mut sink, 5, 17.0);
+        det.observe_queue(&mut sink, 6, 3.0);
+        let kinds: Vec<&str> = sink.events().map(|e| e.kind.as_str()).collect();
+        assert_eq!(kinds, vec!["alert.raised", "alert.cleared"]);
+        let first = sink.events().next().expect("at least one event");
+        assert_eq!(first.data.get("detector").and_then(Json::as_str), Some("queue.depth"));
+    }
+
+    #[test]
+    fn analyzers_default_off() {
+        let a = ObsAnalyzers::default();
+        assert!(!a.detect && !a.slo_burn && !a.any());
+        let b = ObsAnalyzers { detect: true, slo_burn: false };
+        assert!(b.any());
+    }
+}

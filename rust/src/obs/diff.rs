@@ -1,0 +1,249 @@
+//! Cross-run regression diffing: `smile obs diff --a run1.events.jsonl
+//! --b run2.events.jsonl` aligns two recorded event streams and
+//! reports per-kind count deltas, the first step at which the streams
+//! diverge, and per-metric deltas (from each side's
+//! [`ObsReport`](crate::obs::ObsReport)) against a configurable
+//! relative tolerance.
+//!
+//! Exit-code convention (CI-facing, documented in ROADMAP `## obs`):
+//! the CLI exits 0 when [`DiffReport::regressed`] is false and
+//! nonzero when true.  Regression means a per-kind event count
+//! mismatch or any metric delta beyond tolerance; `first_divergence`
+//! is informational (two byte-different streams can still agree on
+//! every digest).
+
+use std::collections::BTreeMap;
+
+use crate::obj;
+use crate::obs::event::{parse_jsonl, Event};
+use crate::obs::report::ObsReport;
+use crate::util::json::Json;
+use crate::util::stats::ExactStats;
+
+/// One digested metric compared across the two runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricDelta {
+    /// Flattened name, e.g. `gauges.queue.depth.max`.
+    pub metric: String,
+    pub a: f64,
+    pub b: f64,
+    /// Relative delta `(b - a) / |a|` (absolute delta when `a == 0`).
+    pub rel: f64,
+    pub regressed: bool,
+}
+
+/// The full cross-run comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffReport {
+    /// Per-kind event counts, `(run A, run B)`.
+    pub kinds: BTreeMap<String, (usize, usize)>,
+    /// First positional index whose events differ in any field
+    /// (kind, step, payload, or clock bits), with the step of run
+    /// A's event at that position (run B's when A is shorter).
+    pub first_divergence: Option<(usize, usize)>,
+    pub metrics: Vec<MetricDelta>,
+    pub tolerance: f64,
+    /// True when any kind count mismatches or any metric delta
+    /// exceeds the tolerance — the CI gate bit.
+    pub regressed: bool,
+}
+
+fn flatten_stats(prefix: &str, map: &BTreeMap<String, ExactStats>, out: &mut BTreeMap<String, f64>) {
+    for (name, s) in map {
+        out.insert(format!("{prefix}.{name}.count"), s.count as f64);
+        out.insert(format!("{prefix}.{name}.mean"), s.mean);
+        out.insert(format!("{prefix}.{name}.min"), s.min);
+        out.insert(format!("{prefix}.{name}.max"), s.max);
+        out.insert(format!("{prefix}.{name}.p50"), s.p50);
+        out.insert(format!("{prefix}.{name}.p99"), s.p99);
+    }
+}
+
+fn flat_metrics(report: &ObsReport) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    flatten_stats("gauges", &report.gauges, &mut out);
+    flatten_stats("histograms", &report.histograms, &mut out);
+    out
+}
+
+/// Diff two parsed event streams.
+pub fn diff_events(a: &[Event], b: &[Event], tolerance: f64) -> DiffReport {
+    let mut kinds: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for e in a {
+        kinds.entry(e.kind.clone()).or_insert((0, 0)).0 += 1;
+    }
+    for e in b {
+        kinds.entry(e.kind.clone()).or_insert((0, 0)).1 += 1;
+    }
+
+    let mut first_divergence = None;
+    for (i, (ea, eb)) in a.iter().zip(b.iter()).enumerate() {
+        let same = ea.kind == eb.kind
+            && ea.step == eb.step
+            && ea.data == eb.data
+            && ea.t.to_bits() == eb.t.to_bits();
+        if !same {
+            first_divergence = Some((i, ea.step));
+            break;
+        }
+    }
+    if first_divergence.is_none() && a.len() != b.len() {
+        let i = a.len().min(b.len());
+        let step = if a.len() > b.len() { a[i].step } else { b[i].step };
+        first_divergence = Some((i, step));
+    }
+
+    let ra = flat_metrics(&ObsReport::from_events(a.iter()));
+    let rb = flat_metrics(&ObsReport::from_events(b.iter()));
+    let mut names: Vec<&String> = ra.keys().chain(rb.keys()).collect();
+    names.sort();
+    names.dedup();
+    let mut metrics = Vec::new();
+    for name in names {
+        let va = ra.get(name).copied().unwrap_or(0.0);
+        let vb = rb.get(name).copied().unwrap_or(0.0);
+        let rel = if va != 0.0 { (vb - va) / va.abs() } else { vb - va };
+        metrics.push(MetricDelta {
+            metric: name.clone(),
+            a: va,
+            b: vb,
+            rel,
+            regressed: rel.abs() > tolerance,
+        });
+    }
+
+    let counts_mismatch = kinds.values().any(|(ca, cb)| ca != cb);
+    let metric_regressed = metrics.iter().any(|m| m.regressed);
+    DiffReport {
+        kinds,
+        first_divergence,
+        metrics,
+        tolerance,
+        regressed: counts_mismatch || metric_regressed,
+    }
+}
+
+/// Diff two JSONL event streams as read from `--events` files.
+pub fn diff_streams(a_text: &str, b_text: &str, tolerance: f64) -> Result<DiffReport, String> {
+    let a = parse_jsonl(a_text).map_err(|e| format!("run A: {e}"))?;
+    let b = parse_jsonl(b_text).map_err(|e| format!("run B: {e}"))?;
+    Ok(diff_events(&a, &b, tolerance))
+}
+
+impl DiffReport {
+    pub fn to_json(&self) -> Json {
+        let kinds: BTreeMap<String, Json> = self
+            .kinds
+            .iter()
+            .map(|(k, (ca, cb))| {
+                (k.clone(), obj! { "a" => *ca, "b" => *cb, "delta" => *cb as f64 - *ca as f64 })
+            })
+            .collect();
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|m| {
+                obj! {
+                    "metric" => m.metric.as_str(),
+                    "a" => m.a,
+                    "b" => m.b,
+                    "rel" => m.rel,
+                    "regressed" => m.regressed,
+                }
+            })
+            .collect();
+        obj! {
+            "kinds" => Json::Obj(kinds),
+            "first_divergence" => match self.first_divergence {
+                Some((idx, step)) => obj! { "index" => idx, "step" => step },
+                None => Json::Null,
+            },
+            "metrics" => Json::Arr(metrics),
+            "tolerance" => self.tolerance,
+            "regressed" => self.regressed,
+        }
+    }
+
+    /// Metric deltas beyond tolerance, for compact reporting.
+    pub fn regressions(&self) -> impl Iterator<Item = &MetricDelta> {
+        self.metrics.iter().filter(|m| m.regressed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventSink;
+
+    fn sink_with(depths: &[usize]) -> EventSink {
+        let mut sink = EventSink::new(64);
+        sink.meta("serve", "adaptive");
+        for (i, d) in depths.iter().enumerate() {
+            sink.set_now(i as f64 * 0.05);
+            sink.emit("queue.depth", i, obj! {"depth" => *d});
+        }
+        sink
+    }
+
+    fn events_of(sink: &EventSink) -> Vec<Event> {
+        sink.events().cloned().collect()
+    }
+
+    #[test]
+    fn identical_streams_do_not_regress() {
+        let a = events_of(&sink_with(&[0, 3, 9, 4]));
+        let d = diff_events(&a, &a, 0.0);
+        assert!(!d.regressed);
+        assert_eq!(d.first_divergence, None);
+        assert!(d.regressions().next().is_none());
+        assert_eq!(d.kinds["queue.depth"], (4, 4));
+    }
+
+    #[test]
+    fn divergent_payload_sets_first_divergence_and_regresses() {
+        let a = events_of(&sink_with(&[0, 3, 9, 4]));
+        let b = events_of(&sink_with(&[0, 3, 12, 4]));
+        let d = diff_events(&a, &b, 0.0);
+        assert!(d.regressed, "metric deltas beyond zero tolerance regress");
+        // meta is position 0, depths start at 1; third depth differs.
+        assert_eq!(d.first_divergence, Some((3, 2)));
+        let max = d.metrics.iter().find(|m| m.metric == "gauges.queue.depth.max").unwrap();
+        assert_eq!((max.a, max.b), (9.0, 12.0));
+        assert!(max.regressed);
+    }
+
+    #[test]
+    fn tolerance_forgives_small_metric_drift() {
+        let a = events_of(&sink_with(&[0, 3, 9, 4]));
+        let b = events_of(&sink_with(&[0, 3, 10, 4]));
+        // max 9 -> 10 is ~11% drift; counts match, so a generous
+        // tolerance passes even though the bytes differ.
+        let d = diff_events(&a, &b, 0.5);
+        assert!(!d.regressed);
+        assert!(d.first_divergence.is_some(), "divergence stays informational");
+    }
+
+    #[test]
+    fn missing_kind_counts_as_regression() {
+        let a = events_of(&sink_with(&[0, 3]));
+        let mut sink = sink_with(&[0, 3]);
+        sink.emit("rebalance.committed", 2, obj! {"arm" => 1usize});
+        let b = events_of(&sink);
+        let d = diff_events(&a, &b, 1e9);
+        assert!(d.regressed, "kind count mismatch regresses regardless of tolerance");
+        assert_eq!(d.kinds["rebalance.committed"], (0, 1));
+        assert_eq!(d.first_divergence, Some((3, 2)), "length mismatch diverges at the tail");
+    }
+
+    #[test]
+    fn diff_streams_round_trips_jsonl() {
+        let sa = sink_with(&[0, 5, 2]);
+        let sb = sink_with(&[0, 5, 2]);
+        let d = diff_streams(&sa.to_jsonl(), &sb.to_jsonl(), 0.0).unwrap();
+        assert!(!d.regressed);
+        assert!(diff_streams("not json\n", "", 0.0).is_err());
+        let j = d.to_json();
+        assert_eq!(j.get("regressed").and_then(Json::as_bool), Some(false));
+        assert!(matches!(j.get("first_divergence"), Some(Json::Null)));
+    }
+}

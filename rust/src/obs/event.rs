@@ -169,6 +169,21 @@ impl EventSink {
         self.emitted += 1;
     }
 
+    /// Append an already-built event verbatim, preserving its
+    /// original `t` stamp (unlike [`EventSink::emit`], which stamps
+    /// the sink's own clock).  Used to replay a fork's recorded
+    /// stream into a master sink (e.g. `smile tune --events`).
+    pub fn forward(&mut self, ev: Event) {
+        if let Some(w) = self.writer.as_mut() {
+            let _ = writeln!(w, "{}", ev.to_json().to_string());
+        }
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(ev);
+        self.emitted += 1;
+    }
+
     /// Events currently retained in the ring (oldest first).
     pub fn events(&self) -> impl Iterator<Item = &Event> {
         self.ring.iter()
@@ -284,6 +299,22 @@ mod tests {
         let again: String =
             parsed.iter().map(|e| e.to_json().to_string() + "\n").collect();
         assert_eq!(again, text);
+    }
+
+    #[test]
+    fn forward_preserves_the_original_clock() {
+        let mut src = EventSink::new(8);
+        src.set_now(2.5);
+        src.emit("queue.depth", 4, obj! {"depth" => 1usize});
+        let mut dst = EventSink::new(8);
+        dst.set_now(99.0);
+        for ev in src.events().cloned().collect::<Vec<_>>() {
+            dst.forward(ev);
+        }
+        let fwd = dst.events().next().unwrap();
+        assert_eq!(fwd.t, 2.5, "forward must not restamp t");
+        assert_eq!(fwd.step, 4);
+        assert_eq!(dst.emitted(), 1);
     }
 
     #[test]

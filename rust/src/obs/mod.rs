@@ -24,19 +24,49 @@
 //!    histograms with exact-order-statistic quantiles scraped into an
 //!    [`ObsReport`] (`smile obs report --in run.events.jsonl`).
 //!
+//! On top of the pillars sits the **analysis layer** — active
+//! consumers of the bus instead of passive recorders:
+//!
+//! - [`detect`]: streaming online anomaly detectors (z-score on node
+//!   imbalance / step time, queue-depth hysteresis, drop-rate spike)
+//!   emitting versioned `alert.raised` / `alert.cleared` events back
+//!   into the same sink; enabled per-driver via [`ObsAnalyzers`]
+//!   (`--detect`).
+//! - [`slo`]: multi-window SLO burn-rate tracking over serve
+//!   completions against `--sla-ms` (`--slo-burn`), emitting
+//!   `slo.burn` events and a final [`SloReport`].
+//! - [`diff`]: cross-run regression diffing of two recorded event
+//!   streams (`smile obs diff`), with a CI-facing exit code.
+//! - [`attrib`]: span-timeline cost attribution
+//!   (`smile obs attrib`) — comm/compute/straggler/migration/overhead
+//!   shares of the run total.
+//!
 //! Invariant: observability never perturbs the priced timeline — with
 //! no sink attached the drivers execute the byte-identical float
-//! sequence (property-tested in `tests/obs_golden.rs`).
+//! sequence, and the analysis layer is a pure reader: golden
+//! summaries are byte-identical with analyzers on or off
+//! (property-tested in `tests/obs_golden.rs`).
 //!
 //! [`log`] is the fourth, humbler piece: leveled progress logging to
 //! stderr (`--quiet` / `SMILE_LOG`) so machine-readable stdout stays
 //! clean.
 
+pub mod attrib;
+pub mod detect;
+pub mod diff;
 pub mod event;
 pub mod log;
 pub mod report;
+pub mod slo;
 pub mod span;
 
+pub use attrib::{attribute, timeline_from_chrome, AttribReport};
+pub use detect::{
+    emit_edge, node_imbalance_detector, step_time_detector, AlertEdge, DropSpikeDetector,
+    ObsAnalyzers, ServeDetectors, ThresholdDetector, ZScoreDetector, ALERTS_VERSION,
+};
+pub use diff::{diff_events, diff_streams, DiffReport, MetricDelta};
 pub use event::{parse_jsonl, Event, EventSink, SharedSink, EVENTS_VERSION};
 pub use report::ObsReport;
+pub use slo::{digest_burn_events, emit_burn, BurnSample, SloReport, SloTracker, SLO_VERSION};
 pub use span::{Span, SpanTimeline};

@@ -10,11 +10,12 @@
 //! hot emitters stay write-only.
 
 use std::collections::BTreeMap;
+use std::io::BufRead;
 
 use crate::obj;
-use crate::obs::event::{parse_jsonl, Event, EVENTS_VERSION};
+use crate::obs::event::{Event, EVENTS_VERSION};
 use crate::util::json::Json;
-use crate::util::stats::ExactStats;
+use crate::util::stats::{ExactStats, ExactStatsAccum};
 
 /// Event kinds whose payload field is sampled as a gauge series.
 const GAUGE_FIELDS: &[(&str, &str)] = &[("queue.depth", "depth")];
@@ -40,50 +41,125 @@ pub struct ObsReport {
     pub gauges: BTreeMap<String, ExactStats>,
     /// Observation series (e.g. `bandit.reward`, migration bytes).
     pub histograms: BTreeMap<String, ExactStats>,
+    /// Lines skipped by the tolerant ingestion paths (always 0 from
+    /// [`ObsReport::from_events`] / strict [`ObsReport::from_jsonl`]).
+    pub malformed_lines: usize,
+}
+
+/// Streaming report builder: events are digested one at a time with
+/// bounded memory ([`ExactStatsAccum`] rings for the quantile
+/// inputs), so a multi-gigabyte `--events` file never has to fit in
+/// memory.  Under the ring cap the digest is bit-identical to the
+/// batch `ExactStats::of` path.
+#[derive(Debug)]
+struct ReportBuilder {
+    report: ObsReport,
+    series: BTreeMap<&'static str, ExactStatsAccum>,
+}
+
+impl ReportBuilder {
+    fn new() -> ReportBuilder {
+        ReportBuilder {
+            report: ObsReport { schema_version: EVENTS_VERSION, ..ObsReport::default() },
+            series: BTreeMap::new(),
+        }
+    }
+
+    fn ingest(&mut self, ev: &Event) {
+        let report = &mut self.report;
+        report.events += 1;
+        *report.counters.entry(ev.kind.clone()).or_insert(0) += 1;
+        if ev.kind == "meta" {
+            if let Some(s) = ev.data.get("source").and_then(Json::as_str) {
+                report.source = s.to_string();
+            }
+            if let Some(p) = ev.data.get("policy").and_then(Json::as_str) {
+                report.policy = p.to_string();
+            }
+            if let Some(v) = ev.data.get("schema_version").and_then(Json::as_usize) {
+                report.schema_version = v as u32;
+            }
+            return;
+        }
+        for &(kind, field) in GAUGE_FIELDS.iter().chain(HIST_FIELDS) {
+            if ev.kind == kind {
+                if let Some(v) = ev.data.get(field).and_then(Json::as_f64) {
+                    self.series.entry(kind).or_default().push(v);
+                }
+            }
+        }
+    }
+
+    /// Ingest one JSONL line; `Err` carries the parse failure (the
+    /// caller decides strict vs tolerant), blank lines are skipped.
+    fn ingest_line(&mut self, i: usize, line: &str) -> Result<(), String> {
+        if line.trim().is_empty() {
+            return Ok(());
+        }
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        let ev = Event::from_json(&v).map_err(|e| format!("line {}: {e}", i + 1))?;
+        self.ingest(&ev);
+        Ok(())
+    }
+
+    fn finish(mut self) -> ObsReport {
+        for (kind, accum) in self.series {
+            let stats = accum.digest();
+            if GAUGE_FIELDS.iter().any(|(k, _)| *k == kind) {
+                self.report.gauges.insert(kind.to_string(), stats);
+            } else {
+                self.report.histograms.insert(kind.to_string(), stats);
+            }
+        }
+        self.report
+    }
 }
 
 impl ObsReport {
     pub fn from_events<'a, I: IntoIterator<Item = &'a Event>>(events: I) -> ObsReport {
-        let mut report = ObsReport { schema_version: EVENTS_VERSION, ..ObsReport::default() };
-        let mut series: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+        let mut b = ReportBuilder::new();
         for ev in events {
-            report.events += 1;
-            *report.counters.entry(ev.kind.clone()).or_insert(0) += 1;
-            if ev.kind == "meta" {
-                if let Some(s) = ev.data.get("source").and_then(Json::as_str) {
-                    report.source = s.to_string();
-                }
-                if let Some(p) = ev.data.get("policy").and_then(Json::as_str) {
-                    report.policy = p.to_string();
-                }
-                if let Some(v) = ev.data.get("schema_version").and_then(Json::as_usize) {
-                    report.schema_version = v as u32;
-                }
-                continue;
-            }
-            for &(kind, field) in GAUGE_FIELDS.iter().chain(HIST_FIELDS) {
-                if ev.kind == kind {
-                    if let Some(v) = ev.data.get(field).and_then(Json::as_f64) {
-                        series.entry(kind).or_default().push(v);
-                    }
-                }
-            }
+            b.ingest(ev);
         }
-        for (kind, samples) in series {
-            let stats = ExactStats::of(&samples);
-            if GAUGE_FIELDS.iter().any(|(k, _)| *k == kind) {
-                report.gauges.insert(kind.to_string(), stats);
-            } else {
-                report.histograms.insert(kind.to_string(), stats);
-            }
-        }
-        report
+        b.finish()
     }
 
-    /// Build a report from a `--events` JSONL stream.
+    /// Build a report from a `--events` JSONL stream, line by line;
+    /// strict — the first malformed line fails the whole report.
     pub fn from_jsonl(text: &str) -> Result<ObsReport, String> {
-        let events = parse_jsonl(text)?;
-        Ok(ObsReport::from_events(events.iter()))
+        let mut b = ReportBuilder::new();
+        for (i, line) in text.lines().enumerate() {
+            b.ingest_line(i, line)?;
+        }
+        Ok(b.finish())
+    }
+
+    /// Tolerant variant of [`ObsReport::from_jsonl`]: malformed lines
+    /// are counted in [`ObsReport::malformed_lines`] instead of
+    /// losing the report (a bad line mid-file used to fail the whole
+    /// digest).
+    pub fn from_jsonl_tolerant(text: &str) -> ObsReport {
+        let mut b = ReportBuilder::new();
+        for (i, line) in text.lines().enumerate() {
+            if b.ingest_line(i, line).is_err() {
+                b.report.malformed_lines += 1;
+            }
+        }
+        b.finish()
+    }
+
+    /// Stream a report from a reader (the CLI path for `--in` files):
+    /// tolerant to malformed lines, bounded memory, never loads the
+    /// file whole.
+    pub fn from_reader<R: BufRead>(reader: R) -> Result<ObsReport, String> {
+        let mut b = ReportBuilder::new();
+        for (i, line) in reader.lines().enumerate() {
+            let line = line.map_err(|e| format!("line {}: read error: {e}", i + 1))?;
+            if b.ingest_line(i, &line).is_err() {
+                b.report.malformed_lines += 1;
+            }
+        }
+        Ok(b.finish())
     }
 
     pub fn to_json(&self) -> Json {
@@ -111,6 +187,7 @@ impl ObsReport {
             "counters" => Json::Obj(counters),
             "gauges" => Json::Obj(gauges),
             "histograms" => Json::Obj(histograms),
+            "malformed_lines" => self.malformed_lines,
         }
     }
 }
@@ -174,5 +251,35 @@ mod tests {
         assert_eq!(r.events, 0);
         assert!(r.gauges.is_empty());
         assert!(ObsReport::from_jsonl("not json\n").is_err());
+    }
+
+    #[test]
+    fn tolerant_path_counts_malformed_lines_instead_of_failing() {
+        let sink = sample_sink();
+        let mut text = sink.to_jsonl();
+        // Corrupt the middle of the stream: a truncated line and a
+        // non-event object.
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.insert(3, "{\"data\":{\"depth\":");
+        lines.insert(5, "{\"no\":\"kind\"}");
+        text = lines.join("\n");
+        text.push('\n');
+        assert!(ObsReport::from_jsonl(&text).is_err(), "strict path still fails");
+        let r = ObsReport::from_jsonl_tolerant(&text);
+        assert_eq!(r.malformed_lines, 2);
+        let clean = ObsReport::from_events(sample_sink().events());
+        assert_eq!(r.events, clean.events, "good lines all survive");
+        assert_eq!(r.gauges, clean.gauges);
+        assert_eq!(r.to_json().get("malformed_lines").and_then(Json::as_usize), Some(2));
+    }
+
+    #[test]
+    fn reader_path_streams_line_by_line() {
+        let sink = sample_sink();
+        let text = sink.to_jsonl();
+        let via_reader = ObsReport::from_reader(std::io::Cursor::new(text.as_bytes())).unwrap();
+        let via_str = ObsReport::from_jsonl(&text).unwrap();
+        assert_eq!(via_reader, via_str, "reader and in-memory ingestion must agree");
+        assert_eq!(via_reader.malformed_lines, 0);
     }
 }

@@ -1,0 +1,421 @@
+//! Multi-window SLO burn-rate tracking over serve request outcomes.
+//!
+//! A completion is *good* when its end-to-end latency meets the
+//! configured `--sla-ms` (the identical `e2e <= sla_ms / 1000.0`
+//! predicate `summarize()` uses).  The tracker maintains per-window
+//! burn rates — the fraction of the error budget consumed per unit of
+//! budgeted allowance over the last `w` completions — plus
+//! attainment-so-far, remaining budget, and a time-to-exhaustion
+//! projection from the recent bad-completion rate on the virtual
+//! clock.
+//!
+//! Like the detectors, the tracker is a pure reader: it observes
+//! latencies the engine already computed and only appends versioned
+//! `slo.burn` events, so summaries are byte-identical with SLO
+//! tracking on or off.
+
+use crate::obj;
+use crate::obs::event::EventSink;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+/// Version stamped into every `slo.burn` payload (`"v"` key).
+pub const SLO_VERSION: usize = 1;
+
+/// One burn-rate sample, produced every `window` completions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BurnSample {
+    pub window: usize,
+    pub burn_rate: f64,
+    pub attainment: f64,
+    pub budget_remaining: f64,
+}
+
+/// Emit a [`BurnSample`] into the sink as a versioned event.
+pub fn emit_burn(sink: &mut EventSink, step: usize, b: &BurnSample) {
+    let data = obj! {
+        "window" => b.window,
+        "burn_rate" => b.burn_rate,
+        "attainment" => b.attainment,
+        "budget_remaining" => b.budget_remaining,
+        "v" => SLO_VERSION,
+    };
+    sink.emit("slo.burn", step, data);
+}
+
+/// Streaming multi-window burn-rate tracker.
+#[derive(Debug, Clone)]
+pub struct SloTracker {
+    sla_ms: f64,
+    sla_secs: f64,
+    target: f64,
+    windows: Vec<usize>,
+    /// Recent completions: (was_bad, completion virtual time).
+    ring: VecDeque<(bool, f64)>,
+    cap: usize,
+    total: usize,
+    total_bad: usize,
+    pending: Vec<BurnSample>,
+    last_now: f64,
+}
+
+impl SloTracker {
+    pub fn new(sla_ms: f64, windows: &[usize], target: f64) -> SloTracker {
+        let mut ws: Vec<usize> = windows.iter().copied().filter(|w| *w > 0).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        let cap = ws.iter().copied().max().unwrap_or(1);
+        SloTracker {
+            sla_ms,
+            sla_secs: sla_ms / 1000.0,
+            target,
+            windows: ws,
+            ring: VecDeque::new(),
+            cap,
+            total: 0,
+            total_bad: 0,
+            pending: Vec::new(),
+            last_now: 0.0,
+        }
+    }
+
+    /// The serve-loop default: 64/256-completion windows against a
+    /// 99% attainment target.
+    pub fn serve_default(sla_ms: f64) -> SloTracker {
+        SloTracker::new(sla_ms, &[64, 256], 0.99)
+    }
+
+    fn allowed_frac(&self) -> f64 {
+        1.0 - self.target
+    }
+
+    /// Observe one completion's end-to-end latency at virtual time
+    /// `now`.
+    pub fn observe_e2e(&mut self, e2e_secs: f64, now: f64) {
+        self.observe(e2e_secs <= self.sla_secs, now);
+    }
+
+    /// Observe one completion outcome at virtual time `now`.
+    pub fn observe(&mut self, good: bool, now: f64) {
+        self.total += 1;
+        if !good {
+            self.total_bad += 1;
+        }
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back((!good, now));
+        self.last_now = now;
+        for i in 0..self.windows.len() {
+            let w = self.windows[i];
+            if self.total % w == 0 {
+                let sample = BurnSample {
+                    window: w,
+                    burn_rate: self.burn_rate(w),
+                    attainment: self.attainment(),
+                    budget_remaining: self.budget_remaining(),
+                };
+                self.pending.push(sample);
+            }
+        }
+    }
+
+    /// Burn rate over the last `min(w, seen)` completions: observed
+    /// bad fraction divided by the allowed bad fraction.  1.0 means
+    /// burning budget exactly at the sustainable rate.
+    pub fn burn_rate(&self, w: usize) -> f64 {
+        let n = w.min(self.ring.len());
+        if n == 0 {
+            return 0.0;
+        }
+        let bad = self.ring.iter().rev().take(n).filter(|(b, _)| *b).count();
+        (bad as f64 / n as f64) / self.allowed_frac()
+    }
+
+    /// Fraction of completions so far that met the SLA (1.0 before
+    /// any completion).
+    pub fn attainment(&self) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        (self.total - self.total_bad) as f64 / self.total as f64
+    }
+
+    /// Remaining error budget as a fraction of the total allowance
+    /// (1.0 untouched, 0.0 exhausted, negative when overdrawn).
+    pub fn budget_remaining(&self) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        1.0 - self.total_bad as f64 / (self.allowed_frac() * self.total as f64)
+    }
+
+    /// Virtual seconds until the budget exhausts at the recent bad
+    /// rate; `Some(0.0)` when already exhausted, `None` when nothing
+    /// recent is burning (or too little history to project).
+    pub fn time_to_exhaustion(&self) -> Option<f64> {
+        let budget = self.budget_remaining();
+        if budget <= 0.0 {
+            return Some(0.0);
+        }
+        if self.ring.len() < 2 {
+            return None;
+        }
+        let bad_in_ring = self.ring.iter().filter(|(b, _)| *b).count();
+        if bad_in_ring == 0 {
+            return None;
+        }
+        let span = self.last_now - self.ring.front().expect("nonempty ring").1;
+        if !(span > 0.0) {
+            return None;
+        }
+        let bad_per_sec = bad_in_ring as f64 / span;
+        // Budget in "bad completions" terms, spent at bad_per_sec.
+        Some(budget * self.allowed_frac() * self.total as f64 / bad_per_sec)
+    }
+
+    /// Drain burn samples accumulated since the last call.
+    pub fn take_burns(&mut self) -> Vec<BurnSample> {
+        std::mem::take(&mut self.pending)
+    }
+
+    pub fn completions(&self) -> usize {
+        self.total
+    }
+
+    /// Final report for the run.
+    pub fn report(&self) -> SloReport {
+        SloReport {
+            sla_ms: self.sla_ms,
+            target: self.target,
+            completions: self.total,
+            good: self.total - self.total_bad,
+            attainment: self.attainment(),
+            budget_remaining: self.budget_remaining(),
+            time_to_exhaustion: self.time_to_exhaustion(),
+            windows: self.windows.iter().map(|&w| (w, self.burn_rate(w))).collect(),
+        }
+    }
+}
+
+/// End-of-run SLO summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloReport {
+    pub sla_ms: f64,
+    pub target: f64,
+    pub completions: usize,
+    pub good: usize,
+    pub attainment: f64,
+    pub budget_remaining: f64,
+    pub time_to_exhaustion: Option<f64>,
+    /// Final burn rate per configured window, ascending window size.
+    pub windows: Vec<(usize, f64)>,
+}
+
+impl SloReport {
+    pub fn to_json(&self) -> Json {
+        let windows: Vec<Json> = self
+            .windows
+            .iter()
+            .map(|(w, rate)| obj! { "window" => *w, "burn_rate" => *rate })
+            .collect();
+        obj! {
+            "sla_ms" => self.sla_ms,
+            "target" => self.target,
+            "completions" => self.completions,
+            "good" => self.good,
+            "attainment" => self.attainment,
+            "budget_remaining" => self.budget_remaining,
+            "time_to_exhaustion" => match self.time_to_exhaustion {
+                Some(t) => Json::Num(t),
+                None => Json::Null,
+            },
+            "windows" => Json::Arr(windows),
+        }
+    }
+}
+
+/// Aggregate recorded `slo.burn` events (e.g. from a saved events
+/// file) into a digest: per-window sample count, last and max burn
+/// rate, plus the final attainment/budget seen.
+pub fn digest_burn_events<'a, I: IntoIterator<Item = &'a crate::obs::event::Event>>(
+    events: I,
+) -> Json {
+    let mut per_window: BTreeMap<usize, (usize, f64, f64)> = BTreeMap::new();
+    let mut last_attainment = None;
+    let mut last_budget = None;
+    let mut samples = 0usize;
+    for e in events {
+        if e.kind != "slo.burn" {
+            continue;
+        }
+        samples += 1;
+        let w = e.data.get("window").and_then(Json::as_usize).unwrap_or(0);
+        let rate = e.data.get("burn_rate").and_then(Json::as_f64).unwrap_or(0.0);
+        let entry = per_window.entry(w).or_insert((0, 0.0, 0.0));
+        entry.0 += 1;
+        entry.1 = rate;
+        if rate > entry.2 {
+            entry.2 = rate;
+        }
+        if let Some(a) = e.data.get("attainment").and_then(Json::as_f64) {
+            last_attainment = Some(a);
+        }
+        if let Some(b) = e.data.get("budget_remaining").and_then(Json::as_f64) {
+            last_budget = Some(b);
+        }
+    }
+    let windows: Vec<Json> = per_window
+        .iter()
+        .map(|(w, (count, last, max))| {
+            obj! {
+                "window" => *w,
+                "samples" => *count,
+                "last_burn_rate" => *last,
+                "max_burn_rate" => *max,
+            }
+        })
+        .collect();
+    obj! {
+        "samples" => samples,
+        "windows" => Json::Arr(windows),
+        "final_attainment" => match last_attainment {
+            Some(a) => Json::Num(a),
+            None => Json::Null,
+        },
+        "final_budget_remaining" => match last_budget {
+            Some(b) => Json::Num(b),
+            None => Json::Null,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attainment_and_budget_track_bad_completions() {
+        let mut t = SloTracker::new(1000.0, &[4], 0.9);
+        for _ in 0..9 {
+            t.observe(true, 1.0);
+        }
+        t.observe(false, 2.0);
+        assert!((t.attainment() - 0.9).abs() < 1e-12);
+        // 1 bad out of an allowance of 0.1 * 10 = 1 -> budget gone.
+        assert!(t.budget_remaining().abs() < 1e-12);
+        assert_eq!(t.time_to_exhaustion(), Some(0.0));
+    }
+
+    #[test]
+    fn burn_samples_fire_on_window_boundaries() {
+        let mut t = SloTracker::new(1000.0, &[2, 4], 0.99);
+        for i in 0..4 {
+            t.observe(i == 0, i as f64);
+        }
+        let burns = t.take_burns();
+        // Windows of 2 fire at completions 2 and 4; window 4 at 4.
+        let windows: Vec<usize> = burns.iter().map(|b| b.window).collect();
+        assert_eq!(windows, vec![2, 2, 4]);
+        assert!(t.take_burns().is_empty(), "take_burns drains");
+    }
+
+    #[test]
+    fn burn_rate_is_bad_fraction_over_allowance() {
+        let mut t = SloTracker::new(1000.0, &[4], 0.99);
+        t.observe(true, 0.0);
+        t.observe(false, 1.0);
+        t.observe(false, 2.0);
+        t.observe(true, 3.0);
+        // 2 bad of 4 = 0.5 observed vs 0.01 allowed -> burn 50x.
+        assert!((t.burn_rate(4) - 50.0).abs() < 1e-9);
+        assert_eq!(t.burn_rate(0), 0.0);
+    }
+
+    #[test]
+    fn observe_e2e_uses_the_summarize_predicate() {
+        let mut t = SloTracker::new(1250.0, &[4], 0.99);
+        t.observe_e2e(1.25, 1.0); // exactly at the SLA: good
+        t.observe_e2e(1.2500001, 2.0); // just over: bad
+        assert_eq!(t.completions(), 2);
+        assert!((t.attainment() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_to_exhaustion_projects_from_recent_rate() {
+        let mut t = SloTracker::new(1000.0, &[8], 0.5);
+        // One bad per second, allowance 0.5 -> budget drains.
+        for i in 0..4 {
+            t.observe(i % 2 == 0, i as f64);
+        }
+        let tte = t.time_to_exhaustion().expect("burning -> projection");
+        assert!(tte > 0.0 && tte.is_finite());
+        // All good: nothing recent burning.
+        let mut quiet = SloTracker::new(1000.0, &[8], 0.5);
+        for i in 0..4 {
+            quiet.observe(true, i as f64);
+        }
+        assert_eq!(quiet.time_to_exhaustion(), None);
+    }
+
+    #[test]
+    fn report_serializes_with_null_tte_when_unprojectable() {
+        let t = SloTracker::serve_default(1250.0);
+        let rep = t.report();
+        assert_eq!(rep.completions, 0);
+        assert_eq!(rep.attainment, 1.0);
+        let json = rep.to_json();
+        assert!(matches!(json.get("time_to_exhaustion"), Some(Json::Null)));
+        assert_eq!(json.get("sla_ms").and_then(Json::as_f64), Some(1250.0));
+        let windows = json.get("windows").and_then(Json::as_arr).expect("windows arr");
+        assert_eq!(windows.len(), 2);
+        assert_eq!(windows[0].get("window").and_then(Json::as_usize), Some(64));
+    }
+
+    #[test]
+    fn emit_burn_produces_versioned_events() {
+        let mut sink = EventSink::new(8);
+        emit_burn(
+            &mut sink,
+            12,
+            &BurnSample {
+                window: 64,
+                burn_rate: 2.5,
+                attainment: 0.975,
+                budget_remaining: 0.4,
+            },
+        );
+        let evs: Vec<_> = sink.events().collect();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].kind, "slo.burn");
+        assert_eq!(evs[0].step, 12);
+        assert_eq!(evs[0].data.get("window").and_then(Json::as_usize), Some(64));
+        assert_eq!(evs[0].data.get("v").and_then(Json::as_usize), Some(SLO_VERSION));
+    }
+
+    #[test]
+    fn digest_aggregates_recorded_burn_events() {
+        let mut sink = EventSink::new(8);
+        for (i, rate) in [(64usize, 1.0), (64, 3.0), (64, 2.0)] {
+            emit_burn(
+                &mut sink,
+                i,
+                &BurnSample {
+                    window: i,
+                    burn_rate: rate,
+                    attainment: 1.0 - rate / 100.0,
+                    budget_remaining: 1.0 - rate / 10.0,
+                },
+            );
+        }
+        let digest = digest_burn_events(sink.events());
+        assert_eq!(digest.get("samples").and_then(Json::as_usize), Some(3));
+        let windows = digest.get("windows").and_then(Json::as_arr).expect("arr");
+        assert_eq!(windows.len(), 1);
+        assert_eq!(windows[0].get("samples").and_then(Json::as_usize), Some(3));
+        assert_eq!(windows[0].get("last_burn_rate").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(windows[0].get("max_burn_rate").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(digest.get("final_attainment").and_then(Json::as_f64), Some(0.98));
+    }
+}

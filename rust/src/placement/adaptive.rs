@@ -227,6 +227,28 @@ impl PlacementPolicy for AdaptivePolicy {
         // affinity is an EWMA concern only: the forecaster's trend
         // window stays per-expert (pairs have no per-step trend model)
         self.tracker.observe_pairs(pairs);
+        // roll the tracked matrix into a pair-concentration scalar
+        // for the forecaster's features: the hottest pair's share of
+        // the upper-triangle mass (0.0 with no top-k traffic).  The
+        // priced forecast projection never reads it, so top-1 runs
+        // stay byte-unchanged.
+        let coact = self.tracker.coactivation();
+        let e = self.tracker.num_experts();
+        let mut sum = 0.0;
+        let mut max = 0.0;
+        if !coact.is_empty() {
+            for i in 0..e {
+                for j in (i + 1)..e {
+                    let v = coact[i * e + j];
+                    sum += v;
+                    if v > max {
+                        max = v;
+                    }
+                }
+            }
+        }
+        let conc = if sum > 0.0 { max / sum } else { 0.0 };
+        self.forecaster.set_pair_concentration(conc);
     }
 
     fn consult(&mut self, step: usize) -> Option<RebalanceDecision> {
@@ -552,6 +574,49 @@ mod tests {
             "reward for a persistent win must be positive: {arm_after:?}"
         );
         assert!(d.migration_secs > 0.0);
+    }
+
+    #[test]
+    fn observe_pairs_feeds_concentration_into_the_forecaster() {
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mut pol = adaptive(spec, e);
+        // top-1 traffic: the matrix stays empty, the scalar neutral
+        pol.observe_pairs(&[]);
+        assert_eq!(pol.forecaster.pair_concentration(), 0.0);
+        // top-k traffic: hottest pair owns 3 of 4 units of mass;
+        // both entries see the same EWMA factor, so the share is
+        // alpha-invariant
+        pol.observe_pairs(&[(0, 1, 3.0), (1, 2, 1.0)]);
+        assert!((pol.forecaster.pair_concentration() - 0.75).abs() < 1e-12);
+        let feats = pol.forecaster.features();
+        assert!(feats.iter().all(|f| f.pair_concentration == feats[0].pair_concentration));
+    }
+
+    #[test]
+    fn top1_consults_are_byte_unchanged_by_the_concentration_plumbing() {
+        // the ROADMAP topk leftover closes without touching top-1:
+        // driving the policy through observe_pairs(&[]) every step
+        // must produce bit-identical decisions to plain observe
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let (mut a, mut b) = (adaptive(spec.clone(), e), adaptive(spec, e));
+        let frac = zipf_fractions(e, 1.3);
+        for step in 0..120 {
+            a.observe(&frac);
+            b.observe(&frac);
+            b.observe_pairs(&[]);
+            let (da, db) = (a.consult(step), b.consult(step));
+            match (&da, &db) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.placement, y.placement, "step {step}");
+                    assert_eq!(x.comm_after.to_bits(), y.comm_after.to_bits());
+                }
+                (None, None) => {}
+                other => panic!("step {step}: diverged: {other:?}"),
+            }
+        }
+        assert_eq!(a.rebalances(), b.rebalances());
     }
 
     #[test]

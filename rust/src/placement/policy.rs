@@ -27,6 +27,7 @@ use super::solver::{price_placement_coact, PlacementCost, PlacementMap};
 use super::stats::LoadTracker;
 use crate::netsim::topology::ClusterSpec;
 use crate::obj;
+use crate::obs::detect::{emit_edge, node_imbalance_detector, ZScoreDetector};
 use crate::obs::SharedSink;
 use crate::util::json::Json;
 
@@ -442,6 +443,12 @@ pub struct RoutingPipeline {
     /// Step of the most recent [`RoutingPipeline::step`], so
     /// [`RoutingPipeline::drain`] can stamp migration-drain events.
     last_step: usize,
+    /// Online node-imbalance anomaly detector
+    /// ([`RoutingPipeline::enable_detectors`], `--detect`).  A pure
+    /// reader of the already-computed imbalance: its state lives
+    /// outside every priced computation and its only output is
+    /// `alert.*` events on the attached sink.
+    detect: Option<ZScoreDetector>,
 }
 
 impl RoutingPipeline {
@@ -472,6 +479,7 @@ impl RoutingPipeline {
             widen_buf: Vec::new(),
             obs: None,
             last_step: 0,
+            detect: None,
         }
     }
 
@@ -483,6 +491,13 @@ impl RoutingPipeline {
     pub fn attach_obs(&mut self, sink: SharedSink) {
         self.policy.set_audit(true);
         self.obs = Some(sink);
+    }
+
+    /// Arm the online node-imbalance detector (`--detect`).  Alerts
+    /// are only emitted when a sink is also attached; detection never
+    /// touches the priced path.
+    pub fn enable_detectors(&mut self) {
+        self.detect = Some(node_imbalance_detector());
     }
 
     /// Advance the attached sink's virtual clock (no-op without a
@@ -522,6 +537,14 @@ impl RoutingPipeline {
                         "stall_secs" => commit_stall_secs,
                     },
                 );
+            }
+        }
+        if self.detect.is_some() && self.obs.is_some() {
+            let ni = self.node_imbalance();
+            if let (Some(det), Some(obs)) = (&mut self.detect, &self.obs) {
+                if let Some(edge) = det.observe(ni) {
+                    emit_edge(&mut obs.lock().expect("obs sink lock poisoned"), step, &edge);
+                }
             }
         }
         #[cfg(any(test, feature = "strict-invariants"))]
@@ -853,6 +876,56 @@ mod tests {
         // real pairs land in the policy's tracker
         a.step_with_pairs(121, &frac, &[(0, 1, 4.0)]);
         assert!(!a.tracker().coactivation().is_empty());
+    }
+
+    #[test]
+    fn detectors_only_append_alert_events() {
+        use crate::obs::EventSink;
+
+        let spec = ClusterSpec::p4d(4);
+        let e = spec.num_gpus();
+        let mk = || {
+            RoutingPipeline::new(
+                PolicyKind::Threshold,
+                RebalancePolicy::default(),
+                spec.clone(),
+                e,
+                1e6,
+                MigrationConfig::default(),
+            )
+        };
+        let (mut plain, mut detected) = (mk(), mk());
+        let sink_a = EventSink::shared();
+        let sink_b = EventSink::shared();
+        plain.attach_obs(sink_a.clone());
+        detected.attach_obs(sink_b.clone());
+        detected.enable_detectors();
+        // Stable skew, then a sharp imbalance shift to trip the
+        // z-score, then back.
+        let stable = zipf_fractions(e, 1.2);
+        let mut spiked = stable.clone();
+        spiked[0] += 0.9;
+        for step in 0..160 {
+            let frac = if (60..70).contains(&step) { &spiked } else { &stable };
+            let ra = plain.step(step, frac);
+            let rb = detected.step(step, frac);
+            assert_eq!(ra.decision.is_some(), rb.decision.is_some(), "step {step}");
+        }
+        assert_eq!(plain.placement(), detected.placement(), "detector must not steer");
+        assert_eq!(plain.rebalances(), detected.rebalances());
+        let a = sink_a.lock().unwrap();
+        let b = sink_b.lock().unwrap();
+        let non_alert: Vec<_> =
+            b.events().filter(|ev| !ev.kind.starts_with("alert.")).cloned().collect();
+        let plain_events: Vec<_> = a.events().cloned().collect();
+        assert_eq!(non_alert, plain_events, "detectors may only append alert events");
+        // alerts strictly alternate raised/cleared
+        let mut last = None;
+        for ev in b.events().filter(|ev| ev.kind.starts_with("alert.")) {
+            let raised = ev.kind == "alert.raised";
+            assert_ne!(last, Some(raised), "alerts must alternate");
+            last = Some(raised);
+        }
     }
 
     #[test]

@@ -170,11 +170,23 @@ pub struct ForecastFeatures {
     /// Newest fraction over the window mean (1 = steady; > 1 = a load
     /// burst is arriving on this expert).
     pub burst: f64,
+    /// Concentration of the tracked co-activation mass (top-k traffic):
+    /// the hottest pair's share of the total pair weight, 0.0 under
+    /// top-1 routing (empty matrix).  Run-level, stamped identically
+    /// on every expert; never consumed by the priced forecast
+    /// projection, so top-1 runs stay byte-unchanged (parity-tested).
+    pub pair_concentration: f64,
 }
 
 impl ForecastFeatures {
     fn neutral() -> ForecastFeatures {
-        ForecastFeatures { mean: 0.0, slope: 0.0, variance: 0.0, burst: 1.0 }
+        ForecastFeatures {
+            mean: 0.0,
+            slope: 0.0,
+            variance: 0.0,
+            burst: 1.0,
+            pair_concentration: 0.0,
+        }
     }
 }
 
@@ -191,13 +203,34 @@ pub struct LoadForecaster {
     num_experts: usize,
     window: usize,
     hist: std::collections::VecDeque<Vec<f64>>,
+    /// Run-level co-activation concentration stamped into features
+    /// ([`LoadForecaster::set_pair_concentration`]); 0.0 until top-k
+    /// traffic populates the tracked pair matrix.
+    pair_concentration: f64,
 }
 
 impl LoadForecaster {
     pub fn new(num_experts: usize, window: usize) -> LoadForecaster {
         assert!(num_experts > 0, "need at least one expert");
         assert!(window >= 2, "window {window} too short to fit a trend");
-        LoadForecaster { num_experts, window, hist: std::collections::VecDeque::new() }
+        LoadForecaster {
+            num_experts,
+            window,
+            hist: std::collections::VecDeque::new(),
+            pair_concentration: 0.0,
+        }
+    }
+
+    /// Stamp the co-activation pair-concentration scalar (the hottest
+    /// pair's share of the total tracked pair weight) into every
+    /// expert's [`ForecastFeatures`].  Fed by the adaptive policy's
+    /// `observe_pairs`; a no-op signal (0.0) under top-1 traffic.
+    pub fn set_pair_concentration(&mut self, c: f64) {
+        self.pair_concentration = c;
+    }
+
+    pub fn pair_concentration(&self) -> f64 {
+        self.pair_concentration
     }
 
     pub fn num_experts(&self) -> usize {
@@ -271,7 +304,13 @@ impl LoadForecaster {
                 let slope = if k >= 2 { num / den } else { 0.0 };
                 let last = self.hist[k - 1][e];
                 let burst = if mean > 0.0 { last / mean } else { 1.0 };
-                ForecastFeatures { mean, slope, variance: var / k as f64, burst }
+                ForecastFeatures {
+                    mean,
+                    slope,
+                    variance: var / k as f64,
+                    burst,
+                    pair_concentration: self.pair_concentration,
+                }
             })
             .collect()
     }
@@ -530,6 +569,35 @@ mod tests {
         let zero = [0.0; 4];
         let f = fc.forecast(&zero, 25.0).unwrap();
         assert_eq!(f, zero);
+    }
+
+    #[test]
+    fn pair_concentration_stamps_features_but_never_the_forecast() {
+        let mk = || {
+            let mut fc = LoadForecaster::new(2, 8);
+            for i in 0..8 {
+                let hot = 0.1 + 0.05 * i as f64;
+                fc.observe(&[hot, 1.0 - hot]);
+            }
+            fc
+        };
+        let mut plain = mk();
+        let mut stamped = mk();
+        assert_eq!(plain.pair_concentration(), 0.0, "top-1 default is neutral");
+        assert_eq!(plain.features()[0].pair_concentration, 0.0);
+        stamped.set_pair_concentration(0.75);
+        assert_eq!(stamped.features()[0].pair_concentration, 0.75);
+        assert_eq!(stamped.features()[1].pair_concentration, 0.75, "run-level: every expert");
+        // the priced forecast consumes only the slope — byte parity
+        let base = [0.45, 0.55];
+        let (a, b) = (plain.forecast(&base, 4.0).unwrap(), stamped.forecast(&base, 4.0).unwrap());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "forecast must ignore the scalar");
+        }
+        // neutral features carry the neutral scalar
+        assert_eq!(LoadForecaster::new(2, 8).features()[0].pair_concentration, 0.0);
+        plain.set_pair_concentration(0.0);
+        assert_eq!(plain.features(), mk().features(), "0.0 stamp is the identity");
     }
 
     #[test]

@@ -39,6 +39,8 @@ use super::workload::WorkloadConfig;
 use crate::moe::dispatch::{demand_histogram, PlacedPlan, Top1};
 use crate::netsim::topology::ClusterSpec;
 use crate::obj;
+use crate::obs::detect::{ObsAnalyzers, ServeDetectors};
+use crate::obs::slo::{emit_burn, SloReport, SloTracker};
 use crate::obs::{SharedSink, SpanTimeline};
 use crate::placement::{
     price_placement, AdaptiveConfig, MigrationConfig, PolicyKind, RebalancePolicy,
@@ -165,6 +167,9 @@ pub struct ServeReport {
     pub summary: ServeSummary,
     pub timeline: Vec<IterStats>,
     pub requests: Vec<RequestRecord>,
+    /// SLO burn-rate summary (`--slo-burn`); `None` when the tracker
+    /// was not enabled.
+    pub slo: Option<SloReport>,
 }
 
 /// Run a workload under a policy kind with the serve-default knobs.
@@ -181,7 +186,7 @@ pub fn serve_with(
     adaptive: AdaptiveConfig,
     migration: MigrationConfig,
 ) -> ServeReport {
-    serve_with_obs(cfg, kind, knobs, adaptive, migration, None, None)
+    serve_with_obs(cfg, kind, knobs, adaptive, migration, None, None, ObsAnalyzers::default())
 }
 
 /// [`serve_with`] plus observability: an optional event sink
@@ -200,6 +205,13 @@ pub fn serve_with(
 /// With both `obs` and `spans` `None` this IS `serve_with`: the priced
 /// float sequence is byte-identical (observability reads copies of
 /// already-computed values and never feeds back into the loop).
+///
+/// `analyzers` arms the active analysis layer: `detect` runs the
+/// queue-depth / drop-rate / iteration-time detectors (alerts flow
+/// only when `obs` is attached), `slo_burn` tracks multi-window SLO
+/// burn against `cfg.sla_ms` and fills [`ServeReport::slo`].  Both
+/// are pure readers — summaries stay byte-identical on or off
+/// (golden-tested).
 pub fn serve_with_obs(
     cfg: &ServeConfig,
     kind: PolicyKind,
@@ -208,6 +220,7 @@ pub fn serve_with_obs(
     migration: MigrationConfig,
     obs: Option<SharedSink>,
     mut spans: Option<&mut SpanTimeline>,
+    analyzers: ObsAnalyzers,
 ) -> ServeReport {
     assert!(cfg.observe_every > 0, "observe_every must be >= 1");
     let spec = cfg.spec();
@@ -226,6 +239,12 @@ pub fn serve_with_obs(
         o.lock().expect("obs sink lock poisoned").meta("serve", pipeline.policy().name());
         pipeline.attach_obs(o.clone());
     }
+    // analysis layer: pure readers of already-computed values —
+    // their state lives outside every priced computation
+    let mut detectors =
+        if analyzers.detect && obs.is_some() { Some(ServeDetectors::new()) } else { None };
+    let mut slo =
+        if analyzers.slo_burn { Some(SloTracker::serve_default(cfg.sla_ms)) } else { None };
 
     // roofline constants (simtrain::compute): dense work is
     // data-parallel over all GPUs; expert FFN work rides the hottest
@@ -330,6 +349,9 @@ pub fn serve_with_obs(
             // pipeline's decision/migration events below reuse it
             sink.set_now(now);
             sink.emit("queue.depth", iters, obj! {"depth" => queue_depth});
+            if let Some(det) = &mut detectors {
+                det.observe_queue(&mut sink, iters, queue_depth as f64);
+            }
         }
 
         // 3. route every batch token over the workload mix: top-1
@@ -424,6 +446,11 @@ pub fn serve_with_obs(
         let expert = max_gpu as f64 * ffn_fpt * moe_layers as f64 / eff;
         let compute = dense + expert;
         let iter_secs = compute + comm + cfg.iter_overhead_secs + stall;
+        if let (Some(det), Some(o)) = (&mut detectors, &obs) {
+            let drop_frac = if b_tokens > 0 { dropped as f64 / b_tokens as f64 } else { 0.0 };
+            let mut sink = o.lock().expect("obs sink lock poisoned");
+            det.observe_iter(&mut sink, iters, drop_frac, iter_secs);
+        }
 
         // 7. drain background copies, advance the clock, apply progress
         let tick = pipeline.drain(iter_secs);
@@ -438,6 +465,11 @@ pub fn serve_with_obs(
             let comm_end = iter_start + comm;
             sp.push("comm", "a2a", iter_start, comm_end);
             sp.push("compute", "roofline", comm_end, comm_end + compute);
+            if expert > 0.0 {
+                // the expert-FFN tail beyond the data-parallel dense
+                // work: the hottest GPU's straggler time
+                sp.push("straggler", "expert", comm_end + dense, comm_end + compute);
+            }
             if stall > 0.0 {
                 sp.push("migration.exposed", "stall", iter_start, iter_start + stall);
             }
@@ -459,6 +491,21 @@ pub fn serve_with_obs(
             tokens_completed += requests[rid].total_tokens();
         }
         c.requests_completed += progress.completions.len();
+        if let Some(slo) = &mut slo {
+            for &rid in &progress.completions {
+                slo.observe_e2e(now - records[rid].arrival_secs, now);
+            }
+            let burns = slo.take_burns();
+            if !burns.is_empty() {
+                if let Some(o) = &obs {
+                    let mut sink = o.lock().expect("obs sink lock poisoned");
+                    sink.set_now(now);
+                    for b in &burns {
+                        emit_burn(&mut sink, iters, b);
+                    }
+                }
+            }
+        }
 
         timeline.push(IterStats {
             iter: iters - 1,
@@ -507,7 +554,7 @@ pub fn serve_with_obs(
         &records,
         &c,
     );
-    ServeReport { summary, timeline, requests: records }
+    ServeReport { summary, timeline, requests: records, slo: slo.map(|s| s.report()) }
 }
 
 #[cfg(test)]
@@ -641,6 +688,32 @@ mod tests {
         one.top_k = 1;
         let t1 = serve(&one, PolicyKind::Threshold, MigrationConfig::default());
         assert!(a.timeline[0].comm_secs > t1.timeline[0].comm_secs);
+    }
+
+    #[test]
+    fn analyzers_never_change_the_summary_and_fill_slo() {
+        let cfg = small(WorkloadKind::flash_default());
+        let plain = serve(&cfg, PolicyKind::Adaptive, MigrationConfig::default());
+        assert!(plain.slo.is_none(), "slo is opt-in");
+        let analyzed = serve_with_obs(
+            &cfg,
+            PolicyKind::Adaptive,
+            cfg.policy_knobs(),
+            cfg.adaptive_knobs(),
+            MigrationConfig::default(),
+            None,
+            None,
+            ObsAnalyzers { detect: true, slo_burn: true },
+        );
+        assert_eq!(
+            plain.summary.to_json().to_string_pretty(),
+            analyzed.summary.to_json().to_string_pretty(),
+            "analyzers must be zero-perturbation"
+        );
+        let slo = analyzed.slo.expect("slo_burn fills the report");
+        assert_eq!(slo.completions, analyzed.summary.requests_completed);
+        assert!(slo.attainment >= 0.0 && slo.attainment <= 1.0);
+        assert_eq!(slo.sla_ms, cfg.sla_ms);
     }
 
     #[test]

@@ -23,6 +23,7 @@
 use super::format::RoutingTrace;
 use crate::netsim::topology::ClusterSpec;
 use crate::obj;
+use crate::obs::detect::{emit_edge, step_time_detector, ZScoreDetector};
 use crate::obs::{SharedSink, SpanTimeline};
 use crate::placement::{
     price_placement_coact, MigrationConfig, PlacementMap, PlacementPolicy, PolicyKind,
@@ -150,6 +151,12 @@ pub struct TraceReplayer {
     dropped_sum: f64,
     /// Span recording (`--spans`); `None` skips all span bookkeeping.
     spans: Option<SpanTimeline>,
+    /// Replayer-held copy of the attached sink, for detector alerts
+    /// (the pipeline owns its own copy for policy-audit events).
+    obs: Option<SharedSink>,
+    /// Online step-time anomaly detector (`--detect`); pure reader of
+    /// the already-priced step seconds.
+    detect: Option<ZScoreDetector>,
 }
 
 impl TraceReplayer {
@@ -205,6 +212,8 @@ impl TraceReplayer {
             static_comm_secs: 0.0,
             dropped_sum: 0.0,
             spans: None,
+            obs: None,
+            detect: None,
         }
     }
 
@@ -214,7 +223,17 @@ impl TraceReplayer {
     /// is the clock *before* the step it belongs to.
     pub fn attach_obs(&mut self, sink: SharedSink) {
         sink.lock().expect("obs sink lock poisoned").meta("replay", self.pipeline.policy().name());
+        self.obs = Some(sink.clone());
         self.pipeline.attach_obs(sink);
+    }
+
+    /// Arm the online detectors (`--detect`): step-time z-score here,
+    /// node-imbalance z-score inside the pipeline.  Alerts only flow
+    /// when a sink is attached; detection never touches the priced
+    /// path.
+    pub fn enable_detectors(&mut self) {
+        self.detect = Some(step_time_detector());
+        self.pipeline.enable_detectors();
     }
 
     /// Record spans (`step` track plus migration exposed/overlapped
@@ -266,6 +285,11 @@ impl TraceReplayer {
         // window (a conservative stand-in for the step's wall time,
         // which replay does not otherwise model)
         let tick = self.pipeline.drain(cost.comm_total() * hops);
+        if let (Some(det), Some(obs)) = (&mut self.detect, &self.obs) {
+            if let Some(edge) = det.observe(cost.comm_total() * hops) {
+                emit_edge(&mut obs.lock().expect("obs sink lock poisoned"), rec.step, &edge);
+            }
+        }
         if let Some(spans) = &mut self.spans {
             spans.push("step", &format!("step {}", rec.step), t0, self.total_comm_secs);
             if report.commit_stall_secs > 0.0 {

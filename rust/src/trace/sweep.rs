@@ -31,6 +31,7 @@ use std::sync::Arc;
 
 use super::format::RoutingTrace;
 use super::replay::{ReplayResult, TraceReplayer};
+use crate::obs::{Event, EventSink, SpanTimeline};
 use crate::placement::{
     AdaptiveConfig, AdaptivePolicy, MigrationConfig, RebalancePolicy,
 };
@@ -107,6 +108,39 @@ impl ReplayCursor {
         }
         replayer.finish()
     }
+
+    /// Like [`run`](ReplayCursor::run), but with the fork's post-prefix
+    /// replay observed: a *fresh* ring-only event sink and span
+    /// timeline are attached after the clone (a cloned replayer shares
+    /// its parent's sink handle, so reusing it would interleave
+    /// siblings), and the fork's events and spans are returned
+    /// alongside the result.  The summary stays byte-identical to
+    /// [`run`](ReplayCursor::run) — observation is read-only.
+    pub fn run_observed(
+        &self,
+        cfg: AdaptiveConfig,
+    ) -> (ReplayResult, Vec<Event>, SpanTimeline) {
+        let mut replayer = self.fork(cfg);
+        let sink = EventSink::shared();
+        replayer.attach_obs(Arc::clone(&sink));
+        replayer.enable_spans();
+        for rec in &self.trace.steps[self.prefix..] {
+            replayer.step(rec);
+        }
+        let spans = replayer.take_spans();
+        let result = replayer.finish();
+        // `finish` consumed the replayer (and with it the pipeline's
+        // sink handle), so ours is the last reference
+        let events = Arc::try_unwrap(sink)
+            .ok()
+            .expect("fork sinks are private to their grid point")
+            .into_inner()
+            .expect("obs sink lock poisoned")
+            .events()
+            .cloned()
+            .collect();
+        (result, events, spans)
+    }
 }
 
 /// The longest prefix of `trace` that is knob-independent for every
@@ -130,11 +164,17 @@ pub fn shared_prefix_len(trace: &RoutingTrace, grid: &[AdaptiveConfig]) -> usize
     trace.steps.iter().take_while(|s| s.step < min_pe).count()
 }
 
-/// One grid point's outcome, in grid order.
+/// One grid point's outcome, in grid order.  `events` and `spans` are
+/// empty unless the sweep ran through [`tune_grid_observed`]; the
+/// events carry the fork-relative clock (the prefix is replayed
+/// unobserved) and the driver tags them with the grid index when it
+/// merges streams.
 #[derive(Debug, Clone)]
 pub struct TuneOutcome {
     pub cfg: AdaptiveConfig,
     pub result: ReplayResult,
+    pub events: Vec<Event>,
+    pub spans: SpanTimeline,
 }
 
 /// Replay `trace` under every [`AdaptiveConfig`] in `grid`, sharing
@@ -164,7 +204,42 @@ pub fn tune_grid(
     ));
     let run = move |cfg: AdaptiveConfig| {
         let result = cursor.run(cfg.clone());
-        TuneOutcome { cfg, result }
+        TuneOutcome { cfg, result, events: Vec::new(), spans: SpanTimeline::default() }
+    };
+    if threads <= 1 {
+        return grid.iter().cloned().map(run).collect();
+    }
+    ThreadPool::new(threads).map(grid.to_vec(), run)
+}
+
+/// [`tune_grid`] with every fork observed: each grid point replays
+/// under its own private event sink and span timeline (see
+/// [`ReplayCursor::run_observed`]) and returns them in its
+/// [`TuneOutcome`].  Summaries are byte-identical to the unobserved
+/// sweep; results are still collected by grid index at any thread
+/// count.
+pub fn tune_grid_observed(
+    trace: &RoutingTrace,
+    knobs: RebalancePolicy,
+    migration: MigrationConfig,
+    grid: &[AdaptiveConfig],
+    threads: usize,
+) -> Vec<TuneOutcome> {
+    let Some(first) = grid.first() else {
+        return Vec::new();
+    };
+    let prefix = shared_prefix_len(trace, grid);
+    let trace = Arc::new(trace.clone());
+    let cursor = Arc::new(ReplayCursor::adaptive_prefix(
+        Arc::clone(&trace),
+        knobs,
+        first.window,
+        migration,
+        prefix,
+    ));
+    let run = move |cfg: AdaptiveConfig| {
+        let (result, events, spans) = cursor.run_observed(cfg.clone());
+        TuneOutcome { cfg, result, events, spans }
     };
     if threads <= 1 {
         return grid.iter().cloned().map(run).collect();
@@ -293,6 +368,48 @@ mod tests {
         let a2 = cursor.run(eager);
         // running a sibling in between must not perturb a fork
         assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn observed_sweep_matches_the_unobserved_bytes_and_fills_streams() {
+        let trace = zipf_trace(120);
+        let grid = small_grid();
+        let knobs = RebalancePolicy::default();
+        let plain = tune_grid(&trace, knobs.clone(), MigrationConfig::default(), &grid, 1);
+        let observed =
+            tune_grid_observed(&trace, knobs.clone(), MigrationConfig::default(), &grid, 2);
+        assert_eq!(observed.len(), plain.len());
+        let mut any_events = false;
+        for (o, p) in observed.iter().zip(&plain) {
+            assert_eq!(o.result, p.result, "observation perturbed probe_every={}", o.cfg.probe_every);
+            assert!(p.events.is_empty() && p.spans.is_empty());
+            any_events |= !o.events.is_empty();
+            // every observed event postdates the shared prefix
+            let prefix = shared_prefix_len(&trace, &grid);
+            assert!(o.events.iter().all(|e| e.step >= prefix));
+        }
+        assert!(any_events, "a committing grid must emit rebalance events");
+    }
+
+    #[test]
+    fn sibling_forks_never_share_a_sink() {
+        let trace = zipf_trace(80);
+        let cursor = ReplayCursor::adaptive_prefix(
+            Arc::new(trace),
+            RebalancePolicy::default(),
+            AdaptiveConfig::default().window,
+            MigrationConfig::default(),
+            5,
+        );
+        let eager = AdaptiveConfig { probe_every: 5, ..AdaptiveConfig::default() };
+        let (r1, e1, _) = cursor.run_observed(eager.clone());
+        let (_r, _e, _s) = cursor.run_observed(AdaptiveConfig {
+            probe_every: 50,
+            ..AdaptiveConfig::default()
+        });
+        let (r2, e2, _) = cursor.run_observed(eager);
+        assert_eq!(r1, r2);
+        assert_eq!(e1, e2, "a sibling run leaked into this fork's event stream");
     }
 
     #[test]

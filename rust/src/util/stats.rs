@@ -98,6 +98,85 @@ impl ExactStats {
     }
 }
 
+/// Streaming accumulator for [`ExactStats`]: count / sum / min / max
+/// update incrementally, while quantile inputs are kept in a bounded
+/// ring of the most recent `cap` samples.  While `count <= cap` the
+/// digest is bit-identical to [`ExactStats::of`] over the same
+/// series (same summation order, same `total_cmp` ordering for
+/// min/max/quantiles); past the cap, min/max/mean stay exact over
+/// the full stream and p50/p99 become recent-window order
+/// statistics.
+#[derive(Debug, Clone)]
+pub struct ExactStatsAccum {
+    count: usize,
+    sum: f64,
+    min: f64,
+    max: f64,
+    ring: std::collections::VecDeque<f64>,
+    cap: usize,
+}
+
+impl ExactStatsAccum {
+    pub fn new(cap: usize) -> ExactStatsAccum {
+        ExactStatsAccum {
+            count: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+            ring: std::collections::VecDeque::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            if x.total_cmp(&self.min) == std::cmp::Ordering::Less {
+                self.min = x;
+            }
+            if x.total_cmp(&self.max) == std::cmp::Ordering::Greater {
+                self.max = x;
+            }
+        }
+        self.count += 1;
+        self.sum += x;
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn digest(&self) -> ExactStats {
+        if self.count == 0 {
+            return ExactStats::default();
+        }
+        let mut sorted: Vec<f64> = self.ring.iter().copied().collect();
+        sorted.sort_by(f64::total_cmp);
+        ExactStats {
+            count: self.count,
+            mean: self.sum / self.count as f64,
+            min: self.min,
+            max: self.max,
+            p50: quantile_exact_sorted(&sorted, 0.50),
+            p99: quantile_exact_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+impl Default for ExactStatsAccum {
+    fn default() -> ExactStatsAccum {
+        // matches the obs ring default so a full event ring digests
+        // exactly
+        ExactStatsAccum::new(1 << 16)
+    }
+}
+
 /// Linear-interpolated percentile over a pre-sorted slice.
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
@@ -265,6 +344,48 @@ mod tests {
         assert_eq!(s.p50, 2.0, "p50 must be an observed order statistic");
         assert_eq!(s.p99, 4.0);
         assert_eq!(ExactStats::of(&[]), ExactStats::default());
+    }
+
+    #[test]
+    fn accum_matches_of_under_the_cap() {
+        let samples = [4.0, 1.0, 3.0, 2.0, 2.0, 9.5, -1.0];
+        let mut acc = ExactStatsAccum::new(64);
+        for &x in &samples {
+            acc.push(x);
+        }
+        assert_eq!(acc.digest(), ExactStats::of(&samples), "bit-identical under the cap");
+        assert_eq!(acc.count(), samples.len());
+        assert_eq!(ExactStatsAccum::new(8).digest(), ExactStats::default());
+    }
+
+    #[test]
+    fn accum_matches_of_with_nan_samples() {
+        let samples = [3.0, f64::NAN, 1.0];
+        let mut acc = ExactStatsAccum::new(8);
+        for &x in &samples {
+            acc.push(x);
+        }
+        let (a, b) = (acc.digest(), ExactStats::of(&samples));
+        assert_eq!(a.count, b.count);
+        assert_eq!(a.min, b.min);
+        assert_eq!(a.max.to_bits(), b.max.to_bits(), "NaN max matches bitwise");
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+    }
+
+    #[test]
+    fn accum_past_the_cap_keeps_exact_extremes() {
+        let mut acc = ExactStatsAccum::new(4);
+        for i in 0..100 {
+            acc.push(i as f64);
+        }
+        let d = acc.digest();
+        assert_eq!(d.count, 100);
+        assert_eq!(d.min, 0.0, "min is exact over the full stream");
+        assert_eq!(d.max, 99.0);
+        assert!((d.mean - 49.5).abs() < 1e-12);
+        // quantiles come from the last 4 samples: 96..=99
+        assert_eq!(d.p50, 97.0);
+        assert_eq!(d.p99, 99.0);
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //!   python3 scripts/gen_golden_traces.py
 //! then review the diff (the mirror regenerates summaries too).
 
-use smile::obs::{EventSink, ObsReport, SpanTimeline};
+use smile::obs::{Event, EventSink, ObsAnalyzers, ObsReport, SpanTimeline};
 use smile::placement::{MigrationConfig, PolicyKind, RebalancePolicy};
 use smile::serve::{serve_with, serve_with_obs, ServeConfig, WorkloadKind};
 use smile::trace::{RoutingTrace, TraceReplayer};
@@ -142,6 +142,7 @@ fn events_never_change_a_serve_summary_byte() {
             MigrationConfig::default(),
             Some(sink.clone()),
             Some(&mut spans),
+            ObsAnalyzers::default(),
         );
         assert_eq!(
             instrumented.summary.to_json().to_string_pretty(),
@@ -255,6 +256,7 @@ fn serve_spans_tile_the_virtual_clock_bitwise() {
             migration,
             None,
             Some(&mut spans),
+            ObsAnalyzers::default(),
         );
         let iters: Vec<&smile::obs::Span> = spans.track("iter").collect();
         assert!(!iters.is_empty());
@@ -327,6 +329,7 @@ fn obs_report_digests_the_serve_queue_depth_series() {
         MigrationConfig::default(),
         Some(sink.clone()),
         None,
+        ObsAnalyzers::default(),
     );
     let obs = ObsReport::from_events(sink.lock().unwrap().events());
     assert_eq!(obs.source, "serve");
@@ -351,4 +354,197 @@ fn obs_report_digests_the_serve_queue_depth_series() {
     // the JSONL round trip feeds `smile obs report --in run.events.jsonl`
     let parsed = ObsReport::from_jsonl(&sink.lock().unwrap().to_jsonl()).unwrap();
     assert_eq!(parsed, obs);
+}
+
+/// Run the golden flash/adaptive serve with the full analyzer set on,
+/// returning (all events, summary, slo report).
+fn flash_with_analyzers() -> (Vec<Event>, smile::serve::ServeSummary, smile::obs::SloReport) {
+    let cfg = serve_cfg(WorkloadKind::flash_default());
+    let sink = EventSink::shared();
+    let report = serve_with_obs(
+        &cfg,
+        PolicyKind::Adaptive,
+        cfg.policy_knobs(),
+        cfg.adaptive_knobs(),
+        MigrationConfig::default(),
+        Some(sink.clone()),
+        None,
+        ObsAnalyzers { detect: true, slo_burn: true },
+    );
+    let events = sink.lock().unwrap().events().cloned().collect();
+    (events, report.summary, report.slo.expect("slo_burn fills the report"))
+}
+
+/// Per detector, alert.raised / alert.cleared must strictly
+/// alternate, starting with raised.
+fn assert_alerts_alternate(events: &[Event]) {
+    let mut active: std::collections::BTreeMap<&str, bool> = std::collections::BTreeMap::new();
+    for e in events {
+        let edge = match e.kind.as_str() {
+            "alert.raised" => true,
+            "alert.cleared" => false,
+            _ => continue,
+        };
+        let det = e.data.get("detector").and_then(Json::as_str).expect("alert names detector");
+        let was = active.insert(det, edge).unwrap_or(false);
+        assert_ne!(was, edge, "detector '{det}' repeated an {} edge", e.kind);
+        assert_eq!(e.data.get("v").and_then(Json::as_usize), Some(1), "alert schema version");
+        assert!(e.data.get("value").and_then(Json::as_f64).is_some());
+        assert!(e.data.get("threshold").and_then(Json::as_f64).is_some());
+    }
+}
+
+#[test]
+fn analyzers_never_change_a_serve_summary_byte() {
+    // the tentpole zero-perturbation claim, detector + SLO edition:
+    // the analysis layer is a pure reader of the event stream
+    for wk in [WorkloadKind::flash_default(), WorkloadKind::Poisson] {
+        let cfg = serve_cfg(wk);
+        let plain = serve_with(
+            &cfg,
+            PolicyKind::Adaptive,
+            cfg.policy_knobs(),
+            cfg.adaptive_knobs(),
+            MigrationConfig::default(),
+        );
+        let sink = EventSink::shared();
+        let analyzed = serve_with_obs(
+            &cfg,
+            PolicyKind::Adaptive,
+            cfg.policy_knobs(),
+            cfg.adaptive_knobs(),
+            MigrationConfig::default(),
+            Some(sink.clone()),
+            None,
+            ObsAnalyzers { detect: true, slo_burn: true },
+        );
+        assert_eq!(
+            analyzed.summary.to_json().to_string_pretty(),
+            plain.summary.to_json().to_string_pretty(),
+            "{}: detectors/SLO perturbed the serve summary",
+            plain.summary.workload
+        );
+        assert!(plain.slo.is_none(), "plain serve must not carry an SLO report");
+        let slo = analyzed.slo.expect("slo_burn fills the report");
+        assert_eq!(slo.completions, analyzed.summary.requests_completed);
+        // and the non-alert event stream is byte-identical to a
+        // detector-free instrumented run (alerts strictly append)
+        let bare = EventSink::shared();
+        serve_with_obs(
+            &cfg,
+            PolicyKind::Adaptive,
+            cfg.policy_knobs(),
+            cfg.adaptive_knobs(),
+            MigrationConfig::default(),
+            Some(bare.clone()),
+            None,
+            ObsAnalyzers::default(),
+        );
+        let filtered: Vec<String> = sink
+            .lock()
+            .unwrap()
+            .events()
+            .filter(|e| !e.kind.starts_with("alert.") && e.kind != "slo.burn")
+            .map(|e| e.to_json().to_string())
+            .collect();
+        let plain_lines: Vec<String> =
+            bare.lock().unwrap().events().map(|e| e.to_json().to_string()).collect();
+        assert_eq!(filtered, plain_lines, "analyzers mutated a pre-existing event");
+    }
+}
+
+#[test]
+fn analyzers_never_change_a_replay_summary_byte() {
+    for name in ["trace_uniform", "trace_zipf12", "trace_burst"] {
+        for kind in [PolicyKind::Threshold, PolicyKind::Adaptive] {
+            let trace = load_trace(name);
+            let plain = TraceReplayer::replay_with(
+                &trace,
+                kind,
+                RebalancePolicy::default(),
+                MigrationConfig::default(),
+            );
+            let mut replayer = TraceReplayer::with_policy(
+                &trace,
+                kind,
+                RebalancePolicy::default(),
+                MigrationConfig::default(),
+            );
+            let sink = EventSink::shared();
+            replayer.attach_obs(sink.clone());
+            replayer.enable_detectors();
+            for s in &trace.steps {
+                replayer.step(s);
+            }
+            let result = replayer.finish();
+            assert_eq!(
+                result.summary.to_json().to_string_pretty(),
+                plain.summary.to_json().to_string_pretty(),
+                "{name}/{}: detectors perturbed the replay summary",
+                kind.name()
+            );
+            let events: Vec<Event> = sink.lock().unwrap().events().cloned().collect();
+            assert_alerts_alternate(&events);
+        }
+    }
+}
+
+#[test]
+fn golden_flash_alert_stream_is_an_exact_fixture() {
+    // the tentpole acceptance golden: on the flash-crowd serve trace
+    // the queue-depth detector raises BEFORE the adaptive policy's
+    // rebalance commit and clears after the queue drains, and the
+    // whole alert stream is pinned byte-for-byte (the Python mirror
+    // generates the same fixture independently)
+    let (events, summary, slo) = flash_with_analyzers();
+    let alerts: Vec<&Event> =
+        events.iter().filter(|e| e.kind.starts_with("alert.")).collect();
+    let lines: String =
+        alerts.iter().map(|e| e.to_json().to_string() + "\n").collect();
+    let golden = std::fs::read_to_string(data_path("serve_flash.adaptive.alerts.jsonl"))
+        .expect("alert fixture exists");
+    assert_eq!(
+        lines, golden,
+        "flash/adaptive alert stream drifted from its golden fixture.\n\
+         If this change is deliberate, re-bless with:\n  \
+         python3 scripts/gen_golden_traces.py\n\
+         and review the diff."
+    );
+    assert_alerts_alternate(&events);
+
+    // the headline sequence: queue alert at the commit iteration,
+    // raised strictly before the commit in stream order (queue depth
+    // is observed at admission, the policy consults afterwards)
+    assert_eq!(summary.rebalance_iters, vec![209], "the flash fixture commits once at 209");
+    let raised_pos = events
+        .iter()
+        .position(|e| {
+            e.kind == "alert.raised"
+                && e.data.get("detector").and_then(Json::as_str) == Some("queue.depth")
+        })
+        .expect("queue.depth must raise");
+    let commit_pos = events
+        .iter()
+        .position(|e| e.kind == "rebalance.committed")
+        .expect("flash fixture rebalances");
+    assert_eq!(events[raised_pos].step, 209, "queue alert must fire at the commit iteration");
+    assert!(
+        raised_pos < commit_pos,
+        "the queue-depth alert must precede the rebalance commit in stream order \
+         (alert at index {raised_pos}, commit at {commit_pos})"
+    );
+    let cleared = events
+        .iter()
+        .find(|e| {
+            e.kind == "alert.cleared"
+                && e.data.get("detector").and_then(Json::as_str) == Some("queue.depth")
+        })
+        .expect("queue.depth must clear after the rebalance");
+    assert_eq!(cleared.step, 330, "queue alert must clear once the backlog drains");
+
+    // SLO burn events rode the same stream, and the end-of-run report
+    // agrees with the summary's own attainment accounting
+    assert!(events.iter().any(|e| e.kind == "slo.burn"), "no slo.burn samples emitted");
+    assert_eq!(slo.completions, summary.requests_completed);
+    assert!(slo.attainment > 0.0 && slo.attainment <= 1.0);
 }

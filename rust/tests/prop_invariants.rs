@@ -9,8 +9,9 @@ use smile::placement::{
     self, AdaptiveConfig, AdaptivePolicy, MigrationConfig, MigrationScheduler, PlacementMap,
     PolicyKind, RebalancePolicy,
 };
+use smile::obs::{EventSink, ObsAnalyzers};
 use smile::prop_assert;
-use smile::serve::{serve, ServeConfig, WorkloadKind};
+use smile::serve::{serve, serve_with_obs, ServeConfig, WorkloadKind};
 use smile::trace::{
     record_scenario, tune_grid, RoutingTrace, Scenario, ScenarioConfig, TraceReplayer,
 };
@@ -1115,6 +1116,170 @@ fn prop_imbalance_bounds() {
                 "dropped {}",
                 stats.dropped_frac
             );
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// obs analysis layer: zero perturbation
+// ---------------------------------------------------------------------------
+
+/// Per detector, `alert.raised` / `alert.cleared` must strictly
+/// alternate, starting with raised.
+fn alerts_alternate(events: &[smile::obs::Event]) -> Result<(), String> {
+    let mut active: std::collections::BTreeMap<String, bool> = std::collections::BTreeMap::new();
+    for e in events {
+        let edge = match e.kind.as_str() {
+            "alert.raised" => true,
+            "alert.cleared" => false,
+            _ => continue,
+        };
+        let det = e
+            .data
+            .get("detector")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{} without a detector name", e.kind))?
+            .to_string();
+        let was = active.insert(det.clone(), edge).unwrap_or(false);
+        if was == edge {
+            return Err(format!("detector '{det}' repeated an {} edge", e.kind));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_serve_analyzers_are_pure_readers() {
+    // the analysis layer's tentpole invariant, over random serve
+    // configs and all four policies: turning on online detectors and
+    // SLO burn tracking never changes a summary byte, only ever
+    // appends alert.* / slo.burn events, and alert edges strictly
+    // alternate per detector
+    let cfg_prop = Config { cases: 24, ..Config::default() };
+    check(
+        "serve: analyzers on/off byte-identical; alerts alternate",
+        &cfg_prop,
+        random_serve_config,
+        |(cfg, kind)| {
+            let plain = serve(cfg, *kind, MigrationConfig::default());
+            let sink = EventSink::shared();
+            let analyzed = serve_with_obs(
+                cfg,
+                *kind,
+                cfg.policy_knobs(),
+                cfg.adaptive_knobs(),
+                MigrationConfig::default(),
+                Some(sink.clone()),
+                None,
+                ObsAnalyzers { detect: true, slo_burn: true },
+            );
+            prop_assert!(
+                analyzed.summary.to_json().to_string_pretty()
+                    == plain.summary.to_json().to_string_pretty(),
+                "serve({:?}, {kind:?}): analyzers perturbed the summary",
+                cfg.workload.kind
+            );
+            prop_assert!(plain.slo.is_none(), "plain serve carries an SLO report");
+            let slo = match &analyzed.slo {
+                Some(s) => s,
+                None => {
+                    prop_assert!(false, "slo_burn did not fill the report");
+                    unreachable!()
+                }
+            };
+            prop_assert!(
+                slo.completions == analyzed.summary.requests_completed,
+                "SLO tracked {} completions, summary has {}",
+                slo.completions,
+                analyzed.summary.requests_completed
+            );
+            prop_assert!(
+                (0.0..=1.0).contains(&slo.attainment),
+                "attainment {} outside [0, 1]",
+                slo.attainment
+            );
+            let events: Vec<smile::obs::Event> =
+                sink.lock().unwrap().events().cloned().collect();
+            if let Err(msg) = alerts_alternate(&events) {
+                prop_assert!(false, "{msg}");
+            }
+            // alerts and burns strictly append: stripping them leaves
+            // exactly the detector-free event stream
+            let bare = EventSink::shared();
+            serve_with_obs(
+                cfg,
+                *kind,
+                cfg.policy_knobs(),
+                cfg.adaptive_knobs(),
+                MigrationConfig::default(),
+                Some(bare.clone()),
+                None,
+                ObsAnalyzers::default(),
+            );
+            let stripped: Vec<String> = events
+                .iter()
+                .filter(|e| !e.kind.starts_with("alert.") && e.kind != "slo.burn")
+                .map(|e| e.to_json().to_string())
+                .collect();
+            let plain_lines: Vec<String> =
+                bare.lock().unwrap().events().map(|e| e.to_json().to_string()).collect();
+            prop_assert!(
+                stripped == plain_lines,
+                "analyzers mutated a pre-existing event of serve({:?}, {kind:?})",
+                cfg.workload.kind
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_replay_detectors_are_pure_readers() {
+    // same invariant on the trace-replay path: the step-time and
+    // node-imbalance detectors read the priced clock, never touch it
+    let cfg_prop = Config { cases: 24, ..Config::default() };
+    check(
+        "replay: detectors on/off byte-identical; alerts alternate",
+        &cfg_prop,
+        |rng| {
+            let mut sc = random_scenario(rng);
+            sc.steps = 20 + rng.below(80) as usize;
+            let kind = if rng.below(2) == 0 { PolicyKind::Threshold } else { PolicyKind::Adaptive };
+            (sc, kind)
+        },
+        |(sc, kind)| {
+            let trace = record_scenario(sc, None);
+            let plain = TraceReplayer::replay_with(
+                &trace,
+                *kind,
+                RebalancePolicy::default(),
+                MigrationConfig::default(),
+            );
+            let mut replayer = TraceReplayer::with_policy(
+                &trace,
+                *kind,
+                RebalancePolicy::default(),
+                MigrationConfig::default(),
+            );
+            let sink = EventSink::shared();
+            replayer.attach_obs(sink.clone());
+            replayer.enable_detectors();
+            for s in &trace.steps {
+                replayer.step(s);
+            }
+            let result = replayer.finish();
+            prop_assert!(
+                result.summary.to_json().to_string_pretty()
+                    == plain.summary.to_json().to_string_pretty(),
+                "replay({:?}, {kind:?}): detectors perturbed the summary",
+                sc.scenario
+            );
+            let events: Vec<smile::obs::Event> =
+                sink.lock().unwrap().events().cloned().collect();
+            if let Err(msg) = alerts_alternate(&events) {
+                prop_assert!(false, "{msg}");
+            }
             Ok(())
         },
     );

@@ -24,10 +24,20 @@
 #                              serving summaries, and the obs decision-audit
 #                              event stream
 #   scripts/ci.sh obs-golden   observability gate only: exact-compare the
-#                              pinned decision-audit event fixture
-#                              (trace_burst.adaptive.events.jsonl) against the
-#                              Python mirror, then (with a toolchain) run the
-#                              rust obs_golden suite
+#                              pinned obs byte fixtures (the decision-audit
+#                              event stream and the flash-crowd alert stream)
+#                              against the Python mirror, then (with a
+#                              toolchain) run the rust obs_golden suite
+#   scripts/ci.sh obs-diff     cross-run regression-diff gate: regenerate the
+#                              flash-crowd alert stream fresh from the mirror
+#                              and byte-compare it against the blessed
+#                              fixture (exit nonzero on divergence); with a
+#                              toolchain, also self-compare via
+#                              `smile obs diff` (must exit 0)
+#   scripts/ci.sh bench-obs    run the obs analysis-layer bench (emit/detector
+#                              throughput + serve/replay analyzer overhead
+#                              ratios, with a zero-perturbation shape check)
+#                              and write BENCH_obs.json at the repo root
 #   scripts/ci.sh bench-json   run the placement bench and write
 #                              BENCH_placement.json at the repo root for
 #                              the perf trajectory
@@ -77,6 +87,7 @@ case "$cmd" in
     cargo fmt --check
     "$repo_root/scripts/ci.sh" audit
     python3 "$repo_root/scripts/gen_golden_traces.py" --check
+    "$repo_root/scripts/ci.sh" obs-diff
     # the sweep-engine bench doubles as the parallel-determinism gate:
     # it asserts 1T / 8T / from-scratch byte-identity before timing
     "$repo_root/scripts/ci.sh" bench-tune
@@ -104,6 +115,29 @@ case "$cmd" in
       cargo test -q --test obs_golden
     fi
     ;;
+  obs-diff)
+    # a fresh mirror regeneration of the flash-crowd alert stream must
+    # be byte-identical to the blessed fixture — any detector / SLO /
+    # serve-loop drift shows up here as a nonzero exit
+    tmp="$(mktemp)"
+    trap 'rm -f "$tmp"' EXIT
+    python3 "$repo_root/scripts/gen_golden_traces.py" --emit-alerts "$tmp"
+    cmp "$tmp" "$repo_root/rust/tests/data/serve_flash.adaptive.alerts.jsonl"
+    echo "obs-diff ok: fresh alert stream matches the blessed fixture"
+    if [ -f "$repo_root/rust/Cargo.toml" ]; then
+      cd "$repo_root/rust"
+      cargo run -q --release -- obs diff \
+        --a tests/data/serve_flash.adaptive.alerts.jsonl \
+        --b tests/data/serve_flash.adaptive.alerts.jsonl
+    fi
+    ;;
+  bench-obs)
+    require_manifest
+    cd "$repo_root/rust"
+    cargo bench --bench bench_obs
+    cp reports/bench_obs.json "$repo_root/BENCH_obs.json"
+    echo "wrote $repo_root/BENCH_obs.json"
+    ;;
   bench-json)
     require_manifest
     cd "$repo_root/rust"
@@ -119,7 +153,7 @@ case "$cmd" in
     echo "wrote $repo_root/BENCH_tune.json"
     ;;
   *)
-    echo "usage: scripts/ci.sh [gate|trace-golden|serve-golden|mirror-check|obs-golden|audit|bench-json|bench-tune]" >&2
+    echo "usage: scripts/ci.sh [gate|trace-golden|serve-golden|mirror-check|obs-golden|obs-diff|audit|bench-json|bench-obs|bench-tune]" >&2
     exit 2
     ;;
 esac

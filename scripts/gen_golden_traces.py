@@ -1553,7 +1553,229 @@ def serve_generate_requests(cfg, kind):
     return requests
 
 
-def serve_run(cfg, kind, policy_kind, overlap_frac=0.0, events=None):
+# ---------------------------------------------------------------------------
+# obs::detect / obs::slo mirror — the active analysis layer
+# ---------------------------------------------------------------------------
+
+ALERTS_VERSION = 1  # obs::detect::ALERTS_VERSION
+SLO_VERSION = 1  # obs::slo::SLO_VERSION
+
+
+class ZScoreDetector:
+    """obs::detect::ZScoreDetector — each sample scored against the
+    mean/stddev of the *prior* window (current sample excluded), at
+    least 4 prior samples before scoring, hysteresis raise/clear."""
+
+    def __init__(self, name, window, z_raise, z_clear):
+        self.name = name
+        self.window = window if window > 4 else 4
+        self.hist = []
+        self.z_raise = z_raise
+        self.z_clear = z_clear
+        self.active = False
+
+    def observe(self, x):
+        out = None
+        n = len(self.hist)
+        if n >= 4:
+            mean = sum(self.hist) / float(n)
+            var = sum((h - mean) * (h - mean) for h in self.hist) / float(n)
+            sd = math.sqrt(var)
+            z = (x - mean) / sd if sd > 0.0 else 0.0
+            if not self.active and z >= self.z_raise:
+                self.active = True
+                out = (self.name, True, z, self.z_raise)
+            elif self.active and z <= self.z_clear:
+                self.active = False
+                out = (self.name, False, z, self.z_clear)
+        if len(self.hist) == self.window:
+            self.hist.pop(0)
+        self.hist.append(x)
+        return out
+
+
+class ThresholdDetector:
+    """obs::detect::ThresholdDetector — raise at x >= raise, clear at
+    x <= clear."""
+
+    def __init__(self, name, raise_at, clear_at):
+        self.name = name
+        self.raise_at = raise_at
+        self.clear_at = clear_at
+        self.active = False
+
+    def observe(self, x):
+        if not self.active and x >= self.raise_at:
+            self.active = True
+            return (self.name, True, x, self.raise_at)
+        if self.active and x <= self.clear_at:
+            self.active = False
+            return (self.name, False, x, self.clear_at)
+        return None
+
+
+class DropSpikeDetector:
+    """obs::detect::DropSpikeDetector — EWMA-smoothed drop fraction
+    through the hysteresis threshold."""
+
+    def __init__(self, name, alpha, raise_at, clear_at):
+        self.alpha = alpha
+        self.ewma = 0.0
+        self.inner = ThresholdDetector(name, raise_at, clear_at)
+
+    def observe(self, frac):
+        self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * frac
+        return self.inner.observe(self.ewma)
+
+
+def serve_detectors():
+    """obs::detect::ServeDetectors::new — the serve-loop detector set."""
+    return dict(
+        queue=ThresholdDetector("queue.depth", 16.0, 8.0),
+        drop=DropSpikeDetector("drop.rate", 0.2, 0.2, 0.05),
+        iter=ZScoreDetector("iter.time", 32, 3.0, 1.0),
+    )
+
+
+def emit_alert_edge(events, step, t, edge):
+    """obs::detect::emit_edge — versioned alert.raised/alert.cleared."""
+    if edge is None:
+        return
+    detector, raised, value, threshold = edge
+    if raised:
+        events.append(
+            event_line(
+                "alert.raised",
+                step,
+                t,
+                dict(detector=detector, value=value, threshold=threshold, v=ALERTS_VERSION),
+            )
+        )
+    else:
+        events.append(
+            event_line(
+                "alert.cleared",
+                step,
+                t,
+                dict(detector=detector, value=value, threshold=threshold, v=ALERTS_VERSION),
+            )
+        )
+
+
+class SloTracker:
+    """obs::slo::SloTracker — multi-window burn-rate over the good/bad
+    completion stream (serve default: windows [64, 256], target 0.99)."""
+
+    def __init__(self, sla_ms, windows, target):
+        ws = sorted(set(w for w in windows if w > 0))
+        self.windows = ws
+        self.cap = ws[-1] if ws else 1
+        self.sla_secs = sla_ms / 1000.0
+        self.target = target
+        self.ring = []  # (was_bad, completion virtual time)
+        self.total = 0
+        self.total_bad = 0
+        self.pending = []
+
+    def observe_e2e(self, e2e_secs, now):
+        self.observe(e2e_secs <= self.sla_secs, now)
+
+    def observe(self, good, now):
+        self.total += 1
+        if not good:
+            self.total_bad += 1
+        if len(self.ring) == self.cap:
+            self.ring.pop(0)
+        self.ring.append((not good, now))
+        for w in self.windows:
+            if self.total % w == 0:
+                self.pending.append(
+                    (w, self.burn_rate(w), self.attainment(), self.budget_remaining())
+                )
+
+    def burn_rate(self, w):
+        n = w if w < len(self.ring) else len(self.ring)
+        if n == 0:
+            return 0.0
+        bad = 0
+        for b, _ in self.ring[len(self.ring) - n:]:
+            if b:
+                bad += 1
+        return (float(bad) / float(n)) / (1.0 - self.target)
+
+    def attainment(self):
+        if self.total == 0:
+            return 1.0
+        return float(self.total - self.total_bad) / float(self.total)
+
+    def budget_remaining(self):
+        if self.total == 0:
+            return 1.0
+        return 1.0 - float(self.total_bad) / ((1.0 - self.target) * float(self.total))
+
+    def take_burns(self):
+        out = self.pending
+        self.pending = []
+        return out
+
+
+def emit_burn_sample(events, step, t, sample):
+    """obs::slo::emit_burn — one versioned slo.burn event."""
+    window, burn_rate, attainment, budget_remaining = sample
+    events.append(
+        event_line(
+            "slo.burn",
+            step,
+            t,
+            dict(
+                window=window,
+                burn_rate=burn_rate,
+                attainment=attainment,
+                budget_remaining=budget_remaining,
+                v=SLO_VERSION,
+            ),
+        )
+    )
+
+
+def emit_fork_tag(events, grid, cfg):
+    """main::cmd_tune's merged-stream fork tag (documentation mirror:
+    the Rust CLI stamps each fork's replayed events with its grid
+    index before forwarding them)."""
+    events.append(
+        event_line(
+            "sweep.fork",
+            grid,
+            0.0,
+            dict(
+                grid=grid,
+                probe_every=cfg["probe_every"],
+                horizon=cfg["horizon"],
+                ucb_c=cfg["ucb_c"],
+            ),
+        )
+    )
+
+
+def emit_placement_planned(events, step, t, comm_secs, compute_scale, node_imbalance, replicated):
+    """main::cmd_placement's --events summary event (documentation
+    mirror of the planned-placement cost payload)."""
+    events.append(
+        event_line(
+            "placement.planned",
+            step,
+            t,
+            dict(
+                comm_secs=comm_secs,
+                compute_scale=compute_scale,
+                node_imbalance=node_imbalance,
+                replicated_experts=replicated,
+            ),
+        )
+    )
+
+
+def serve_run(cfg, kind, policy_kind, overlap_frac=0.0, events=None, analyzers=False):
     """serve::engine::serve — the whole deterministic serving loop.
     Returns the ServeSummary dict (sorted-key JSON payload).  When
     `events` is a list, mirrors serve_with_obs's EventSink stream:
@@ -1590,6 +1812,11 @@ def serve_run(cfg, kind, policy_kind, overlap_frac=0.0, events=None):
         events.append(
             event_line("meta", 0, 0.0, dict(policy=rb.name, schema_version=1, source="serve"))
         )
+    # analysis layer (serve_with_obs's ObsAnalyzers): pure readers of
+    # already-computed values — alerts need the event stream, the SLO
+    # tracker runs with or without it (engine gating mirrored exactly)
+    det = serve_detectors() if analyzers and events is not None else None
+    slo = SloTracker(cfg["sla_ms"], [64, 256], 0.99) if analyzers else None
 
     # batcher state (serve::batcher) — queue/active of request indices
     queue = []
@@ -1670,6 +1897,8 @@ def serve_run(cfg, kind, policy_kind, overlap_frac=0.0, events=None):
             peak_queue_depth = len(queue)
         if events is not None:
             events.append(event_line("queue.depth", iters, now, dict(depth=len(queue))))
+            if det is not None:
+                emit_alert_edge(events, iters, now, det["queue"].observe(float(len(queue))))
 
         # 3. route the batch's tokens (top-1 over the workload mix)
         w = serve_expert_weights(cfg, kind, e_total, now)
@@ -1756,6 +1985,12 @@ def serve_run(cfg, kind, policy_kind, overlap_frac=0.0, events=None):
         expert = float(max_gpu) * SERVE_FFN_FPT * float(SERVE_MOE_LAYERS) / SERVE_EFF_FLOPS
         compute = dense + expert
         iter_secs = compute + comm + cfg["iter_overhead_secs"] + stall
+        if det is not None:
+            drop_frac = (
+                float(b_tokens - kept_total) / float(b_tokens) if b_tokens > 0 else 0.0
+            )
+            emit_alert_edge(events, iters, now, det["drop"].observe(drop_frac))
+            emit_alert_edge(events, iters, now, det["iter"].observe(iter_secs))
         drained, overlapped = scheduler.drain(iter_secs)
         if events is not None and drained > 0.0:
             events.append(
@@ -1797,6 +2032,13 @@ def serve_run(cfg, kind, policy_kind, overlap_frac=0.0, events=None):
         if done:
             requests_completed += len(done)
             active = [a for a in active if a[2] > 0]
+            if slo is not None:
+                for rid in done:
+                    slo.observe_e2e(now - requests[rid][0], now)
+                burns = slo.take_burns()
+                if events is not None:
+                    for sample in burns:
+                        emit_burn_sample(events, iters, now, sample)
 
     # metrics roll-up (serve::metrics::ServeSummary)
     ttft = []
@@ -1907,6 +2149,57 @@ def serve_fixture_files():
     return out
 
 
+def serve_alert_fixture():
+    """(filename, text) for the pinned flash-crowd alert stream: the
+    flash crowd under adaptive with the full analyzer set, filtered to
+    alert.raised/alert.cleared lines.  Asserts the zero-perturbation
+    contract, strict per-detector alternation, and that the queue-depth
+    alert raises *before* the adaptive policy's rebalance commit in
+    stream order (the detectors see the backlog the rebalance then
+    fixes) and clears after it."""
+    events = []
+    summary = serve_run(SERVE, "flash", "adaptive", events=events, analyzers=True)
+    assert summary == serve_run(SERVE, "flash", "adaptive"), (
+        "analyzers perturbed the serve summary"
+    )
+
+    def kind_of(line):
+        return line.split('"kind":"', 1)[1].split('"', 1)[0]
+
+    def step_of(line):
+        return int(line.split('"step":', 1)[1].split(",", 1)[0])
+
+    alerts = [l for l in events if kind_of(l).startswith("alert.")]
+    assert alerts, "the flash crowd must trip at least one detector"
+    active = {}
+    for line in alerts:
+        det = line.split('"detector":"', 1)[1].split('"', 1)[0]
+        raised = kind_of(line) == "alert.raised"
+        assert active.get(det, False) != raised, (
+            "alerts must strictly alternate per detector: %s" % det
+        )
+        active[det] = raised
+    assert "slo.burn" in set(kind_of(l) for l in events), "SLO burns must flow"
+    raised_idx = next(
+        i for i, l in enumerate(events)
+        if kind_of(l) == "alert.raised" and '"detector":"queue.depth"' in l
+    )
+    commit_idx = next(
+        i for i, l in enumerate(events) if kind_of(l) == "rebalance.committed"
+    )
+    assert raised_idx < commit_idx, (
+        "queue-depth alert must precede the rebalance commit in stream order"
+    )
+    cleared_step = next(
+        step_of(l) for l in alerts
+        if kind_of(l) == "alert.cleared" and '"detector":"queue.depth"' in l
+    )
+    assert cleared_step > step_of(events[commit_idx]), (
+        "queue-depth alert must clear after the rebalance commit"
+    )
+    return ("serve_flash.adaptive.alerts.jsonl", "\n".join(alerts) + "\n")
+
+
 # ---------------------------------------------------------------------------
 # fixture generation
 # ---------------------------------------------------------------------------
@@ -1999,23 +2292,28 @@ def burst_adaptive_events_text():
 
 
 def check_obs(data_dir):
-    """scripts/ci.sh obs-golden: regenerate only the decision-audit
-    event stream and exact-compare the pinned fixture."""
-    fname = "trace_burst.adaptive.events.jsonl"
-    want = burst_adaptive_events_text()
-    path = os.path.join(data_dir, fname)
-    try:
-        with open(path, "r") as f:
-            got = f.read()
-    except OSError:
-        got = None
-    if got != want:
-        print(f"obs-golden FAILED — rust/tests/data/{fname} drifted from the mirror")
-        print("regenerate with: python3 scripts/gen_golden_traces.py")
-        return 1
-    n_events = want.count("\n")
-    print(f"obs-golden ok: {fname} matches the mirror ({n_events} events)")
-    return 0
+    """scripts/ci.sh obs-golden: regenerate only the obs-layer byte
+    fixtures — the decision-audit event stream and the flash-crowd
+    alert stream — and exact-compare both pinned files."""
+    failed = 0
+    for fname, want in [
+        ("trace_burst.adaptive.events.jsonl", burst_adaptive_events_text()),
+        serve_alert_fixture(),
+    ]:
+        path = os.path.join(data_dir, fname)
+        try:
+            with open(path, "r") as f:
+                got = f.read()
+        except OSError:
+            got = None
+        if got != want:
+            print(f"obs-golden FAILED — rust/tests/data/{fname} drifted from the mirror")
+            print("regenerate with: python3 scripts/gen_golden_traces.py")
+            failed = 1
+            continue
+        n_events = want.count("\n")
+        print(f"obs-golden ok: {fname} matches the mirror ({n_events} events)")
+    return failed
 
 
 def check_fork():
@@ -2067,9 +2365,12 @@ def check(data_dir):
                 got = None
             if got != want:
                 drifted.append(fname + suffix)
-    for fname, summary in serve_fixture_files():
+    serve_files = [
+        (fname, summary_pretty(summary)) for fname, summary in serve_fixture_files()
+    ]
+    serve_files.append(serve_alert_fixture())
+    for fname, want in serve_files:
         checked += 1
-        want = summary_pretty(summary)
         path = os.path.join(data_dir, fname)
         try:
             with open(path, "r") as f:
@@ -2098,6 +2399,16 @@ def main():
         sys.exit(check(data_dir))
     if "--check-obs" in sys.argv[1:]:
         sys.exit(check_obs(data_dir))
+    if "--emit-alerts" in sys.argv[1:]:
+        # fresh regeneration of the flash-crowd alert stream to an
+        # arbitrary path (scripts/ci.sh obs-diff compares it against
+        # the blessed fixture)
+        out_path = sys.argv[sys.argv.index("--emit-alerts") + 1]
+        _, text = serve_alert_fixture()
+        with open(out_path, "w") as f:
+            f.write(text)
+        print(f"wrote {text.count(chr(10))} alert events to {out_path}")
+        sys.exit(0)
     os.makedirs(data_dir, exist_ok=True)
     for fname, label, text, summaries, raws, timeline in fixture_files():
         with open(os.path.join(data_dir, fname + ".jsonl"), "w") as f:
@@ -2124,6 +2435,16 @@ def main():
                   "rebalance_iters", "sla_attainment"]:
             print(f"  {k}: {summary[k]}")
         print()
+    fname, text = serve_alert_fixture()
+    with open(os.path.join(data_dir, fname), "w") as f:
+        f.write(text)
+    print(f"== {fname} ==")
+    for line in text.splitlines():
+        kind = line.split('"kind":"', 1)[1].split('"', 1)[0]
+        det = line.split('"detector":"', 1)[1].split('"', 1)[0]
+        step = line.split('"step":', 1)[1].split(",", 1)[0]
+        print(f"  {kind} {det} @ iter {step}")
+    print()
 
 
 if __name__ == "__main__":
